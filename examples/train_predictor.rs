@@ -1,0 +1,83 @@
+//! Train the prediction engine end-to-end through the XLA stack:
+//!
+//! 1. run a calibration campaign in the simulator (history store),
+//! 2. synthesize an oracle-labeled dataset biased toward the observed
+//!    workload profiles (the paper's "historical execution outcomes"),
+//! 3. drive `train_step.hlo.txt` (forward + backward + Adam fused by
+//!    XLA) from rust — python is not involved,
+//! 4. compare predictor families on a held-out set,
+//! 5. persist `artifacts/weights.json` for the scheduler.
+//!
+//! Run: `make artifacts && cargo run --release --example train_predictor`
+
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::predict::{
+    synthesize, DecisionTree, LinearModel, MlpWeights, NativeMlp, Trainer, TreeParams,
+};
+use ecosched::runtime::Runtime;
+use ecosched::util::timeline::sparkline;
+use ecosched::workload::{Arrivals, Mix, TraceSpec};
+
+fn main() {
+    ecosched::util::logger::init();
+    let artifacts = ecosched::exp::common::find_artifacts();
+    if !artifacts.join("meta.json").exists() {
+        eprintln!("this example needs the AOT artifacts: run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. Calibration campaign → execution history.
+    println!("1. calibration campaign (best-fit, 16 jobs) …");
+    let mut coordinator = Coordinator::new(
+        CampaignConfig::default(),
+        make_policy("best_fit").unwrap(),
+    );
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: 16,
+        arrivals: Arrivals::Poisson { mean_gap: 45.0 },
+        horizon: 3600.0,
+    }
+    .generate(11);
+    coordinator.run(trace);
+    println!("   history: {} execution records", coordinator.history.len());
+
+    // 2. Dataset biased toward observed profiles.
+    let ds = synthesize(6144, 7, Some(&coordinator.history));
+    let (train, val) = ds.split(0.9);
+    println!("   dataset: {} train / {} val\n", train.len(), val.len());
+
+    // 3. Train through train_step.hlo.
+    println!("2. training f_θ through train_step.hlo (Adam, fused fwd+bwd) …");
+    let runtime = Runtime::new(&artifacts).expect("runtime");
+    let mut trainer = Trainer::new(runtime, MlpWeights::init(42)).expect("trainer");
+    let report = trainer.train(&train, &val, 40, 1).expect("training");
+    let curve: Vec<f64> = report.loss_curve.clone();
+    println!("   loss curve {} ({:.5} → {:.5})", sparkline(&curve),
+        curve.first().unwrap(), curve.last().unwrap());
+    println!("   val MSE: {:.6}\n", report.val_mse);
+
+    // 4. Family comparison on the same held-out set.
+    println!("3. predictor family comparison (held-out MSE):");
+    let mut native = NativeMlp::new(trainer.weights.clone());
+    let mlp_mse = val.mse(|x| {
+        let (a, b) = native.forward(x);
+        [a, b]
+    });
+    let tree = DecisionTree::fit(&train.xs, &train.ys, TreeParams::default());
+    let tree_mse = val.mse(|x| tree.eval(x));
+    let lin = LinearModel::fit(&train.xs, &train.ys, 1e-4);
+    let lin_mse = val.mse(|x| lin.eval(x));
+    println!("   mlp (xla-trained) : {mlp_mse:.6}");
+    println!("   decision tree     : {tree_mse:.6}");
+    println!("   linear (ridge)    : {lin_mse:.6}");
+    assert!(
+        mlp_mse < lin_mse,
+        "the MLP should beat the linear model on oracle-labeled data"
+    );
+
+    // 5. Persist.
+    let path = artifacts.join("weights.json");
+    trainer.weights.save(&path).expect("save");
+    println!("\nweights → {} (picked up by `ecosched experiment`/examples)", path.display());
+}

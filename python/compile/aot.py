@@ -1,0 +1,108 @@
+"""AOT compilation: lower the L2 functions to HLO **text** artifacts.
+
+Interchange is HLO text, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the rust crate's XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Idempotent; `make artifacts` skips it when inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.ref import (
+    FEAT_DIM,
+    HIDDEN1,
+    HIDDEN2,
+    N_CHANNELS,
+    OUT_DIM,
+    WINDOW,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so rust
+    unwraps a tuple regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def param_specs():
+    return (
+        f32(FEAT_DIM, HIDDEN1),
+        f32(1, HIDDEN1),
+        f32(HIDDEN1, HIDDEN2),
+        f32(1, HIDDEN2),
+        f32(HIDDEN2, OUT_DIM),
+        f32(1, OUT_DIM),
+    )
+
+
+def lower_predict():
+    return jax.jit(model.predict).lower(f32(model.BATCH, FEAT_DIM), *param_specs())
+
+
+def lower_featurize():
+    return jax.jit(model.featurize).lower(f32(model.BATCH, WINDOW, N_CHANNELS))
+
+
+def lower_train_step():
+    ps = param_specs()
+    return jax.jit(model.train_step).lower(
+        *ps, *ps, *ps,  # params, m, v share shapes
+        f32(1, 1),
+        f32(model.TRAIN_BATCH, FEAT_DIM),
+        f32(model.TRAIN_BATCH, OUT_DIM),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, lower in [
+        ("predict", lower_predict),
+        ("featurize", lower_featurize),
+        ("train_step", lower_train_step),
+    ]:
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    meta = {
+        "batch": model.BATCH,
+        "feat_dim": FEAT_DIM,
+        "hidden": [HIDDEN1, HIDDEN2],
+        "out_dim": OUT_DIM,
+        "window": WINDOW,
+        "train_batch": model.TRAIN_BATCH,
+        "lr": model.LR,
+    }
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote meta {meta_path}: {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels: the compute hot spots of the prediction engine.
+
+Kernels are authored for the TPU memory model (VMEM-resident weights,
+128-lane tiling, MXU-shaped matmuls) but lowered with ``interpret=True``
+so the emitted HLO runs on any PJRT backend, including the rust CPU
+client. Real-TPU performance is estimated analytically in
+DESIGN.md §8 — interpret-mode timings are correctness signals only.
+"""
+
+from compile.kernels.score_hosts import score_hosts_pallas  # noqa: F401
+from compile.kernels.telemetry import featurize_pallas  # noqa: F401

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the L1 kernels — the correctness reference.
+
+pytest asserts kernel == ref to f32 tolerance across shape/value sweeps
+(hypothesis); the rust integration test then asserts the XLA path ==
+native-rust MLP, closing the three-implementation parity triangle:
+
+    pallas kernel  ==  jnp ref  ==  rust native MLP
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Architecture constants — the single source of truth shared with
+# model.py; rust mirrors them in predict/engine.rs (HIDDEN1/2, OUT_DIM)
+# and profile/features.rs (FEAT_DIM).
+FEAT_DIM = 16
+HIDDEN1 = 64
+HIDDEN2 = 32
+OUT_DIM = 2
+# Telemetry featurize window (5 s samples → 2 min).
+WINDOW = 24
+N_CHANNELS = 4  # cpu, mem, disk, net
+N_FEATURES = 7  # means(4) + cpu_peak + io_peak + burstiness
+
+
+def mlp_forward_ref(feats, params):
+    """Reference MLP forward: relu → relu → softplus head.
+
+    feats: [B, FEAT_DIM]; params: (w1, b1, w2, b2, w3, b3) with biases
+    shaped [1, H] (the layout rust sends through PJRT).
+    Returns [B, OUT_DIM] with softplus outputs (both targets ≥ 0).
+    """
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jnp.maximum(feats @ w1 + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2, 0.0)
+    y = h2 @ w3 + b3
+    return jax.nn.softplus(y)
+
+
+def featurize_ref(windows):
+    """Reference telemetry featurization.
+
+    windows: [B, WINDOW, 4] normalized utilization samples
+    (cpu, mem, disk, net), oldest→newest.
+    Returns [B, 7]: channel means, cpu peak (max), io peak
+    (max over max(disk, net)), cpu burstiness (std/mean, 0 when idle).
+    """
+    means = jnp.mean(windows, axis=1)  # [B, 4]
+    cpu = windows[:, :, 0]
+    io = jnp.maximum(windows[:, :, 2], windows[:, :, 3])
+    cpu_peak = jnp.max(cpu, axis=1)
+    io_peak = jnp.max(io, axis=1)
+    cpu_mean = means[:, 0]
+    cpu_std = jnp.std(cpu, axis=1)
+    burst = jnp.where(cpu_mean > 1e-6, cpu_std / jnp.maximum(cpu_mean, 1e-6), 0.0)
+    return jnp.concatenate(
+        [means, cpu_peak[:, None], io_peak[:, None], burst[:, None]], axis=1
+    )
+
+
+def init_params(key):
+    """He-initialized params (shapes as sent by rust)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def he(k, fan_in, shape):
+        return (jax.random.normal(k, shape) * (2.0 / fan_in) ** 0.5).astype(jnp.float32)
+
+    return (
+        he(k1, FEAT_DIM, (FEAT_DIM, HIDDEN1)),
+        jnp.zeros((1, HIDDEN1), jnp.float32),
+        he(k2, HIDDEN1, (HIDDEN1, HIDDEN2)),
+        jnp.zeros((1, HIDDEN2), jnp.float32),
+        he(k3, HIDDEN2, (HIDDEN2, OUT_DIM)),
+        jnp.zeros((1, OUT_DIM), jnp.float32),
+    )

@@ -1,0 +1,72 @@
+"""L1 kernel: batched placement scoring — the MLP forward of Eq. 4.
+
+The scheduler's hot spot is scoring all candidate (workload, host)
+pairs per decision; consolidation scans score all VM × host pairs.
+This kernel processes the feature batch in row blocks with all weight
+matrices pinned in VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid: one step per BLOCK_B rows of the batch; the feature block
+    streams HBM→VMEM while weights stay resident (index_map ``(0, 0)``).
+  * matmul shapes (BLOCK_B × 16)·(16 × 64) etc. — zero-padded to the
+    128-lane register tile by Mosaic; with BLOCK_B = 128 each layer is
+    one MXU pass.
+  * VMEM: weights ≈ (16·64 + 64·32 + 32·2) · 4 B ≈ 12.5 KB padded to
+    ~192 KB at 128 lanes, plus a 128 × 128 f32 block ≈ 64 KB — far
+    under the 16 MB budget, leaving room for double buffering.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls; the paper's decision path runs this kernel's HLO
+through the rust client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import FEAT_DIM, HIDDEN1, HIDDEN2, OUT_DIM
+
+# Rows per grid step. 128 matches the MXU tile; the AOT batch (128)
+# lowers to a single grid step.
+BLOCK_B = 128
+
+
+def _mlp_kernel(f_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """One block: two ReLU layers + softplus head, all in VMEM."""
+    x = f_ref[...]
+    h1 = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...], 0.0
+    )
+    h2 = jnp.maximum(
+        jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...], 0.0
+    )
+    y = jnp.dot(h2, w3_ref[...], preferred_element_type=jnp.float32) + b3_ref[...]
+    o_ref[...] = jax.nn.softplus(y)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def score_hosts_pallas(feats, w1, b1, w2, b2, w3, b3):
+    """Score a feature batch. feats: [B, FEAT_DIM], B % BLOCK_B == 0
+    (the AOT wrapper pads). Returns [B, OUT_DIM]."""
+    b = feats.shape[0]
+    assert b % BLOCK_B == 0, f"batch {b} not a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    weight_spec = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, FEAT_DIM), lambda i: (i, 0)),
+            weight_spec((FEAT_DIM, HIDDEN1)),
+            weight_spec((1, HIDDEN1)),
+            weight_spec((HIDDEN1, HIDDEN2)),
+            weight_spec((1, HIDDEN2)),
+            weight_spec((HIDDEN2, OUT_DIM)),
+            weight_spec((1, OUT_DIM)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, OUT_DIM), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, OUT_DIM), jnp.float32),
+        interpret=True,
+    )(feats, w1, b1, w2, b2, w3, b3)

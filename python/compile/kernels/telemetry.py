@@ -1,0 +1,57 @@
+"""L1 kernel: windowed telemetry featurization (Eq. 1 vectors from raw
+dstat-style samples).
+
+Input: [B, WINDOW, 4] normalized utilization windows (cpu, mem, disk,
+net per 5 s sample). Output: [B, 7] — channel means, cpu peak, io
+peak, cpu burstiness. One grid step per BLOCK_B windows; the window
+block is VMEM-resident (24 × 4 f32 per row ≈ 384 B, a 128-row block is
+≈ 48 KB).
+
+Peaks use max (not the p95 the rust-native profiler computes): a
+sort-free reduction keeps the kernel a pure VPU pipeline. The two
+paths are *alternative* profilers; parity of the shared moments is
+asserted in pytest, the max-vs-p95 difference is documented here and
+exercised in rust/tests/runtime_xla.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import N_CHANNELS, N_FEATURES, WINDOW
+
+BLOCK_B = 128
+
+
+def _featurize_kernel(w_ref, o_ref):
+    w = w_ref[...]  # [BLOCK_B, WINDOW, 4]
+    means = jnp.mean(w, axis=1)  # [BLOCK_B, 4]
+    cpu = w[:, :, 0]
+    io = jnp.maximum(w[:, :, 2], w[:, :, 3])
+    cpu_peak = jnp.max(cpu, axis=1)
+    io_peak = jnp.max(io, axis=1)
+    cpu_mean = means[:, 0]
+    # Population std (matches jnp.std in the ref).
+    var = jnp.mean((cpu - cpu_mean[:, None]) ** 2, axis=1)
+    burst = jnp.where(
+        cpu_mean > 1e-6, jnp.sqrt(var) / jnp.maximum(cpu_mean, 1e-6), 0.0
+    )
+    o_ref[...] = jnp.concatenate(
+        [means, cpu_peak[:, None], io_peak[:, None], burst[:, None]], axis=1
+    )
+
+
+@jax.jit
+def featurize_pallas(windows):
+    """windows: [B, WINDOW, 4], B % BLOCK_B == 0 → [B, 7]."""
+    b = windows.shape[0]
+    assert b % BLOCK_B == 0, f"batch {b} not a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _featurize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_B, WINDOW, N_CHANNELS), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((BLOCK_B, N_FEATURES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, N_FEATURES), jnp.float32),
+        interpret=True,
+    )(windows)

@@ -1,0 +1,91 @@
+"""L2: the prediction engine `f_θ` (Eq. 4) as a JAX model.
+
+Three exported computations (AOT-lowered by aot.py, executed from rust
+through PJRT — python never runs on the decision path):
+
+* ``predict``    — batched scoring. Calls the L1 Pallas kernel
+                   (`score_hosts_pallas`), so the kernel lowers into
+                   the same HLO module rust loads.
+* ``train_step`` — one fused forward + MSE loss + backward + Adam
+                   update. Differentiates the *jnp reference* forward
+                   (identical math to the kernel — pallas interpret
+                   calls are not differentiable); kernel/ref parity is
+                   pinned by pytest.
+* ``featurize``  — telemetry windows → Eq. 1 feature vectors via the
+                   L1 telemetry kernel.
+
+Feature layout (must match rust/src/profile/features.rs):
+    0..3  workload mean cpu/mem/disk/net        8..11 host cpu/mem/disk/net
+    4     workload p95 cpu                      12    host vm-count/8
+    5     workload p95 io                       13    host DVFS freq
+    6     workload cpu burstiness (≤2)          14    w_cpu·h_cpu
+    7     log1p(remaining solo s)/10            15    max(0, w_mem+h_mem−1)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ref import mlp_forward_ref
+from compile.kernels.score_hosts import score_hosts_pallas
+from compile.kernels.telemetry import featurize_pallas
+
+# Shapes baked into the AOT artifacts (mirrored in artifacts/meta.json;
+# rust reads them from there, never hardcodes).
+BATCH = 128
+TRAIN_BATCH = 256
+LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+FEATURE_NAMES = [
+    "w_cpu", "w_mem", "w_disk", "w_net",
+    "w_cpu_p95", "w_io_p95", "w_burst", "w_log_remaining",
+    "h_cpu", "h_mem", "h_disk", "h_net",
+    "h_vms", "h_freq", "x_cpu_contention", "x_mem_pressure",
+]
+
+
+def predict(feats, w1, b1, w2, b2, w3, b3):
+    """Score [BATCH, 16] feature rows → [BATCH, 2] (power/100, slowdown)."""
+    return (score_hosts_pallas(feats, w1, b1, w2, b2, w3, b3),)
+
+
+def featurize(windows):
+    """[BATCH, WINDOW, 4] telemetry → [BATCH, 7] Eq. 1 vectors."""
+    return (featurize_pallas(windows),)
+
+
+def train_step(
+    w1, b1, w2, b2, w3, b3,
+    m1, mb1, m2, mb2, m3, mb3,
+    v1, vb1, v2, vb2, v3, vb3,
+    step, feats, targets,
+):
+    """One Adam step on MSE loss. All state flows through as tensors so
+    rust can drive the epoch loop statelessly.
+
+    step: f32 [1, 1] — the 1-based Adam timestep (bias correction).
+    feats: [TRAIN_BATCH, 16]; targets: [TRAIN_BATCH, 2].
+    Returns 19 tensors: 6 params, 6 m, 6 v, loss [1, 1].
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    m = (m1, mb1, m2, mb2, m3, mb3)
+    v = (v1, vb1, v2, vb2, v3, vb3)
+
+    def loss_fn(ps):
+        pred = mlp_forward_ref(feats, ps)
+        return jnp.mean((pred - targets) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    t = step[0, 0]
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        nm = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        nv = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = nm / (1.0 - ADAM_B1**t)
+        vhat = nv / (1.0 - ADAM_B2**t)
+        new_params.append(p - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(nm)
+        new_v.append(nv)
+    return (*new_params, *new_m, *new_v, loss.reshape(1, 1))

@@ -1,0 +1,141 @@
+"""Kernel-vs-reference parity — the CORE correctness signal for L1.
+
+The pallas kernels must agree with the pure-jnp oracles to f32
+tolerance for every shape and value regime the system feeds them.
+Hypothesis sweeps shapes/values; fixed seeds keep CI deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    FEAT_DIM,
+    N_CHANNELS,
+    WINDOW,
+    featurize_ref,
+    init_params,
+    mlp_forward_ref,
+)
+from compile.kernels.score_hosts import BLOCK_B, score_hosts_pallas
+from compile.kernels.telemetry import featurize_pallas
+
+
+def params(seed=0):
+    return init_params(jax.random.PRNGKey(seed))
+
+
+def feats_batch(seed, b, lo=0.0, hi=1.0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (b, FEAT_DIM), jnp.float32, lo, hi)
+
+
+class TestScoreHosts:
+    def test_matches_ref_single_block(self):
+        f = feats_batch(1, BLOCK_B)
+        p = params(1)
+        got = score_hosts_pallas(f, *p)
+        want = mlp_forward_ref(f, p)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_matches_ref_multi_block(self):
+        f = feats_batch(2, 4 * BLOCK_B)
+        p = params(2)
+        np.testing.assert_allclose(
+            score_hosts_pallas(f, *p), mlp_forward_ref(f, p), rtol=1e-5, atol=1e-6
+        )
+
+    def test_outputs_nonnegative(self):
+        # Softplus head: both outputs are ≥ 0 for any input.
+        f = feats_batch(3, BLOCK_B, lo=-5.0, hi=5.0)
+        out = np.asarray(score_hosts_pallas(f, *params(3)))
+        assert (out >= 0.0).all()
+
+    def test_zero_features_give_bias_only_output(self):
+        f = jnp.zeros((BLOCK_B, FEAT_DIM), jnp.float32)
+        p = params(4)
+        got = score_hosts_pallas(f, *p)
+        want = mlp_forward_ref(f, p)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        # All rows identical.
+        assert np.allclose(got[0], got[-1])
+
+    def test_rejects_unpadded_batch(self):
+        with pytest.raises(AssertionError):
+            score_hosts_pallas(feats_batch(5, BLOCK_B - 1), *params(5))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 3),
+        scale=st.floats(0.1, 10.0),
+    )
+    def test_hypothesis_value_sweep(self, seed, blocks, scale):
+        f = feats_batch(seed % 1000, blocks * BLOCK_B) * scale
+        p = params(seed % 17)
+        got = score_hosts_pallas(f, *p)
+        want = mlp_forward_ref(f, p)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+    def test_row_independence(self):
+        # Changing one row must not affect others (blocked matmul
+        # correctness under the BlockSpec schedule).
+        f = feats_batch(7, BLOCK_B)
+        p = params(7)
+        base = np.asarray(score_hosts_pallas(f, *p))
+        f2 = f.at[5].set(f[5] * 3.0 + 1.0)
+        out2 = np.asarray(score_hosts_pallas(f2, *p))
+        changed = np.abs(out2 - base).max(axis=1) > 1e-9
+        assert changed[5]
+        assert not changed[np.arange(BLOCK_B) != 5].any()
+
+
+def windows_batch(seed, b):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (b, WINDOW, N_CHANNELS), jnp.float32)
+
+
+class TestFeaturize:
+    def test_matches_ref(self):
+        w = windows_batch(1, BLOCK_B)
+        np.testing.assert_allclose(
+            featurize_pallas(w), featurize_ref(w), rtol=1e-5, atol=1e-6
+        )
+
+    def test_multi_block(self):
+        w = windows_batch(2, 2 * BLOCK_B)
+        np.testing.assert_allclose(
+            featurize_pallas(w), featurize_ref(w), rtol=1e-5, atol=1e-6
+        )
+
+    def test_idle_window_zero_burstiness(self):
+        w = jnp.zeros((BLOCK_B, WINDOW, N_CHANNELS), jnp.float32)
+        out = np.asarray(featurize_pallas(w))
+        np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+    def test_constant_window_stats(self):
+        w = jnp.full((BLOCK_B, WINDOW, N_CHANNELS), 0.5, jnp.float32)
+        out = np.asarray(featurize_pallas(w))
+        np.testing.assert_allclose(out[:, :4], 0.5, rtol=1e-6)  # means
+        np.testing.assert_allclose(out[:, 4], 0.5, rtol=1e-6)  # cpu peak
+        np.testing.assert_allclose(out[:, 5], 0.5, rtol=1e-6)  # io peak
+        np.testing.assert_allclose(out[:, 6], 0.0, atol=1e-5)  # burstiness
+
+    def test_peak_detection(self):
+        w = jnp.zeros((BLOCK_B, WINDOW, N_CHANNELS), jnp.float32)
+        w = w.at[0, 3, 0].set(0.9)  # one cpu spike in row 0
+        w = w.at[0, 7, 3].set(0.8)  # one net spike
+        out = np.asarray(featurize_pallas(w))
+        assert abs(out[0, 4] - 0.9) < 1e-6
+        assert abs(out[0, 5] - 0.8) < 1e-6
+        assert out[1, 4] == 0.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 2))
+    def test_hypothesis_sweep(self, seed, blocks):
+        w = windows_batch(seed % 999, blocks * BLOCK_B)
+        np.testing.assert_allclose(
+            featurize_pallas(w), featurize_ref(w), rtol=2e-5, atol=1e-5
+        )

@@ -1,0 +1,77 @@
+//! Bench: consolidation scan cost (Tables 3/4, Ablation 1) as cluster
+//! size grows — the coordinator must stay off the critical path.
+
+use ecosched::cluster::{Cluster, Demand, HostId};
+use ecosched::predict::OraclePredictor;
+use ecosched::profile::ResourceVector;
+use ecosched::sched::{ConsolidationParams, Consolidator, VmContext};
+use ecosched::sim::Telemetry;
+use ecosched::util::bench::{bench_header, Bench};
+use ecosched::workload::JobId;
+use std::collections::BTreeMap;
+
+fn setup(n_hosts: usize) -> (Cluster, Telemetry, BTreeMap<ecosched::cluster::VmId, VmContext>) {
+    let mut c = Cluster::homogeneous(n_hosts);
+    let mut ctxs = BTreeMap::new();
+    // 2 VMs per host, light load on even hosts (consolidation donors).
+    for h in 0..n_hosts {
+        for k in 0..2 {
+            let vm = c.create_vm(
+                ecosched::cluster::flavor::MEDIUM,
+                JobId((h * 2 + k) as u64),
+                0.0,
+            );
+            c.place_vm(vm, HostId(h)).unwrap();
+            ctxs.insert(
+                vm,
+                VmContext {
+                    vector: ResourceVector {
+                        cpu: 0.2,
+                        mem: 0.4,
+                        disk: 0.4,
+                        net: 0.3,
+                        cpu_peak: 0.3,
+                        io_peak: 0.5,
+                        burstiness: 0.2,
+                    },
+                    remaining_solo: 500.0,
+                    slack_left: 0.08,
+                },
+            );
+        }
+        c.host_mut(HostId(h)).demand = if h % 2 == 0 {
+            Demand {
+                cpu: 1.5,
+                mem_gb: 8.0,
+                disk_mbps: 60.0,
+                net_mbps: 15.0,
+            }
+        } else {
+            Demand {
+                cpu: 12.0,
+                mem_gb: 20.0,
+                disk_mbps: 150.0,
+                net_mbps: 40.0,
+            }
+        };
+    }
+    let mut t = Telemetry::new(n_hosts, 1, 0.0);
+    for k in 1..=25 {
+        t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+    }
+    (c, t, ctxs)
+}
+
+fn main() {
+    bench_header("consolidation");
+    for n in [5usize, 20, 80] {
+        let (c, t, ctxs) = setup(n);
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        Bench::new(&format!("scan/{n}-hosts/{}-vms", 2 * n))
+            .run(|| {
+                std::hint::black_box(cons.scan(1000.0, &c, &t, &ctxs, &mut pred));
+            })
+            .print();
+    }
+}

@@ -1,0 +1,117 @@
+//! Bench: the placement decision path (profile → features → predict →
+//! argmin) — the latency §V-E's overhead claim rests on.
+//! Paper artifact: Fig. 2 stages / Table 5 decision latency.
+
+use ecosched::cluster::{Cluster, Demand, HostId};
+use ecosched::predict::{EnergyPredictor, MlpWeights, NativeMlp, OraclePredictor};
+use ecosched::profile::{build_features, ResourceVector};
+use ecosched::sched::{Decision, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest};
+use ecosched::util::bench::{bench_header, Bench};
+use ecosched::workload::JobId;
+
+fn loaded_cluster(n: usize) -> Cluster {
+    let mut c = Cluster::homogeneous(n);
+    for i in 0..n {
+        c.host_mut(HostId(i)).demand = Demand {
+            cpu: (i as f64 * 3.0) % 24.0,
+            mem_gb: (i as f64 * 7.0) % 48.0,
+            disk_mbps: (i as f64 * 40.0) % 400.0,
+            net_mbps: (i as f64 * 11.0) % 100.0,
+        };
+    }
+    c
+}
+
+fn request() -> PlacementRequest {
+    PlacementRequest {
+        job: JobId(0),
+        flavor: ecosched::cluster::flavor::MEDIUM,
+        vector: ResourceVector {
+            cpu: 0.6,
+            mem: 0.5,
+            disk: 0.4,
+            net: 0.3,
+            cpu_peak: 0.8,
+            io_peak: 0.5,
+            burstiness: 0.3,
+        },
+        remaining_solo: 600.0,
+    }
+}
+
+fn main() {
+    bench_header("placement_path");
+    let req = request();
+
+    // Feature construction alone.
+    let cluster = loaded_cluster(5);
+    let host = cluster.host(HostId(0));
+    Bench::new("build_features(1 host)")
+        .run(|| {
+            std::hint::black_box(build_features(&req.vector, req.remaining_solo, host));
+        })
+        .print();
+
+    // Full decision, oracle predictor (pure-rust floor).
+    for n in [5usize, 20, 80] {
+        let cluster = loaded_cluster(n);
+        let mut policy = EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default());
+        Bench::new(&format!("decide/oracle/{n}-hosts"))
+            .run(|| {
+                std::hint::black_box(policy.decide(&req, &cluster));
+            })
+            .print();
+    }
+
+    // Full decision, native MLP.
+    for n in [5usize, 20, 80] {
+        let cluster = loaded_cluster(n);
+        let mut policy = EnergyAware::new(
+            Box::new(NativeMlp::new(MlpWeights::init(42))),
+            EnergyAwareParams::default(),
+        );
+        Bench::new(&format!("decide/native-mlp/{n}-hosts"))
+            .run(|| {
+                std::hint::black_box(policy.decide(&req, &cluster));
+            })
+            .print();
+    }
+
+    // Full decision through the XLA/PJRT path (the production Eq. 4).
+    let artifacts = ecosched::exp::common::find_artifacts();
+    if artifacts.join("meta.json").exists() {
+        let weights = MlpWeights::load(&artifacts.join("weights.json"))
+            .unwrap_or_else(|| MlpWeights::init(42));
+        for n in [5usize, 20, 80] {
+            let cluster = loaded_cluster(n);
+            let runtime = ecosched::runtime::Runtime::new(&artifacts).expect("runtime");
+            let xla = ecosched::predict::XlaMlp::new(runtime, weights.clone()).expect("xla");
+            let mut policy = EnergyAware::new(Box::new(xla), EnergyAwareParams::default());
+            let r = Bench::new(&format!("decide/xla-mlp/{n}-hosts"))
+                .samples(12)
+                .run(|| {
+                    std::hint::black_box(policy.decide(&req, &cluster));
+                });
+            r.print();
+        }
+        // Raw batched predict throughput by batch size.
+        let runtime = ecosched::runtime::Runtime::new(&artifacts).expect("runtime");
+        let mut xla = ecosched::predict::XlaMlp::new(runtime, weights).expect("xla");
+        for b in [1usize, 32, 128, 512] {
+            let feats = vec![[0.4f32; ecosched::profile::FEAT_DIM]; b];
+            Bench::new(&format!("xla predict batch={b}"))
+                .samples(12)
+                .run(|| {
+                    std::hint::black_box(xla.predict(&feats));
+                })
+                .print_throughput("scores", b as f64);
+        }
+    } else {
+        eprintln!("(artifacts missing — skipping xla benches; run `make artifacts`)");
+    }
+
+    // Sanity: decisions must actually place under this load.
+    let cluster = loaded_cluster(5);
+    let mut policy = EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default());
+    assert!(matches!(policy.decide(&req, &cluster), Decision::Place(_)));
+}

@@ -1,0 +1,62 @@
+//! Bench: predictor inference — oracle vs native MLP vs decision tree
+//! vs linear (Table 5 / Ablation 2 latency column).
+
+use ecosched::predict::{
+    synthesize, DecisionTree, EnergyPredictor, LinearModel, LinearPredictor, MlpWeights,
+    NativeMlp, OraclePredictor, TreeParams, TreePredictor,
+};
+use ecosched::profile::FEAT_DIM;
+use ecosched::util::bench::{bench_header, Bench};
+
+fn main() {
+    bench_header("predict");
+    let ds = synthesize(2000, 7, None);
+    let feats: Vec<[f32; FEAT_DIM]> = ds.xs[..256].to_vec();
+
+    let mut oracle = OraclePredictor;
+    Bench::new("oracle/batch-256")
+        .run(|| {
+            std::hint::black_box(oracle.predict(&feats));
+        })
+        .print_throughput("scores", 256.0);
+
+    let mut mlp = NativeMlp::new(MlpWeights::init(42));
+    Bench::new("native-mlp/batch-256")
+        .run(|| {
+            std::hint::black_box(mlp.predict(&feats));
+        })
+        .print_throughput("scores", 256.0);
+
+    let tree = DecisionTree::fit(&ds.xs, &ds.ys, TreeParams::default());
+    let mut tp = TreePredictor { tree };
+    Bench::new("dtree/batch-256")
+        .run(|| {
+            std::hint::black_box(tp.predict(&feats));
+        })
+        .print_throughput("scores", 256.0);
+
+    let mut lp = LinearPredictor {
+        model: LinearModel::fit(&ds.xs, &ds.ys, 1e-4),
+    };
+    Bench::new("linear/batch-256")
+        .run(|| {
+            std::hint::black_box(lp.predict(&feats));
+        })
+        .print_throughput("scores", 256.0);
+
+    // Model-fit costs (offline path).
+    Bench::new("dtree fit/2000")
+        .samples(5)
+        .iters(1)
+        .run(|| {
+            std::hint::black_box(DecisionTree::fit(&ds.xs, &ds.ys, TreeParams::default()));
+        })
+        .print();
+    Bench::new("linear fit/2000")
+        .samples(5)
+        .iters(1)
+        .run(|| {
+            std::hint::black_box(LinearModel::fit(&ds.xs, &ds.ys, 1e-4));
+        })
+        .print();
+}

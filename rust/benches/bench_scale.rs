@@ -1,0 +1,33 @@
+//! Bench: coordinator scale-out — campaign wall time vs cluster size
+//! (the §VI-C scale experiment's engine cost).
+
+use ecosched::coordinator::make_policy;
+use ecosched::exp::common::run_campaign;
+use ecosched::util::bench::{bench_header, Bench};
+use ecosched::workload::{Arrivals, Mix, TraceSpec};
+
+fn main() {
+    bench_header("scale");
+    for n_hosts in [5usize, 20, 80] {
+        let n_jobs = 5 * n_hosts;
+        let r = Bench::new(&format!("campaign/energy-aware/{n_hosts}-hosts/{n_jobs}-jobs"))
+            .warmup(0)
+            .samples(3)
+            .iters(1)
+            .run(|| {
+                let trace = TraceSpec {
+                    mix: Mix::paper(),
+                    n_jobs,
+                    arrivals: Arrivals::Poisson {
+                        mean_gap: 32.0 * 5.0 / n_hosts as f64,
+                    },
+                    horizon: 7200.0,
+                }
+                .generate(1);
+                let report =
+                    run_campaign(make_policy("energy_aware").unwrap(), trace, 1, n_hosts);
+                std::hint::black_box(report.energy_j);
+            });
+        r.print();
+    }
+}

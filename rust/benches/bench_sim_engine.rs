@@ -1,0 +1,75 @@
+//! Bench: simulation substrate — event queue, power model, energy
+//! meter, telemetry (Fig. 1's engine and everything above it).
+
+use ecosched::cluster::{Cluster, Demand, HostId};
+use ecosched::sim::{EnergyMeter, EventQueue, Telemetry};
+use ecosched::util::bench::{bench_header, Bench};
+use std::collections::BTreeMap;
+
+fn main() {
+    bench_header("sim_engine");
+
+    Bench::new("event-queue push+pop (1k events)")
+        .run(|| {
+            let mut q = EventQueue::new();
+            for i in 0..1000u32 {
+                q.push((i % 97) as f64, i);
+            }
+            while let Some(e) = q.pop() {
+                std::hint::black_box(e);
+            }
+        })
+        .print();
+
+    let mut cluster = Cluster::homogeneous(5);
+    for i in 0..5 {
+        cluster.host_mut(HostId(i)).demand = Demand {
+            cpu: 10.0,
+            mem_gb: 20.0,
+            disk_mbps: 100.0,
+            net_mbps: 30.0,
+        };
+    }
+    Bench::new("cluster total_power (5 hosts)")
+        .run(|| {
+            std::hint::black_box(cluster.total_power());
+        })
+        .print();
+
+    let mut meter = EnergyMeter::new(5, 1, 0.01);
+    let mut t = 0.0;
+    Bench::new("energy meter sample (5 hosts, noisy)")
+        .run(|| {
+            t += 1.0;
+            meter.sample(t, &cluster);
+        })
+        .print();
+
+    let mut telemetry = Telemetry::new(5, 1, 0.02);
+    let demands: BTreeMap<_, _> = cluster
+        .vms
+        .keys()
+        .map(|&vm| (vm, Demand::ZERO))
+        .collect();
+    let mut ts = 0.0;
+    Bench::new("telemetry sample (5 hosts)")
+        .run(|| {
+            ts += 5.0;
+            telemetry.sample(ts, &cluster, &demands);
+        })
+        .print();
+
+    // One full simulated tick equivalent (power states + demands +
+    // meter): the per-second cost of the coordinator loop.
+    let mut meter2 = EnergyMeter::new(5, 2, 0.01);
+    let mut tk = 0.0;
+    Bench::new("full tick equivalent (5 hosts)")
+        .run(|| {
+            tk += 1.0;
+            cluster.advance_power_states(tk);
+            let d = BTreeMap::new();
+            cluster.apply_demands(&d);
+            meter2.sample(tk, &cluster);
+        })
+        .print();
+}

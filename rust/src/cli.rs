@@ -1,0 +1,214 @@
+//! Command-line argument parsing — `clap` is unavailable offline, so
+//! this implements the subset the launcher needs: subcommands,
+//! `--flag value` / `--flag=value` options, boolean switches, typed
+//! accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand path, options, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Vec<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("argument error: {0}")]
+pub struct ArgError(pub String);
+
+impl Args {
+    /// Parse raw args (without argv[0]). `n_subcommands` leading bare
+    /// words are treated as the subcommand path; later bare words are
+    /// positionals. Known boolean switch names must be listed so
+    /// `--switch value` is not mis-parsed.
+    pub fn parse(
+        raw: &[String],
+        n_subcommands: usize,
+        known_switches: &[&str],
+    ) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.opts.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    // Trailing bare --flag: treat as a switch.
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.len() < n_subcommands
+                && out.opts.is_empty()
+                && out.switches.is_empty()
+                && out.positionals.is_empty()
+            {
+                out.subcommand.push(a.clone());
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(n_subcommands: usize, known_switches: &[&str]) -> Result<Args, ArgError> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, n_subcommands, known_switches)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated list option: `--seeds 1,2,3`.
+    pub fn u64_list_or(&self, name: &str, default: &[u64]) -> Result<Vec<u64>, ArgError> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| ArgError(format!("--{name}: bad list element '{s}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Usage text for the launcher.
+pub const USAGE: &str = "\
+ecosched — energy-aware, workload-profiling VM scheduler (paper reproduction)
+
+USAGE:
+    ecosched <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run                 Run a scheduling campaign from a config file
+                          --config <path>    config file (TOML subset)
+                          --policy <name>    round_robin|first_fit|best_fit|energy_aware
+                          --seed <n>         RNG seed (default 42)
+                          --hours <h>        simulated campaign length (default 2)
+    experiment <id>     Reproduce a paper table/figure:
+                          fig1 fig2 fig3 table1 table2 table3 table4 table5
+                          abl1 abl2 abl3 scale all
+                          --seeds 1,2,3      seeds to average (default 3 seeds)
+                          --out <dir>        CSV output dir (default results/)
+                          --artifacts <dir>  HLO artifacts dir (default artifacts/)
+                          --fast             smaller campaign for smoke runs
+    train               Train the energy predictor MLP via train_step.hlo
+                          --epochs <n>       (default 60)
+                          --samples <n>      history campaign size (default 4000)
+                          --artifacts <dir>  HLO artifacts dir (default artifacts/)
+    classify            Profile + classify a synthetic trace, print vectors
+                          --jobs <n>         number of jobs (default 12)
+    help                Show this help
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(&v(&["experiment", "fig3", "--seed", "7"]), 2, &[]).unwrap();
+        assert_eq!(a.subcommand, vec!["experiment", "fig3"]);
+        assert_eq!(a.opt("seed"), Some("7"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&v(&["run", "--policy=best_fit"]), 1, &[]).unwrap();
+        assert_eq!(a.str_or("policy", ""), "best_fit");
+    }
+
+    #[test]
+    fn switches_do_not_eat_values() {
+        let a = Args::parse(&v(&["run", "--fast", "pos1"]), 1, &["fast"]).unwrap();
+        assert!(a.switch("fast"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag_is_switch() {
+        let a = Args::parse(&v(&["run", "--verbose"]), 1, &[]).unwrap();
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&v(&["run", "--hours", "2.5", "--n", "10"]), 1, &[]).unwrap();
+        assert_eq!(a.f64_or("hours", 0.0).unwrap(), 2.5);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 10);
+        assert_eq!(a.f64_or("missing", 9.0).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&v(&["run", "--hours", "abc"]), 1, &[]).unwrap();
+        assert!(a.f64_or("hours", 0.0).is_err());
+    }
+
+    #[test]
+    fn u64_list() {
+        let a = Args::parse(&v(&["x", "--seeds", "1,2,3"]), 1, &[]).unwrap();
+        assert_eq!(a.u64_list_or("seeds", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.u64_list_or("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn fewer_subcommands_than_allowed() {
+        let a = Args::parse(&v(&["help"]), 2, &[]).unwrap();
+        assert_eq!(a.subcommand, vec!["help"]);
+    }
+}

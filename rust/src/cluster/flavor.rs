@@ -1,0 +1,79 @@
+//! VM flavors — OpenStack-style instance sizes. The paper provisions
+//! big-data workers as VMs on five Xeon hosts; flavors bound how much of
+//! a host one VM may demand and drive bin-packing granularity.
+
+/// A VM size class: maximum resources the VM may consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flavor {
+    pub name: &'static str,
+    /// Virtual CPU cores.
+    pub vcpus: f64,
+    /// Memory in GiB.
+    pub mem_gb: f64,
+    /// Provisioned disk bandwidth (MB/s) — SSD share.
+    pub disk_mbps: f64,
+    /// Provisioned network bandwidth (MB/s) — 1 GbE share.
+    pub net_mbps: f64,
+}
+
+/// The flavor catalog used across experiments, sized so the paper's
+/// host (32 vCPU / 64 GB) fits a small number of workers — matching the
+/// testbed where each host runs a handful of Hadoop/Spark executors.
+pub const SMALL: Flavor = Flavor {
+    name: "small",
+    vcpus: 4.0,
+    mem_gb: 8.0,
+    disk_mbps: 120.0,
+    net_mbps: 30.0,
+};
+
+pub const MEDIUM: Flavor = Flavor {
+    name: "medium",
+    vcpus: 8.0,
+    mem_gb: 16.0,
+    disk_mbps: 200.0,
+    net_mbps: 60.0,
+};
+
+pub const LARGE: Flavor = Flavor {
+    name: "large",
+    vcpus: 16.0,
+    mem_gb: 32.0,
+    disk_mbps: 350.0,
+    net_mbps: 90.0,
+};
+
+pub const CATALOG: [Flavor; 3] = [SMALL, MEDIUM, LARGE];
+
+impl Flavor {
+    pub fn by_name(name: &str) -> Option<Flavor> {
+        CATALOG.iter().copied().find(|f| f.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(Flavor::by_name("medium").unwrap().vcpus, 8.0);
+        assert!(Flavor::by_name("xxl").is_none());
+    }
+
+    #[test]
+    fn flavors_fit_paper_host() {
+        // The paper's host: 32 vCPU, 64 GB. Every flavor must fit, and
+        // smalls must pack at least 8 per host (bin-packing headroom).
+        for f in CATALOG {
+            assert!(f.vcpus <= 32.0 && f.mem_gb <= 64.0, "{} too big", f.name);
+        }
+        assert!(32.0 / SMALL.vcpus >= 8.0);
+    }
+
+    #[test]
+    fn sizes_are_ordered() {
+        assert!(SMALL.vcpus < MEDIUM.vcpus && MEDIUM.vcpus < LARGE.vcpus);
+        assert!(SMALL.mem_gb < MEDIUM.mem_gb && MEDIUM.mem_gb < LARGE.mem_gb);
+    }
+}

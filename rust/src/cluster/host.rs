@@ -1,0 +1,363 @@
+//! Physical hosts: capacity, utilization accounting, DVFS, and the
+//! power-state machine. Host state `R_h = (U_cpu, U_mem, U_io)` (Eq. 3)
+//! is derived here from the demands of resident VMs.
+
+use crate::cluster::power::{PowerModel, PowerState, BOOT_SECS, PSTATES, SHUTDOWN_SECS};
+use crate::cluster::vm::VmId;
+use crate::cluster::Demand;
+
+/// Stable host identifier (dense index into the cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HostId(pub usize);
+
+impl std::fmt::Display for HostId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "host-{}", self.0)
+    }
+}
+
+/// Host hardware description — defaults match the paper's testbed node
+/// (Intel Xeon, 64 GB RAM, SSD storage, 1 Gbps Ethernet).
+#[derive(Debug, Clone, Copy)]
+pub struct HostSpec {
+    pub cpu_cores: f64,
+    pub mem_gb: f64,
+    /// SSD sequential bandwidth budget (MB/s).
+    pub disk_mbps: f64,
+    /// NIC budget (MB/s); 1 GbE ≈ 117 MB/s usable.
+    pub net_mbps: f64,
+    pub power: PowerModel,
+}
+
+impl HostSpec {
+    pub fn paper_testbed() -> HostSpec {
+        HostSpec {
+            cpu_cores: 32.0,
+            mem_gb: 64.0,
+            disk_mbps: 1000.0,
+            net_mbps: 117.0,
+            power: crate::cluster::power::XEON_64GB,
+        }
+    }
+
+    pub fn capacity(&self) -> Demand {
+        Demand {
+            cpu: self.cpu_cores,
+            mem_gb: self.mem_gb,
+            disk_mbps: self.disk_mbps,
+            net_mbps: self.net_mbps,
+        }
+    }
+}
+
+/// Normalized utilization vector, each component in [0, 1] — the host
+/// state R_h of Eq. 3 (we keep net separate rather than folding it into
+/// io; the profiler exposes both).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Utilization {
+    pub cpu: f64,
+    pub mem: f64,
+    pub disk: f64,
+    pub net: f64,
+}
+
+impl Utilization {
+    /// Combined I/O utilization (disk+net, max-normalized) — the `U_io`
+    /// the power model (Eq. 5) consumes.
+    pub fn io(&self) -> f64 {
+        self.disk.max(self.net)
+    }
+}
+
+/// A physical host.
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub id: HostId,
+    pub spec: HostSpec,
+    pub state: PowerState,
+    /// VMs currently placed here (including migration targets).
+    pub vms: Vec<VmId>,
+    /// Current DVFS point (relative frequency, one of `PSTATES`).
+    pub freq: f64,
+    /// Demand aggregated from resident VMs this tick (absolute units).
+    pub demand: Demand,
+    /// Extra network demand from in-flight migrations (MB/s).
+    pub migration_net: f64,
+    /// Cumulative count of power cycles (for reports).
+    pub power_cycles: u32,
+}
+
+impl Host {
+    pub fn new(id: HostId, spec: HostSpec) -> Host {
+        Host {
+            id,
+            spec,
+            state: PowerState::On,
+            vms: Vec::new(),
+            freq: 1.0,
+            demand: Demand::ZERO,
+            migration_net: 0.0,
+            power_cycles: 0,
+        }
+    }
+
+    /// Normalized utilization from current demand, clamped to capacity.
+    /// CPU capacity shrinks with DVFS (lower frequency = less work per
+    /// second), which is how frequency scaling can *hurt* CPU-bound
+    /// jobs but be free for I/O-bound ones.
+    pub fn utilization(&self) -> Utilization {
+        if !self.state.is_on() {
+            return Utilization::default();
+        }
+        let cap = self.spec.capacity();
+        let cpu_cap = cap.cpu * self.freq;
+        Utilization {
+            cpu: (self.demand.cpu / cpu_cap).min(1.0),
+            mem: (self.demand.mem_gb / cap.mem_gb).min(1.0),
+            disk: (self.demand.disk_mbps / cap.disk_mbps).min(1.0),
+            net: ((self.demand.net_mbps + self.migration_net) / cap.net_mbps).min(1.0),
+        }
+    }
+
+    /// Per-dimension progress factors: when demand exceeds capacity the
+    /// dimension is contended and work in it proceeds at cap/demand
+    /// speed. Returns (cpu, mem, disk, net) factors in (0, 1].
+    pub fn contention(&self) -> (f64, f64, f64, f64) {
+        let cap = self.spec.capacity();
+        let f = |demand: f64, capacity: f64| {
+            if demand <= capacity || demand <= 0.0 {
+                1.0
+            } else {
+                capacity / demand
+            }
+        };
+        (
+            f(self.demand.cpu, cap.cpu * self.freq),
+            f(self.demand.mem_gb, cap.mem_gb),
+            f(self.demand.disk_mbps, cap.disk_mbps),
+            f(self.demand.net_mbps + self.migration_net, cap.net_mbps),
+        )
+    }
+
+    /// Instantaneous power draw (W) — Eq. 5 through the state machine.
+    pub fn power(&self) -> f64 {
+        let u = self.utilization();
+        self.state
+            .power(&self.spec.power, || {
+                self.spec
+                    .power
+                    .active_power(u.cpu, u.mem, u.io(), self.freq)
+            })
+    }
+
+    /// Free capacity in absolute units (for feasibility checks).
+    /// Memory is a hard constraint; cpu/io can be oversubscribed but we
+    /// report headroom against nominal capacity.
+    pub fn free(&self) -> Demand {
+        let cap = self.spec.capacity();
+        Demand {
+            cpu: (cap.cpu - self.demand.cpu).max(0.0),
+            mem_gb: (cap.mem_gb - self.demand.mem_gb).max(0.0),
+            disk_mbps: (cap.disk_mbps - self.demand.disk_mbps).max(0.0),
+            net_mbps: (cap.net_mbps - self.demand.net_mbps).max(0.0),
+        }
+    }
+
+    /// Would a VM of this flavor fit under the memory hard-constraint
+    /// and a CPU oversubscription cap?
+    pub fn fits(&self, flavor: &crate::cluster::flavor::Flavor, reserved: &Demand) -> bool {
+        if !self.state.accepts_vms() {
+            return false;
+        }
+        let cap = self.spec.capacity();
+        // Memory never oversubscribes (KVM ballooning is off in the
+        // paper's setup); CPU allows 1.5× oversubscription like the
+        // OpenStack default of cpu_allocation_ratio.
+        let mem_ok = reserved.mem_gb + flavor.mem_gb <= cap.mem_gb + 1e-9;
+        let cpu_ok = reserved.cpu + flavor.vcpus <= cap.cpu * 1.5 + 1e-9;
+        mem_ok && cpu_ok
+    }
+
+    /// Begin booting the host at `now`; no-op unless powered off.
+    pub fn power_on(&mut self, now: f64) {
+        if self.state.is_off() {
+            self.state = PowerState::Booting {
+                until: now + BOOT_SECS,
+            };
+            self.power_cycles += 1;
+        }
+    }
+
+    /// Begin shutting down at `now`; only legal with no resident VMs.
+    pub fn power_off(&mut self, now: f64) {
+        assert!(
+            self.vms.is_empty(),
+            "power_off with {} resident VMs",
+            self.vms.len()
+        );
+        if self.state.is_on() {
+            self.state = PowerState::ShuttingDown {
+                until: now + SHUTDOWN_SECS,
+            };
+        }
+    }
+
+    /// Set the DVFS point to the nearest catalog p-state.
+    pub fn set_freq(&mut self, target: f64) {
+        let freq = PSTATES
+            .iter()
+            .copied()
+            .min_by(|a, b| {
+                (a - target)
+                    .abs()
+                    .partial_cmp(&(b - target).abs())
+                    .unwrap()
+            })
+            .unwrap();
+        self.freq = freq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::{LARGE, MEDIUM};
+
+    fn host() -> Host {
+        Host::new(HostId(0), HostSpec::paper_testbed())
+    }
+
+    #[test]
+    fn utilization_tracks_demand() {
+        let mut h = host();
+        h.demand = Demand {
+            cpu: 16.0,
+            mem_gb: 32.0,
+            disk_mbps: 500.0,
+            net_mbps: 58.5,
+        };
+        let u = h.utilization();
+        assert!((u.cpu - 0.5).abs() < 1e-9);
+        assert!((u.mem - 0.5).abs() < 1e-9);
+        assert!((u.disk - 0.5).abs() < 1e-9);
+        assert!((u.net - 0.5).abs() < 1e-9);
+        assert!((u.io() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_clamps_at_one() {
+        let mut h = host();
+        h.demand = Demand {
+            cpu: 100.0,
+            mem_gb: 100.0,
+            disk_mbps: 9999.0,
+            net_mbps: 9999.0,
+        };
+        let u = h.utilization();
+        assert_eq!(u.cpu, 1.0);
+        assert_eq!(u.mem, 1.0);
+        assert_eq!(u.io(), 1.0);
+    }
+
+    #[test]
+    fn powered_off_host_shows_zero_utilization_and_bmc_power() {
+        let mut h = host();
+        h.demand.cpu = 10.0;
+        h.state = PowerState::Off;
+        assert_eq!(h.utilization(), Utilization::default());
+        assert_eq!(h.power(), h.spec.power.p_off);
+    }
+
+    #[test]
+    fn contention_slows_oversubscribed_dimension() {
+        let mut h = host();
+        h.demand = Demand {
+            cpu: 64.0, // 2× capacity
+            mem_gb: 10.0,
+            disk_mbps: 100.0,
+            net_mbps: 10.0,
+        };
+        let (c, m, d, n) = h.contention();
+        assert!((c - 0.5).abs() < 1e-9);
+        assert_eq!((m, d, n), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn dvfs_shrinks_cpu_capacity() {
+        let mut h = host();
+        h.demand.cpu = 16.0;
+        h.set_freq(0.6);
+        assert_eq!(h.freq, 0.6);
+        // 16 cores of demand against 32*0.6=19.2 effective cores.
+        assert!((h.utilization().cpu - 16.0 / 19.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_freq_snaps_to_pstate() {
+        let mut h = host();
+        h.set_freq(0.78);
+        assert_eq!(h.freq, 0.85); // nearest of {1.0, 0.85, 0.7, 0.6}
+        h.set_freq(0.1);
+        assert_eq!(h.freq, 0.6);
+    }
+
+    #[test]
+    fn fits_enforces_memory_hard_cap() {
+        let h = host();
+        let reserved = Demand {
+            cpu: 0.0,
+            mem_gb: 40.0,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        };
+        assert!(!h.fits(&LARGE, &reserved)); // 40+32 > 64
+        assert!(h.fits(&MEDIUM, &reserved)); // 40+16 <= 64
+    }
+
+    #[test]
+    fn fits_allows_cpu_oversubscription_to_1_5x() {
+        let h = host();
+        let reserved = Demand {
+            cpu: 40.0,
+            mem_gb: 0.0,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        };
+        assert!(h.fits(&MEDIUM, &reserved)); // 40+8 <= 48
+        let reserved = Demand {
+            cpu: 44.0,
+            ..reserved
+        };
+        assert!(!h.fits(&MEDIUM, &reserved)); // 44+8 > 48
+    }
+
+    #[test]
+    fn power_cycle_bookkeeping() {
+        let mut h = host();
+        h.power_off(0.0);
+        assert!(matches!(h.state, PowerState::ShuttingDown { .. }));
+        h.state = h.state.advance(SHUTDOWN_SECS);
+        assert!(h.state.is_off());
+        h.power_on(100.0);
+        assert_eq!(h.power_cycles, 1);
+        assert!(matches!(h.state, PowerState::Booting { .. }));
+        assert!(!h.state.accepts_vms());
+        h.state = h.state.advance(100.0 + BOOT_SECS);
+        assert!(h.state.is_on());
+    }
+
+    #[test]
+    #[should_panic(expected = "resident VMs")]
+    fn power_off_with_vms_panics() {
+        let mut h = host();
+        h.vms.push(VmId(1));
+        h.power_off(0.0);
+    }
+
+    #[test]
+    fn migration_traffic_counts_toward_net() {
+        let mut h = host();
+        h.migration_net = 58.5;
+        assert!((h.utilization().net - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,525 @@
+//! Cluster model: hosts, VMs, flavors, the power model, and the
+//! placement/migration state machine — the simulated stand-in for the
+//! paper's five-node KVM/OpenStack testbed.
+
+pub mod flavor;
+pub mod host;
+pub mod power;
+pub mod vm;
+
+pub use flavor::Flavor;
+pub use host::{Host, HostId, HostSpec, Utilization};
+pub use power::{PowerModel, PowerState};
+pub use vm::{migration_cost, Vm, VmId, VmState};
+
+use std::collections::BTreeMap;
+
+/// Absolute resource demand: CPU cores, memory GiB, disk MB/s, net MB/s.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Demand {
+    pub cpu: f64,
+    pub mem_gb: f64,
+    pub disk_mbps: f64,
+    pub net_mbps: f64,
+}
+
+impl Demand {
+    pub const ZERO: Demand = Demand {
+        cpu: 0.0,
+        mem_gb: 0.0,
+        disk_mbps: 0.0,
+        net_mbps: 0.0,
+    };
+
+    pub fn add(&mut self, other: &Demand) {
+        self.cpu += other.cpu;
+        self.mem_gb += other.mem_gb;
+        self.disk_mbps += other.disk_mbps;
+        self.net_mbps += other.net_mbps;
+    }
+
+    pub fn scaled(&self, k: f64) -> Demand {
+        Demand {
+            cpu: self.cpu * k,
+            mem_gb: self.mem_gb * k,
+            disk_mbps: self.disk_mbps * k,
+            net_mbps: self.net_mbps * k,
+        }
+    }
+
+    /// Clamp each component to the flavor's provisioned maxima — a VM
+    /// can never demand more than its size class grants.
+    pub fn capped_by(&self, f: &Flavor) -> Demand {
+        Demand {
+            cpu: self.cpu.min(f.vcpus),
+            mem_gb: self.mem_gb.min(f.mem_gb),
+            disk_mbps: self.disk_mbps.min(f.disk_mbps),
+            net_mbps: self.net_mbps.min(f.net_mbps),
+        }
+    }
+}
+
+/// The cluster: hosts plus the VM inventory and reservation accounting.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub hosts: Vec<Host>,
+    pub vms: BTreeMap<VmId, Vm>,
+    next_vm: u64,
+    /// Flavor-based reservations per host (for admission control —
+    /// distinct from instantaneous demand, which fluctuates by phase).
+    reserved: Vec<Demand>,
+    /// Per-migration network charge, so completion releases exactly
+    /// what start charged.
+    migration_net_of: BTreeMap<VmId, f64>,
+}
+
+impl Cluster {
+    /// Build a homogeneous cluster of `n` paper-testbed hosts.
+    pub fn homogeneous(n: usize) -> Cluster {
+        let spec = HostSpec::paper_testbed();
+        Cluster {
+            hosts: (0..n).map(|i| Host::new(HostId(i), spec)).collect(),
+            vms: BTreeMap::new(),
+            next_vm: 0,
+            reserved: vec![Demand::ZERO; n],
+            migration_net_of: BTreeMap::new(),
+        }
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn host(&self, id: HostId) -> &Host {
+        &self.hosts[id.0]
+    }
+
+    pub fn host_mut(&mut self, id: HostId) -> &mut Host {
+        &mut self.hosts[id.0]
+    }
+
+    pub fn reserved(&self, id: HostId) -> &Demand {
+        &self.reserved[id.0]
+    }
+
+    /// Create a VM (Pending, unplaced).
+    pub fn create_vm(&mut self, flavor: Flavor, job: crate::workload::JobId, now: f64) -> VmId {
+        let id = VmId(self.next_vm);
+        self.next_vm += 1;
+        self.vms.insert(id, Vm::new(id, flavor, job, now));
+        id
+    }
+
+    /// Place a pending VM on a host. Panics on inconsistent state; the
+    /// scheduler must have checked `fits` first (returns Err if not).
+    pub fn place_vm(&mut self, vm_id: VmId, host_id: HostId) -> Result<(), PlacementError> {
+        let flavor = {
+            let vm = self.vms.get(&vm_id).ok_or(PlacementError::NoSuchVm)?;
+            if !matches!(vm.state, VmState::Pending) {
+                return Err(PlacementError::NotPending);
+            }
+            vm.flavor
+        };
+        if !self.hosts[host_id.0].fits(&flavor, &self.reserved[host_id.0]) {
+            return Err(PlacementError::DoesNotFit);
+        }
+        let vm = self.vms.get_mut(&vm_id).unwrap();
+        vm.host = Some(host_id);
+        vm.state = VmState::Running;
+        self.hosts[host_id.0].vms.push(vm_id);
+        self.reserved[host_id.0].add(&Demand {
+            cpu: flavor.vcpus,
+            mem_gb: flavor.mem_gb,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        });
+        Ok(())
+    }
+
+    /// Begin a live migration; completes via [`Cluster::finish_migration`].
+    pub fn start_migration(
+        &mut self,
+        vm_id: VmId,
+        to: HostId,
+        now: f64,
+        link_mbps: f64,
+    ) -> Result<vm::MigrationCost, PlacementError> {
+        let (flavor, from) = {
+            let vm = self.vms.get(&vm_id).ok_or(PlacementError::NoSuchVm)?;
+            if !matches!(vm.state, VmState::Running) {
+                return Err(PlacementError::NotRunning);
+            }
+            (vm.flavor, vm.host.expect("running VM has a host"))
+        };
+        if from == to {
+            return Err(PlacementError::SameHost);
+        }
+        if !self.hosts[to.0].fits(&flavor, &self.reserved[to.0]) {
+            return Err(PlacementError::DoesNotFit);
+        }
+        let cost = migration_cost(flavor.mem_gb, link_mbps);
+        let vm = self.vms.get_mut(&vm_id).unwrap();
+        vm.state = VmState::Migrating {
+            from,
+            to,
+            done: now + cost.duration,
+        };
+        // Reserve on the destination for the duration of the copy; the
+        // source keeps its reservation until cut-over.
+        self.reserved[to.0].add(&Demand {
+            cpu: flavor.vcpus,
+            mem_gb: flavor.mem_gb,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        });
+        self.hosts[from.0].migration_net += cost.net_mbps;
+        self.hosts[to.0].migration_net += cost.net_mbps;
+        self.migration_net_of.insert(vm_id, cost.net_mbps);
+        Ok(cost)
+    }
+
+    /// Complete a migration: cut the VM over to the destination.
+    pub fn finish_migration(&mut self, vm_id: VmId) {
+        let (from, to, flavor) = match self.vms.get(&vm_id) {
+            Some(vm) => match vm.state {
+                VmState::Migrating { from, to, .. } => (from, to, vm.flavor),
+                _ => panic!("finish_migration on non-migrating {vm_id}"),
+            },
+            None => panic!("finish_migration on unknown {vm_id}"),
+        };
+        let charged = self.migration_net_of.remove(&vm_id).unwrap_or(0.0);
+        let vm = self.vms.get_mut(&vm_id).unwrap();
+        vm.state = VmState::Running;
+        vm.host = Some(to);
+        vm.migrations += 1;
+        self.hosts[from.0].vms.retain(|&v| v != vm_id);
+        self.hosts[to.0].vms.push(vm_id);
+        self.reserved[from.0] = sub_reservation(&self.reserved[from.0], &flavor);
+        self.hosts[from.0].migration_net =
+            (self.hosts[from.0].migration_net - charged).max(0.0);
+        self.hosts[to.0].migration_net =
+            (self.hosts[to.0].migration_net - charged).max(0.0);
+    }
+
+    /// Terminate a VM (job completed) and free its reservation.
+    pub fn terminate_vm(&mut self, vm_id: VmId) {
+        let vm = self.vms.get_mut(&vm_id).expect("terminate unknown VM");
+        assert!(
+            matches!(vm.state, VmState::Running),
+            "terminate non-running {vm_id} in state {:?}",
+            vm.state
+        );
+        let host = vm.host.take().expect("running VM has a host");
+        let flavor = vm.flavor;
+        vm.state = VmState::Terminated;
+        self.hosts[host.0].vms.retain(|&v| v != vm_id);
+        self.reserved[host.0] = sub_reservation(&self.reserved[host.0], &flavor);
+    }
+
+    /// Overwrite per-host demand from per-VM demands. Called once per
+    /// simulation tick by the engine. Demands are capped by flavor.
+    pub fn apply_demands(&mut self, vm_demands: &BTreeMap<VmId, Demand>) {
+        for h in &mut self.hosts {
+            h.demand = Demand::ZERO;
+        }
+        for (vm_id, demand) in vm_demands {
+            let vm = match self.vms.get(vm_id) {
+                Some(v) if v.is_active() => v,
+                _ => continue,
+            };
+            let capped = demand.capped_by(&vm.flavor);
+            // During migration the VM still executes on the *source*.
+            let host = match vm.state {
+                VmState::Migrating { from, .. } => from,
+                _ => vm.host.expect("active VM has a host"),
+            };
+            self.hosts[host.0].demand.add(&capped);
+        }
+    }
+
+    /// Advance power-state machines to `now`.
+    pub fn advance_power_states(&mut self, now: f64) {
+        for h in &mut self.hosts {
+            h.state = h.state.advance(now);
+        }
+    }
+
+    /// Profiled (expected-mean) load on a host: sum of resident VMs'
+    /// expected demands plus incoming migrations. Workload-aware
+    /// policies use this instead of instantaneous demand — a host full
+    /// of I/O jobs in a quiet phase is *not* free capacity.
+    pub fn expected_load(&self, id: HostId) -> Demand {
+        let mut total = Demand::ZERO;
+        for vm_id in &self.hosts[id.0].vms {
+            total.add(&self.vms[vm_id].expected);
+        }
+        for vm in self.vms.values() {
+            if let VmState::Migrating { to, .. } = vm.state {
+                if to == id {
+                    total.add(&vm.expected);
+                }
+            }
+        }
+        total
+    }
+
+    /// Expected utilization from [`Cluster::expected_load`], clamped.
+    pub fn expected_util(&self, id: HostId) -> host::Utilization {
+        let host = &self.hosts[id.0];
+        if !host.state.is_on() {
+            return host::Utilization::default();
+        }
+        let cap = host.spec.capacity();
+        let e = self.expected_load(id);
+        host::Utilization {
+            cpu: (e.cpu / (cap.cpu * host.freq)).min(1.0),
+            mem: (e.mem_gb / cap.mem_gb).min(1.0),
+            disk: (e.disk_mbps / cap.disk_mbps).min(1.0),
+            net: (e.net_mbps / cap.net_mbps).min(1.0),
+        }
+    }
+
+    /// Total instantaneous power draw (W) across hosts.
+    pub fn total_power(&self) -> f64 {
+        self.hosts.iter().map(Host::power).sum()
+    }
+
+    /// Number of hosts in the On state.
+    pub fn hosts_on(&self) -> usize {
+        self.hosts.iter().filter(|h| h.state.is_on()).count()
+    }
+
+    /// Hosts that can currently accept a VM of `flavor`.
+    pub fn feasible_hosts(&self, flavor: &Flavor) -> Vec<HostId> {
+        self.hosts
+            .iter()
+            .filter(|h| h.fits(flavor, &self.reserved[h.id.0]))
+            .map(|h| h.id)
+            .collect()
+    }
+
+    /// Consistency check used by property tests: reservations equal the
+    /// sum of resident flavors; VM/host cross-references agree.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for h in &self.hosts {
+            let mut expect = Demand::ZERO;
+            for vm_id in &h.vms {
+                let vm = self
+                    .vms
+                    .get(vm_id)
+                    .ok_or_else(|| format!("{} lists unknown {vm_id}", h.id))?;
+                let on_this_host = match vm.state {
+                    VmState::Migrating { from, to, .. } => from == h.id || to == h.id,
+                    _ => vm.host == Some(h.id),
+                };
+                if !on_this_host {
+                    return Err(format!("{vm_id} listed on {} but points elsewhere", h.id));
+                }
+                // Migrating VMs are listed on the source until cut-over;
+                // the destination carries only a reservation.
+                expect.add(&Demand {
+                    cpu: vm.flavor.vcpus,
+                    mem_gb: vm.flavor.mem_gb,
+                    disk_mbps: 0.0,
+                    net_mbps: 0.0,
+                });
+            }
+            let r = &self.reserved[h.id.0];
+            // Reservation >= resident flavors (migration targets add
+            // reservation without residency).
+            if r.cpu + 1e-6 < expect.cpu || r.mem_gb + 1e-6 < expect.mem_gb {
+                return Err(format!(
+                    "{} reservation {:?} < resident {:?}",
+                    h.id, r, expect
+                ));
+            }
+            if r.mem_gb > h.spec.mem_gb + 1e-6 {
+                return Err(format!("{} memory over-reserved: {}", h.id, r.mem_gb));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn sub_reservation(r: &Demand, f: &Flavor) -> Demand {
+    Demand {
+        cpu: (r.cpu - f.vcpus).max(0.0),
+        mem_gb: (r.mem_gb - f.mem_gb).max(0.0),
+        disk_mbps: r.disk_mbps,
+        net_mbps: r.net_mbps,
+    }
+}
+
+/// Placement errors surfaced to the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum PlacementError {
+    #[error("no such VM")]
+    NoSuchVm,
+    #[error("VM is not pending")]
+    NotPending,
+    #[error("VM is not running")]
+    NotRunning,
+    #[error("VM does not fit on target host")]
+    DoesNotFit,
+    #[error("source and destination host are the same")]
+    SameHost,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::{LARGE, MEDIUM, SMALL};
+    use crate::workload::JobId;
+
+    fn cluster() -> Cluster {
+        Cluster::homogeneous(3)
+    }
+
+    #[test]
+    fn place_and_terminate_roundtrip() {
+        let mut c = cluster();
+        let vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm, HostId(1)).unwrap();
+        assert_eq!(c.vms[&vm].host, Some(HostId(1)));
+        assert_eq!(c.host(HostId(1)).vms, vec![vm]);
+        assert_eq!(c.reserved(HostId(1)).mem_gb, 16.0);
+        c.check_invariants().unwrap();
+        c.terminate_vm(vm);
+        assert!(c.host(HostId(1)).vms.is_empty());
+        assert_eq!(c.reserved(HostId(1)).mem_gb, 0.0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn memory_admission_control() {
+        let mut c = cluster();
+        // 64 GB host: two LARGE (32 GB) fit, a third does not.
+        let a = c.create_vm(LARGE, JobId(1), 0.0);
+        let b = c.create_vm(LARGE, JobId(2), 0.0);
+        let d = c.create_vm(LARGE, JobId(3), 0.0);
+        c.place_vm(a, HostId(0)).unwrap();
+        c.place_vm(b, HostId(0)).unwrap();
+        assert_eq!(c.place_vm(d, HostId(0)), Err(PlacementError::DoesNotFit));
+        assert_eq!(c.feasible_hosts(&LARGE), vec![HostId(1), HostId(2)]);
+    }
+
+    #[test]
+    fn migration_lifecycle_conserves_vms() {
+        let mut c = cluster();
+        let vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        let cost = c.start_migration(vm, HostId(2), 10.0, 100.0).unwrap();
+        assert!(cost.duration > 0.0);
+        // Still resident on source; reserved on both.
+        assert_eq!(c.host(HostId(0)).vms, vec![vm]);
+        assert_eq!(c.reserved(HostId(2)).mem_gb, 16.0);
+        assert!(c.host(HostId(0)).migration_net > 0.0);
+        c.check_invariants().unwrap();
+        c.finish_migration(vm);
+        assert!(c.host(HostId(0)).vms.is_empty());
+        assert_eq!(c.host(HostId(2)).vms, vec![vm]);
+        assert_eq!(c.reserved(HostId(0)).mem_gb, 0.0);
+        assert_eq!(c.vms[&vm].migrations, 1);
+        assert_eq!(c.host(HostId(0)).migration_net, 0.0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migration_to_same_host_rejected() {
+        let mut c = cluster();
+        let vm = c.create_vm(SMALL, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        assert_eq!(
+            c.start_migration(vm, HostId(0), 0.0, 100.0),
+            Err(PlacementError::SameHost)
+        );
+    }
+
+    #[test]
+    fn demands_aggregate_onto_source_during_migration() {
+        let mut c = cluster();
+        let vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        c.start_migration(vm, HostId(1), 0.0, 100.0).unwrap();
+        let mut demands = BTreeMap::new();
+        demands.insert(
+            vm,
+            Demand {
+                cpu: 4.0,
+                mem_gb: 8.0,
+                disk_mbps: 50.0,
+                net_mbps: 10.0,
+            },
+        );
+        c.apply_demands(&demands);
+        assert_eq!(c.host(HostId(0)).demand.cpu, 4.0);
+        assert_eq!(c.host(HostId(1)).demand.cpu, 0.0);
+    }
+
+    #[test]
+    fn demand_capped_by_flavor() {
+        let mut c = cluster();
+        let vm = c.create_vm(SMALL, JobId(1), 0.0); // 4 vcpus max
+        c.place_vm(vm, HostId(0)).unwrap();
+        let mut demands = BTreeMap::new();
+        demands.insert(
+            vm,
+            Demand {
+                cpu: 100.0,
+                mem_gb: 100.0,
+                disk_mbps: 9999.0,
+                net_mbps: 9999.0,
+            },
+        );
+        c.apply_demands(&demands);
+        let d = c.host(HostId(0)).demand;
+        assert_eq!(d.cpu, 4.0);
+        assert_eq!(d.mem_gb, 8.0);
+        assert_eq!(d.disk_mbps, 120.0);
+    }
+
+    #[test]
+    fn total_power_counts_all_states() {
+        let mut c = cluster();
+        let p_all_on = c.total_power();
+        assert!((p_all_on - 3.0 * 110.0).abs() < 1e-9);
+        c.host_mut(HostId(2)).power_off(0.0);
+        c.advance_power_states(1000.0);
+        let p_after = c.total_power();
+        assert!((p_after - (2.0 * 110.0 + 5.0)).abs() < 1e-9);
+        assert_eq!(c.hosts_on(), 2);
+    }
+
+    #[test]
+    fn terminated_vm_demand_ignored() {
+        let mut c = cluster();
+        let vm = c.create_vm(SMALL, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        c.terminate_vm(vm);
+        let mut demands = BTreeMap::new();
+        demands.insert(
+            vm,
+            Demand {
+                cpu: 4.0,
+                mem_gb: 1.0,
+                disk_mbps: 1.0,
+                net_mbps: 1.0,
+            },
+        );
+        c.apply_demands(&demands);
+        assert_eq!(c.host(HostId(0)).demand, Demand::ZERO);
+    }
+
+    #[test]
+    fn place_on_booting_host_rejected() {
+        let mut c = cluster();
+        c.host_mut(HostId(0)).power_off(0.0);
+        c.advance_power_states(100.0);
+        c.host_mut(HostId(0)).power_on(100.0);
+        let vm = c.create_vm(SMALL, JobId(1), 100.0);
+        assert_eq!(
+            c.place_vm(vm, HostId(0)),
+            Err(PlacementError::DoesNotFit)
+        );
+    }
+}

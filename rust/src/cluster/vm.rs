@@ -1,0 +1,158 @@
+//! Virtual machines: the placement unit. A VM hosts exactly one job's
+//! worker set in our model (the paper provisions per-job worker VMs via
+//! OpenStack); its resource demand at any instant comes from the
+//! workload model of the job it runs.
+
+use crate::cluster::flavor::Flavor;
+use crate::cluster::HostId;
+use crate::workload::JobId;
+
+/// Stable VM identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VmId(pub u64);
+
+impl std::fmt::Display for VmId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm-{}", self.0)
+    }
+}
+
+/// VM lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VmState {
+    /// Created, waiting for a placement decision.
+    Pending,
+    /// Running on a host.
+    Running,
+    /// Live-migrating: still consuming on `from`, plus migration
+    /// network traffic on both ends, until `done` (sim time).
+    Migrating { from: HostId, to: HostId, done: f64 },
+    /// Job finished; VM released.
+    Terminated,
+}
+
+/// A virtual machine.
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub id: VmId,
+    pub flavor: Flavor,
+    pub job: JobId,
+    /// Current host (target host while migrating).
+    pub host: Option<HostId>,
+    pub state: VmState,
+    /// Simulation time of creation (for age-based policies).
+    pub created_at: f64,
+    /// Count of completed migrations (overhead accounting, §V-E).
+    pub migrations: u32,
+    /// Profiled mean demand of the hosted job (absolute units) — the
+    /// workload-aware load estimate schedulers use instead of the
+    /// instantaneous demand, which phases swing around it.
+    pub expected: crate::cluster::Demand,
+}
+
+impl Vm {
+    pub fn new(id: VmId, flavor: Flavor, job: JobId, now: f64) -> Vm {
+        Vm {
+            id,
+            flavor,
+            job,
+            host: None,
+            state: VmState::Pending,
+            created_at: now,
+            migrations: 0,
+            expected: crate::cluster::Demand::ZERO,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, VmState::Running | VmState::Migrating { .. })
+    }
+}
+
+/// Live-migration cost model. The paper schedules migrations in
+/// low-activity windows and reports the overhead as "negligible,
+/// absorbed during low-activity periods" (§V-E); we still charge the
+/// real costs so that claim is *measured*:
+/// * duration = VM memory / available network bandwidth (pre-copy),
+/// * a brief stop-and-copy stall that pauses job progress,
+/// * network demand on source and destination during the copy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationCost {
+    /// Total pre-copy duration (s).
+    pub duration: f64,
+    /// Stop-and-copy stall (s) — job makes no progress.
+    pub stall: f64,
+    /// Extra network demand during copy (MB/s) on both hosts.
+    pub net_mbps: f64,
+}
+
+/// Compute migration cost for a VM with `mem_gb` of (touched) memory
+/// over a link with `link_mbps` available.
+pub fn migration_cost(mem_gb: f64, link_mbps: f64) -> MigrationCost {
+    // Live migration is rate-limited to 40 MB/s (a typical
+    // libvirt migrate-setspeed throttle on 1 GbE) so the copy never
+    // starves co-located shuffle traffic.
+    let link = link_mbps.max(10.0).min(40.0);
+    // Pre-copy moves ~1.3× memory (dirty-page re-copy rounds).
+    let duration = mem_gb * 1024.0 * 1.3 / link;
+    MigrationCost {
+        duration,
+        // Final stop-and-copy: last dirty set, ~1 % of memory.
+        stall: (mem_gb * 1024.0 * 0.01 / link).max(0.2),
+        net_mbps: link,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+
+    #[test]
+    fn lifecycle_flags() {
+        let mut vm = Vm::new(VmId(1), MEDIUM, JobId(9), 0.0);
+        assert!(!vm.is_active());
+        vm.state = VmState::Running;
+        assert!(vm.is_active());
+        vm.state = VmState::Migrating {
+            from: HostId(0),
+            to: HostId(1),
+            done: 5.0,
+        };
+        assert!(vm.is_active());
+        vm.state = VmState::Terminated;
+        assert!(!vm.is_active());
+    }
+
+    #[test]
+    fn migration_cost_scales_with_memory() {
+        let small = migration_cost(8.0, 100.0);
+        let big = migration_cost(32.0, 100.0);
+        assert!(big.duration > 3.9 * small.duration);
+        assert!(small.stall >= 0.2);
+    }
+
+    #[test]
+    fn migration_duration_reasonable_for_paper_testbed() {
+        // 16 GB VM over an otherwise-idle 1 GbE (~110 MB/s usable):
+        // should take minutes, not hours, not milliseconds.
+        let c = migration_cost(16.0, 110.0);
+        assert!(
+            (60.0..600.0).contains(&c.duration),
+            "duration {}",
+            c.duration
+        );
+        assert!(c.net_mbps <= 80.0);
+    }
+
+    #[test]
+    fn migration_cost_degrades_gracefully_on_congested_link() {
+        let c = migration_cost(8.0, 0.0); // fully congested link
+        assert!(c.duration.is_finite() && c.duration > 0.0);
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(VmId(7).to_string(), "vm-7");
+    }
+}

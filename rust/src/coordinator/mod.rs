@@ -1,0 +1,178 @@
+//! The coordinator (L3's leader): campaign driver, placement path,
+//! consolidation actuation, and outcome reporting.
+
+pub mod leader;
+pub mod report;
+
+pub use leader::{remaining_solo, CampaignConfig, Coordinator};
+pub use report::{CampaignReport, JobRecord, Overhead};
+
+use crate::predict::{EnergyPredictor, NativeMlp, OraclePredictor};
+use crate::sched::{
+    BestFit, EnergyAware, EnergyAwareParams, FirstFit, PlacementPolicy, RoundRobin,
+};
+
+/// Build a policy by name. The energy-aware policy takes its predictor
+/// explicitly; `energy_aware` with no predictor defaults to the
+/// analytic oracle (used in unit tests and quick runs without
+/// artifacts — production runs pass the trained XLA MLP).
+pub fn make_policy(name: &str) -> Option<Box<dyn PlacementPolicy>> {
+    match name {
+        "round_robin" => Some(Box::new(RoundRobin::default())),
+        "first_fit" => Some(Box::new(FirstFit)),
+        "best_fit" => Some(Box::new(BestFit)),
+        "energy_aware" => Some(Box::new(EnergyAware::new(
+            Box::new(OraclePredictor),
+            EnergyAwareParams::default(),
+        ))),
+        _ => None,
+    }
+}
+
+/// Energy-aware policy with a specific predictor.
+pub fn energy_aware_with(predictor: Box<dyn EnergyPredictor>) -> Box<dyn PlacementPolicy> {
+    Box::new(EnergyAware::new(predictor, EnergyAwareParams::default()))
+}
+
+/// Energy-aware policy backed by the native MLP with weights from
+/// `artifacts/weights.json` (or a deterministic init when absent).
+pub fn energy_aware_native_mlp(artifacts: &std::path::Path) -> Box<dyn PlacementPolicy> {
+    let weights = crate::predict::MlpWeights::load(&artifacts.join("weights.json"))
+        .unwrap_or_else(|| crate::predict::MlpWeights::init(42));
+    energy_aware_with(Box::new(NativeMlp::new(weights)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Arrivals, Mix, TraceSpec};
+
+    fn small_trace(n: usize, seed: u64) -> Vec<crate::workload::Job> {
+        TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: n,
+            arrivals: Arrivals::Poisson { mean_gap: 60.0 },
+            horizon: 3600.0,
+        }
+        .generate(seed)
+    }
+
+    #[test]
+    fn campaign_completes_all_jobs_round_robin() {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                n_hosts: 5,
+                seed: 1,
+                ..Default::default()
+            },
+            make_policy("round_robin").unwrap(),
+        );
+        let report = coord.run(small_trace(12, 1));
+        assert_eq!(report.jobs.len(), 12);
+        assert!(report.makespan > 0.0);
+        assert!(report.energy_j > 0.0);
+        assert_eq!(report.policy, "round_robin");
+        // RR never powers down.
+        assert_eq!(report.power_cycles, 0);
+        assert_eq!(report.host_off_s, 0.0);
+    }
+
+    #[test]
+    fn campaign_completes_all_jobs_energy_aware() {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                n_hosts: 5,
+                seed: 1,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        let report = coord.run(small_trace(12, 1));
+        assert_eq!(report.jobs.len(), 12);
+        assert_eq!(report.sla_violations, 0, "energy-aware must not violate SLAs");
+        assert!(report.sla_compliance >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn energy_aware_beats_round_robin_on_energy() {
+        let trace = small_trace(16, 3);
+        let mut rr = Coordinator::new(
+            CampaignConfig {
+                seed: 3,
+                ..Default::default()
+            },
+            make_policy("round_robin").unwrap(),
+        );
+        let rep_rr = rr.run(trace.clone());
+        let mut ea = Coordinator::new(
+            CampaignConfig {
+                seed: 3,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        let rep_ea = ea.run(trace);
+        // Compare per unit of useful work (makespans differ slightly).
+        let gain = 1.0 - rep_ea.j_per_solo_second() / rep_rr.j_per_solo_second();
+        assert!(
+            gain > 0.05,
+            "energy-aware should save ≥5 % (got {:.1} %)",
+            gain * 100.0
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut c = Coordinator::new(
+                CampaignConfig {
+                    seed: 7,
+                    ..Default::default()
+                },
+                make_policy("energy_aware").unwrap(),
+            );
+            c.run(small_trace(10, 7))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.migrations, b.migrations);
+        let jct_a: Vec<f64> = a.jobs.iter().map(|j| j.jct).collect();
+        let jct_b: Vec<f64> = b.jobs.iter().map(|j| j.jct).collect();
+        assert_eq!(jct_a, jct_b);
+    }
+
+    #[test]
+    fn history_populated_after_campaign() {
+        let mut coord = Coordinator::new(
+            CampaignConfig::default(),
+            make_policy("best_fit").unwrap(),
+        );
+        let report = coord.run(small_trace(8, 5));
+        assert_eq!(coord.history.len(), 8);
+        assert!(report.jobs.iter().all(|j| j.energy_j > 0.0));
+    }
+
+    #[test]
+    fn make_policy_rejects_unknown() {
+        assert!(make_policy("nope").is_none());
+        for name in ["round_robin", "first_fit", "best_fit", "energy_aware"] {
+            assert_eq!(make_policy(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn overhead_is_recorded() {
+        let mut coord = Coordinator::new(
+            CampaignConfig::default(),
+            make_policy("energy_aware").unwrap(),
+        );
+        let report = coord.run(small_trace(8, 9));
+        // At least one decision per job; deferrals and boot-waits add
+        // re-decisions on top.
+        assert!(report.overhead.n_decisions >= 8);
+        assert!(report.overhead.decision_wall_s > 0.0);
+        assert!(report.overhead.cpu_share(report.makespan) < 0.05);
+    }
+}

@@ -1,0 +1,158 @@
+//! Campaign outcome: everything the experiment harness needs to
+//! regenerate the paper's tables and figures from one run.
+
+use crate::util::stats::Histogram;
+use crate::util::timeline::Timeline;
+use crate::workload::{JobId, WorkloadKind};
+
+/// Per-job outcome.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub kind: WorkloadKind,
+    pub gb: f64,
+    pub submit_at: f64,
+    pub jct: f64,
+    pub solo: f64,
+    /// JCT inflation over solo (can be negative if contention-free and
+    /// jitter favored the run).
+    pub slowdown: f64,
+    /// Energy attributed to this job (J).
+    pub energy_j: f64,
+    /// Queueing delay before the VM started (s).
+    pub wait: f64,
+    pub migrations: u32,
+    pub sla_met: bool,
+}
+
+/// Decision-path overhead accounting (§V-E).
+#[derive(Debug, Clone, Default)]
+pub struct Overhead {
+    pub n_decisions: u64,
+    /// Wall-clock seconds spent in profile→predict→decide.
+    pub decision_wall_s: f64,
+    /// Wall-clock seconds spent in consolidation + DVFS scans.
+    pub scan_wall_s: f64,
+    /// PJRT executions issued by the predictor.
+    pub predictor_execs: u64,
+}
+
+impl Overhead {
+    /// Mean decision latency (µs).
+    pub fn per_decision_us(&self) -> f64 {
+        if self.n_decisions == 0 {
+            0.0
+        } else {
+            self.decision_wall_s / self.n_decisions as f64 * 1e6
+        }
+    }
+
+    /// Controller CPU share: wall seconds consumed per simulated
+    /// second — what fraction of one core the controller would occupy
+    /// in deployment (the honest analog of §V-E's "<5 % CPU usage").
+    pub fn cpu_share(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            (self.decision_wall_s + self.scan_wall_s) / horizon_s
+        }
+    }
+}
+
+/// Full campaign report.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub policy: &'static str,
+    pub seed: u64,
+    /// Simulated seconds from t=0 to last completion.
+    pub makespan: f64,
+    /// Total measured energy over the makespan (J).
+    pub energy_j: f64,
+    /// Noise-free energy (J).
+    pub energy_true_j: f64,
+    /// Idle-subtracted energy (J).
+    pub active_energy_j: f64,
+    pub per_host_energy_j: Vec<f64>,
+    pub jobs: Vec<JobRecord>,
+    pub sla_compliance: f64,
+    pub sla_violations: usize,
+    pub mean_slowdown: f64,
+    pub migrations: u64,
+    pub migration_stall_s: f64,
+    pub power_cycles: u32,
+    /// Host-seconds spent powered off or shutting down.
+    pub host_off_s: f64,
+    pub power_trace: Timeline,
+    pub hosts_on_trace: Timeline,
+    /// CPU-utilization distribution over (host, 5 s sample) pairs,
+    /// powered-on hosts only (§V-D).
+    pub util_hist: Histogram,
+    /// Mean CPU utilization per host over the campaign.
+    pub per_host_mean_cpu: Vec<f64>,
+    pub overhead: Overhead,
+    /// Deferred-placement retries that eventually succeeded.
+    pub deferrals: u64,
+}
+
+impl CampaignReport {
+    /// Mean power draw over the campaign (W).
+    pub fn mean_power_w(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.energy_j / self.makespan
+        }
+    }
+
+    /// Energy per unit of useful work (J per solo-second completed) —
+    /// the makespan-independent efficiency metric used when comparing
+    /// policies whose campaigns end at different times.
+    pub fn j_per_solo_second(&self) -> f64 {
+        let work: f64 = self.jobs.iter().map(|j| j.solo).sum();
+        if work <= 0.0 {
+            0.0
+        } else {
+            self.energy_j / work
+        }
+    }
+
+    pub fn energy_of_kind(&self, kind: WorkloadKind) -> f64 {
+        self.jobs
+            .iter()
+            .filter(|j| j.kind == kind)
+            .map(|j| j.energy_j)
+            .sum()
+    }
+
+    pub fn mean_jct_of_kind(&self, kind: WorkloadKind) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.kind == kind)
+            .map(|j| j.jct)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(crate::util::stats::mean(&xs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_math() {
+        let o = Overhead {
+            n_decisions: 100,
+            decision_wall_s: 0.01,
+            scan_wall_s: 0.02,
+            predictor_execs: 100,
+        };
+        assert!((o.per_decision_us() - 100.0).abs() < 1e-9);
+        assert!((o.cpu_share(3.0) - 0.01).abs() < 1e-9);
+        assert_eq!(Overhead::default().per_decision_us(), 0.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Ablations:
+//! * `abl1` — δ_low × δ_high threshold sweep (§VI-B's tunability):
+//!   the savings/SLA trade-off frontier.
+//! * `abl2` — predictor choice (§III-B): oracle vs MLP vs decision
+//!   tree vs linear vs no-predictor baselines.
+//! * `abl3` — DVFS on/off for I/O-heavy tenants (§III-C).
+
+use crate::coordinator::{CampaignConfig, Coordinator};
+use crate::exp::common::{run_campaign, standard_trace, ExpContext};
+use crate::predict::{
+    synthesize, DecisionTree, LinearModel, LinearPredictor, OraclePredictor, TreeParams,
+    TreePredictor,
+};
+use crate::sched::{ConsolidationParams, EnergyAware, EnergyAwareParams};
+use crate::util::table::TableBuilder;
+use crate::workload::Mix;
+
+pub fn run_abl1(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Ablation 1 — consolidation thresholds δ_low × δ_high (Eqs. 8–9)",
+        &["δ_low", "δ_high", "savings %", "compliance %", "migrations"],
+    );
+    let lows = if ctx.fast { vec![0.2] } else { vec![0.1, 0.2, 0.3] };
+    let highs = if ctx.fast {
+        vec![0.85]
+    } else {
+        vec![0.75, 0.85, 0.95]
+    };
+    for &dl in &lows {
+        for &dh in &highs {
+            let mut savings = Vec::new();
+            let mut comp = Vec::new();
+            let mut migr = 0u64;
+            for &seed in &ctx.seeds {
+                let trace = standard_trace(Mix::paper(), ctx.n_jobs(), seed);
+                let base = run_campaign(
+                    crate::coordinator::make_policy("round_robin").unwrap(),
+                    trace.clone(),
+                    seed,
+                    5,
+                );
+                let mut coord = Coordinator::new(
+                    CampaignConfig {
+                        seed,
+                        consolidation: Some(ConsolidationParams {
+                            delta_low: dl,
+                            delta_high: dh,
+                            ..Default::default()
+                        }),
+                        ..Default::default()
+                    },
+                    Box::new(EnergyAware::new(
+                        ctx.make_predictor(),
+                        EnergyAwareParams {
+                            delta_high: dh,
+                            ..Default::default()
+                        },
+                    )),
+                );
+                let opt = coord.run(trace);
+                savings.push(1.0 - opt.j_per_solo_second() / base.j_per_solo_second());
+                comp.push(opt.sla_compliance);
+                migr += opt.migrations;
+            }
+            t.row(&[
+                format!("{dl:.2}"),
+                format!("{dh:.2}"),
+                format!("{:.1}", crate::util::stats::mean(&savings) * 100.0),
+                format!("{:.1}", crate::util::stats::mean(&comp) * 100.0),
+                migr.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+pub fn run_abl2(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Ablation 2 — prediction engine choice (§III-B)",
+        &[
+            "predictor",
+            "savings %",
+            "compliance %",
+            "decision µs",
+            "val MSE",
+        ],
+    );
+    // Fit the learned baselines on the same oracle-labeled data.
+    let ds = synthesize(4000, 7, None);
+    let (train, val) = ds.split(0.9);
+    let tree = DecisionTree::fit(&train.xs, &train.ys, TreeParams::default());
+    let tree_mse = val.mse(|x| tree.eval(x));
+    let lin = LinearModel::fit(&train.xs, &train.ys, 1e-4);
+    let lin_mse = val.mse(|x| lin.eval(x));
+    let mlp_mse = if ctx.has_artifacts() {
+        let w = ctx.ensure_weights();
+        let mut m = crate::predict::NativeMlp::new(w);
+        val.mse(|x| {
+            let (a, b) = m.forward(x);
+            [a, b]
+        })
+    } else {
+        f64::NAN
+    };
+
+    type MakePred = Box<dyn Fn() -> Box<dyn crate::predict::EnergyPredictor>>;
+    let mut rows: Vec<(&str, f64, MakePred)> = vec![
+        ("oracle", 0.0, Box::new(|| Box::new(OraclePredictor))),
+        (
+            "dtree",
+            tree_mse,
+            Box::new(move || {
+                Box::new(TreePredictor { tree: tree.clone() })
+            }),
+        ),
+        (
+            "linear",
+            lin_mse,
+            Box::new(move || {
+                Box::new(LinearPredictor { model: lin.clone() })
+            }),
+        ),
+    ];
+    if ctx.has_artifacts() {
+        let ctx2 = ctx.clone();
+        rows.insert(
+            1,
+            (
+                "mlp (xla)",
+                mlp_mse,
+                Box::new(move || ctx2.make_predictor()),
+            ),
+        );
+    }
+
+    for (name, mse, make) in rows {
+        let mut savings = Vec::new();
+        let mut comp = Vec::new();
+        let mut decision_us = Vec::new();
+        for &seed in &ctx.seeds {
+            let trace = standard_trace(Mix::paper(), ctx.n_jobs(), seed);
+            let base = run_campaign(
+                crate::coordinator::make_policy("round_robin").unwrap(),
+                trace.clone(),
+                seed,
+                5,
+            );
+            let opt = run_campaign(
+                Box::new(EnergyAware::new(make(), EnergyAwareParams::default())),
+                trace,
+                seed,
+                5,
+            );
+            savings.push(1.0 - opt.j_per_solo_second() / base.j_per_solo_second());
+            comp.push(opt.sla_compliance);
+            decision_us.push(opt.overhead.per_decision_us());
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", crate::util::stats::mean(&savings) * 100.0),
+            format!("{:.1}", crate::util::stats::mean(&comp) * 100.0),
+            format!("{:.1}", crate::util::stats::mean(&decision_us)),
+            if mse.is_nan() {
+                "n/a".into()
+            } else {
+                format!("{mse:.5}")
+            },
+        ]);
+    }
+    t
+}
+
+pub fn run_abl3(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Ablation 3 — DVFS for I/O-bound workloads (§III-C)",
+        &["mix", "dvfs", "energy J/solo-s", "savings vs RR %", "mean slowdown %"],
+    );
+    for (mix_name, mix) in [("io_heavy", Mix::io_heavy()), ("cpu_heavy", Mix::cpu_heavy())] {
+        for dvfs_on in [true, false] {
+            let mut jps = Vec::new();
+            let mut savings = Vec::new();
+            let mut slow = Vec::new();
+            for &seed in &ctx.seeds {
+                let trace = standard_trace(mix.clone(), ctx.n_jobs(), seed);
+                let base = run_campaign(
+                    crate::coordinator::make_policy("round_robin").unwrap(),
+                    trace.clone(),
+                    seed,
+                    5,
+                );
+                let mut coord = Coordinator::new(
+                    CampaignConfig {
+                        seed,
+                        dvfs: if dvfs_on {
+                            Some(Default::default())
+                        } else {
+                            None
+                        },
+                        ..Default::default()
+                    },
+                    Box::new(EnergyAware::new(
+                        ctx.make_predictor(),
+                        EnergyAwareParams::default(),
+                    )),
+                );
+                let opt = coord.run(trace);
+                jps.push(opt.j_per_solo_second());
+                savings.push(1.0 - opt.j_per_solo_second() / base.j_per_solo_second());
+                slow.push(opt.mean_slowdown);
+            }
+            t.row(&[
+                mix_name.to_string(),
+                if dvfs_on { "on" } else { "off" }.to_string(),
+                format!("{:.1}", crate::util::stats::mean(&jps)),
+                format!("{:.1}", crate::util::stats::mean(&savings) * 100.0),
+                format!("{:+.1}", crate::util::stats::mean(&slow) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExpContext {
+        let mut c = ExpContext::fast();
+        c.artifacts = std::path::PathBuf::from("/nonexistent");
+        c
+    }
+
+    #[test]
+    fn abl1_fast_has_one_cell() {
+        assert_eq!(run_abl1(&ctx()).n_rows(), 1);
+    }
+
+    #[test]
+    fn abl2_includes_learned_predictors() {
+        let t = run_abl2(&ctx());
+        let csv = t.render_csv();
+        assert!(csv.contains("oracle"));
+        assert!(csv.contains("dtree"));
+        assert!(csv.contains("linear"));
+    }
+
+    #[test]
+    fn abl3_has_four_rows() {
+        assert_eq!(run_abl3(&ctx()).n_rows(), 4);
+    }
+}

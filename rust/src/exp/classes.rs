@@ -1,0 +1,88 @@
+//! `table3` — §V-C workload-specific observations: consolidation
+//! behaviour by dominant-resource class. CPU-bound jobs show limited
+//! consolidation; I/O-bound Hadoop co-locates densely; ETL saves most
+//! when scheduled into low-load periods.
+
+use crate::cluster::flavor::MEDIUM;
+use crate::exp::common::{run_campaign, standard_trace, ExpContext};
+use crate::profile::{classify, ResourceVector, WorkloadClass};
+use crate::util::table::TableBuilder;
+use crate::workload::{phases_for, Mix, WorkloadKind};
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Table 3 — Per-class behaviour under the energy-aware scheduler (§V-C)",
+        &[
+            "workload",
+            "class (Eq.2)",
+            "mean slowdown",
+            "migrations/job",
+            "energy/job",
+            "savings vs RR",
+        ],
+    );
+    for &kind in &WorkloadKind::ALL {
+        // Classify from the phase model (the profiler's cold path).
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(17);
+        let phases = phases_for(kind, 20.0, &mut rng);
+        let class = classify(&ResourceVector::from_phases(&phases, &MEDIUM));
+
+        let mut slows = Vec::new();
+        let mut migr = Vec::new();
+        let mut energy = Vec::new();
+        let mut savings = Vec::new();
+        for &seed in &ctx.seeds {
+            let trace = standard_trace(Mix::only(kind), ctx.n_jobs(), seed);
+            let base = run_campaign(
+                crate::coordinator::make_policy("round_robin").unwrap(),
+                trace.clone(),
+                seed,
+                5,
+            );
+            let opt = run_campaign(ctx.energy_aware_policy(), trace, seed, 5);
+            slows.push(opt.mean_slowdown);
+            migr.push(opt.migrations as f64 / opt.jobs.len().max(1) as f64);
+            energy.push(
+                opt.jobs.iter().map(|j| j.energy_j).sum::<f64>() / opt.jobs.len().max(1) as f64,
+            );
+            savings.push(1.0 - opt.j_per_solo_second() / base.j_per_solo_second());
+        }
+        t.row(&[
+            kind.name().to_string(),
+            class.name().to_string(),
+            format!("{:+.1}%", crate::util::stats::mean(&slows) * 100.0),
+            format!("{:.2}", crate::util::stats::mean(&migr)),
+            crate::util::table::fmt_energy(crate::util::stats::mean(&energy)),
+            format!("{:.1}%", crate::util::stats::mean(&savings) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// The §V-C qualitative claims as a checkable summary, printed after
+/// the table (and asserted shape-level in rust/tests/experiments.rs).
+pub fn class_expectations() -> Vec<(WorkloadKind, WorkloadClass)> {
+    vec![
+        (WorkloadKind::SparkLogReg, WorkloadClass::CpuBound),
+        (WorkloadKind::SparkKMeans, WorkloadClass::CpuBound),
+        (WorkloadKind::HadoopTeraSort, WorkloadClass::IoBound),
+        (WorkloadKind::HadoopGrep, WorkloadClass::IoBound),
+        (WorkloadKind::EtlPipeline, WorkloadClass::IoBound),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_covers_all_kinds() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = std::path::PathBuf::from("/nonexistent");
+        let t = run(&ctx);
+        assert_eq!(t.n_rows(), WorkloadKind::ALL.len());
+        let csv = t.render_csv();
+        assert!(csv.contains("cpu-bound"));
+        assert!(csv.contains("io-bound"));
+    }
+}

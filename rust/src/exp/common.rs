@@ -1,0 +1,346 @@
+//! Shared experiment infrastructure: standard campaigns, predictor
+//! setup (train-if-needed), seed averaging, and result output.
+
+use crate::coordinator::{CampaignConfig, CampaignReport, Coordinator};
+use crate::predict::{
+    synthesize, EnergyPredictor, MlpWeights, NativeMlp, OraclePredictor, Trainer, XlaMlp,
+};
+use crate::runtime::Runtime;
+use crate::sched::{EnergyAware, EnergyAwareParams, PlacementPolicy};
+use crate::util::table::TableBuilder;
+use crate::workload::{Arrivals, Job, Mix, TraceSpec};
+use std::path::{Path, PathBuf};
+
+/// Experiment context from the CLI.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    pub seeds: Vec<u64>,
+    pub out_dir: PathBuf,
+    pub artifacts: PathBuf,
+    /// Smaller campaigns for smoke runs / CI.
+    pub fast: bool,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            seeds: vec![1, 2, 3],
+            out_dir: PathBuf::from("results"),
+            artifacts: PathBuf::from("artifacts"),
+            fast: false,
+        }
+    }
+}
+
+impl ExpContext {
+    pub fn fast() -> ExpContext {
+        ExpContext {
+            seeds: vec![1],
+            fast: true,
+            ..Default::default()
+        }
+    }
+
+    /// Jobs per campaign.
+    pub fn n_jobs(&self) -> usize {
+        if self.fast {
+            10
+        } else {
+            24
+        }
+    }
+
+    /// Whether the PJRT artifacts are available.
+    pub fn has_artifacts(&self) -> bool {
+        self.artifacts.join("meta.json").exists()
+    }
+
+    /// The production predictor: the trained MLP through the XLA/PJRT
+    /// path. Trains + persists weights on first use; falls back to the
+    /// analytic oracle when artifacts are absent (with a warning), so
+    /// experiments remain runnable on a fresh checkout.
+    pub fn make_predictor(&self) -> Box<dyn EnergyPredictor> {
+        if !self.has_artifacts() {
+            log::warn!("artifacts missing; experiments use the oracle predictor");
+            return Box::new(OraclePredictor);
+        }
+        let weights = self.ensure_weights();
+        match Runtime::new(&self.artifacts).and_then(|rt| XlaMlp::new(rt, weights.clone())) {
+            Ok(xla) => Box::new(xla),
+            Err(e) => {
+                log::warn!("XLA runtime unavailable ({e}); using native MLP");
+                Box::new(NativeMlp::new(weights))
+            }
+        }
+    }
+
+    /// Trained weights, training once and caching to
+    /// `artifacts/weights.json`.
+    pub fn ensure_weights(&self) -> MlpWeights {
+        let path = self.artifacts.join("weights.json");
+        if let Some(w) = MlpWeights::load(&path) {
+            return w;
+        }
+        log::info!("training f_θ (first run) …");
+        let ds = synthesize(4096, 7, None);
+        let (train, val) = ds.split(0.9);
+        let rt = Runtime::new(&self.artifacts).expect("artifacts present");
+        let mut trainer = Trainer::new(rt, MlpWeights::init(42)).expect("trainer");
+        let report = trainer.train(&train, &val, 30, 1).expect("training");
+        log::info!(
+            "trained: loss {:.5} → {:.5}, val mse {:.6}",
+            report.loss_curve.first().unwrap(),
+            report.loss_curve.last().unwrap(),
+            report.val_mse
+        );
+        trainer.weights.save(&path).expect("persist weights");
+        trainer.weights
+    }
+
+    /// The paper's energy-aware policy with the production predictor.
+    pub fn energy_aware_policy(&self) -> Box<dyn PlacementPolicy> {
+        Box::new(EnergyAware::new(
+            self.make_predictor(),
+            EnergyAwareParams::default(),
+        ))
+    }
+
+    pub fn write_table(&self, name: &str, table: &TableBuilder) {
+        let path = self.out_dir.join(format!("{name}.csv"));
+        if let Err(e) = table.write_csv(&path) {
+            log::warn!("failed to write {}: {e}", path.display());
+        }
+        println!("{}", table.render());
+        println!("→ {}\n", path.display());
+    }
+}
+
+/// The standard campaign trace: Poisson arrivals at *moderate* load —
+/// "savings were most pronounced during periods of moderate or mixed
+/// utilization" (§V-A). The arrival gap is self-calibrated per mix so
+/// every campaign (short grep scans vs hour-long TeraSorts) sits at
+/// the same operating point: offered load ≈ 35 % of the fleet in the
+/// mix's dominant resource — the regime where the paper reports the
+/// 15–20 % headline.
+pub fn standard_trace(mix: Mix, n_jobs: usize, seed: u64) -> Vec<Job> {
+    standard_trace_scaled(mix, n_jobs, seed, 5)
+}
+
+/// [`standard_trace`] for an `n_hosts`-sized fleet: the same ~35 %
+/// dominant-resource operating point, offered load scaled with the
+/// cluster (used by the `scale` experiment).
+pub fn standard_trace_scaled(mix: Mix, n_jobs: usize, seed: u64, n_hosts: usize) -> Vec<Job> {
+    // Estimate the mix's mean solo duration on a calibration sample.
+    let probe = TraceSpec {
+        mix: mix.clone(),
+        n_jobs: 64,
+        arrivals: Arrivals::Batch,
+        horizon: 7200.0,
+    }
+    .generate(0xCA11B);
+    let mean_solo =
+        probe.iter().map(|j| j.solo_duration()).sum::<f64>() / probe.len() as f64;
+    // Dominant-resource load one worker VM of this mix puts on a host
+    // (e.g. a grep scan saturates ~34 % of a host's disk, a Spark
+    // iteration ~19 % of its CPU). Target: the offered load occupies
+    // ~35 % of the 5-host fleet in its dominant dimension — the
+    // "moderate utilization" operating point of §V-A (the paper ran
+    // finite benchmark batches, not a saturated stream).
+    let flavor = crate::cluster::flavor::MEDIUM;
+    // The admission-binding footprint of one VM includes the *flavor
+    // reservation* floors (memory is never oversubscribed: a MEDIUM
+    // worker pins 1/4 host regardless of its mean demand).
+    let mem_floor = flavor.mem_gb / 64.0;
+    let cpu_floor = flavor.vcpus / (32.0 * 1.5);
+    let mean_dom = probe
+        .iter()
+        .map(|j| {
+            let v = crate::profile::ResourceVector::from_phases(&j.phases, &flavor);
+            (v.cpu * crate::predict::oracle::RATIO_CPU)
+                .max(v.mem * crate::predict::oracle::RATIO_MEM)
+                .max(v.disk * crate::predict::oracle::RATIO_DISK)
+                .max(v.net * crate::predict::oracle::RATIO_NET)
+                .max(mem_floor)
+                .max(cpu_floor)
+        })
+        .sum::<f64>()
+        / probe.len() as f64;
+    let target_concurrency =
+        (0.35 * n_hosts as f64 / mean_dom.max(0.05)).clamp(4.0, 12.0 * n_hosts as f64 / 5.0);
+    let mean_gap = (mean_solo / target_concurrency).clamp(10.0, 120.0);
+    // Campaigns must be long relative to the consolidation response
+    // time (scan 30 s + grace 60 s + boot 90 s), or power management
+    // can never catch up with short-job churn: stretch the job count
+    // so arrivals span ≥ ~40 simulated minutes. (Full mode only —
+    // fast/smoke campaigns keep their small job count.)
+    let n_jobs = if n_jobs >= 20 {
+        n_jobs.max((2400.0 / mean_gap) as usize)
+    } else {
+        n_jobs
+    };
+    TraceSpec {
+        mix,
+        n_jobs,
+        arrivals: Arrivals::Poisson { mean_gap },
+        horizon: 7200.0,
+    }
+    .generate(seed)
+}
+
+/// Run one campaign with the given policy.
+pub fn run_campaign(
+    policy: Box<dyn PlacementPolicy>,
+    trace: Vec<Job>,
+    seed: u64,
+    n_hosts: usize,
+) -> CampaignReport {
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            n_hosts,
+            seed,
+            ..Default::default()
+        },
+        policy,
+    );
+    coord.run(trace)
+}
+
+/// Baseline vs energy-aware pair on identical traces (the §IV-E
+/// methodology), averaged over the context's seeds.
+pub struct Pair {
+    pub baseline: Vec<CampaignReport>,
+    pub optimized: Vec<CampaignReport>,
+}
+
+pub fn run_pair(ctx: &ExpContext, mix: &Mix, n_hosts: usize) -> Pair {
+    let mut baseline = Vec::new();
+    let mut optimized = Vec::new();
+    for &seed in &ctx.seeds {
+        let trace = standard_trace(mix.clone(), ctx.n_jobs(), seed);
+        baseline.push(run_campaign(
+            crate::coordinator::make_policy("round_robin").unwrap(),
+            trace.clone(),
+            seed,
+            n_hosts,
+        ));
+        optimized.push(run_campaign(
+            ctx.energy_aware_policy(),
+            trace,
+            seed,
+            n_hosts,
+        ));
+    }
+    Pair {
+        baseline,
+        optimized,
+    }
+}
+
+impl Pair {
+    /// Energy-per-work savings fraction (mean over seeds), the
+    /// §V-A headline number.
+    pub fn savings(&self) -> f64 {
+        let per_seed: Vec<f64> = self
+            .baseline
+            .iter()
+            .zip(&self.optimized)
+            .map(|(b, o)| 1.0 - o.j_per_solo_second() / b.j_per_solo_second())
+            .collect();
+        crate::util::stats::mean(&per_seed)
+    }
+
+    pub fn savings_std(&self) -> f64 {
+        let per_seed: Vec<f64> = self
+            .baseline
+            .iter()
+            .zip(&self.optimized)
+            .map(|(b, o)| 1.0 - o.j_per_solo_second() / b.j_per_solo_second())
+            .collect();
+        crate::util::stats::std_dev(&per_seed)
+    }
+
+    /// Mean JCT deviation of optimized vs baseline (§V-B): mean over
+    /// seeds of (mean JCT opt / mean JCT base − 1).
+    pub fn jct_deviation(&self) -> f64 {
+        let per_seed: Vec<f64> = self
+            .baseline
+            .iter()
+            .zip(&self.optimized)
+            .map(|(b, o)| {
+                let mb = crate::util::stats::mean(
+                    &b.jobs.iter().map(|j| j.jct).collect::<Vec<_>>(),
+                );
+                let mo = crate::util::stats::mean(
+                    &o.jobs.iter().map(|j| j.jct).collect::<Vec<_>>(),
+                );
+                mo / mb - 1.0
+            })
+            .collect();
+        crate::util::stats::mean(&per_seed)
+    }
+
+    pub fn compliance(&self) -> f64 {
+        crate::util::stats::mean(
+            &self
+                .optimized
+                .iter()
+                .map(|o| o.sla_compliance)
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Ensure the weights exist when artifacts do (used by `ecosched train`
+/// and the experiment preamble).
+pub fn maybe_train(ctx: &ExpContext) {
+    if ctx.has_artifacts() {
+        let _ = ctx.ensure_weights();
+    }
+}
+
+/// Helper: artifacts dir resolution for tests and binaries that may
+/// run from the workspace root or from `target/`.
+pub fn find_artifacts() -> PathBuf {
+    for cand in [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if cand.join("meta.json").exists() {
+            return cand;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Quick textual figure: a labeled sparkline.
+pub fn print_spark(label: &str, values: &[f64]) {
+    println!("{label:<28} {}", crate::util::timeline::sparkline(values));
+}
+
+#[allow(dead_code)]
+fn _assert_path_usable(_p: &Path) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_context_is_small() {
+        let ctx = ExpContext::fast();
+        assert_eq!(ctx.seeds.len(), 1);
+        assert!(ctx.n_jobs() < 15);
+    }
+
+    #[test]
+    fn pair_with_oracle_produces_savings() {
+        // Oracle predictor (no artifacts needed): the pair helper must
+        // show the headline effect even in fast mode.
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = PathBuf::from("/nonexistent"); // force oracle
+        let pair = run_pair(&ctx, &Mix::paper(), 5);
+        assert_eq!(pair.baseline.len(), 1);
+        let s = pair.savings();
+        assert!(s > 0.03, "savings {s}");
+        assert!(pair.compliance() >= 0.99);
+    }
+}

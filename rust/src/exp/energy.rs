@@ -1,0 +1,75 @@
+//! `table1` — §V-A energy savings: per-benchmark campaigns under the
+//! round-robin baseline vs the energy-aware scheduler. The paper
+//! reports 15–20 % savings overall with TeraSort ≈ 19 %.
+
+use crate::exp::common::{run_pair, ExpContext};
+use crate::util::table::{fmt_energy, fmt_pm, TableBuilder};
+use crate::workload::{Mix, WorkloadKind};
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Table 1 — Energy consumption: baseline vs energy-aware (§V-A)",
+        &[
+            "workload",
+            "baseline J/solo-s",
+            "optimized J/solo-s",
+            "savings",
+            "baseline total",
+            "optimized total",
+        ],
+    );
+    let mut rows: Vec<(String, Mix)> = WorkloadKind::ALL
+        .iter()
+        .map(|&k| (k.name().to_string(), Mix::only(k)))
+        .collect();
+    rows.push(("mixed (paper)".into(), Mix::paper()));
+
+    for (name, mix) in rows {
+        let pair = run_pair(ctx, &mix, 5);
+        let base_jps: Vec<f64> = pair.baseline.iter().map(|r| r.j_per_solo_second()).collect();
+        let opt_jps: Vec<f64> = pair.optimized.iter().map(|r| r.j_per_solo_second()).collect();
+        let base_total: f64 = crate::util::stats::mean(
+            &pair.baseline.iter().map(|r| r.energy_j).collect::<Vec<_>>(),
+        );
+        let opt_total: f64 = crate::util::stats::mean(
+            &pair.optimized.iter().map(|r| r.energy_j).collect::<Vec<_>>(),
+        );
+        t.row(&[
+            name,
+            fmt_pm(
+                crate::util::stats::mean(&base_jps),
+                crate::util::stats::std_dev(&base_jps),
+                1,
+            ),
+            fmt_pm(
+                crate::util::stats::mean(&opt_jps),
+                crate::util::stats::std_dev(&opt_jps),
+                1,
+            ),
+            format!(
+                "{:.1}% ± {:.1}",
+                pair.savings() * 100.0,
+                pair.savings_std() * 100.0
+            ),
+            fmt_energy(base_total),
+            fmt_energy(opt_total),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_workloads_and_positive_savings() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = std::path::PathBuf::from("/nonexistent"); // oracle
+        let t = run(&ctx);
+        assert_eq!(t.n_rows(), 7);
+        let csv = t.render_csv();
+        assert!(csv.contains("terasort"));
+        assert!(csv.contains("mixed (paper)"));
+    }
+}

@@ -1,0 +1,97 @@
+//! `fig2` — Fig. 2: the scheduling pipeline (profiling →
+//! classification → prediction → placement) rendered as a measured
+//! per-stage latency trace for one real decision.
+
+use crate::cluster::Cluster;
+use crate::exp::common::ExpContext;
+use crate::profile::{build_features, classify, ResourceVector};
+use crate::util::bench::fmt_time;
+use crate::util::table::TableBuilder;
+use crate::workload::{phases_for, WorkloadKind};
+use std::time::Instant;
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Fig. 2 — Pipeline stages with measured latency (one decision)",
+        &["stage", "output", "latency"],
+    );
+    let cluster = Cluster::homogeneous(5);
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(1);
+    let phases = phases_for(WorkloadKind::HadoopTeraSort, 30.0, &mut rng);
+    let flavor = crate::cluster::flavor::MEDIUM;
+
+    // Stage 1: profiling (Eq. 1).
+    let t0 = Instant::now();
+    let vector = ResourceVector::from_phases(&phases, &flavor);
+    let d_profile = t0.elapsed().as_secs_f64();
+    t.row(&[
+        "1. profile (Eq. 1)".into(),
+        format!(
+            "W = (c={:.2}, m={:.2}, d={:.2}, n={:.2})",
+            vector.cpu, vector.mem, vector.disk, vector.net
+        ),
+        fmt_time(d_profile),
+    ]);
+
+    // Stage 2: classification (Eq. 2).
+    let t0 = Instant::now();
+    let class = classify(&vector);
+    let d_class = t0.elapsed().as_secs_f64();
+    t.row(&[
+        "2. classify (Eq. 2)".into(),
+        format!("T = {}", class.name()),
+        fmt_time(d_class),
+    ]);
+
+    // Stage 3: prediction (Eq. 4) over all candidate hosts.
+    let mut predictor = ctx.make_predictor();
+    let feats: Vec<[f32; crate::profile::FEAT_DIM]> = cluster
+        .hosts
+        .iter()
+        .map(|h| build_features(&vector, 900.0, h))
+        .collect();
+    let t0 = Instant::now();
+    let preds = predictor.predict(&feats);
+    let d_pred = t0.elapsed().as_secs_f64();
+    t.row(&[
+        format!("3. predict ({})", predictor.name()),
+        format!(
+            "Ê per host (W): {:?}",
+            preds
+                .iter()
+                .map(|p| (p.power_w * 10.0).round() / 10.0)
+                .collect::<Vec<_>>()
+        ),
+        fmt_time(d_pred),
+    ]);
+
+    // Stage 4: placement (Eqs. 6–7 argmin).
+    let t0 = Instant::now();
+    let best = preds
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.power_w.partial_cmp(&b.power_w).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let d_place = t0.elapsed().as_secs_f64();
+    t.row(&[
+        "4. place (Eqs. 6–7)".into(),
+        format!("π(i) = host-{best}"),
+        fmt_time(d_place),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_traces_four_stages() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = std::path::PathBuf::from("/nonexistent");
+        let t = run(&ctx);
+        assert_eq!(t.n_rows(), 4);
+        assert!(t.render_csv().contains("io-bound")); // terasort classifies io
+    }
+}

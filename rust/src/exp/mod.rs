@@ -1,0 +1,61 @@
+//! Experiment harness: one module per paper table/figure plus
+//! ablations and the scale-out probe (see DESIGN.md §4 for the index).
+
+pub mod ablation;
+pub mod classes;
+pub mod common;
+pub mod energy;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod overhead;
+pub mod scale;
+pub mod sla;
+pub mod utilization;
+
+pub use common::ExpContext;
+
+/// All experiment ids, in presentation order.
+pub const ALL: [&str; 11] = [
+    "fig1", "fig2", "table1", "table2", "fig3", "table3", "table4", "table5", "abl1",
+    "abl2", "abl3",
+];
+
+/// Run one experiment by id; returns false for unknown ids.
+pub fn run(id: &str, ctx: &ExpContext) -> bool {
+    let table = match id {
+        "fig1" => fig1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "table1" => energy::run(ctx),
+        "table2" => sla::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "table3" => classes::run(ctx),
+        "table4" => utilization::run(ctx),
+        "table5" => overhead::run(ctx),
+        "abl1" => ablation::run_abl1(ctx),
+        "abl2" => ablation::run_abl2(ctx),
+        "abl3" => ablation::run_abl3(ctx),
+        "scale" => scale::run(ctx),
+        "all" => {
+            for id in ALL {
+                run(id, ctx);
+            }
+            run("scale", ctx);
+            return true;
+        }
+        _ => return false,
+    };
+    ctx.write_table(id, &table);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        let ctx = ExpContext::fast();
+        assert!(!run("bogus", &ctx));
+    }
+}

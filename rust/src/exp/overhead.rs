@@ -1,0 +1,86 @@
+//! `table5` — §V-E system overhead: the profiling + prediction path
+//! must cost <5 % CPU; migration overhead must be absorbed in
+//! low-activity windows with no SLA effect.
+
+use crate::exp::common::{run_pair, ExpContext};
+use crate::util::table::TableBuilder;
+use crate::workload::Mix;
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let pair = run_pair(ctx, &Mix::paper(), 5);
+    let mut t = TableBuilder::new(
+        "Table 5 — Scheduler overhead (§V-E)",
+        &["metric", "round-robin", "energy-aware"],
+    );
+    let b = &pair.baseline[0];
+    let o = &pair.optimized[0];
+    let rows: Vec<(&str, String, String)> = vec![
+        (
+            "placement decisions",
+            b.overhead.n_decisions.to_string(),
+            o.overhead.n_decisions.to_string(),
+        ),
+        (
+            "decision latency (µs, mean)",
+            format!("{:.1}", b.overhead.per_decision_us()),
+            format!("{:.1}", o.overhead.per_decision_us()),
+        ),
+        (
+            "controller CPU share (%)",
+            format!("{:.4}", b.overhead.cpu_share(b.makespan) * 100.0),
+            format!("{:.4}", o.overhead.cpu_share(o.makespan) * 100.0),
+        ),
+        (
+            "consolidation scan wall (s)",
+            format!("{:.4}", b.overhead.scan_wall_s),
+            format!("{:.4}", o.overhead.scan_wall_s),
+        ),
+        (
+            "migrations",
+            b.migrations.to_string(),
+            o.migrations.to_string(),
+        ),
+        (
+            "migration stall total (s)",
+            format!("{:.1}", b.migration_stall_s),
+            format!("{:.1}", o.migration_stall_s),
+        ),
+        (
+            "stall share of total JCT (%)",
+            "0.00".into(),
+            format!(
+                "{:.2}",
+                o.migration_stall_s / o.jobs.iter().map(|j| j.jct).sum::<f64>() * 100.0
+            ),
+        ),
+        (
+            "SLA violations",
+            b.sla_violations.to_string(),
+            o.sla_violations.to_string(),
+        ),
+    ];
+    for (name, bv, ov) in rows {
+        t.row(&[name.to_string(), bv, ov]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_under_five_percent() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = std::path::PathBuf::from("/nonexistent");
+        let pair = run_pair(&ctx, &Mix::paper(), 5);
+        let o = &pair.optimized[0];
+        assert!(
+            o.overhead.cpu_share(o.makespan) < 0.05,
+            "controller share {}",
+            o.overhead.cpu_share(o.makespan)
+        );
+        let t = run(&ctx);
+        assert_eq!(t.n_rows(), 8);
+    }
+}

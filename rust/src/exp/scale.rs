@@ -1,0 +1,70 @@
+//! `scale` — §VI-C limitations probe: the paper evaluates on five
+//! nodes and flags larger deployments as open; we sweep cluster size
+//! to show savings stability and coordinator-overhead growth.
+
+use crate::exp::common::{run_campaign, standard_trace_scaled, ExpContext};
+use crate::util::table::TableBuilder;
+use crate::workload::Mix;
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Scale-out — savings and overhead vs cluster size (§VI-C)",
+        &[
+            "hosts",
+            "jobs",
+            "savings %",
+            "compliance %",
+            "decision µs",
+            "scan wall s",
+        ],
+    );
+    let sizes: Vec<usize> = if ctx.fast {
+        vec![5, 10]
+    } else {
+        vec![5, 10, 20, 40, 80]
+    };
+    for &n_hosts in &sizes {
+        // Offered load scales with the cluster at the same calibrated
+        // moderate operating point as every other experiment.
+        let n_jobs = ctx.n_jobs() * n_hosts / 5;
+        let mut savings = Vec::new();
+        let mut comp = Vec::new();
+        let mut dus = Vec::new();
+        let mut scan = Vec::new();
+        for &seed in &ctx.seeds {
+            let trace = standard_trace_scaled(Mix::paper(), n_jobs, seed, n_hosts);
+            let base = run_campaign(
+                crate::coordinator::make_policy("round_robin").unwrap(),
+                trace.clone(),
+                seed,
+                n_hosts,
+            );
+            let opt = run_campaign(ctx.energy_aware_policy(), trace, seed, n_hosts);
+            savings.push(1.0 - opt.j_per_solo_second() / base.j_per_solo_second());
+            comp.push(opt.sla_compliance);
+            dus.push(opt.overhead.per_decision_us());
+            scan.push(opt.overhead.scan_wall_s);
+        }
+        t.row(&[
+            n_hosts.to_string(),
+            n_jobs.to_string(),
+            format!("{:.1}", crate::util::stats::mean(&savings) * 100.0),
+            format!("{:.1}", crate::util::stats::mean(&comp) * 100.0),
+            format!("{:.1}", crate::util::stats::mean(&dus)),
+            format!("{:.4}", crate::util::stats::mean(&scan)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_fast_two_sizes() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = std::path::PathBuf::from("/nonexistent");
+        assert_eq!(run(&ctx).n_rows(), 2);
+    }
+}

@@ -1,0 +1,59 @@
+//! `table2` — §V-B SLA compliance and performance: JCT deviation vs
+//! the baseline must stay under 5 %, compliance at 100 %.
+
+use crate::exp::common::{run_pair, ExpContext};
+use crate::util::table::{fmt_pct, TableBuilder};
+use crate::workload::{Mix, WorkloadKind};
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Table 2 — SLA compliance and JCT deviation (§V-B)",
+        &[
+            "workload",
+            "jct deviation",
+            "sla compliance",
+            "violations",
+            "mean slowdown vs solo",
+        ],
+    );
+    let mut rows: Vec<(String, Mix)> = WorkloadKind::ALL
+        .iter()
+        .map(|&k| (k.name().to_string(), Mix::only(k)))
+        .collect();
+    rows.push(("mixed (paper)".into(), Mix::paper()));
+
+    for (name, mix) in rows {
+        let pair = run_pair(ctx, &mix, 5);
+        let violations: usize = pair.optimized.iter().map(|r| r.sla_violations).sum();
+        let slow = crate::util::stats::mean(
+            &pair
+                .optimized
+                .iter()
+                .map(|r| r.mean_slowdown)
+                .collect::<Vec<_>>(),
+        );
+        t.row(&[
+            name,
+            format!("{:+.1}%", pair.jct_deviation() * 100.0),
+            fmt_pct(pair.compliance()),
+            violations.to_string(),
+            format!("{:+.1}%", slow * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_reports_compliance() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = std::path::PathBuf::from("/nonexistent");
+        let t = run(&ctx);
+        assert_eq!(t.n_rows(), 7);
+        // Fast-mode invariant: the mixed row must show 100 % compliance.
+        assert!(t.render_csv().lines().last().unwrap().contains("100.0%"));
+    }
+}

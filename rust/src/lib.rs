@@ -1,0 +1,32 @@
+//! # ecosched
+//!
+//! A production-shaped reproduction of *"Big Data Workload Profiling for
+//! Energy-Aware Cloud Resource Management"*: a workload-aware scheduling
+//! framework that profiles CPU/memory/disk/network behaviour of big-data
+//! jobs (Hadoop MapReduce, Spark MLlib, ETL) and uses a learned
+//! prediction engine to drive energy-efficient VM placement and adaptive
+//! consolidation, without violating SLAs.
+//!
+//! The stack is three layers:
+//! * **L3 (this crate)** — coordinator, schedulers, cluster/power/energy
+//!   simulation, profiling, SLA tracking, experiments.
+//! * **L2 (python/compile/model.py)** — the prediction engine `f_θ`
+//!   (Eq. 4) as a JAX MLP, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for batched
+//!   placement scoring and telemetry featurization.
+//!
+//! Python never runs at decision time: [`runtime`] loads
+//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).
+
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod exp;
+pub mod predict;
+pub mod profile;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sla;
+pub mod util;
+pub mod workload;

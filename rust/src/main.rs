@@ -1,0 +1,207 @@
+//! `ecosched` launcher: campaigns, paper-experiment reproduction,
+//! predictor training, and profiling demos. See `ecosched help`.
+
+use ecosched::cli::{Args, USAGE};
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::exp::{self, ExpContext};
+use ecosched::util::table::{fmt_dur, fmt_energy};
+use ecosched::workload::{Arrivals, Mix, TraceSpec};
+use std::path::PathBuf;
+
+fn main() {
+    ecosched::util::logger::init();
+    let args = match Args::from_env(2, &["fast", "xla"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("train") => cmd_train(&args),
+        Some("classify") => cmd_classify(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn ctx_from(args: &Args) -> ExpContext {
+    let mut ctx = if args.switch("fast") {
+        ExpContext::fast()
+    } else {
+        ExpContext::default()
+    };
+    if let Ok(seeds) = args.u64_list_or("seeds", &ctx.seeds) {
+        ctx.seeds = seeds;
+    }
+    ctx.out_dir = PathBuf::from(args.str_or("out", "results"));
+    ctx.artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    ctx
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    // Config file first (TOML subset, see util::config); CLI flags
+    // override.
+    let cfg = match args.opt("config") {
+        Some(path) => match ecosched::util::config::Config::load(std::path::Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => ecosched::util::config::Config::default(),
+    };
+    let campaign = cfg.table("campaign");
+    let policy_name = args
+        .str_or("policy", campaign.str("policy", "energy_aware"))
+        .to_string();
+    let seed = args.u64_or("seed", campaign.u64("seed", 42)).unwrap_or(42);
+    let hours = args
+        .f64_or("hours", campaign.f64("hours", 2.0))
+        .unwrap_or(2.0);
+    let n_jobs = args
+        .usize_or("jobs", campaign.usize("jobs", 24))
+        .unwrap_or(24);
+    let n_hosts = args
+        .usize_or("hosts", campaign.usize("hosts", 5))
+        .unwrap_or(5);
+    let ctx = ctx_from(args);
+
+    let policy = if policy_name == "energy_aware" {
+        ctx.energy_aware_policy()
+    } else {
+        match make_policy(&policy_name) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown policy '{policy_name}'");
+                return 2;
+            }
+        }
+    };
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs,
+        arrivals: Arrivals::Poisson {
+            mean_gap: hours * 3600.0 / n_jobs as f64 * 0.75,
+        },
+        horizon: hours * 3600.0,
+    }
+    .generate(seed);
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            n_hosts,
+            seed,
+            ..Default::default()
+        },
+        policy,
+    );
+    let r = coord.run(trace);
+    println!("policy            : {}", r.policy);
+    println!("jobs completed    : {}", r.jobs.len());
+    println!("makespan          : {}", fmt_dur(r.makespan));
+    println!("energy            : {}", fmt_energy(r.energy_j));
+    println!("mean power        : {:.1} W", r.mean_power_w());
+    println!("energy / work     : {:.1} J per solo-second", r.j_per_solo_second());
+    println!("sla compliance    : {:.1} % ({} violations)", r.sla_compliance * 100.0, r.sla_violations);
+    println!("mean jct slowdown : {:+.2} %", r.mean_slowdown * 100.0);
+    println!("migrations        : {} (stall {:.1} s)", r.migrations, r.migration_stall_s);
+    println!("power cycles      : {} | host-off hours: {:.2}", r.power_cycles, r.host_off_s / 3600.0);
+    println!(
+        "decision latency  : {:.1} µs mean over {} decisions; controller share {:.4} %",
+        r.overhead.per_decision_us(),
+        r.overhead.n_decisions,
+        r.overhead.cpu_share(r.makespan) * 100.0
+    );
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let id = args
+        .subcommand
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let ctx = ctx_from(args);
+    if !ctx.has_artifacts() {
+        eprintln!(
+            "note: no artifacts at {:?}; predictor falls back to the analytic oracle.\n\
+             Run `make artifacts` for the full XLA path.\n",
+            ctx.artifacts
+        );
+    }
+    if exp::run(&id, &ctx) {
+        0
+    } else {
+        eprintln!("unknown experiment '{id}'. Known: {:?} + scale, all", exp::ALL);
+        2
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    use ecosched::predict::{synthesize, MlpWeights, Trainer};
+    use ecosched::runtime::Runtime;
+    let ctx = ctx_from(args);
+    let epochs = args.usize_or("epochs", 60).unwrap_or(60);
+    let samples = args.usize_or("samples", 4000).unwrap_or(4000);
+    if !ctx.has_artifacts() {
+        eprintln!("train requires artifacts (run `make artifacts`)");
+        return 2;
+    }
+    let ds = synthesize(samples, 7, None);
+    let (train, val) = ds.split(0.9);
+    let rt = Runtime::new(&ctx.artifacts).expect("runtime");
+    let mut trainer = Trainer::new(rt, MlpWeights::init(42)).expect("trainer");
+    let report = trainer.train(&train, &val, epochs, 1).expect("training");
+    println!(
+        "trained {} epochs ({} steps): loss {:.5} → {:.5}, val MSE {:.6}",
+        report.epochs,
+        report.steps,
+        report.loss_curve.first().unwrap(),
+        report.loss_curve.last().unwrap(),
+        report.val_mse
+    );
+    let path = ctx.artifacts.join("weights.json");
+    trainer.weights.save(&path).expect("save weights");
+    println!("weights → {}", path.display());
+    0
+}
+
+fn cmd_classify(args: &Args) -> i32 {
+    use ecosched::cluster::flavor::MEDIUM;
+    use ecosched::profile::{classify, ResourceVector};
+    use ecosched::util::rng::Xoshiro256;
+    use ecosched::workload::{phases_for, WorkloadKind};
+    let n = args.usize_or("jobs", 12).unwrap_or(12);
+    let mut rng = Xoshiro256::seed_from_u64(args.u64_or("seed", 42).unwrap_or(42));
+    let mix = Mix::paper();
+    println!(
+        "{:<12} {:>5} {:>6} {:>6} {:>6} {:>6}  class",
+        "kind", "gb", "c", "m", "d", "n"
+    );
+    for _ in 0..n {
+        let kind: WorkloadKind = mix.sample(&mut rng);
+        let gb = ecosched::workload::tracegen::sample_gb(kind, &mut rng);
+        let v = ResourceVector::from_phases(&phases_for(kind, gb, &mut rng), &MEDIUM);
+        println!(
+            "{:<12} {:>5} {:>6.2} {:>6.2} {:>6.2} {:>6.2}  {}",
+            kind.name(),
+            gb,
+            v.cpu,
+            v.mem,
+            v.disk,
+            v.net,
+            classify(&v).name()
+        );
+    }
+    0
+}

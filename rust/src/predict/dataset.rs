@@ -1,0 +1,226 @@
+//! Training-set synthesis for the prediction engine.
+//!
+//! The paper trains `f_θ` on "historical execution outcomes" (§III-B).
+//! Our history store provides the workload side of those outcomes;
+//! the *placement* side (which host states were tried) comes from
+//! calibration sampling: we draw (workload vector, host state) pairs
+//! covering the operating region and label them with the analytic
+//! oracle — which is exactly what averaged execution outcomes converge
+//! to under the simulator's physics. Real profiles from a
+//! [`HistoryStore`] can be mixed in to bias sampling toward workloads
+//! actually seen.
+
+use crate::predict::oracle::oracle_eval;
+use crate::predict::POWER_SCALE;
+use crate::profile::{HistoryStore, ResourceVector, FEAT_DIM};
+use crate::util::rng::Xoshiro256;
+
+/// A labeled training set.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub xs: Vec<[f32; FEAT_DIM]>,
+    pub ys: Vec<[f32; 2]>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Deterministic split for train/validation.
+    pub fn split(&self, train_frac: f64) -> (Dataset, Dataset) {
+        let n_train = (self.len() as f64 * train_frac) as usize;
+        (
+            Dataset {
+                xs: self.xs[..n_train].to_vec(),
+                ys: self.ys[..n_train].to_vec(),
+            },
+            Dataset {
+                xs: self.xs[n_train..].to_vec(),
+                ys: self.ys[n_train..].to_vec(),
+            },
+        )
+    }
+
+    /// Flattened feature/target buffers for the XLA train step.
+    pub fn flat(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut fx = Vec::with_capacity(self.len() * FEAT_DIM);
+        let mut fy = Vec::with_capacity(self.len() * 2);
+        for (x, y) in self.xs.iter().zip(&self.ys) {
+            fx.extend_from_slice(x);
+            fy.extend_from_slice(y);
+        }
+        (fx, fy)
+    }
+
+    /// Mean squared error of a predictor's raw outputs on this set.
+    pub fn mse(&self, mut eval: impl FnMut(&[f32; FEAT_DIM]) -> [f32; 2]) -> f64 {
+        assert!(!self.is_empty());
+        let mut s = 0.0;
+        for (x, y) in self.xs.iter().zip(&self.ys) {
+            let p = eval(x);
+            s += ((p[0] - y[0]) as f64).powi(2) + ((p[1] - y[1]) as f64).powi(2);
+        }
+        s / self.len() as f64
+    }
+}
+
+/// Generate `n` oracle-labeled samples. If `history` has records, 60 %
+/// of workload vectors are drawn (with noise) from observed profiles.
+pub fn synthesize(n: usize, seed: u64, history: Option<&HistoryStore>) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut ds = Dataset::default();
+    let profiles: Vec<ResourceVector> = history
+        .map(|h| h.records().iter().map(|r| r.profile).collect())
+        .unwrap_or_default();
+    for _ in 0..n {
+        let w = if !profiles.is_empty() && rng.chance(0.6) {
+            // Perturb an observed profile.
+            let base = profiles[rng.range(0, profiles.len())];
+            ResourceVector {
+                cpu: (base.cpu * rng.uniform(0.9, 1.1)).clamp(0.0, 1.0),
+                mem: (base.mem * rng.uniform(0.9, 1.1)).clamp(0.0, 1.0),
+                disk: (base.disk * rng.uniform(0.9, 1.1)).clamp(0.0, 1.0),
+                net: (base.net * rng.uniform(0.9, 1.1)).clamp(0.0, 1.0),
+                cpu_peak: base.cpu_peak.clamp(0.0, 1.0),
+                io_peak: base.io_peak.clamp(0.0, 1.0),
+                burstiness: base.burstiness,
+            }
+        } else {
+            // Cover the whole operating region.
+            let cpu = rng.next_f64();
+            ResourceVector {
+                cpu,
+                mem: rng.next_f64(),
+                disk: rng.next_f64(),
+                net: rng.next_f64(),
+                cpu_peak: (cpu + rng.uniform(0.0, 0.3)).min(1.0),
+                io_peak: rng.next_f64(),
+                burstiness: rng.uniform(0.0, 1.5),
+            }
+        };
+        let mut x = [0f32; FEAT_DIM];
+        x[0] = w.cpu as f32;
+        x[1] = w.mem as f32;
+        x[2] = w.disk as f32;
+        x[3] = w.net as f32;
+        x[4] = w.cpu_peak as f32;
+        x[5] = w.io_peak as f32;
+        x[6] = w.burstiness.min(2.0) as f32;
+        x[7] = (rng.uniform(0.0, 9000.0f64).ln_1p() / 10.0) as f32;
+        // Host state: mixture of idle, moderate, and near-saturated.
+        let load = match rng.categorical(&[1.0, 2.0, 1.0]) {
+            0 => rng.uniform(0.0, 0.15),
+            1 => rng.uniform(0.15, 0.7),
+            _ => rng.uniform(0.7, 1.0),
+        };
+        x[8] = (load * rng.uniform(0.7, 1.3)).clamp(0.0, 1.0) as f32;
+        x[9] = (load * rng.uniform(0.5, 1.2)).clamp(0.0, 1.0) as f32;
+        x[10] = (load * rng.uniform(0.3, 1.4)).clamp(0.0, 1.0) as f32;
+        x[11] = (load * rng.uniform(0.3, 1.4)).clamp(0.0, 1.0) as f32;
+        x[12] = (rng.range(0, 7) as f64 / 8.0) as f32;
+        x[13] = *[1.0f32, 0.85, 0.7, 0.6]
+            .get(rng.range(0, 4))
+            .unwrap();
+        x[14] = x[0] * x[8];
+        x[15] = (x[1] + x[9] - 1.0).max(0.0);
+        let label = oracle_eval(&x);
+        ds.xs.push(x);
+        ds.ys
+            .push([(label.power_w / POWER_SCALE) as f32, label.slowdown as f32]);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesize_is_deterministic() {
+        let a = synthesize(100, 5, None);
+        let b = synthesize(100, 5, None);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.len(), 100);
+    }
+
+    #[test]
+    fn labels_are_in_expected_ranges() {
+        let ds = synthesize(2000, 1, None);
+        for y in &ds.ys {
+            assert!((0.0..=1.0).contains(&(y[0] as f64)), "power {y:?}"); // ≤100 W marginal
+            assert!((0.0..=2.0).contains(&(y[1] as f64)), "slowdown {y:?}");
+        }
+        // Non-degenerate: both targets vary.
+        let p: Vec<f64> = ds.ys.iter().map(|y| y[0] as f64).collect();
+        let s: Vec<f64> = ds.ys.iter().map(|y| y[1] as f64).collect();
+        assert!(crate::util::stats::std_dev(&p) > 0.02);
+        assert!(crate::util::stats::std_dev(&s) > 0.02);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = synthesize(100, 2, None);
+        let (tr, te) = ds.split(0.8);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.xs[0], ds.xs[0]);
+        assert_eq!(te.xs[0], ds.xs[80]);
+    }
+
+    #[test]
+    fn flat_layout() {
+        let ds = synthesize(3, 3, None);
+        let (fx, fy) = ds.flat();
+        assert_eq!(fx.len(), 3 * FEAT_DIM);
+        assert_eq!(fy.len(), 6);
+        assert_eq!(fx[FEAT_DIM], ds.xs[1][0]);
+    }
+
+    #[test]
+    fn mse_of_oracle_is_zero() {
+        let ds = synthesize(200, 4, None);
+        let mse = ds.mse(|x| {
+            let p = oracle_eval(x);
+            [(p.power_w / POWER_SCALE) as f32, p.slowdown as f32]
+        });
+        assert!(mse < 1e-12);
+    }
+
+    #[test]
+    fn history_biases_sampling() {
+        use crate::profile::ExecutionRecord;
+        use crate::workload::WorkloadKind;
+        let mut h = HistoryStore::new();
+        h.push(ExecutionRecord {
+            kind: WorkloadKind::SparkKMeans,
+            gb: 10.0,
+            profile: ResourceVector {
+                cpu: 0.93,
+                mem: 0.6,
+                disk: 0.05,
+                net: 0.05,
+                cpu_peak: 0.97,
+                io_peak: 0.1,
+                burstiness: 0.2,
+            },
+            jct: 100.0,
+            solo: 95.0,
+            energy_j: 1000.0,
+            host_cpu_mean: 0.5,
+        });
+        let ds = synthesize(500, 6, Some(&h));
+        // Many samples should sit near the observed cpu=0.93 profile.
+        let near = ds
+            .xs
+            .iter()
+            .filter(|x| (x[0] - 0.93).abs() < 0.1)
+            .count();
+        assert!(near > 150, "only {near} near observed profile");
+    }
+}

@@ -1,0 +1,333 @@
+//! CART regression tree — the paper's §III-B literally says "the
+//! decision tree ranks candidate hosts based on predicted energy
+//! impact and SLA risk", so a from-scratch decision tree is a
+//! first-class predictor here, compared against the MLP in `abl2`.
+//!
+//! Multi-output: one tree predicts both targets (variance reduction
+//! summed over outputs), which keeps power and slowdown predictions
+//! consistent at the leaves.
+
+use crate::predict::engine::{decode_output, EnergyPredictor, Prediction};
+use crate::profile::FEAT_DIM;
+
+/// A fitted tree node.
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        value: [f32; 2],
+        /// Training samples that reached this leaf (diagnostics).
+        #[allow(dead_code)]
+        n: usize,
+    },
+    Split {
+        feature: usize,
+        threshold: f32,
+        left: usize,  // index into nodes
+        right: usize,
+    },
+}
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Candidate thresholds per feature (quantile grid).
+    pub n_thresholds: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 10,
+            min_samples_split: 8,
+            min_samples_leaf: 4,
+            n_thresholds: 16,
+        }
+    }
+}
+
+/// A fitted regression tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    pub params: TreeParams,
+}
+
+impl DecisionTree {
+    /// Fit on rows of (features, [y0, y1]).
+    pub fn fit(xs: &[[f32; FEAT_DIM]], ys: &[[f32; 2]], params: TreeParams) -> DecisionTree {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut tree = DecisionTree {
+            nodes: Vec::new(),
+            params,
+        };
+        let idx: Vec<usize> = (0..xs.len()).collect();
+        tree.build(xs, ys, idx, 0);
+        tree
+    }
+
+    fn build(
+        &mut self,
+        xs: &[[f32; FEAT_DIM]],
+        ys: &[[f32; 2]],
+        idx: Vec<usize>,
+        depth: usize,
+    ) -> usize {
+        let node_id = self.nodes.len();
+        let mean = mean_of(ys, &idx);
+        // Reserve the slot; may be overwritten with a split.
+        self.nodes.push(Node::Leaf {
+            value: mean,
+            n: idx.len(),
+        });
+        if depth >= self.params.max_depth || idx.len() < self.params.min_samples_split {
+            return node_id;
+        }
+        let parent_sse = sse_of(ys, &idx, &mean);
+        if parent_sse < 1e-10 {
+            return node_id;
+        }
+        let mut best: Option<(usize, f32, f64)> = None; // (feature, thr, gain)
+        for feature in 0..FEAT_DIM {
+            // Quantile-grid thresholds over this node's values.
+            let mut vals: Vec<f32> = idx.iter().map(|&i| xs[i][feature]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            if vals.len() < 2 {
+                continue;
+            }
+            for k in 1..=self.params.n_thresholds {
+                let pos = k * (vals.len() - 1) / (self.params.n_thresholds + 1);
+                let thr = vals[pos.min(vals.len() - 2)];
+                let (l, r): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| xs[i][feature] <= thr);
+                if l.len() < self.params.min_samples_leaf
+                    || r.len() < self.params.min_samples_leaf
+                {
+                    continue;
+                }
+                let lm = mean_of(ys, &l);
+                let rm = mean_of(ys, &r);
+                let gain = parent_sse - sse_of(ys, &l, &lm) - sse_of(ys, &r, &rm);
+                if gain > best.map(|(_, _, g)| g).unwrap_or(1e-9) {
+                    best = Some((feature, thr, gain));
+                }
+            }
+        }
+        if let Some((feature, threshold, _)) = best {
+            let (l, r): (Vec<usize>, Vec<usize>) =
+                idx.iter().partition(|&&i| xs[i][feature] <= threshold);
+            let left = self.build(xs, ys, l, depth + 1);
+            let right = self.build(xs, ys, r, depth + 1);
+            self.nodes[node_id] = Node::Split {
+                feature,
+                threshold,
+                left,
+                right,
+            };
+        }
+        node_id
+    }
+
+    /// Predict raw (y0, y1) for one feature vector.
+    pub fn eval(&self, x: &[f32; FEAT_DIM]) -> [f32; 2] {
+        let mut at = 0usize;
+        loop {
+            match &self.nodes[at] {
+                Node::Leaf { value, .. } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    at = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + walk(nodes, *left).max(walk(nodes, *right)),
+            }
+        }
+        walk(&self.nodes, 0)
+    }
+}
+
+fn mean_of(ys: &[[f32; 2]], idx: &[usize]) -> [f32; 2] {
+    let mut m = [0f64; 2];
+    for &i in idx {
+        m[0] += ys[i][0] as f64;
+        m[1] += ys[i][1] as f64;
+    }
+    let n = idx.len().max(1) as f64;
+    [(m[0] / n) as f32, (m[1] / n) as f32]
+}
+
+fn sse_of(ys: &[[f32; 2]], idx: &[usize], mean: &[f32; 2]) -> f64 {
+    let mut s = 0.0;
+    for &i in idx {
+        let d0 = (ys[i][0] - mean[0]) as f64;
+        let d1 = (ys[i][1] - mean[1]) as f64;
+        s += d0 * d0 + d1 * d1;
+    }
+    s
+}
+
+/// The tree as a scheduler-facing predictor.
+pub struct TreePredictor {
+    pub tree: DecisionTree,
+}
+
+impl EnergyPredictor for TreePredictor {
+    fn name(&self) -> &'static str {
+        "dtree"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        feats
+            .iter()
+            .map(|f| {
+                let y = self.tree.eval(f);
+                decode_output(y[0], y[1])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn toy_dataset(n: usize, seed: u64) -> (Vec<[f32; FEAT_DIM]>, Vec<[f32; 2]>) {
+        // y0 = step function of feature 0; y1 = linear in feature 8.
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut x = [0f32; FEAT_DIM];
+            for v in x.iter_mut() {
+                *v = rng.next_f64() as f32;
+            }
+            let y0 = if x[0] > 0.5 { 1.0 } else { 0.2 };
+            let y1 = 0.5 * x[8];
+            xs.push(x);
+            ys.push([y0, y1]);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn learns_step_function() {
+        let (xs, ys) = toy_dataset(500, 1);
+        let tree = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        let mut lo = [0.25f32; FEAT_DIM];
+        lo[0] = 0.1;
+        let mut hi = [0.25f32; FEAT_DIM];
+        hi[0] = 0.9;
+        assert!((tree.eval(&lo)[0] - 0.2).abs() < 0.1);
+        assert!((tree.eval(&hi)[0] - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn learns_second_output_too() {
+        let (xs, ys) = toy_dataset(800, 2);
+        let tree = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        // Probe deep inside the y0=1.0 region (x0=0.9) so the path is
+        // free to split on x8; x0≈0.5 would sit on the step boundary
+        // where the tree spends its depth budget refining y0.
+        let mut a = [0.5f32; FEAT_DIM];
+        a[0] = 0.9;
+        a[8] = 0.05;
+        let mut b = a;
+        b[8] = 0.95;
+        assert!(tree.eval(&b)[1] > tree.eval(&a)[1] + 0.15);
+    }
+
+    #[test]
+    fn respects_depth_limit() {
+        let (xs, ys) = toy_dataset(500, 3);
+        let tree = DecisionTree::fit(
+            &xs,
+            &ys,
+            TreeParams {
+                max_depth: 2,
+                ..Default::default()
+            },
+        );
+        assert!(tree.depth() <= 2);
+    }
+
+    #[test]
+    fn constant_targets_yield_single_leaf() {
+        let xs = vec![[0.5f32; FEAT_DIM]; 50];
+        let ys = vec![[1.0f32, 2.0]; 50];
+        let tree = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        assert_eq!(tree.n_nodes(), 1);
+        assert_eq!(tree.eval(&[0.0; FEAT_DIM]), [1.0, 2.0]);
+    }
+
+    #[test]
+    fn min_leaf_enforced() {
+        let (xs, ys) = toy_dataset(20, 4);
+        let tree = DecisionTree::fit(
+            &xs,
+            &ys,
+            TreeParams {
+                min_samples_leaf: 10,
+                min_samples_split: 20,
+                ..Default::default()
+            },
+        );
+        // 20 samples, min split 20 with min leaf 10: at most one split.
+        assert!(tree.n_nodes() <= 3);
+    }
+
+    #[test]
+    fn predictor_interface() {
+        let (xs, ys) = toy_dataset(200, 5);
+        let tree = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        let mut p = TreePredictor { tree };
+        let out = p.predict(&xs[..5]);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|p| p.power_w >= 0.0 && p.slowdown >= 0.0));
+        assert_eq!(p.name(), "dtree");
+    }
+
+    #[test]
+    fn generalizes_on_holdout() {
+        let (xs, ys) = toy_dataset(1000, 6);
+        let (train_x, test_x) = xs.split_at(800);
+        let (train_y, test_y) = ys.split_at(800);
+        let tree = DecisionTree::fit(train_x, train_y, TreeParams::default());
+        let mse: f64 = test_x
+            .iter()
+            .zip(test_y)
+            .map(|(x, y)| {
+                let p = tree.eval(x);
+                ((p[0] - y[0]) as f64).powi(2) + ((p[1] - y[1]) as f64).powi(2)
+            })
+            .sum::<f64>()
+            / test_x.len() as f64;
+        assert!(mse < 0.02, "holdout mse {mse}");
+    }
+}
+
+impl DecisionTree {
+    /// Debug helper: describe the root split.
+    pub fn debug_root(&self) -> String {
+        format!("{:?}", self.nodes.first())
+    }
+}

@@ -1,0 +1,200 @@
+//! Prediction-engine interface (Eq. 4): `Ê(W_i, h) = f_θ(W_i, R_h)`.
+//!
+//! A predictor maps placement feature vectors to (marginal power,
+//! slowdown risk). Implementations: the XLA-compiled MLP (the paper's
+//! learned `f_θ`), a CART decision tree (the paper's "decision tree
+//! ranks candidate hosts"), a linear model, the analytic oracle, and a
+//! native-Rust MLP (ablation baseline for the XLA path).
+
+use crate::profile::FEAT_DIM;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use std::path::Path;
+
+/// One placement's predicted impact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// Predicted marginal power draw of the placement (W).
+    pub power_w: f64,
+    /// Predicted relative JCT inflation (0 = no slowdown, 0.5 = +50 %).
+    pub slowdown: f64,
+}
+
+/// Prediction engine interface. Batch-oriented: the energy-aware
+/// scheduler scores all candidate hosts in one call.
+pub trait EnergyPredictor {
+    fn name(&self) -> &'static str;
+
+    /// Score a batch of feature vectors.
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction>;
+}
+
+/// Output normalization shared by training and inference:
+/// `y0 = power_w / 100`, `y1 = slowdown` (already ~[0, 2]).
+pub const POWER_SCALE: f64 = 100.0;
+
+/// MLP architecture constants — must match `python/compile/model.py`.
+pub const HIDDEN1: usize = 64;
+pub const HIDDEN2: usize = 32;
+pub const OUT_DIM: usize = 2;
+
+/// MLP parameters, shared between the native and XLA execution paths
+/// and serialized as `artifacts/weights.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpWeights {
+    pub w1: Vec<f32>, // [FEAT_DIM, HIDDEN1] row-major
+    pub b1: Vec<f32>, // [HIDDEN1]
+    pub w2: Vec<f32>, // [HIDDEN1, HIDDEN2]
+    pub b2: Vec<f32>, // [HIDDEN2]
+    pub w3: Vec<f32>, // [HIDDEN2, OUT_DIM]
+    pub b3: Vec<f32>, // [OUT_DIM]
+}
+
+impl MlpWeights {
+    /// He-initialized random weights (pre-training starting point —
+    /// the same init `model.py` uses for its parity tests).
+    pub fn init(seed: u64) -> MlpWeights {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut he = |fan_in: usize, n: usize| -> Vec<f32> {
+            let std = (2.0 / fan_in as f64).sqrt();
+            (0..n).map(|_| (rng.normal(0.0, std)) as f32).collect()
+        };
+        MlpWeights {
+            w1: he(FEAT_DIM, FEAT_DIM * HIDDEN1),
+            b1: vec![0.0; HIDDEN1],
+            w2: he(HIDDEN1, HIDDEN1 * HIDDEN2),
+            b2: vec![0.0; HIDDEN2],
+            w3: he(HIDDEN2, HIDDEN2 * OUT_DIM),
+            b3: vec![0.0; OUT_DIM],
+        }
+    }
+
+    pub fn shapes_ok(&self) -> bool {
+        self.w1.len() == FEAT_DIM * HIDDEN1
+            && self.b1.len() == HIDDEN1
+            && self.w2.len() == HIDDEN1 * HIDDEN2
+            && self.b2.len() == HIDDEN2
+            && self.w3.len() == HIDDEN2 * OUT_DIM
+            && self.b3.len() == OUT_DIM
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("w1", Json::from_f32_slice(&self.w1))
+            .set("b1", Json::from_f32_slice(&self.b1))
+            .set("w2", Json::from_f32_slice(&self.w2))
+            .set("b2", Json::from_f32_slice(&self.b2))
+            .set("w3", Json::from_f32_slice(&self.w3))
+            .set("b3", Json::from_f32_slice(&self.b3));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<MlpWeights> {
+        let w = MlpWeights {
+            w1: j.get("w1")?.as_f32_vec()?,
+            b1: j.get("b1")?.as_f32_vec()?,
+            w2: j.get("w2")?.as_f32_vec()?,
+            b2: j.get("b2")?.as_f32_vec()?,
+            w3: j.get("w3")?.as_f32_vec()?,
+            b3: j.get("b3")?.as_f32_vec()?,
+        };
+        if w.shapes_ok() {
+            Some(w)
+        } else {
+            None
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Option<MlpWeights> {
+        let text = std::fs::read_to_string(path).ok()?;
+        MlpWeights::from_json(&Json::parse(&text).ok()?)
+    }
+
+    /// Parameter tensors in the order the XLA executables take them.
+    pub fn as_ordered(&self) -> [(&[f32], [i64; 2]); 6] {
+        [
+            (&self.w1, [FEAT_DIM as i64, HIDDEN1 as i64]),
+            (&self.b1, [1, HIDDEN1 as i64]),
+            (&self.w2, [HIDDEN1 as i64, HIDDEN2 as i64]),
+            (&self.b2, [1, HIDDEN2 as i64]),
+            (&self.w3, [HIDDEN2 as i64, OUT_DIM as i64]),
+            (&self.b3, [1, OUT_DIM as i64]),
+        ]
+    }
+}
+
+/// Convert a raw model output row to a [`Prediction`].
+pub fn decode_output(y0: f32, y1: f32) -> Prediction {
+    Prediction {
+        power_w: (y0 as f64 * POWER_SCALE).max(0.0),
+        slowdown: (y1 as f64).max(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_determinism() {
+        let a = MlpWeights::init(5);
+        let b = MlpWeights::init(5);
+        assert!(a.shapes_ok());
+        assert_eq!(a, b);
+        let c = MlpWeights::init(6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = MlpWeights::init(1);
+        let j = w.to_json().to_string();
+        let back = MlpWeights::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(w, back);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        let mut w = MlpWeights::init(1);
+        w.b3.pop();
+        let j = w.to_json();
+        assert!(MlpWeights::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ecosched-weights-test");
+        let path = dir.join("weights.json");
+        let w = MlpWeights::init(2);
+        w.save(&path).unwrap();
+        assert_eq!(MlpWeights::load(&path).unwrap(), w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn decode_clamps_negatives() {
+        let p = decode_output(-0.5, -0.2);
+        assert_eq!(p.power_w, 0.0);
+        assert_eq!(p.slowdown, 0.0);
+        let p = decode_output(0.35, 0.1);
+        assert!((p.power_w - 35.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ordered_params_shapes() {
+        let w = MlpWeights::init(3);
+        let ord = w.as_ordered();
+        assert_eq!(ord[0].1, [16, 64]);
+        assert_eq!(ord[5].1, [1, 2]);
+        for (data, shape) in ord {
+            assert_eq!(data.len() as i64, shape[0] * shape[1]);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Ridge-regularized linear model — the simplest learned predictor in
+//! the `abl2` ablation. Fit by solving the normal equations
+//! (XᵀX + λI)·w = Xᵀy with Gaussian elimination (from scratch: no
+//! linear-algebra crates in the offline set).
+
+use crate::predict::engine::{decode_output, EnergyPredictor, Prediction};
+use crate::profile::FEAT_DIM;
+
+/// One ridge model per output, plus intercepts.
+#[derive(Debug, Clone)]
+pub struct LinearModel {
+    /// [FEAT_DIM + 1] coefficients per output (last = intercept).
+    pub coef: [[f64; FEAT_DIM + 1]; 2],
+}
+
+impl LinearModel {
+    /// Fit via the normal equations with ridge penalty `lambda`.
+    pub fn fit(xs: &[[f32; FEAT_DIM]], ys: &[[f32; 2]], lambda: f64) -> LinearModel {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        const D: usize = FEAT_DIM + 1;
+        // Accumulate XᵀX and Xᵀy with the bias column folded in.
+        let mut xtx = [[0f64; D]; D];
+        let mut xty = [[0f64; D]; 2];
+        let mut row = [0f64; D];
+        for (x, y) in xs.iter().zip(ys) {
+            for i in 0..FEAT_DIM {
+                row[i] = x[i] as f64;
+            }
+            row[FEAT_DIM] = 1.0;
+            for i in 0..D {
+                for j in 0..D {
+                    xtx[i][j] += row[i] * row[j];
+                }
+                xty[0][i] += row[i] * y[0] as f64;
+                xty[1][i] += row[i] * y[1] as f64;
+            }
+        }
+        for (i, r) in xtx.iter_mut().enumerate().take(FEAT_DIM) {
+            r[i] += lambda; // don't penalize the intercept
+        }
+        let coef0 = solve(&xtx, &xty[0]);
+        let coef1 = solve(&xtx, &xty[1]);
+        LinearModel {
+            coef: [coef0, coef1],
+        }
+    }
+
+    pub fn eval(&self, x: &[f32; FEAT_DIM]) -> [f32; 2] {
+        let mut out = [0f32; 2];
+        for (o, c) in out.iter_mut().zip(&self.coef) {
+            let mut acc = c[FEAT_DIM];
+            for i in 0..FEAT_DIM {
+                acc += c[i] * x[i] as f64;
+            }
+            *o = acc as f32;
+        }
+        out
+    }
+}
+
+/// Solve A·w = b by Gaussian elimination with partial pivoting.
+fn solve(a: &[[f64; FEAT_DIM + 1]; FEAT_DIM + 1], b: &[f64; FEAT_DIM + 1]) -> [f64; FEAT_DIM + 1] {
+    const D: usize = FEAT_DIM + 1;
+    let mut m = *a;
+    let mut v = *b;
+    for col in 0..D {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..D {
+            if m[r][col].abs() > m[piv][col].abs() {
+                piv = r;
+            }
+        }
+        m.swap(col, piv);
+        v.swap(col, piv);
+        let diag = m[col][col];
+        if diag.abs() < 1e-12 {
+            continue; // singular direction: leave zero (ridge prevents this)
+        }
+        for r in col + 1..D {
+            let k = m[r][col] / diag;
+            if k == 0.0 {
+                continue;
+            }
+            for c in col..D {
+                m[r][c] -= k * m[col][c];
+            }
+            v[r] -= k * v[col];
+        }
+    }
+    // Back-substitution.
+    let mut w = [0f64; D];
+    for col in (0..D).rev() {
+        let mut acc = v[col];
+        for c in col + 1..D {
+            acc -= m[col][c] * w[c];
+        }
+        w[col] = if m[col][col].abs() < 1e-12 {
+            0.0
+        } else {
+            acc / m[col][col]
+        };
+    }
+    w
+}
+
+pub struct LinearPredictor {
+    pub model: LinearModel,
+}
+
+impl EnergyPredictor for LinearPredictor {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        feats
+            .iter()
+            .map(|f| {
+                let y = self.model.eval(f);
+                decode_output(y[0], y[1])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn recovers_linear_ground_truth() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..500 {
+            let mut x = [0f32; FEAT_DIM];
+            for v in x.iter_mut() {
+                *v = rng.next_f64() as f32;
+            }
+            // y0 = 0.3 + 2·x0 − x5 ; y1 = 0.1 + 0.5·x8.
+            ys.push([
+                0.3 + 2.0 * x[0] - x[5],
+                0.1 + 0.5 * x[8],
+            ]);
+            xs.push(x);
+        }
+        let m = LinearModel::fit(&xs, &ys, 1e-6);
+        assert!((m.coef[0][0] - 2.0).abs() < 1e-3, "{}", m.coef[0][0]);
+        assert!((m.coef[0][5] + 1.0).abs() < 1e-3);
+        assert!((m.coef[0][FEAT_DIM] - 0.3).abs() < 1e-3);
+        assert!((m.coef[1][8] - 0.5).abs() < 1e-3);
+        // Predictions match.
+        let p = m.eval(&xs[0]);
+        assert!((p[0] - ys[0][0]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ridge_shrinks_coefficients() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..100 {
+            let mut x = [0f32; FEAT_DIM];
+            for v in x.iter_mut() {
+                *v = rng.next_f64() as f32;
+            }
+            ys.push([3.0 * x[0], 0.0]);
+            xs.push(x);
+        }
+        let loose = LinearModel::fit(&xs, &ys, 1e-9);
+        let tight = LinearModel::fit(&xs, &ys, 1e3);
+        assert!(tight.coef[0][0].abs() < loose.coef[0][0].abs());
+    }
+
+    #[test]
+    fn handles_duplicate_rows() {
+        // Rank-deficient X (all rows identical): ridge keeps it solvable.
+        let xs = vec![[0.5f32; FEAT_DIM]; 30];
+        let ys = vec![[1.0f32, 0.5]; 30];
+        let m = LinearModel::fit(&xs, &ys, 1e-3);
+        let p = m.eval(&[0.5; FEAT_DIM]);
+        assert!((p[0] - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn predictor_interface() {
+        let xs = vec![[0.1f32; FEAT_DIM]; 10];
+        let ys = vec![[0.4f32, 0.2]; 10];
+        let mut p = LinearPredictor {
+            model: LinearModel::fit(&xs, &ys, 1e-3),
+        };
+        let out = p.predict(&xs[..3]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(p.name(), "linear");
+        assert!((out[0].power_w - 40.0).abs() < 5.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! The prediction engine (§III-B, Eq. 4): swappable estimators of a
+//! placement's energy and SLA impact, plus training infrastructure.
+
+pub mod dataset;
+pub mod dtree;
+pub mod engine;
+pub mod linear;
+pub mod native_mlp;
+pub mod oracle;
+pub mod trainer;
+pub mod xla_mlp;
+
+pub use dataset::{synthesize, Dataset};
+pub use dtree::{DecisionTree, TreeParams, TreePredictor};
+pub use engine::{EnergyPredictor, MlpWeights, Prediction, POWER_SCALE};
+pub use linear::{LinearModel, LinearPredictor};
+pub use native_mlp::NativeMlp;
+pub use oracle::{oracle_eval, OraclePredictor};
+pub use trainer::{TrainReport, Trainer};
+pub use xla_mlp::XlaMlp;

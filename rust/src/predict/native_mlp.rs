@@ -1,0 +1,158 @@
+//! Native-Rust MLP inference: the same `f_θ` as the XLA path, executed
+//! with hand-written matmuls. Exists (a) as the ablation baseline that
+//! quantifies what the XLA/PJRT path buys, (b) as a fallback when
+//! artifacts are absent (unit tests, docs examples), and (c) as the
+//! parity oracle for the Pallas kernel (pytest checks kernel == jnp;
+//! the integration test checks XLA == native within f32 tolerance).
+
+use crate::predict::engine::{
+    decode_output, EnergyPredictor, MlpWeights, Prediction, HIDDEN1, HIDDEN2, OUT_DIM,
+};
+use crate::profile::FEAT_DIM;
+
+/// Row-major GEMV: y[j] = Σ_i x[i]·w[i·cols + j] + b[j], then ReLU if
+/// `relu`. Simple loops — rustc autovectorizes these fine for our
+/// sizes; see benches/bench_predict.rs for the measured comparison.
+fn dense(x: &[f32], w: &[f32], b: &[f32], cols: usize, relu: bool, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), x.len() * cols);
+    debug_assert_eq!(b.len(), cols);
+    debug_assert_eq!(out.len(), cols);
+    out.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * cols..(i + 1) * cols];
+        for (o, &wj) in out.iter_mut().zip(row) {
+            *o += xi * wj;
+        }
+    }
+    if relu {
+        for o in out.iter_mut() {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+}
+
+/// Native MLP predictor.
+#[derive(Debug, Clone)]
+pub struct NativeMlp {
+    pub weights: MlpWeights,
+    // Scratch buffers reused across calls (no allocation on hot path).
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl NativeMlp {
+    pub fn new(weights: MlpWeights) -> NativeMlp {
+        assert!(weights.shapes_ok());
+        NativeMlp {
+            weights,
+            h1: vec![0.0; HIDDEN1],
+            h2: vec![0.0; HIDDEN2],
+            y: vec![0.0; OUT_DIM],
+        }
+    }
+
+    /// Forward one feature vector; returns the raw (y0, y1) pair.
+    pub fn forward(&mut self, f: &[f32; FEAT_DIM]) -> (f32, f32) {
+        dense(f, &self.weights.w1, &self.weights.b1, HIDDEN1, true, &mut self.h1);
+        dense(&self.h1, &self.weights.w2, &self.weights.b2, HIDDEN2, true, &mut self.h2);
+        dense(&self.h2, &self.weights.w3, &self.weights.b3, OUT_DIM, false, &mut self.y);
+        // Output activation: softplus keeps both outputs positive and
+        // smooth (must match model.py).
+        (softplus(self.y[0]), softplus(self.y[1]))
+    }
+}
+
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    // Numerically stable: log1p(exp(-|x|)) + max(x, 0).
+    let ax = (-x.abs()).exp();
+    ax.ln_1p() + x.max(0.0)
+}
+
+impl EnergyPredictor for NativeMlp {
+    fn name(&self) -> &'static str {
+        "native-mlp"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        feats
+            .iter()
+            .map(|f| {
+                let (y0, y1) = self.forward(f);
+                decode_output(y0, y1)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_is_deterministic_and_finite() {
+        let mut m = NativeMlp::new(MlpWeights::init(7));
+        let f = [0.3f32; FEAT_DIM];
+        let a = m.forward(&f);
+        let b = m.forward(&f);
+        assert_eq!(a, b);
+        assert!(a.0.is_finite() && a.1.is_finite());
+        assert!(a.0 >= 0.0 && a.1 >= 0.0, "softplus outputs nonneg");
+    }
+
+    #[test]
+    fn dense_matches_manual_computation() {
+        // 2×3 layer: x=[1,2], w=[[1,2,3],[4,5,6]], b=[0.5,0.5,0.5].
+        let x = [1.0f32, 2.0];
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.5f32; 3];
+        let mut out = [0.0f32; 3];
+        dense(&x, &w, &b, 3, false, &mut out);
+        assert_eq!(out, [9.5, 12.5, 15.5]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = [1.0f32];
+        let w = [-5.0f32, 5.0];
+        let b = [0.0f32; 2];
+        let mut out = [0.0f32; 2];
+        dense(&x, &w, &b, 2, true, &mut out);
+        assert_eq!(out, [0.0, 5.0]);
+    }
+
+    #[test]
+    fn softplus_properties() {
+        assert!((softplus(0.0) - 0.6931472).abs() < 1e-6);
+        assert!(softplus(-30.0) < 1e-9);
+        assert!((softplus(30.0) - 30.0).abs() < 1e-6);
+        // Monotone.
+        assert!(softplus(1.0) > softplus(0.5));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut m = NativeMlp::new(MlpWeights::init(9));
+        let f1 = [0.1f32; FEAT_DIM];
+        let mut f2 = [0.0f32; FEAT_DIM];
+        f2[0] = 0.9;
+        let batch = m.predict(&[f1, f2]);
+        let (y0, _) = m.forward(&f1);
+        assert!((batch[0].power_w - y0 as f64 * 100.0).abs() < 1e-4);
+        assert_ne!(batch[0], batch[1]);
+    }
+
+    #[test]
+    fn different_inputs_differ() {
+        let mut m = NativeMlp::new(MlpWeights::init(3));
+        let a = m.forward(&[0.0f32; FEAT_DIM]);
+        let b = m.forward(&[1.0f32; FEAT_DIM]);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,170 @@
+//! Training driver: Rust owns the epoch loop, shuffling, and weight
+//! persistence; the gradients + Adam update run inside the AOT
+//! `train_step.hlo.txt` (L2's `train_step` function — forward, MSE
+//! loss, backward, parameter update in one fused XLA program).
+
+use crate::predict::dataset::Dataset;
+use crate::predict::engine::{MlpWeights, HIDDEN1, HIDDEN2, OUT_DIM};
+use crate::profile::FEAT_DIM;
+use crate::runtime::{Runtime, RuntimeError};
+use crate::util::rng::Xoshiro256;
+
+/// Adam state mirrors the parameter shapes.
+#[derive(Debug, Clone)]
+struct AdamState {
+    m: [Vec<f32>; 6],
+    v: [Vec<f32>; 6],
+    step: f32,
+}
+
+impl AdamState {
+    fn zeros() -> AdamState {
+        let sizes = [
+            FEAT_DIM * HIDDEN1,
+            HIDDEN1,
+            HIDDEN1 * HIDDEN2,
+            HIDDEN2,
+            HIDDEN2 * OUT_DIM,
+            OUT_DIM,
+        ];
+        AdamState {
+            m: sizes.map(|n| vec![0.0; n]),
+            v: sizes.map(|n| vec![0.0; n]),
+            step: 0.0,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub epochs: usize,
+    pub steps: u64,
+    /// Minibatch loss per epoch (mean).
+    pub loss_curve: Vec<f64>,
+    /// Validation MSE after training (raw-output space).
+    pub val_mse: f64,
+}
+
+/// Trains `f_θ` through the `train_step` artifact.
+pub struct Trainer {
+    runtime: Runtime,
+    pub weights: MlpWeights,
+    adam: AdamState,
+}
+
+impl Trainer {
+    pub fn new(mut runtime: Runtime, init: MlpWeights) -> Result<Trainer, RuntimeError> {
+        assert!(init.shapes_ok());
+        runtime.load("train_step")?;
+        Ok(Trainer {
+            runtime,
+            weights: init,
+            adam: AdamState::zeros(),
+        })
+    }
+
+    /// One minibatch step; returns the loss.
+    fn step(&mut self, feats: &[f32], targets: &[f32]) -> Result<f64, RuntimeError> {
+        let tb = self.runtime.meta.train_batch;
+        assert_eq!(feats.len(), tb * FEAT_DIM);
+        assert_eq!(targets.len(), tb * 2);
+        self.adam.step += 1.0;
+        let step_arr = [self.adam.step];
+        let param_shapes: [[i64; 2]; 6] = [
+            [FEAT_DIM as i64, HIDDEN1 as i64],
+            [1, HIDDEN1 as i64],
+            [HIDDEN1 as i64, HIDDEN2 as i64],
+            [1, HIDDEN2 as i64],
+            [HIDDEN2 as i64, OUT_DIM as i64],
+            [1, OUT_DIM as i64],
+        ];
+        let feats_shape = [tb as i64, FEAT_DIM as i64];
+        let targets_shape = [tb as i64, 2];
+        let scalar_shape = [1i64, 1];
+        let params = self.weights.as_ordered();
+
+        let mut inputs: Vec<(&[f32], &[i64])> = Vec::with_capacity(21);
+        for ((data, _), shape) in params.iter().zip(param_shapes.iter()) {
+            inputs.push((data, shape));
+        }
+        for i in 0..6 {
+            inputs.push((&self.adam.m[i], &param_shapes[i]));
+        }
+        for i in 0..6 {
+            inputs.push((&self.adam.v[i], &param_shapes[i]));
+        }
+        inputs.push((&step_arr, &scalar_shape));
+        inputs.push((feats, &feats_shape));
+        inputs.push((targets, &targets_shape));
+
+        let out = self.runtime.execute_f32("train_step", &inputs)?;
+        assert_eq!(out.len(), 19, "train_step must return 19 tensors");
+        self.weights.w1 = out[0].clone();
+        self.weights.b1 = out[1].clone();
+        self.weights.w2 = out[2].clone();
+        self.weights.b2 = out[3].clone();
+        self.weights.w3 = out[4].clone();
+        self.weights.b3 = out[5].clone();
+        for i in 0..6 {
+            self.adam.m[i] = out[6 + i].clone();
+            self.adam.v[i] = out[12 + i].clone();
+        }
+        Ok(out[18][0] as f64)
+    }
+
+    /// Full training loop with shuffled fixed-size minibatches (the
+    /// tail that doesn't fill a batch is dropped — shapes are baked
+    /// into the artifact).
+    pub fn train(
+        &mut self,
+        train: &Dataset,
+        val: &Dataset,
+        epochs: usize,
+        seed: u64,
+    ) -> Result<TrainReport, RuntimeError> {
+        let tb = self.runtime.meta.train_batch;
+        assert!(
+            train.len() >= tb,
+            "training set ({}) smaller than train_batch ({tb})",
+            train.len()
+        );
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        let mut loss_curve = Vec::with_capacity(epochs);
+        let mut steps = 0u64;
+        let mut fbuf = vec![0f32; tb * FEAT_DIM];
+        let mut tbuf = vec![0f32; tb * 2];
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0;
+            let mut n_batches = 0;
+            for chunk in order.chunks_exact(tb) {
+                for (row, &idx) in chunk.iter().enumerate() {
+                    fbuf[row * FEAT_DIM..(row + 1) * FEAT_DIM]
+                        .copy_from_slice(&train.xs[idx]);
+                    tbuf[row * 2..(row + 1) * 2].copy_from_slice(&train.ys[idx]);
+                }
+                epoch_loss += self.step(&fbuf, &tbuf)?;
+                n_batches += 1;
+                steps += 1;
+            }
+            loss_curve.push(epoch_loss / n_batches.max(1) as f64);
+        }
+        // Validation through the native forward (same weights; f32
+        // parity with the XLA path is asserted in integration tests).
+        let mut native = crate::predict::native_mlp::NativeMlp::new(self.weights.clone());
+        let val_mse = val.mse(|x| {
+            let (a, b) = native.forward(x);
+            [a, b]
+        });
+        Ok(TrainReport {
+            epochs,
+            steps,
+            loss_curve,
+            val_mse,
+        })
+    }
+}
+
+// Trainer tests require artifacts; see rust/tests/runtime_xla.rs.

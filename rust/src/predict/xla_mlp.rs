@@ -1,0 +1,132 @@
+//! XLA-backed MLP predictor — the production `f_θ` path: executes the
+//! AOT-compiled `predict.hlo.txt` (L2 JAX model wrapping the L1 Pallas
+//! scoring kernel) through the PJRT CPU client.
+//!
+//! Batching: the artifact is compiled for a fixed batch `meta.batch`;
+//! calls with fewer rows are padded (scores for padding rows are
+//! discarded), larger batches run in chunks.
+
+use crate::predict::engine::{decode_output, EnergyPredictor, MlpWeights, Prediction};
+use crate::profile::{flatten_batch, FEAT_DIM};
+use crate::runtime::{Runtime, RuntimeError};
+
+pub struct XlaMlp {
+    runtime: Runtime,
+    weights: MlpWeights,
+    batch: usize,
+    /// Reused padded input buffer.
+    buf: Vec<f32>,
+    /// Weights staged on the device once per `set_weights` — model
+    /// parameters don't change between decisions, and re-uploading
+    /// them dominated dispatch cost (§Perf iteration 1).
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl XlaMlp {
+    /// Build from a runtime and trained weights. Preloads + compiles
+    /// the `predict` executable eagerly so the first scheduling
+    /// decision doesn't pay compile latency.
+    pub fn new(mut runtime: Runtime, weights: MlpWeights) -> Result<XlaMlp, RuntimeError> {
+        assert!(weights.shapes_ok());
+        runtime.load("predict")?;
+        let batch = runtime.meta.batch;
+        let mut this = XlaMlp {
+            runtime,
+            weights,
+            batch,
+            buf: vec![0.0; 0],
+            weight_bufs: Vec::new(),
+        };
+        this.stage_weights()?;
+        Ok(this)
+    }
+
+    /// Upload the six parameter tensors to the device.
+    fn stage_weights(&mut self) -> Result<(), RuntimeError> {
+        self.weight_bufs.clear();
+        for (data, shape) in self.weights.as_ordered() {
+            self.weight_bufs.push(
+                self.runtime
+                    .buffer_f32(data, &[shape[0] as usize, shape[1] as usize])?,
+            );
+        }
+        Ok(())
+    }
+
+    /// Load weights from `artifacts/weights.json` (trained via
+    /// `ecosched train`), falling back to a deterministic init when the
+    /// file is absent.
+    pub fn from_artifacts(dir: &std::path::Path) -> Result<XlaMlp, RuntimeError> {
+        let runtime = Runtime::new(dir)?;
+        let weights =
+            MlpWeights::load(&dir.join("weights.json")).unwrap_or_else(|| MlpWeights::init(42));
+        XlaMlp::new(runtime, weights)
+    }
+
+    pub fn weights(&self) -> &MlpWeights {
+        &self.weights
+    }
+
+    pub fn set_weights(&mut self, w: MlpWeights) {
+        assert!(w.shapes_ok());
+        self.weights = w;
+        self.stage_weights().expect("re-staging weights failed");
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        self.runtime.exec_count
+    }
+
+    /// Score one padded chunk of exactly `self.batch` rows. Only the
+    /// feature tensor is uploaded; the staged weight buffers are
+    /// reused.
+    fn run_chunk(&mut self, chunk: &[[f32; FEAT_DIM]]) -> Result<Vec<Prediction>, RuntimeError> {
+        debug_assert!(chunk.len() <= self.batch);
+        let rows = chunk.len();
+        self.buf.clear();
+        self.buf.extend_from_slice(&flatten_batch(chunk));
+        self.buf.resize(self.batch * FEAT_DIM, 0.0);
+        let feats_buf = self
+            .runtime
+            .buffer_f32(&self.buf, &[self.batch, FEAT_DIM])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(7);
+        args.push(&feats_buf);
+        for b in &self.weight_bufs {
+            args.push(b);
+        }
+        let out = self.runtime.execute_buffers("predict", &args)?;
+        let y = &out[0]; // [batch, 2] flattened
+        debug_assert_eq!(y.len(), self.batch * 2);
+        Ok((0..rows)
+            .map(|i| decode_output(y[2 * i], y[2 * i + 1]))
+            .collect())
+    }
+
+    /// Fallible batched scoring.
+    pub fn try_predict(
+        &mut self,
+        feats: &[[f32; FEAT_DIM]],
+    ) -> Result<Vec<Prediction>, RuntimeError> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(self.batch) {
+            out.extend(self.run_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+impl EnergyPredictor for XlaMlp {
+    fn name(&self) -> &'static str {
+        "xla-mlp"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        // The runtime is loaded and validated at construction; an
+        // execution error here is unrecoverable misconfiguration.
+        self.try_predict(feats).expect("predict.hlo execution failed")
+    }
+}
+
+// XLA-path tests require `make artifacts`; they live in
+// rust/tests/runtime_xla.rs together with the native-vs-XLA parity
+// check.

@@ -1,0 +1,136 @@
+//! Dominant-resource classification — Eq. 2 of the paper:
+//!
+//! ```text
+//! T_i = argmax{c_i, m_i, d_i}
+//! ```
+//!
+//! CPU-intensive Spark MLlib tasks vs I/O-heavy ETL/shuffle pipelines.
+//! We add a `Balanced` class for vectors whose components are within a
+//! small margin of each other (argmax is noise-sensitive exactly when
+//! the components tie, and placement treats balanced workloads
+//! differently — they pack well anywhere).
+
+use crate::profile::vector::ResourceVector;
+
+/// Workload class per Eq. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadClass {
+    CpuBound,
+    MemBound,
+    IoBound,
+    /// No dominant component (within `BALANCED_MARGIN`).
+    Balanced,
+}
+
+impl WorkloadClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadClass::CpuBound => "cpu-bound",
+            WorkloadClass::MemBound => "mem-bound",
+            WorkloadClass::IoBound => "io-bound",
+            WorkloadClass::Balanced => "balanced",
+        }
+    }
+}
+
+/// Components within this relative margin of the max are considered
+/// tied; if ≥2 tie, the workload is Balanced.
+const BALANCED_MARGIN: f64 = 0.06;
+
+/// Classify a profiled workload (Eq. 2 with the balanced extension).
+pub fn classify(v: &ResourceVector) -> WorkloadClass {
+    let c = v.cpu;
+    let m = v.mem;
+    let d = v.io(); // the paper's d_i: storage I/O behaviour (disk ∨ net)
+    let max = c.max(m).max(d);
+    if max < 1e-9 {
+        return WorkloadClass::Balanced;
+    }
+    let near: Vec<bool> = [c, m, d]
+        .iter()
+        .map(|&x| (max - x) / max < BALANCED_MARGIN)
+        .collect();
+    if near.iter().filter(|&&b| b).count() >= 2 {
+        return WorkloadClass::Balanced;
+    }
+    if c == max {
+        WorkloadClass::CpuBound
+    } else if m == max {
+        WorkloadClass::MemBound
+    } else {
+        WorkloadClass::IoBound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+    use crate::profile::vector::ResourceVector;
+    use crate::util::rng::Xoshiro256;
+    use crate::workload::{phases_for, WorkloadKind};
+
+    fn vec3(c: f64, m: f64, io: f64) -> ResourceVector {
+        ResourceVector {
+            cpu: c,
+            mem: m,
+            disk: io,
+            net: 0.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn clear_dominance() {
+        assert_eq!(classify(&vec3(0.9, 0.3, 0.2)), WorkloadClass::CpuBound);
+        assert_eq!(classify(&vec3(0.2, 0.9, 0.3)), WorkloadClass::MemBound);
+        assert_eq!(classify(&vec3(0.2, 0.3, 0.9)), WorkloadClass::IoBound);
+    }
+
+    #[test]
+    fn near_ties_are_balanced() {
+        assert_eq!(classify(&vec3(0.80, 0.78, 0.3)), WorkloadClass::Balanced);
+        assert_eq!(classify(&vec3(0.0, 0.0, 0.0)), WorkloadClass::Balanced);
+    }
+
+    #[test]
+    fn paper_benchmarks_classify_as_expected() {
+        // §III-A: "CPU-intensive Spark MLlib tasks versus I/O-heavy ETL
+        // pipelines"; §V-C adds shuffle-heavy Hadoop as I/O-bound.
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut class_of = |kind| {
+            let phases = phases_for(kind, 20.0, &mut rng);
+            classify(&ResourceVector::from_phases(&phases, &MEDIUM))
+        };
+        assert_eq!(class_of(WorkloadKind::SparkLogReg), WorkloadClass::CpuBound);
+        assert_eq!(class_of(WorkloadKind::SparkKMeans), WorkloadClass::CpuBound);
+        assert_eq!(class_of(WorkloadKind::HadoopGrep), WorkloadClass::IoBound);
+        assert_eq!(
+            class_of(WorkloadKind::EtlPipeline),
+            WorkloadClass::IoBound
+        );
+        // TeraSort: shuffle-dominated → I/O-bound.
+        assert_eq!(
+            class_of(WorkloadKind::HadoopTeraSort),
+            WorkloadClass::IoBound
+        );
+    }
+
+    #[test]
+    fn io_uses_max_of_disk_and_net() {
+        let v = ResourceVector {
+            cpu: 0.4,
+            mem: 0.2,
+            disk: 0.1,
+            net: 0.9,
+            ..Default::default()
+        };
+        assert_eq!(classify(&v), WorkloadClass::IoBound);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(WorkloadClass::CpuBound.name(), "cpu-bound");
+        assert_eq!(WorkloadClass::Balanced.name(), "balanced");
+    }
+}

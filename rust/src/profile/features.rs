@@ -1,0 +1,159 @@
+//! Feature construction for the prediction engine — the contract
+//! between L3 (this module), L2 (`python/compile/model.py`) and L1
+//! (`python/compile/kernels/score_hosts.py`).
+//!
+//! **The layout below must match `FEATURE_NAMES` in model.py exactly.**
+//!
+//! | idx | feature                                  | range   |
+//! |-----|------------------------------------------|---------|
+//! | 0   | workload mean CPU (normalized)           | [0,1]   |
+//! | 1   | workload mean memory                     | [0,1]   |
+//! | 2   | workload mean disk                       | [0,1]   |
+//! | 3   | workload mean net                        | [0,1]   |
+//! | 4   | workload p95 CPU                         | [0,1]   |
+//! | 5   | workload p95 I/O                         | [0,1]   |
+//! | 6   | workload CPU burstiness (CoV, capped 2)  | [0,2]   |
+//! | 7   | log1p(remaining solo seconds)/10         | [0,~1.2]|
+//! | 8   | host CPU utilization                     | [0,1]   |
+//! | 9   | host memory utilization                  | [0,1]   |
+//! | 10  | host disk utilization                    | [0,1]   |
+//! | 11  | host net utilization                     | [0,1]   |
+//! | 12  | host resident-VM count / 8               | [0,~1]  |
+//! | 13  | host DVFS frequency                      | [0.6,1] |
+//! | 14  | cpu contention interaction w0·h8         | [0,1]   |
+//! | 15  | memory pressure max(0, w1+h9−1)          | [0,1]   |
+
+use crate::cluster::Host;
+use crate::profile::vector::ResourceVector;
+
+/// Number of input features — keep in sync with model.py.
+pub const FEAT_DIM: usize = 16;
+
+/// Build the feature vector for scoring (workload, host) placement
+/// from the host's *instantaneous* utilization.
+pub fn build_features(
+    w: &ResourceVector,
+    remaining_solo_secs: f64,
+    host: &Host,
+) -> [f32; FEAT_DIM] {
+    build_features_from(w, remaining_solo_secs, &host.utilization(), host.vms.len(), host.freq)
+}
+
+/// Build the feature vector from an explicit utilization estimate —
+/// the energy-aware policy passes max(instantaneous, profiled) so the
+/// prediction reflects expected load, not the current phase trough.
+pub fn build_features_from(
+    w: &ResourceVector,
+    remaining_solo_secs: f64,
+    u: &crate::cluster::Utilization,
+    n_vms: usize,
+    freq: f64,
+) -> [f32; FEAT_DIM] {
+    let mut f = [0f32; FEAT_DIM];
+    f[0] = w.cpu as f32;
+    f[1] = w.mem as f32;
+    f[2] = w.disk as f32;
+    f[3] = w.net as f32;
+    f[4] = w.cpu_peak as f32;
+    f[5] = w.io_peak as f32;
+    f[6] = w.burstiness.min(2.0) as f32;
+    f[7] = ((remaining_solo_secs.max(0.0)).ln_1p() / 10.0) as f32;
+    f[8] = u.cpu as f32;
+    f[9] = u.mem as f32;
+    f[10] = u.disk as f32;
+    f[11] = u.net as f32;
+    f[12] = (n_vms as f64 / 8.0) as f32;
+    f[13] = freq as f32;
+    f[14] = (w.cpu * u.cpu) as f32;
+    f[15] = ((w.mem + u.mem - 1.0).max(0.0)) as f32;
+    f
+}
+
+/// Flatten a batch of feature vectors row-major — the layout the
+/// `predict.hlo` executable takes as its `[B, FEAT_DIM]` input.
+pub fn flatten_batch(rows: &[[f32; FEAT_DIM]]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows.len() * FEAT_DIM);
+    for r in rows {
+        out.extend_from_slice(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Demand, HostId};
+
+    fn host_with_load(cpu: f64, mem: f64) -> crate::cluster::Host {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: cpu * 32.0,
+            mem_gb: mem * 64.0,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        };
+        c.hosts[0].clone()
+    }
+
+    fn wvec() -> ResourceVector {
+        ResourceVector {
+            cpu: 0.8,
+            mem: 0.5,
+            disk: 0.2,
+            net: 0.1,
+            cpu_peak: 0.95,
+            io_peak: 0.3,
+            burstiness: 0.4,
+        }
+    }
+
+    #[test]
+    fn layout_matches_documentation() {
+        let h = host_with_load(0.5, 0.6);
+        let f = build_features(&wvec(), 300.0, &h);
+        assert_eq!(f[0], 0.8f32);
+        assert_eq!(f[8], 0.5f32);
+        assert_eq!(f[9], 0.6f32);
+        assert!((f[7] - ((301.0f64).ln() / 10.0) as f32).abs() < 1e-5);
+        assert!((f[14] - 0.4f32).abs() < 1e-6); // 0.8*0.5
+        assert!((f[15] - 0.1f32).abs() < 1e-6); // 0.5+0.6-1
+        assert_eq!(f[13], 1.0f32);
+    }
+
+    #[test]
+    fn memory_pressure_clamps_at_zero() {
+        let h = host_with_load(0.1, 0.1);
+        let f = build_features(&wvec(), 10.0, &h);
+        assert_eq!(f[15], 0.0);
+    }
+
+    #[test]
+    fn burstiness_capped() {
+        let mut w = wvec();
+        w.burstiness = 5.0;
+        let h = host_with_load(0.0, 0.0);
+        assert_eq!(build_features(&w, 10.0, &h)[6], 2.0);
+    }
+
+    #[test]
+    fn all_features_finite_and_bounded() {
+        let h = host_with_load(1.0, 1.0);
+        let f = build_features(&wvec(), 1e6, &h);
+        for (i, x) in f.iter().enumerate() {
+            assert!(x.is_finite(), "feature {i} not finite");
+            assert!((-0.01..=2.5).contains(&(*x as f64)), "feature {i} = {x}");
+        }
+    }
+
+    #[test]
+    fn flatten_is_row_major() {
+        let mut a = [0f32; FEAT_DIM];
+        let mut b = [0f32; FEAT_DIM];
+        a[0] = 1.0;
+        b[0] = 2.0;
+        let flat = flatten_batch(&[a, b]);
+        assert_eq!(flat.len(), 2 * FEAT_DIM);
+        assert_eq!(flat[0], 1.0);
+        assert_eq!(flat[FEAT_DIM], 2.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Execution-history store — the paper's "historical execution logs"
+//! (§III-A): an append-only record of completed jobs with their
+//! profiles and measured outcomes, indexed by workload kind.
+//!
+//! Two uses:
+//! 1. **Profiling**: a newly submitted job of a known kind gets its
+//!    Eq. 1 vector from history before any runtime telemetry exists.
+//! 2. **Training**: `predict::trainer` derives (features → outcome)
+//!    examples from these records.
+//!
+//! Persistence is JSON-lines (one record per line) so logs append
+//! cheaply and survive restarts.
+
+use crate::profile::vector::ResourceVector;
+use crate::util::json::Json;
+use crate::workload::WorkloadKind;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One completed-job record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionRecord {
+    pub kind: WorkloadKind,
+    pub gb: f64,
+    /// The job's Eq. 1 profile (as measured by telemetry during the run).
+    pub profile: ResourceVector,
+    /// Measured job completion time (s).
+    pub jct: f64,
+    /// Calibrated solo JCT (s) — the SLA reference.
+    pub solo: f64,
+    /// Energy attributed to the job (J, idle-subtracted share).
+    pub energy_j: f64,
+    /// Mean CPU utilization of the hosting machine during the run.
+    pub host_cpu_mean: f64,
+}
+
+impl ExecutionRecord {
+    pub fn slowdown(&self) -> f64 {
+        if self.solo <= 0.0 {
+            0.0
+        } else {
+            (self.jct / self.solo - 1.0).max(0.0)
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", Json::Str(self.kind.name().to_string()))
+            .set("gb", Json::Num(self.gb))
+            .set(
+                "profile",
+                Json::from_f64_slice(&[
+                    self.profile.cpu,
+                    self.profile.mem,
+                    self.profile.disk,
+                    self.profile.net,
+                    self.profile.cpu_peak,
+                    self.profile.io_peak,
+                    self.profile.burstiness,
+                ]),
+            )
+            .set("jct", Json::Num(self.jct))
+            .set("solo", Json::Num(self.solo))
+            .set("energy_j", Json::Num(self.energy_j))
+            .set("host_cpu_mean", Json::Num(self.host_cpu_mean));
+        o
+    }
+
+    fn from_json(j: &Json) -> Option<ExecutionRecord> {
+        let p = j.get("profile")?.as_f64_vec()?;
+        if p.len() != 7 {
+            return None;
+        }
+        Some(ExecutionRecord {
+            kind: WorkloadKind::by_name(j.get("kind")?.as_str()?)?,
+            gb: j.get("gb")?.as_f64()?,
+            profile: ResourceVector {
+                cpu: p[0],
+                mem: p[1],
+                disk: p[2],
+                net: p[3],
+                cpu_peak: p[4],
+                io_peak: p[5],
+                burstiness: p[6],
+            },
+            jct: j.get("jct")?.as_f64()?,
+            solo: j.get("solo")?.as_f64()?,
+            energy_j: j.get("energy_j")?.as_f64()?,
+            host_cpu_mean: j.get("host_cpu_mean")?.as_f64()?,
+        })
+    }
+}
+
+/// The store: in-memory index over an append-only log.
+#[derive(Debug, Default)]
+pub struct HistoryStore {
+    records: Vec<ExecutionRecord>,
+    by_kind: BTreeMap<WorkloadKind, Vec<usize>>,
+}
+
+impl HistoryStore {
+    pub fn new() -> HistoryStore {
+        HistoryStore::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[ExecutionRecord] {
+        &self.records
+    }
+
+    pub fn push(&mut self, r: ExecutionRecord) {
+        self.by_kind
+            .entry(r.kind)
+            .or_default()
+            .push(self.records.len());
+        self.records.push(r);
+    }
+
+    pub fn of_kind(&self, kind: WorkloadKind) -> impl Iterator<Item = &ExecutionRecord> {
+        self.by_kind
+            .get(&kind)
+            .into_iter()
+            .flatten()
+            .map(|&i| &self.records[i])
+    }
+
+    /// Historical mean profile for a kind — the static-log side of
+    /// Eq. 1. None if the kind was never seen.
+    pub fn mean_profile(&self, kind: WorkloadKind) -> Option<ResourceVector> {
+        let rs: Vec<&ExecutionRecord> = self.of_kind(kind).collect();
+        if rs.is_empty() {
+            return None;
+        }
+        let n = rs.len() as f64;
+        let mut v = ResourceVector::default();
+        for r in &rs {
+            v.cpu += r.profile.cpu;
+            v.mem += r.profile.mem;
+            v.disk += r.profile.disk;
+            v.net += r.profile.net;
+            v.cpu_peak += r.profile.cpu_peak;
+            v.io_peak += r.profile.io_peak;
+            v.burstiness += r.profile.burstiness;
+        }
+        v.cpu /= n;
+        v.mem /= n;
+        v.disk /= n;
+        v.net /= n;
+        v.cpu_peak /= n;
+        v.io_peak /= n;
+        v.burstiness /= n;
+        Some(v)
+    }
+
+    /// Mean JCT per GB for a kind — used for SLA calibration of unseen
+    /// sizes of recurring workloads.
+    pub fn mean_solo_per_gb(&self, kind: WorkloadKind) -> Option<f64> {
+        let rs: Vec<&ExecutionRecord> = self.of_kind(kind).collect();
+        if rs.is_empty() {
+            return None;
+        }
+        Some(rs.iter().map(|r| r.solo / r.gb.max(1.0)).sum::<f64>() / rs.len() as f64)
+    }
+
+    /// Append records to a JSON-lines log.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.records {
+            writeln!(f, "{}", r.to_json())?;
+        }
+        Ok(())
+    }
+
+    /// Load a JSON-lines log; malformed lines are skipped with a count.
+    pub fn load(path: &Path) -> std::io::Result<(HistoryStore, usize)> {
+        let text = std::fs::read_to_string(path)?;
+        let mut store = HistoryStore::new();
+        let mut skipped = 0;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Json::parse(line).ok().and_then(|j| ExecutionRecord::from_json(&j)) {
+                Some(r) => store.push(r),
+                None => skipped += 1,
+            }
+        }
+        Ok((store, skipped))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(kind: WorkloadKind, cpu: f64, jct: f64, solo: f64) -> ExecutionRecord {
+        ExecutionRecord {
+            kind,
+            gb: 10.0,
+            profile: ResourceVector {
+                cpu,
+                mem: 0.4,
+                disk: 0.3,
+                net: 0.2,
+                cpu_peak: cpu,
+                io_peak: 0.3,
+                burstiness: 0.1,
+            },
+            jct,
+            solo,
+            energy_j: 5000.0,
+            host_cpu_mean: 0.5,
+        }
+    }
+
+    #[test]
+    fn push_and_query_by_kind() {
+        let mut s = HistoryStore::new();
+        s.push(rec(WorkloadKind::SparkKMeans, 0.9, 100.0, 95.0));
+        s.push(rec(WorkloadKind::EtlPipeline, 0.2, 200.0, 210.0));
+        s.push(rec(WorkloadKind::SparkKMeans, 0.8, 110.0, 100.0));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.of_kind(WorkloadKind::SparkKMeans).count(), 2);
+        assert_eq!(s.of_kind(WorkloadKind::HadoopGrep).count(), 0);
+    }
+
+    #[test]
+    fn mean_profile_averages() {
+        let mut s = HistoryStore::new();
+        s.push(rec(WorkloadKind::SparkKMeans, 0.9, 100.0, 95.0));
+        s.push(rec(WorkloadKind::SparkKMeans, 0.7, 110.0, 100.0));
+        let v = s.mean_profile(WorkloadKind::SparkKMeans).unwrap();
+        assert!((v.cpu - 0.8).abs() < 1e-9);
+        assert!(s.mean_profile(WorkloadKind::HadoopGrep).is_none());
+    }
+
+    #[test]
+    fn slowdown_computation() {
+        let r = rec(WorkloadKind::EtlPipeline, 0.2, 220.0, 200.0);
+        assert!((r.slowdown() - 0.1).abs() < 1e-9);
+        // Faster than solo (reduced contention) floors at 0.
+        let r2 = rec(WorkloadKind::EtlPipeline, 0.2, 180.0, 200.0);
+        assert_eq!(r2.slowdown(), 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ecosched-test-history");
+        let path = dir.join("log.jsonl");
+        let mut s = HistoryStore::new();
+        s.push(rec(WorkloadKind::HadoopTeraSort, 0.3, 500.0, 480.0));
+        s.push(rec(WorkloadKind::SparkLogReg, 0.9, 120.0, 118.0));
+        s.save(&path).unwrap();
+        let (loaded, skipped) = HistoryStore::load(&path).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.records()[0], s.records()[0]);
+        assert_eq!(loaded.records()[1].kind, WorkloadKind::SparkLogReg);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_skips_malformed_lines() {
+        let dir = std::env::temp_dir().join("ecosched-test-history2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        let mut s = HistoryStore::new();
+        s.push(rec(WorkloadKind::HadoopGrep, 0.2, 60.0, 58.0));
+        s.save(&path).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not json\n{\"kind\":\"unknown-kind\"}\n");
+        std::fs::write(&path, text).unwrap();
+        let (loaded, skipped) = HistoryStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(skipped, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mean_solo_per_gb() {
+        let mut s = HistoryStore::new();
+        s.push(rec(WorkloadKind::HadoopGrep, 0.2, 60.0, 50.0)); // 5 s/GB
+        assert!((s.mean_solo_per_gb(WorkloadKind::HadoopGrep).unwrap() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload profiling (§III-A): Eq. 1 resource vectors from telemetry
+//! or history, Eq. 2 dominant-resource classification, the execution
+//! history store, and feature construction for the prediction engine.
+
+pub mod classifier;
+pub mod features;
+pub mod history;
+pub mod vector;
+
+pub use classifier::{classify, WorkloadClass};
+pub use features::{build_features, flatten_batch, FEAT_DIM};
+pub use history::{ExecutionRecord, HistoryStore};
+pub use vector::ResourceVector;

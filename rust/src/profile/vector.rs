@@ -1,0 +1,223 @@
+//! Workload resource-utilization vectors — Eq. 1 of the paper:
+//!
+//! ```text
+//! W_i = (c_i, m_i, d_i, n_i)
+//! ```
+//!
+//! built from telemetry windows (real-time path) or from phase models
+//! (historical path), normalized to the worker flavor so vectors are
+//! comparable across VM sizes. Beyond the paper's four means we retain
+//! peaks and burstiness — the features §III-A's "static execution logs
+//! and runtime performance counters" imply and the predictor needs.
+
+use crate::cluster::{Demand, Flavor};
+use crate::sim::telemetry::VmSample;
+use crate::workload::Phase;
+
+/// Normalized workload profile. All fields in [0, 1] except
+/// `burstiness` (coefficient of variation, unbounded but typically <2).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceVector {
+    /// Mean normalized demands — the paper's (c, m, d, n).
+    pub cpu: f64,
+    pub mem: f64,
+    pub disk: f64,
+    pub net: f64,
+    /// 95th-percentile normalized CPU demand.
+    pub cpu_peak: f64,
+    /// 95th-percentile normalized I/O demand (max of disk, net).
+    pub io_peak: f64,
+    /// CPU coefficient of variation (std/mean) — phase burstiness.
+    pub burstiness: f64,
+}
+
+impl ResourceVector {
+    /// Combined I/O component `d_i` used by the Eq. 2 classifier
+    /// (disk and network collapse into "storage I/O behaviour").
+    pub fn io(&self) -> f64 {
+        self.disk.max(self.net)
+    }
+
+    /// Build from a telemetry window of VM samples.
+    pub fn from_samples(samples: &[VmSample], flavor: &Flavor) -> ResourceVector {
+        if samples.is_empty() {
+            return ResourceVector::default();
+        }
+        let n = samples.len() as f64;
+        let norm = |d: &Demand| {
+            (
+                (d.cpu / flavor.vcpus).min(1.0),
+                (d.mem_gb / flavor.mem_gb).min(1.0),
+                (d.disk_mbps / flavor.disk_mbps).min(1.0),
+                (d.net_mbps / flavor.net_mbps).min(1.0),
+            )
+        };
+        let mut cpu_series = Vec::with_capacity(samples.len());
+        let mut io_series = Vec::with_capacity(samples.len());
+        let (mut sc, mut sm, mut sd, mut sn) = (0.0, 0.0, 0.0, 0.0);
+        for s in samples {
+            let (c, m, d, nn) = norm(&s.demand);
+            sc += c;
+            sm += m;
+            sd += d;
+            sn += nn;
+            cpu_series.push(c);
+            io_series.push(d.max(nn));
+        }
+        let cpu_mean = sc / n;
+        let std = crate::util::stats::std_dev(&cpu_series);
+        ResourceVector {
+            cpu: cpu_mean,
+            mem: sm / n,
+            disk: sd / n,
+            net: sn / n,
+            cpu_peak: crate::util::stats::percentile(&cpu_series, 95.0),
+            io_peak: crate::util::stats::percentile(&io_series, 95.0),
+            burstiness: if cpu_mean > 1e-6 { std / cpu_mean } else { 0.0 },
+        }
+    }
+
+    /// Build from a phase list, duration-weighted — the "historical
+    /// execution logs" path (Eq. 1's static source): when a recurring
+    /// job kind is submitted, its profile comes from the history store
+    /// before any runtime telemetry exists.
+    pub fn from_phases(phases: &[Phase], flavor: &Flavor) -> ResourceVector {
+        let total: f64 = phases.iter().map(|p| p.duration).sum();
+        if total <= 0.0 {
+            return ResourceVector::default();
+        }
+        let mut v = ResourceVector::default();
+        let mut cpu_peak: f64 = 0.0;
+        let mut io_peak: f64 = 0.0;
+        // Duration-weighted second moment for burstiness.
+        let mut cpu_sq = 0.0;
+        for p in phases {
+            let w = p.duration / total;
+            let c = (p.demand.cpu / flavor.vcpus).min(1.0);
+            let m = (p.demand.mem_gb / flavor.mem_gb).min(1.0);
+            let d = (p.demand.disk_mbps / flavor.disk_mbps).min(1.0);
+            let n = (p.demand.net_mbps / flavor.net_mbps).min(1.0);
+            v.cpu += w * c;
+            v.mem += w * m;
+            v.disk += w * d;
+            v.net += w * n;
+            cpu_sq += w * c * c;
+            cpu_peak = cpu_peak.max(c);
+            io_peak = io_peak.max(d.max(n));
+        }
+        v.cpu_peak = cpu_peak;
+        v.io_peak = io_peak;
+        let var = (cpu_sq - v.cpu * v.cpu).max(0.0);
+        v.burstiness = if v.cpu > 1e-6 {
+            var.sqrt() / v.cpu
+        } else {
+            0.0
+        };
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+    use crate::util::rng::Xoshiro256;
+    use crate::workload::{phases_for, WorkloadKind};
+
+    fn sample(cpu: f64, disk: f64, net: f64) -> VmSample {
+        VmSample {
+            t: 0.0,
+            demand: Demand {
+                cpu,
+                mem_gb: 8.0,
+                disk_mbps: disk,
+                net_mbps: net,
+            },
+        }
+    }
+
+    #[test]
+    fn empty_window_is_default() {
+        assert_eq!(
+            ResourceVector::from_samples(&[], &MEDIUM),
+            ResourceVector::default()
+        );
+    }
+
+    #[test]
+    fn means_normalize_to_flavor() {
+        let samples = vec![sample(4.0, 100.0, 30.0); 10];
+        let v = ResourceVector::from_samples(&samples, &MEDIUM);
+        assert!((v.cpu - 0.5).abs() < 1e-9); // 4/8
+        assert!((v.mem - 0.5).abs() < 1e-9); // 8/16
+        assert!((v.disk - 0.5).abs() < 1e-9); // 100/200
+        assert!((v.net - 0.5).abs() < 1e-9); // 30/60
+        assert!(v.burstiness.abs() < 1e-9); // constant series
+    }
+
+    #[test]
+    fn peaks_capture_spikes() {
+        let mut samples = vec![sample(2.0, 20.0, 5.0); 18];
+        samples.push(sample(8.0, 200.0, 60.0));
+        samples.push(sample(8.0, 200.0, 60.0));
+        let v = ResourceVector::from_samples(&samples, &MEDIUM);
+        assert!(v.cpu_peak > 0.9, "cpu_peak {}", v.cpu_peak);
+        assert!(v.cpu < 0.35);
+        assert!(v.burstiness > 0.3);
+    }
+
+    #[test]
+    fn phase_vector_weights_by_duration() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let ts = ResourceVector::from_phases(
+            &phases_for(WorkloadKind::HadoopTeraSort, 20.0, &mut rng),
+            &MEDIUM,
+        );
+        // TeraSort: io (net-dominated shuffle is the longest phase)
+        // must dominate cpu.
+        assert!(ts.io() > ts.cpu, "terasort io {} vs cpu {}", ts.io(), ts.cpu);
+
+        let lr = ResourceVector::from_phases(
+            &phases_for(WorkloadKind::SparkLogReg, 10.0, &mut rng),
+            &MEDIUM,
+        );
+        assert!(lr.cpu > lr.io(), "logreg cpu {} vs io {}", lr.cpu, lr.io());
+        assert!(lr.cpu > 0.6);
+    }
+
+    #[test]
+    fn samples_and_phases_agree_for_flat_profile() {
+        // A single flat phase sampled repeatedly must give ≈ the same
+        // vector through both constructors.
+        let phases = vec![Phase {
+            name: "flat",
+            duration: 100.0,
+            demand: Demand {
+                cpu: 6.0,
+                mem_gb: 12.0,
+                disk_mbps: 50.0,
+                net_mbps: 20.0,
+            },
+        }];
+        let from_phase = ResourceVector::from_phases(&phases, &MEDIUM);
+        let samples: Vec<VmSample> = (0..20)
+            .map(|_| VmSample {
+                t: 0.0,
+                demand: phases[0].demand,
+            })
+            .collect();
+        let from_samples = ResourceVector::from_samples(&samples, &MEDIUM);
+        assert!((from_phase.cpu - from_samples.cpu).abs() < 1e-9);
+        assert!((from_phase.disk - from_samples.disk).abs() < 1e-9);
+    }
+
+    #[test]
+    fn io_is_max_of_disk_net() {
+        let v = ResourceVector {
+            disk: 0.3,
+            net: 0.7,
+            ..Default::default()
+        };
+        assert_eq!(v.io(), 0.7);
+    }
+}

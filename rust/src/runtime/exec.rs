@@ -1,0 +1,251 @@
+//! Executable cache: compile each HLO artifact once, run many times.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0}")]
+    ArtifactMissing(PathBuf),
+    #[error("artifact metadata invalid: {0}")]
+    BadMeta(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Metadata emitted by `python/compile/aot.py` alongside the HLO text —
+/// batch size, feature dim, hidden sizes — so L3 never hardcodes shapes
+/// that L2 owns.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Fixed scoring batch (rows are padded up to this).
+    pub batch: usize,
+    /// Feature dimension (must equal `profile::FEAT_DIM`).
+    pub feat_dim: usize,
+    /// Hidden layer widths.
+    pub hidden: Vec<usize>,
+    /// Output dim (2: marginal power, slowdown risk).
+    pub out_dim: usize,
+    /// Telemetry featurize window length.
+    pub window: usize,
+    /// Training minibatch size baked into train_step.hlo.
+    pub train_batch: usize,
+    /// Adam learning rate baked into train_step.hlo.
+    pub lr: f64,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta, RuntimeError> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|_| RuntimeError::ArtifactMissing(path.clone()))?;
+        let j = Json::parse(&text).map_err(|e| RuntimeError::BadMeta(e.to_string()))?;
+        let num = |k: &str| -> Result<f64, RuntimeError> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| RuntimeError::BadMeta(format!("missing key {k}")))
+        };
+        let hidden = j
+            .get("hidden")
+            .and_then(Json::as_f64_vec)
+            .ok_or_else(|| RuntimeError::BadMeta("missing key hidden".into()))?;
+        Ok(ModelMeta {
+            batch: num("batch")? as usize,
+            feat_dim: num("feat_dim")? as usize,
+            hidden: hidden.into_iter().map(|x| x as usize).collect(),
+            out_dim: num("out_dim")? as usize,
+            window: num("window")? as usize,
+            train_batch: num("train_batch")? as usize,
+            lr: num("lr")?,
+        })
+    }
+}
+
+/// The PJRT runtime: one CPU client, a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub meta: ModelMeta,
+    artifacts_dir: PathBuf,
+    /// Executions performed (overhead accounting).
+    pub exec_count: u64,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory. Compiles nothing
+    /// yet; executables load lazily (or via [`Runtime::preload`]).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        let meta = ModelMeta::load(artifacts_dir)?;
+        if meta.feat_dim != crate::profile::FEAT_DIM {
+            return Err(RuntimeError::BadMeta(format!(
+                "artifact feat_dim {} != crate FEAT_DIM {}",
+                meta.feat_dim,
+                crate::profile::FEAT_DIM
+            )));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            executables: BTreeMap::new(),
+            meta,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            exec_count: 0,
+        })
+    }
+
+    /// Default artifacts dir: `$ECOSCHED_ARTIFACTS` or `artifacts/`.
+    pub fn artifacts_dir_default() -> PathBuf {
+        std::env::var("ECOSCHED_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Compile-and-cache one artifact by stem name (`predict`,
+    /// `train_step`, `featurize`).
+    pub fn load(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(RuntimeError::ArtifactMissing(path));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        log::info!("compiled artifact {name} from {}", path.display());
+        Ok(())
+    }
+
+    /// Load every standard artifact up front.
+    pub fn preload(&mut self) -> Result<(), RuntimeError> {
+        for name in ["predict", "train_step", "featurize"] {
+            self.load(name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a named artifact with f32 tensor inputs given as
+    /// (data, shape) pairs. Returns the flattened f32 outputs of the
+    /// result tuple, in order.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        self.load(name)?;
+        let exe = self.executables.get(name).expect("just loaded");
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: i64 = shape.iter().product();
+            assert_eq!(
+                expect as usize,
+                data.len(),
+                "input shape {shape:?} vs data len {}",
+                data.len()
+            );
+            literals.push(xla::Literal::vec1(data).reshape(shape)?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.exec_count += 1;
+        // jax lowering uses return_tuple=True: the root is a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Upload an f32 tensor to the device once; reuse across many
+    /// executions (perf: model parameters don't change per call, so
+    /// re-uploading them on every predict wastes most of the dispatch
+    /// budget — see EXPERIMENTS.md §Perf).
+    pub fn buffer_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer, RuntimeError> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute a named artifact over pre-staged device buffers.
+    /// Returns the flattened f32 outputs of the result tuple.
+    pub fn execute_buffers(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        self.load(name)?;
+        let exe = self.executables.get(name).expect("just loaded");
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+        self.exec_count += 1;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime tests live in rust/tests/runtime_xla.rs (they need
+    // `make artifacts` to have run). Here: metadata parsing only.
+
+    #[test]
+    fn meta_parses() {
+        let dir = std::env::temp_dir().join("ecosched-meta-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"batch":128,"feat_dim":16,"hidden":[64,32],"out_dim":2,"window":24,"train_batch":256,"lr":0.001}"#,
+        )
+        .unwrap();
+        let m = ModelMeta::load(&dir).unwrap();
+        assert_eq!(m.batch, 128);
+        assert_eq!(m.hidden, vec![64, 32]);
+        assert_eq!(m.out_dim, 2);
+        assert!((m.lr - 0.001).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_missing_dir_errors() {
+        let err = ModelMeta::load(Path::new("/nonexistent-ecosched")).unwrap_err();
+        assert!(matches!(err, RuntimeError::ArtifactMissing(_)));
+    }
+
+    #[test]
+    fn meta_bad_json_errors() {
+        let dir = std::env::temp_dir().join("ecosched-meta-bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+        assert!(matches!(
+            ModelMeta::load(&dir).unwrap_err(),
+            RuntimeError::BadMeta(_)
+        ));
+        std::fs::write(dir.join("meta.json"), r#"{"batch":1}"#).unwrap();
+        assert!(matches!(
+            ModelMeta::load(&dir).unwrap_err(),
+            RuntimeError::BadMeta(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

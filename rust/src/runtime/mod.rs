@@ -1,0 +1,11 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them from the
+//! decision path. Python is never involved at runtime.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids.
+
+mod exec;
+
+pub use exec::{ModelMeta, Runtime, RuntimeError};

@@ -1,0 +1,94 @@
+//! Best-fit placement: the host whose *remaining* capacity after the
+//! placement is smallest (tightest pack). Energy-agnostic but
+//! consolidation-friendly — the strongest non-learned baseline.
+
+use crate::cluster::Cluster;
+use crate::sched::policy::{Decision, PlacementPolicy, PlacementRequest};
+
+#[derive(Debug, Default)]
+pub struct BestFit;
+
+impl PlacementPolicy for BestFit {
+    fn name(&self) -> &'static str {
+        "best_fit"
+    }
+
+    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
+        let mut best: Option<(f64, crate::cluster::HostId)> = None;
+        for host in &cluster.hosts {
+            if !host.fits(&req.flavor, cluster.reserved(host.id)) {
+                continue;
+            }
+            let r = cluster.reserved(host.id);
+            let cap = host.spec.capacity();
+            // Normalized leftover after placing (cpu + mem balance).
+            let left_cpu = (cap.cpu * 1.5 - r.cpu - req.flavor.vcpus) / (cap.cpu * 1.5);
+            let left_mem = (cap.mem_gb - r.mem_gb - req.flavor.mem_gb) / cap.mem_gb;
+            let leftover = left_cpu + left_mem;
+            if best.map(|(b, _)| leftover < b).unwrap_or(true) {
+                best = Some((leftover, host.id));
+            }
+        }
+        match best {
+            Some((_, h)) => Decision::Place(h),
+            None => Decision::Defer,
+        }
+    }
+
+    fn wants_consolidation(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+    use crate::cluster::HostId;
+    use crate::profile::ResourceVector;
+    use crate::workload::JobId;
+
+    fn req() -> PlacementRequest {
+        PlacementRequest {
+            job: JobId(0),
+            flavor: MEDIUM,
+            vector: ResourceVector::default(),
+            remaining_solo: 100.0,
+        }
+    }
+
+    #[test]
+    fn prefers_tightest_host() {
+        let mut c = Cluster::homogeneous(3);
+        // Pre-load host 1 with two VMs, host 2 with one.
+        for (h, n) in [(1usize, 2usize), (2, 1)] {
+            for _ in 0..n {
+                let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
+                c.place_vm(vm, HostId(h)).unwrap();
+            }
+        }
+        let mut bf = BestFit;
+        // Tightest = host 1 (least leftover after placement).
+        assert_eq!(bf.decide(&req(), &c), Decision::Place(HostId(1)));
+    }
+
+    #[test]
+    fn falls_back_across_hosts_as_they_fill() {
+        let mut c = Cluster::homogeneous(2);
+        let mut bf = BestFit;
+        let mut placements = Vec::new();
+        for _ in 0..8 {
+            match bf.decide(&req(), &c) {
+                Decision::Place(h) => {
+                    let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
+                    c.place_vm(vm, h).unwrap();
+                    placements.push(h.0);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // 4 per host by memory; first host fills completely first.
+        assert_eq!(placements, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!(bf.decide(&req(), &c), Decision::Defer);
+    }
+}

@@ -1,0 +1,486 @@
+//! Adaptive consolidation (§III-C, Eqs. 8–9):
+//!
+//! ```text
+//! U_h^cpu < δ_low  ⇒ migrate workloads away (then power down)
+//! U_h^cpu > δ_high ⇒ restrict placements / relieve pressure
+//! ```
+//!
+//! The scan runs periodically, uses *sustained* utilization from
+//! telemetry (not instantaneous spikes), schedules migrations only in
+//! low-activity windows (§III-C's "migrations are scheduled during
+//! low-activity intervals"), and evacuates at most one donor host per
+//! scan to avoid migration storms.
+
+use crate::cluster::{Cluster, HostId, VmId, VmState};
+use crate::predict::EnergyPredictor;
+use crate::profile::{build_features, ResourceVector};
+use crate::sim::Telemetry;
+use std::collections::BTreeMap;
+
+/// Consolidation tunables (`abl1` sweeps δ_low × δ_high).
+#[derive(Debug, Clone, Copy)]
+pub struct ConsolidationParams {
+    /// Eq. 8 lower threshold on sustained host CPU utilization.
+    pub delta_low: f64,
+    /// Eq. 9 upper threshold.
+    pub delta_high: f64,
+    /// Telemetry samples the sustained-utilization window averages.
+    pub window_samples: usize,
+    /// Cluster-mean CPU utilization above which migrations wait
+    /// (low-activity-window scheduling).
+    pub migration_util_ceiling: f64,
+    /// Never power below this many hosts.
+    pub min_hosts_on: usize,
+    /// Max predicted slowdown accepted on a migration target.
+    pub max_slowdown: f64,
+    /// Keep this many *empty* hosts on as boot-latency headroom —
+    /// powering off the last spare forces a 90 s boot on the next
+    /// burst, which costs more energy (and SLA slack) than it saves.
+    pub spare_hosts: usize,
+    /// A host must be continuously empty this long before power-off
+    /// (hysteresis against placement/consolidation thrash).
+    pub empty_grace_s: f64,
+}
+
+impl Default for ConsolidationParams {
+    fn default() -> Self {
+        ConsolidationParams {
+            delta_low: 0.30,
+            delta_high: 0.85,
+            window_samples: 24, // 2 min of 5 s samples
+            migration_util_ceiling: 0.75,
+            min_hosts_on: 1,
+            max_slowdown: 0.08,
+            spare_hosts: 0,
+            empty_grace_s: 45.0,
+        }
+    }
+}
+
+/// Network-utilization share of one live-migration copy stream
+/// (40 MB/s throttle on a ~117 MB/s NIC).
+pub const MIGRATION_NET_UTIL: f64 = 40.0 / 117.0;
+
+/// Actions the scan emits for the coordinator to actuate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    Migrate { vm: VmId, to: HostId },
+    PowerOff(HostId),
+}
+
+/// Per-VM context the scan needs from the coordinator.
+#[derive(Debug, Clone)]
+pub struct VmContext {
+    pub vector: ResourceVector,
+    pub remaining_solo: f64,
+    /// Current SLA headroom: max extra slowdown the job tolerates.
+    pub slack_left: f64,
+}
+
+pub struct Consolidator {
+    pub params: ConsolidationParams,
+    /// Hosts currently under Eq. 9 restriction (informational; the
+    /// energy-aware policy applies δ_high itself at placement time).
+    pub restricted: Vec<HostId>,
+    /// When each host was first observed empty (hysteresis state).
+    empty_since: BTreeMap<HostId, f64>,
+}
+
+impl Consolidator {
+    pub fn new(params: ConsolidationParams) -> Consolidator {
+        Consolidator {
+            params,
+            restricted: Vec::new(),
+            empty_since: BTreeMap::new(),
+        }
+    }
+
+    /// One scan pass. Pure planning: no cluster mutation here.
+    pub fn scan(
+        &mut self,
+        now: f64,
+        cluster: &Cluster,
+        telemetry: &Telemetry,
+        vm_ctx: &BTreeMap<VmId, VmContext>,
+        predictor: &mut dyn EnergyPredictor,
+    ) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let n = cluster.n_hosts();
+        // Sustained per-host CPU utilization.
+        let sustained: Vec<f64> = (0..n)
+            .map(|i| {
+                let ring = &telemetry.hosts[i];
+                let last = ring.last_n(self.params.window_samples);
+                if last.is_empty() {
+                    cluster.hosts[i].utilization().cpu
+                } else {
+                    last.iter().map(|s| s.util.cpu).sum::<f64>() / last.len() as f64
+                }
+            })
+            .collect();
+
+        // Eq. 9 bookkeeping.
+        self.restricted = (0..n)
+            .filter(|&i| cluster.hosts[i].state.is_on() && sustained[i] > self.params.delta_high)
+            .map(HostId)
+            .collect();
+
+        // Power-off planning with hysteresis and spare-host headroom:
+        // a host powers off only after `empty_grace_s` of continuous
+        // emptiness, and only while more than `spare_hosts` empty
+        // hosts (plus the absolute floor) remain on.
+        for host in &cluster.hosts {
+            if host.state.is_on() && host.vms.is_empty() {
+                self.empty_since.entry(host.id).or_insert(now);
+            } else {
+                self.empty_since.remove(&host.id);
+            }
+        }
+        let mut hosts_on = cluster.hosts_on();
+        let mut empty_on = self
+            .empty_since
+            .iter()
+            .filter(|(h, _)| cluster.host(**h).state.is_on())
+            .count();
+        let mut powering_off: Vec<HostId> = Vec::new();
+        // Oldest-empty first (most likely genuinely idle).
+        let mut candidates: Vec<(f64, HostId)> = self
+            .empty_since
+            .iter()
+            .map(|(&h, &t)| (t, h))
+            .collect();
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (since, h) in candidates {
+            if now - since < self.params.empty_grace_s {
+                continue;
+            }
+            if hosts_on <= self.params.min_hosts_on
+                || empty_on <= self.params.spare_hosts
+            {
+                break;
+            }
+            actions.push(Action::PowerOff(h));
+            powering_off.push(h);
+            hosts_on -= 1;
+            empty_on -= 1;
+        }
+
+        // Low-activity gate for migrations.
+        let on_utils: Vec<f64> = (0..n)
+            .filter(|&i| cluster.hosts[i].state.is_on())
+            .map(|i| sustained[i])
+            .collect();
+        let cluster_mean = if on_utils.is_empty() {
+            0.0
+        } else {
+            on_utils.iter().sum::<f64>() / on_utils.len() as f64
+        };
+        if cluster_mean > self.params.migration_util_ceiling {
+            return actions; // busy: postpone consolidation migrations
+        }
+
+        // Eq. 8: pick ONE donor — the least-utilized on-host below
+        // δ_low that still runs VMs and is migration-quiet.
+        let donor = (0..n)
+            .filter(|&i| {
+                let h = &cluster.hosts[i];
+                h.state.is_on()
+                    && !h.vms.is_empty()
+                    && sustained[i] < self.params.delta_low
+                    && h.migration_net == 0.0
+                    && h.vms.iter().all(|vm| {
+                        matches!(cluster.vms[vm].state, VmState::Running)
+                    })
+            })
+            .min_by(|&a, &b| sustained[a].partial_cmp(&sustained[b]).unwrap())
+            .map(HostId);
+
+        let Some(donor) = donor else {
+            return actions;
+        };
+
+        // Plan a target for every VM on the donor; abort wholesale if
+        // any VM has no SLA-safe target (partial evacuation strands
+        // the host at even lower utilization).
+        let mut planned: Vec<(VmId, HostId)> = Vec::new();
+        let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
+        let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
+        for &vm_id in &cluster.hosts[donor.0].vms {
+            let vm = &cluster.vms[&vm_id];
+            let ctx = match vm_ctx.get(&vm_id) {
+                Some(c) => c,
+                None => return actions, // missing context: be conservative
+            };
+            // Pre-copy duration at the 40 MB/s throttle: migrating a
+            // VM whose remaining work is shorter than the copy itself
+            // cannot free the donor early enough to pay for the copy's
+            // network pressure — let it drain instead.
+            let copy_secs = vm.flavor.mem_gb * 1024.0 * 1.3 / 40.0;
+            if ctx.remaining_solo < copy_secs {
+                return actions;
+            }
+            let mut cands: Vec<HostId> = Vec::new();
+            let mut feats = Vec::new();
+            for host in &cluster.hosts {
+                if host.id == donor || !host.state.is_on() {
+                    continue;
+                }
+                // Never migrate onto a host we just planned to power
+                // off, and never onto an *empty* host — moving load to
+                // an empty machine swaps hosts instead of shrinking
+                // the active set.
+                if powering_off.contains(&host.id) || host.vms.is_empty() {
+                    continue;
+                }
+                // δ_high and planned-load-aware fit check.
+                if sustained[host.id.0] > self.params.delta_high {
+                    continue;
+                }
+                let mut reserved = *cluster.reserved(host.id);
+                reserved.mem_gb += extra_mem.get(&host.id).copied().unwrap_or(0.0);
+                reserved.cpu += extra_cpu.get(&host.id).copied().unwrap_or(0.0);
+                if !host.fits(&vm.flavor, &reserved) {
+                    continue;
+                }
+                // Same effective-load headroom the placement path uses.
+                let inst = host.utilization();
+                let prof = cluster.expected_util(host.id);
+                let u = crate::cluster::Utilization {
+                    cpu: inst.cpu.max(prof.cpu),
+                    mem: inst.mem.max(prof.mem),
+                    disk: inst.disk.max(prof.disk),
+                    net: inst.net.max(prof.net),
+                };
+                let (pc, pm, pd, pn) =
+                    crate::predict::oracle::post_utilization(&ctx.vector, &u);
+                if (ctx.vector.cpu > 0.1 && pc > 0.90)
+                    || (ctx.vector.mem > 0.1 && pm > 0.90)
+                    || (ctx.vector.disk > 0.1 && pd > 0.90)
+                    || (ctx.vector.net > 0.1 && pn > 0.90)
+                {
+                    continue;
+                }
+                let _ = pc;
+                // The migration copy itself occupies ~0.34 of a 1 GbE
+                // NIC on the receiving end; co-located network-heavy
+                // phases must still fit beside it.
+                if pn + MIGRATION_NET_UTIL > 0.95 {
+                    continue;
+                }
+                cands.push(host.id);
+                feats.push(build_features(&ctx.vector, ctx.remaining_solo, host));
+            }
+            if cands.is_empty() {
+                return actions; // cannot fully evacuate: give up this scan
+            }
+            let preds = predictor.predict(&feats);
+            let mut best: Option<(HostId, f64)> = None;
+            for (i, p) in preds.iter().enumerate() {
+                if p.slowdown > self.params.max_slowdown.min(ctx.slack_left) {
+                    continue;
+                }
+                // Same amortized-idle-floor objective as placement.
+                let host = cluster.host(cands[i]);
+                let idle_share =
+                    host.spec.power.p_idle / (host.vms.len() as f64 + 1.0);
+                let cost = (p.power_w + idle_share) * (1.0 + p.slowdown);
+                if best.map(|(_, c)| cost < c).unwrap_or(true) {
+                    best = Some((cands[i], cost));
+                }
+            }
+            match best {
+                Some((target, _)) => {
+                    *extra_mem.entry(target).or_default() += vm.flavor.mem_gb;
+                    *extra_cpu.entry(target).or_default() += vm.flavor.vcpus;
+                    planned.push((vm_id, target));
+                }
+                None => return actions, // SLA-unsafe: skip consolidating this host
+            }
+        }
+        for (vm, to) in planned {
+            actions.push(Action::Migrate { vm, to });
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+    use crate::cluster::Demand;
+    use crate::predict::OraclePredictor;
+    use crate::workload::JobId;
+
+    fn ctx() -> VmContext {
+        VmContext {
+            vector: ResourceVector {
+                cpu: 0.15,
+                mem: 0.4,
+                disk: 0.5,
+                net: 0.3,
+                cpu_peak: 0.2,
+                io_peak: 0.6,
+                burstiness: 0.1,
+            },
+            remaining_solo: 1200.0,
+            slack_left: 0.08,
+        }
+    }
+
+    /// Cluster with a lightly-loaded donor (host 0, one VM) and a
+    /// moderately-loaded receiver (host 1).
+    fn setup() -> (Cluster, BTreeMap<VmId, VmContext>, Telemetry) {
+        let mut c = Cluster::homogeneous(3);
+        let vm0 = c.create_vm(MEDIUM, JobId(0), 0.0);
+        c.place_vm(vm0, HostId(0)).unwrap();
+        let vm1 = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm1, HostId(1)).unwrap();
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 1.5,
+            mem_gb: 6.0,
+            disk_mbps: 80.0,
+            net_mbps: 20.0,
+        };
+        c.host_mut(HostId(1)).demand = Demand {
+            cpu: 10.0,
+            mem_gb: 12.0,
+            disk_mbps: 100.0,
+            net_mbps: 30.0,
+        };
+        let mut ctxs = BTreeMap::new();
+        ctxs.insert(vm0, ctx());
+        ctxs.insert(vm1, ctx());
+        // Telemetry: a few samples reflecting current state.
+        let mut t = Telemetry::new(3, 1, 0.0);
+        let demands = BTreeMap::new();
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &demands);
+        }
+        (c, ctxs, t)
+    }
+
+    #[test]
+    fn evacuates_underutilized_donor_and_powers_off_empty() {
+        let (c, ctxs, t) = setup();
+        // No spare-host reserve for this test; grace still applies.
+        let mut cons = Consolidator::new(ConsolidationParams {
+            spare_hosts: 0,
+            ..Default::default()
+        });
+        let mut pred = OraclePredictor;
+        // First scan observes host 2 empty; no power-off before the
+        // grace period elapses (hysteresis).
+        let first = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        assert!(
+            !first.contains(&Action::PowerOff(HostId(2))),
+            "power-off before grace: {first:?}"
+        );
+        // After the grace period: host 2 powers off; host 0 (< δ_low)
+        // evacuates its VM to host 1.
+        let actions = cons.scan(1000.0 + 151.0, &c, &t, &ctxs, &mut pred);
+        assert!(actions.contains(&Action::PowerOff(HostId(2))), "{actions:?}");
+        let vm0 = *c.hosts[0].vms.first().unwrap();
+        assert!(
+            actions.contains(&Action::Migrate { vm: vm0, to: HostId(1) }),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn spare_host_reserved() {
+        let (c, ctxs, t) = setup();
+        let mut cons = Consolidator::new(ConsolidationParams {
+            spare_hosts: 1,
+            ..Default::default()
+        });
+        let mut pred = OraclePredictor;
+        cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        let actions = cons.scan(2000.0, &c, &t, &ctxs, &mut pred);
+        // Host 2 is the ONLY empty host → kept on as the spare.
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::PowerOff(_))),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn respects_min_hosts_on() {
+        let mut c = Cluster::homogeneous(2);
+        c.host_mut(HostId(1)).power_off(0.0);
+        c.advance_power_states(100.0);
+        let t = Telemetry::new(2, 1, 0.0);
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        let actions = cons.scan(1000.0, &c, &t, &BTreeMap::new(), &mut pred);
+        // Host 0 is empty but it's the last one on.
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    #[test]
+    fn postpones_migrations_when_cluster_busy() {
+        let (mut c, ctxs, _) = setup();
+        // Saturate both active hosts per instantaneous util; telemetry
+        // window reflects that.
+        c.host_mut(HostId(1)).demand.cpu = 30.0;
+        c.host_mut(HostId(2)).demand.cpu = 30.0;
+        let vm2 = c.create_vm(MEDIUM, JobId(2), 0.0);
+        c.place_vm(vm2, HostId(2)).unwrap();
+        let mut t = Telemetry::new(3, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        let actions = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::Migrate { .. })),
+            "migrations must wait for a low-activity window: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn marks_hot_hosts_restricted() {
+        let (mut c, ctxs, _) = setup();
+        c.host_mut(HostId(1)).demand.cpu = 29.0; // > 0.85
+        let mut t = Telemetry::new(3, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        assert!(cons.restricted.contains(&HostId(1)));
+    }
+
+    #[test]
+    fn aborts_evacuation_without_sla_safe_targets() {
+        let (mut c, mut ctxs, t) = setup();
+        // Make the donor's VM extremely contention-sensitive.
+        let vm0 = *c.hosts[0].vms.first().unwrap();
+        ctxs.get_mut(&vm0).unwrap().slack_left = 0.0;
+        // And make the only target CPU-hot enough that any CPU use slows.
+        c.host_mut(HostId(1)).demand.cpu = 31.0;
+        ctxs.get_mut(&vm0).unwrap().vector.cpu = 0.9;
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        let actions = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::Migrate { .. })),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn ignores_hosts_already_migrating() {
+        let (mut c, ctxs, t) = setup();
+        c.host_mut(HostId(0)).migration_net = 50.0;
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        let actions = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::Migrate { .. })),
+            "{actions:?}"
+        );
+    }
+}

@@ -1,0 +1,192 @@
+//! DVFS governor (§III-C): "for I/O-bound workloads, CPU frequency
+//! scaling can further reduce power usage". Per host, the governor
+//! looks at sustained CPU vs I/O utilization and picks a p-state:
+//! hosts doing I/O with an idle-ish CPU clock down; hosts with real
+//! CPU demand stay at full frequency. Hysteresis prevents flapping.
+
+use crate::cluster::{Cluster, HostId};
+use crate::sim::Telemetry;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DvfsParams {
+    /// Scale down only when sustained CPU utilization is below this.
+    pub cpu_low: f64,
+    /// ... and sustained I/O utilization is above this.
+    pub io_high: f64,
+    /// Scale back up when CPU exceeds this (hysteresis gap).
+    pub cpu_restore: f64,
+    /// Telemetry window (samples).
+    pub window_samples: usize,
+}
+
+impl Default for DvfsParams {
+    fn default() -> Self {
+        DvfsParams {
+            cpu_low: 0.30,
+            io_high: 0.40,
+            cpu_restore: 0.55,
+            window_samples: 12, // 1 min of 5 s samples
+        }
+    }
+}
+
+/// Frequency change directive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SetFreq {
+    pub host: HostId,
+    pub freq: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct DvfsGovernor {
+    pub params: DvfsParams,
+}
+
+impl DvfsGovernor {
+    pub fn new(params: DvfsParams) -> DvfsGovernor {
+        DvfsGovernor { params }
+    }
+
+    pub fn scan(&self, cluster: &Cluster, telemetry: &Telemetry) -> Vec<SetFreq> {
+        let mut out = Vec::new();
+        for host in &cluster.hosts {
+            if !host.state.is_on() {
+                continue;
+            }
+            let ring = &telemetry.hosts[host.id.0];
+            let last = ring.last_n(self.params.window_samples);
+            if last.is_empty() {
+                continue;
+            }
+            let n = last.len() as f64;
+            let cpu = last.iter().map(|s| s.util.cpu).sum::<f64>() / n;
+            let io = last.iter().map(|s| s.util.io()).sum::<f64>() / n;
+            // Account for the fact that utilization is measured against
+            // the *scaled* capacity: convert back to full-clock terms.
+            let cpu_full_clock = cpu * host.freq;
+            // Profiled mean CPU of resident jobs: a Spark tenant in a
+            // brief I/O phase must NOT get its host clocked down —
+            // that is exactly the §V-C failure mode (CPU jobs hurt by
+            // frequency scaling) the paper restricts DVFS to
+            // I/O-bound workloads to avoid.
+            let expected_cpu = cluster.expected_util(host.id).cpu;
+            // Restore fast on *instantaneous* pressure: a clocked-down
+            // host whose CPU phase returned contends until restored.
+            let inst_cpu = host.utilization().cpu;
+            if host.freq < 1.0
+                && (inst_cpu > 0.7
+                    || cpu_full_clock > self.params.cpu_restore * host.freq
+                    || expected_cpu > self.params.cpu_low)
+            {
+                out.push(SetFreq {
+                    host: host.id,
+                    freq: 1.0,
+                });
+            } else if host.freq >= 1.0
+                && cpu_full_clock < self.params.cpu_low
+                && expected_cpu < self.params.cpu_low
+                && io > self.params.io_high
+            {
+                // I/O-dominated host: clock down. Choose the p-state
+                // that keeps CPU below ~70 % at the lower clock.
+                let target = if cpu_full_clock.max(expected_cpu) < 0.15 {
+                    0.6
+                } else {
+                    0.7
+                };
+                out.push(SetFreq {
+                    host: host.id,
+                    freq: target,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Demand;
+    use std::collections::BTreeMap;
+
+    fn telemetry_for(cluster: &Cluster, n_hosts: usize) -> Telemetry {
+        let mut t = Telemetry::new(n_hosts, 1, 0.0);
+        for k in 1..=15 {
+            t.sample(k as f64 * 5.0, cluster, &BTreeMap::new());
+        }
+        t
+    }
+
+    #[test]
+    fn clocks_down_io_dominated_host() {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 3.0, // 0.09 util
+            mem_gb: 8.0,
+            disk_mbps: 600.0, // 0.6 io
+            net_mbps: 20.0,
+        };
+        let t = telemetry_for(&c, 1);
+        let gov = DvfsGovernor::new(DvfsParams::default());
+        let actions = gov.scan(&c, &t);
+        assert_eq!(actions.len(), 1);
+        assert!(actions[0].freq < 1.0);
+    }
+
+    #[test]
+    fn leaves_cpu_hosts_at_full_clock() {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 20.0,
+            mem_gb: 8.0,
+            disk_mbps: 350.0,
+            net_mbps: 20.0,
+        };
+        let t = telemetry_for(&c, 1);
+        let gov = DvfsGovernor::new(DvfsParams::default());
+        assert!(gov.scan(&c, &t).is_empty());
+    }
+
+    #[test]
+    fn leaves_idle_hosts_alone() {
+        // Idle host: no I/O either, so no reason to touch the clock
+        // (power-down is consolidation's job, not DVFS's).
+        let c = Cluster::homogeneous(1);
+        let t = telemetry_for(&c, 1);
+        let gov = DvfsGovernor::new(DvfsParams::default());
+        assert!(gov.scan(&c, &t).is_empty());
+    }
+
+    #[test]
+    fn restores_clock_when_cpu_returns() {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).set_freq(0.6);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 16.0, // util against 19.2 scaled cores ≈ 0.83
+            mem_gb: 8.0,
+            disk_mbps: 300.0,
+            net_mbps: 20.0,
+        };
+        let t = telemetry_for(&c, 1);
+        let gov = DvfsGovernor::new(DvfsParams::default());
+        let actions = gov.scan(&c, &t);
+        assert_eq!(
+            actions,
+            vec![SetFreq {
+                host: HostId(0),
+                freq: 1.0
+            }]
+        );
+    }
+
+    #[test]
+    fn skips_powered_off_hosts() {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).power_off(0.0);
+        c.advance_power_states(100.0);
+        let t = telemetry_for(&c, 1);
+        let gov = DvfsGovernor::new(DvfsParams::default());
+        assert!(gov.scan(&c, &t).is_empty());
+    }
+}

@@ -1,0 +1,70 @@
+//! First-fit placement: lowest-index powered-on host that fits. A
+//! classic bin-packing baseline — denser than round-robin but blind to
+//! workload behaviour and energy.
+
+use crate::cluster::Cluster;
+use crate::sched::policy::{Decision, PlacementPolicy, PlacementRequest};
+
+#[derive(Debug, Default)]
+pub struct FirstFit;
+
+impl PlacementPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "first_fit"
+    }
+
+    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
+        for host in &cluster.hosts {
+            if host.fits(&req.flavor, cluster.reserved(host.id)) {
+                return Decision::Place(host.id);
+            }
+        }
+        Decision::Defer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::{LARGE, MEDIUM};
+    use crate::cluster::HostId;
+    use crate::profile::ResourceVector;
+    use crate::workload::JobId;
+
+    fn req() -> PlacementRequest {
+        PlacementRequest {
+            job: JobId(0),
+            flavor: MEDIUM,
+            vector: ResourceVector::default(),
+            remaining_solo: 100.0,
+        }
+    }
+
+    #[test]
+    fn packs_first_host_until_full() {
+        let mut c = Cluster::homogeneous(2);
+        let mut ff = FirstFit;
+        // MEDIUM = 16 GB → 4 fit in 64 GB.
+        for _ in 0..4 {
+            assert_eq!(ff.decide(&req(), &c), Decision::Place(HostId(0)));
+            let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
+            c.place_vm(vm, HostId(0)).unwrap();
+        }
+        assert_eq!(ff.decide(&req(), &c), Decision::Place(HostId(1)));
+    }
+
+    #[test]
+    fn defers_when_nothing_fits() {
+        let mut c = Cluster::homogeneous(1);
+        for _ in 0..2 {
+            let vm = c.create_vm(LARGE, JobId(0), 0.0);
+            c.place_vm(vm, HostId(0)).unwrap();
+        }
+        let mut ff = FirstFit;
+        let r = PlacementRequest {
+            flavor: LARGE,
+            ..req()
+        };
+        assert_eq!(ff.decide(&r, &c), Decision::Defer);
+    }
+}

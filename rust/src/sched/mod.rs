@@ -1,0 +1,19 @@
+//! Scheduling policies (§III-C): the energy-aware predictive scheduler
+//! (Eqs. 6–9), the round-robin baseline (§IV-E), classic bin-packing
+//! baselines, adaptive consolidation, and the DVFS governor.
+
+pub mod best_fit;
+pub mod consolidation;
+pub mod dvfs;
+pub mod energy_aware;
+pub mod first_fit;
+pub mod policy;
+pub mod round_robin;
+
+pub use best_fit::BestFit;
+pub use consolidation::{Action, ConsolidationParams, Consolidator, VmContext};
+pub use dvfs::{DvfsGovernor, DvfsParams, SetFreq};
+pub use energy_aware::{EnergyAware, EnergyAwareParams};
+pub use first_fit::FirstFit;
+pub use policy::{Decision, PlacementPolicy, PlacementRequest};
+pub use round_robin::RoundRobin;

@@ -1,0 +1,84 @@
+//! Placement-policy interface: given a profiled workload and the
+//! cluster state, choose a host (or ask for capacity).
+
+use crate::cluster::{Cluster, Flavor, HostId};
+use crate::profile::ResourceVector;
+use crate::workload::JobId;
+
+/// Everything a policy may consult about the workload being placed.
+#[derive(Debug, Clone)]
+pub struct PlacementRequest {
+    pub job: JobId,
+    pub flavor: Flavor,
+    /// Eq. 1 profile (from history for recurring kinds, else from the
+    /// phase model at submission).
+    pub vector: ResourceVector,
+    /// Remaining solo work (s) — scales the energy stake of the choice.
+    pub remaining_solo: f64,
+}
+
+/// A policy's verdict.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Place on this powered-on host now.
+    Place(HostId),
+    /// Boot this host, then place there when it is up.
+    PowerOnAndPlace(HostId),
+    /// No acceptable host: queue the job and retry later.
+    Defer,
+}
+
+/// Placement policy interface. `&mut self` because learned policies
+/// carry predictors/buffers.
+pub trait PlacementPolicy {
+    fn name(&self) -> &'static str;
+
+    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision;
+
+    /// Whether this policy wants the consolidation loop active
+    /// (the baseline round-robin runs without it, §IV-E).
+    fn wants_consolidation(&self) -> bool {
+        false
+    }
+
+    /// Access to the policy's prediction engine, if it has one — the
+    /// consolidation scan reuses it to score migration targets. (Rust
+    /// trait objects have no downcasting without `Any`; this keeps the
+    /// coupling explicit and object-safe.)
+    fn as_energy_aware(&mut self) -> Option<&mut crate::sched::EnergyAware> {
+        None
+    }
+}
+
+/// Hosts that can take the flavor *now* (powered on + fits).
+pub fn feasible_now(cluster: &Cluster, flavor: &Flavor) -> Vec<HostId> {
+    cluster.feasible_hosts(flavor)
+}
+
+/// Powered-off hosts (candidates for PowerOnAndPlace).
+pub fn powered_off(cluster: &Cluster) -> Vec<HostId> {
+    cluster
+        .hosts
+        .iter()
+        .filter(|h| h.state.is_off())
+        .map(|h| h.id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+
+    #[test]
+    fn feasibility_helpers() {
+        let mut c = Cluster::homogeneous(3);
+        c.host_mut(HostId(2)).power_off(0.0);
+        c.advance_power_states(1000.0);
+        assert_eq!(
+            feasible_now(&c, &MEDIUM),
+            vec![HostId(0), HostId(1)]
+        );
+        assert_eq!(powered_off(&c), vec![HostId(2)]);
+    }
+}

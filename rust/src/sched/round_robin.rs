@@ -1,0 +1,98 @@
+//! Round-robin placement — the baseline: OpenStack's default scheduler
+//! "distributes VMs evenly across hosts without considering workload
+//! characteristics" (§IV-E). It never powers hosts down and never
+//! consolidates; it skips hosts that cannot fit the flavor.
+
+use crate::cluster::Cluster;
+use crate::sched::policy::{Decision, PlacementPolicy, PlacementRequest};
+
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl PlacementPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
+        let n = cluster.n_hosts();
+        for k in 0..n {
+            let idx = (self.next + k) % n;
+            let host = &cluster.hosts[idx];
+            if host.fits(&req.flavor, cluster.reserved(host.id)) {
+                self.next = (idx + 1) % n;
+                return Decision::Place(host.id);
+            }
+        }
+        Decision::Defer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::{LARGE, MEDIUM};
+    use crate::cluster::HostId;
+    use crate::profile::ResourceVector;
+    use crate::workload::JobId;
+
+    fn req(flavor: crate::cluster::Flavor) -> PlacementRequest {
+        PlacementRequest {
+            job: JobId(0),
+            flavor,
+            vector: ResourceVector::default(),
+            remaining_solo: 100.0,
+        }
+    }
+
+    #[test]
+    fn cycles_across_hosts() {
+        let mut c = Cluster::homogeneous(3);
+        let mut rr = RoundRobin::default();
+        let seq: Vec<Decision> = (0..6).map(|_| {
+            let d = rr.decide(&req(MEDIUM), &c);
+            if let Decision::Place(h) = d {
+                let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
+                c.place_vm(vm, h).unwrap();
+            }
+            d
+        }).collect();
+        assert_eq!(
+            seq,
+            vec![
+                Decision::Place(HostId(0)),
+                Decision::Place(HostId(1)),
+                Decision::Place(HostId(2)),
+                Decision::Place(HostId(0)),
+                Decision::Place(HostId(1)),
+                Decision::Place(HostId(2)),
+            ]
+        );
+    }
+
+    #[test]
+    fn skips_full_hosts() {
+        let mut c = Cluster::homogeneous(2);
+        // Fill host 0 with memory (2×LARGE = 64 GB).
+        for _ in 0..2 {
+            let vm = c.create_vm(LARGE, JobId(0), 0.0);
+            c.place_vm(vm, HostId(0)).unwrap();
+        }
+        let mut rr = RoundRobin::default();
+        assert_eq!(rr.decide(&req(LARGE), &c), Decision::Place(HostId(1)));
+    }
+
+    #[test]
+    fn defers_when_cluster_full() {
+        let mut c = Cluster::homogeneous(1);
+        for _ in 0..2 {
+            let vm = c.create_vm(LARGE, JobId(0), 0.0);
+            c.place_vm(vm, HostId(0)).unwrap();
+        }
+        let mut rr = RoundRobin::default();
+        assert_eq!(rr.decide(&req(LARGE), &c), Decision::Defer);
+        assert!(!rr.wants_consolidation());
+    }
+}

@@ -1,0 +1,12 @@
+//! Simulation substrate: the discrete-event engine, the energy meter
+//! (simulated Watts Up Pro), and the telemetry pipeline (simulated
+//! dstat/perf). The coordinator composes these with the cluster and
+//! workload models into full campaigns.
+
+pub mod energy;
+pub mod engine;
+pub mod telemetry;
+
+pub use energy::EnergyMeter;
+pub use engine::EventQueue;
+pub use telemetry::{Telemetry, SAMPLE_INTERVAL};

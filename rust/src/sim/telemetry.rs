@@ -1,0 +1,274 @@
+//! Telemetry pipeline — the simulated dstat/perf monitors (§IV-C).
+//!
+//! Lightweight samplers record per-host utilization and per-VM demand
+//! at 5-second intervals into bounded ring buffers. The profiler
+//! (Eq. 1) consumes these series; the L1 `featurize` kernel's input
+//! windows are exactly these buffers. Sampling jitter and quantization
+//! reproduce what tool-based monitors actually deliver.
+
+use crate::cluster::{Cluster, Demand, Utilization, VmId};
+use crate::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+
+/// The paper's sampling interval (§IV-C).
+pub const SAMPLE_INTERVAL: f64 = 5.0;
+
+/// One host utilization sample.
+#[derive(Debug, Clone, Copy)]
+pub struct HostSample {
+    pub t: f64,
+    pub util: Utilization,
+    pub power_w: f64,
+}
+
+/// One VM demand sample (absolute units).
+#[derive(Debug, Clone, Copy)]
+pub struct VmSample {
+    pub t: f64,
+    pub demand: Demand,
+}
+
+/// Bounded ring buffer of samples.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    buf: Vec<T>,
+    cap: usize,
+    head: usize,
+    len: usize,
+}
+
+impl<T: Copy> Ring<T> {
+    pub fn new(cap: usize) -> Ring<T> {
+        assert!(cap > 0);
+        Ring {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            self.len = self.buf.len();
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+            self.len = self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Samples oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        let (a, b) = self.buf.split_at(self.head.min(self.buf.len()));
+        b.iter().chain(a.iter())
+    }
+
+    /// The most recent `n` samples, oldest → newest.
+    pub fn last_n(&self, n: usize) -> Vec<T> {
+        let all: Vec<T> = self.iter().copied().collect();
+        let start = all.len().saturating_sub(n);
+        all[start..].to_vec()
+    }
+}
+
+/// The telemetry collector.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    pub hosts: Vec<Ring<HostSample>>,
+    pub vms: BTreeMap<VmId, Ring<VmSample>>,
+    noise: Xoshiro256,
+    /// Relative sampling noise on utilization readings.
+    noise_sigma: f64,
+    vm_ring_cap: usize,
+}
+
+impl Telemetry {
+    pub fn new(n_hosts: usize, seed: u64, noise_sigma: f64) -> Telemetry {
+        // ~2 h of 5 s samples per host ring.
+        let host_cap = 1500;
+        Telemetry {
+            hosts: (0..n_hosts).map(|_| Ring::new(host_cap)).collect(),
+            vms: BTreeMap::new(),
+            noise: Xoshiro256::seed_from_u64(seed ^ 0x7E1E),
+            noise_sigma,
+            vm_ring_cap: 720, // 1 h per VM
+        }
+    }
+
+    /// Take one sampling pass over the cluster and the active VM
+    /// demands. Call every [`SAMPLE_INTERVAL`].
+    pub fn sample(&mut self, now: f64, cluster: &Cluster, vm_demands: &BTreeMap<VmId, Demand>) {
+        for (i, host) in cluster.hosts.iter().enumerate() {
+            let u = host.utilization();
+            let j = |x: f64, rng: &mut Xoshiro256| {
+                if x == 0.0 {
+                    0.0
+                } else {
+                    (x * rng.normal_clamped(1.0, 0.02, 0.9, 1.1)).clamp(0.0, 1.0)
+                }
+            };
+            let util = if self.noise_sigma > 0.0 {
+                Utilization {
+                    cpu: j(u.cpu, &mut self.noise),
+                    mem: j(u.mem, &mut self.noise),
+                    disk: j(u.disk, &mut self.noise),
+                    net: j(u.net, &mut self.noise),
+                }
+            } else {
+                u
+            };
+            self.hosts[i].push(HostSample {
+                t: now,
+                util,
+                power_w: host.power(),
+            });
+        }
+        for (vm_id, demand) in vm_demands {
+            let ring = self
+                .vms
+                .entry(*vm_id)
+                .or_insert_with(|| Ring::new(self.vm_ring_cap));
+            ring.push(VmSample {
+                t: now,
+                demand: *demand,
+            });
+        }
+    }
+
+    /// Drop a finished VM's series (history is persisted elsewhere).
+    pub fn forget_vm(&mut self, vm: VmId) {
+        self.vms.remove(&vm);
+    }
+
+    /// Mean utilization of a host over its retained window.
+    pub fn host_mean_util(&self, host: usize) -> Utilization {
+        let ring = &self.hosts[host];
+        if ring.is_empty() {
+            return Utilization::default();
+        }
+        let mut acc = Utilization::default();
+        let n = ring.len() as f64;
+        for s in ring.iter() {
+            acc.cpu += s.util.cpu;
+            acc.mem += s.util.mem;
+            acc.disk += s.util.disk;
+            acc.net += s.util.net;
+        }
+        Utilization {
+            cpu: acc.cpu / n,
+            mem: acc.mem / n,
+            disk: acc.disk / n,
+            net: acc.net / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, HostId};
+
+    #[test]
+    fn ring_wraps_and_orders() {
+        let mut r = Ring::new(3);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        let xs: Vec<i32> = r.iter().copied().collect();
+        assert_eq!(xs, vec![2, 3, 4]);
+        assert_eq!(r.last_n(2), vec![3, 4]);
+        assert_eq!(r.last_n(10), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_before_wrap() {
+        let mut r = Ring::new(10);
+        r.push(1);
+        r.push(2);
+        let xs: Vec<i32> = r.iter().copied().collect();
+        assert_eq!(xs, vec![1, 2]);
+    }
+
+    #[test]
+    fn samples_hosts_and_vms() {
+        let mut cluster = Cluster::homogeneous(2);
+        let vm = cluster.create_vm(
+            crate::cluster::flavor::SMALL,
+            crate::workload::JobId(0),
+            0.0,
+        );
+        cluster.place_vm(vm, HostId(0)).unwrap();
+        let mut demands = BTreeMap::new();
+        demands.insert(
+            vm,
+            Demand {
+                cpu: 2.0,
+                mem_gb: 4.0,
+                disk_mbps: 10.0,
+                net_mbps: 5.0,
+            },
+        );
+        cluster.apply_demands(&demands);
+        let mut t = Telemetry::new(2, 1, 0.0);
+        t.sample(5.0, &cluster, &demands);
+        t.sample(10.0, &cluster, &demands);
+        assert_eq!(t.hosts[0].len(), 2);
+        assert_eq!(t.vms[&vm].len(), 2);
+        let u = t.host_mean_util(0);
+        assert!(u.cpu > 0.0);
+        assert_eq!(t.host_mean_util(1).cpu, 0.0);
+    }
+
+    #[test]
+    fn noise_stays_clamped() {
+        let mut cluster = Cluster::homogeneous(1);
+        let vm = cluster.create_vm(
+            crate::cluster::flavor::LARGE,
+            crate::workload::JobId(0),
+            0.0,
+        );
+        cluster.place_vm(vm, HostId(0)).unwrap();
+        let mut demands = BTreeMap::new();
+        demands.insert(
+            vm,
+            Demand {
+                cpu: 16.0,
+                mem_gb: 32.0,
+                disk_mbps: 350.0,
+                net_mbps: 90.0,
+            },
+        );
+        cluster.apply_demands(&demands);
+        let mut t = Telemetry::new(1, 3, 0.02);
+        for i in 1..=200 {
+            t.sample(i as f64 * 5.0, &cluster, &demands);
+        }
+        for s in t.hosts[0].iter() {
+            assert!((0.0..=1.0).contains(&s.util.cpu));
+            assert!((0.0..=1.0).contains(&s.util.net));
+        }
+    }
+
+    #[test]
+    fn forget_vm_drops_series() {
+        let mut t = Telemetry::new(1, 1, 0.0);
+        let cluster = Cluster::homogeneous(1);
+        let mut demands = BTreeMap::new();
+        demands.insert(VmId(9), Demand::ZERO);
+        t.sample(5.0, &cluster, &demands);
+        assert!(t.vms.contains_key(&VmId(9)));
+        t.forget_vm(VmId(9));
+        assert!(!t.vms.contains_key(&VmId(9)));
+    }
+}

@@ -1,0 +1,196 @@
+//! SLA model and compliance tracking (Eq. 7):
+//!
+//! ```text
+//! SLA(W_i, π(i)) ≥ τ  ∀i
+//! ```
+//!
+//! Each job's SLA is a completion deadline derived from its calibrated
+//! solo JCT plus a slack fraction; τ is the required fraction of jobs
+//! meeting their deadline (the paper reports τ = 1.0 — *no* violations).
+
+use crate::workload::JobId;
+use std::collections::BTreeMap;
+
+/// SLA contract parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SlaSpec {
+    /// Allowed JCT inflation over the solo baseline (0.10 = +10 %).
+    pub slack: f64,
+    /// Required compliance fraction τ.
+    pub tau: f64,
+}
+
+impl Default for SlaSpec {
+    fn default() -> Self {
+        SlaSpec {
+            slack: 0.10,
+            tau: 1.0,
+        }
+    }
+}
+
+/// Per-job SLA outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct JobSla {
+    pub solo: f64,
+    pub deadline_jct: f64,
+    pub jct: Option<f64>,
+    pub met: Option<bool>,
+}
+
+/// Tracks SLA outcomes over a campaign.
+#[derive(Debug, Clone)]
+pub struct SlaTracker {
+    pub spec: SlaSpec,
+    jobs: BTreeMap<JobId, JobSla>,
+}
+
+impl SlaTracker {
+    pub fn new(spec: SlaSpec) -> SlaTracker {
+        SlaTracker {
+            spec,
+            jobs: BTreeMap::new(),
+        }
+    }
+
+    /// Register a job at submission with its calibrated solo JCT.
+    pub fn register(&mut self, job: JobId, solo: f64) {
+        self.jobs.insert(
+            job,
+            JobSla {
+                solo,
+                deadline_jct: solo * (1.0 + self.spec.slack),
+                jct: None,
+                met: None,
+            },
+        );
+    }
+
+    /// Record completion.
+    pub fn complete(&mut self, job: JobId, jct: f64) {
+        let entry = self.jobs.get_mut(&job).expect("complete unregistered job");
+        entry.jct = Some(jct);
+        entry.met = Some(jct <= entry.deadline_jct + 1e-9);
+    }
+
+    /// Remaining slowdown headroom for a running job that has already
+    /// run for `elapsed` and has `remaining_solo` of solo work left —
+    /// consumed by the consolidation planner's SLA-safety filter.
+    pub fn slack_left(&self, job: JobId, elapsed: f64, remaining_solo: f64) -> f64 {
+        match self.jobs.get(&job) {
+            Some(s) if remaining_solo > 1e-9 => {
+                ((s.deadline_jct - elapsed - remaining_solo) / remaining_solo).max(0.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn n_completed(&self) -> usize {
+        self.jobs.values().filter(|j| j.jct.is_some()).count()
+    }
+
+    pub fn n_violations(&self) -> usize {
+        self.jobs.values().filter(|j| j.met == Some(false)).count()
+    }
+
+    /// Fraction of completed jobs that met their deadline.
+    pub fn compliance(&self) -> f64 {
+        let done = self.n_completed();
+        if done == 0 {
+            return 1.0;
+        }
+        (done - self.n_violations()) as f64 / done as f64
+    }
+
+    /// Eq. 7 satisfied?
+    pub fn satisfied(&self) -> bool {
+        self.compliance() >= self.spec.tau - 1e-12
+    }
+
+    /// Mean JCT inflation over solo across completed jobs.
+    pub fn mean_slowdown(&self) -> f64 {
+        let slow: Vec<f64> = self
+            .jobs
+            .values()
+            .filter_map(|j| j.jct.map(|jct| (jct / j.solo - 1.0).max(-1.0)))
+            .collect();
+        if slow.is_empty() {
+            0.0
+        } else {
+            slow.iter().sum::<f64>() / slow.len() as f64
+        }
+    }
+
+    pub fn jobs(&self) -> &BTreeMap<JobId, JobSla> {
+        &self.jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compliance_counts_correctly() {
+        let mut t = SlaTracker::new(SlaSpec::default());
+        t.register(JobId(1), 100.0);
+        t.register(JobId(2), 100.0);
+        t.register(JobId(3), 100.0);
+        t.complete(JobId(1), 105.0); // within +10 %
+        t.complete(JobId(2), 109.9); // within
+        t.complete(JobId(3), 111.0); // violation
+        assert_eq!(t.n_completed(), 3);
+        assert_eq!(t.n_violations(), 1);
+        assert!((t.compliance() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(!t.satisfied()); // τ = 1.0
+    }
+
+    #[test]
+    fn tau_below_one_tolerates_misses() {
+        let mut t = SlaTracker::new(SlaSpec {
+            slack: 0.10,
+            tau: 0.6,
+        });
+        t.register(JobId(1), 100.0);
+        t.register(JobId(2), 100.0);
+        t.complete(JobId(1), 200.0);
+        t.complete(JobId(2), 100.0);
+        assert!(!t.satisfied()); // 0.5 < 0.6
+        t.register(JobId(3), 50.0);
+        t.complete(JobId(3), 50.0);
+        assert!(t.satisfied()); // 2/3 ≥ 0.6
+    }
+
+    #[test]
+    fn slack_left_shrinks_as_time_burns() {
+        let mut t = SlaTracker::new(SlaSpec::default());
+        t.register(JobId(1), 1000.0); // deadline 1100
+        // Early: elapsed 100, remaining 900 → (1100-100-900)/900 ≈ 0.111
+        let early = t.slack_left(JobId(1), 100.0, 900.0);
+        // Late & delayed: elapsed 600, remaining 520 → headroom ~ -20/520 → 0
+        let late = t.slack_left(JobId(1), 600.0, 520.0);
+        assert!(early > 0.10 && early < 0.12, "{early}");
+        assert_eq!(late, 0.0);
+        // Unregistered job: zero headroom (be conservative).
+        assert_eq!(t.slack_left(JobId(9), 0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn mean_slowdown() {
+        let mut t = SlaTracker::new(SlaSpec::default());
+        t.register(JobId(1), 100.0);
+        t.register(JobId(2), 100.0);
+        t.complete(JobId(1), 110.0);
+        t.complete(JobId(2), 90.0);
+        // (+0.10 + −0.10)/2 = 0.
+        assert!(t.mean_slowdown().abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_tracker_is_compliant() {
+        let t = SlaTracker::new(SlaSpec::default());
+        assert_eq!(t.compliance(), 1.0);
+        assert!(t.satisfied());
+        assert_eq!(t.mean_slowdown(), 0.0);
+    }
+}

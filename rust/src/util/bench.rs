@@ -1,0 +1,169 @@
+//! Micro-benchmark harness — `criterion` is unavailable offline, so the
+//! `cargo bench` targets (harness = false) use this: warmup, timed
+//! batches, outlier-robust statistics, throughput reporting, and a
+//! uniform one-line output format that `bench_output.txt` collects.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark runner with criterion-like ergonomics.
+pub struct Bench {
+    name: String,
+    warmup_iters: u64,
+    samples: usize,
+    iters_per_sample: u64,
+    min_sample_time: f64,
+}
+
+/// Result of a benchmark: per-iteration timing summary in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub per_iter: Summary,
+    pub total_iters: u64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>12}/iter  (p50 {:>12}, p95 {:>12}, n={} iters={})",
+            self.name,
+            fmt_time(self.per_iter.mean),
+            fmt_time(self.per_iter.p50),
+            fmt_time(self.per_iter.p95),
+            self.per_iter.n,
+            self.total_iters,
+        );
+    }
+
+    pub fn print_throughput(&self, unit: &str, per_iter_units: f64) {
+        let rate = per_iter_units / self.per_iter.mean;
+        println!(
+            "bench {:<44} {:>12}/iter  {:>14.1} {unit}/s",
+            self.name,
+            fmt_time(self.per_iter.mean),
+            rate
+        );
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            samples: 20,
+            iters_per_sample: 0, // 0 = auto-calibrate
+            min_sample_time: 0.01,
+        }
+    }
+
+    pub fn warmup(mut self, iters: u64) -> Self {
+        self.warmup_iters = iters;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(2);
+        self
+    }
+
+    /// Fix the number of iterations per sample (skip auto-calibration) —
+    /// for expensive end-to-end benches.
+    pub fn iters(mut self, n: u64) -> Self {
+        self.iters_per_sample = n.max(1);
+        self
+    }
+
+    /// Run the benchmark. `f` is called once per iteration; use
+    /// `std::hint::black_box` inside to defeat DCE.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // Auto-calibrate iterations so each sample takes >= min_sample_time.
+        let iters = if self.iters_per_sample > 0 {
+            self.iters_per_sample
+        } else {
+            let t0 = Instant::now();
+            f();
+            let one = t0.elapsed().as_secs_f64().max(1e-9);
+            ((self.min_sample_time / one).ceil() as u64).clamp(1, 1_000_000)
+        };
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        BenchResult {
+            name: self.name.clone(),
+            per_iter: Summary::of(&per_iter),
+            total_iters: iters * self.samples as u64,
+        }
+    }
+}
+
+/// Standard bench-main prologue: prints a header once per binary.
+pub fn bench_header(group: &str) {
+    println!("== bench group: {group} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = Bench::new("noop").samples(5).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.per_iter.mean >= 0.0);
+        assert!(r.per_iter.mean < 0.1, "noop should be fast");
+        assert_eq!(r.per_iter.n, 5);
+    }
+
+    #[test]
+    fn fixed_iters_respected() {
+        let mut count = 0u64;
+        let r = Bench::new("count").warmup(0).samples(3).iters(7).run(|| {
+            count += 1;
+        });
+        assert_eq!(count, 21);
+        assert_eq!(r.total_iters, 21);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn timing_orders_workloads() {
+        // A heavier closure must not appear faster (sanity of the harness).
+        let light = Bench::new("light").samples(5).run(|| {
+            std::hint::black_box((0..10u64).sum::<u64>());
+        });
+        let heavy = Bench::new("heavy").samples(5).run(|| {
+            std::hint::black_box((0..100_000u64).sum::<u64>());
+        });
+        assert!(heavy.per_iter.p50 > light.per_iter.p50);
+    }
+}

@@ -1,0 +1,391 @@
+//! Configuration file parser — a pragmatic TOML subset.
+//!
+//! The offline crate set has neither `serde` nor `toml`, so experiment
+//! and cluster configs use this parser. Supported grammar:
+//!
+//! ```toml
+//! # comment
+//! [section]            # tables
+//! [[section.array]]    # arrays of tables
+//! key = 1.5            # numbers (int/float)
+//! key = "string"
+//! key = true | false
+//! key = [1, 2, 3]      # homogeneous scalar arrays
+//! key = ["a", "b"]
+//! ```
+//!
+//! Values are exposed through a typed accessor API with good error
+//! messages; every experiment config ships with defaults so a missing
+//! key is not fatal unless the caller says so.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    NumArr(Vec<f64>),
+    StrArr(Vec<String>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Num(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::NumArr(v) => write!(f, "{v:?}"),
+            Value::StrArr(v) => write!(f, "{v:?}"),
+        }
+    }
+}
+
+/// One table of key → value pairs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Table {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) => *x,
+            _ => default,
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) => *x as usize,
+            _ => default,
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) => *x as u64,
+            _ => default,
+        }
+    }
+
+    pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.entries.get(key) {
+            Some(Value::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.entries.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn f64_arr(&self, key: &str) -> Option<&[f64]> {
+        match self.entries.get(key) {
+            Some(Value::NumArr(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn str_arr(&self, key: &str) -> Option<&[String]> {
+        match self.entries.get(key) {
+            Some(Value::StrArr(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Required key with a typed error.
+    pub fn require_f64(&self, key: &str) -> Result<f64, ConfigError> {
+        match self.entries.get(key) {
+            Some(Value::Num(x)) => Ok(*x),
+            Some(other) => Err(ConfigError::new(format!(
+                "key '{key}' has type {other}, expected number"
+            ))),
+            None => Err(ConfigError::new(format!("missing required key '{key}'"))),
+        }
+    }
+
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.entries.insert(key.to_string(), v);
+    }
+}
+
+/// Parsed config: a root table, named tables, and arrays of tables.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub root: Table,
+    pub tables: BTreeMap<String, Table>,
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("config error: {msg}")]
+pub struct ConfigError {
+    pub msg: String,
+}
+
+impl ConfigError {
+    fn new(msg: impl Into<String>) -> Self {
+        ConfigError { msg: msg.into() }
+    }
+
+    fn at(line_no: usize, msg: impl Into<String>) -> Self {
+        ConfigError {
+            msg: format!("line {}: {}", line_no + 1, msg.into()),
+        }
+    }
+}
+
+impl Config {
+    /// Table accessor returning an empty table when absent, so callers
+    /// can chain `.f64(key, default)` without Option plumbing.
+    pub fn table(&self, name: &str) -> Table {
+        self.tables.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn array(&self, name: &str) -> &[Table] {
+        self.arrays.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        // Where new keys land: root, a table, or the last array element.
+        enum Cursor {
+            Root,
+            Table(String),
+            Array(String),
+        }
+        let mut cur = Cursor::Root;
+
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(ConfigError::at(ln, "empty array-of-tables name"));
+                }
+                cfg.arrays.entry(name.clone()).or_default().push(Table::default());
+                cur = Cursor::Array(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(ConfigError::at(ln, "empty table name"));
+                }
+                cfg.tables.entry(name.clone()).or_default();
+                cur = Cursor::Table(name);
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(ConfigError::at(ln, "empty key"));
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|m| ConfigError::at(ln, m))?;
+                let table = match &cur {
+                    Cursor::Root => &mut cfg.root,
+                    Cursor::Table(name) => cfg.tables.get_mut(name).unwrap(),
+                    Cursor::Array(name) => {
+                        cfg.arrays.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                };
+                table.set(key, val);
+            } else {
+                return Err(ConfigError::at(ln, format!("unparseable line: '{line}'")));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::new(format!("read {}: {e}", path.display())))?;
+        Config::parse(&text)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::NumArr(vec![]));
+        }
+        let items: Vec<&str> = split_top_level(inner);
+        if items.iter().all(|i| i.starts_with('"')) {
+            let mut out = Vec::new();
+            for i in items {
+                match i.trim().strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+                    Some(v) => out.push(v.to_string()),
+                    None => return Err(format!("bad string array element '{i}'")),
+                }
+            }
+            return Ok(Value::StrArr(out));
+        }
+        let mut out = Vec::new();
+        for i in items {
+            out.push(
+                i.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad number array element '{i}'"))?,
+            );
+        }
+        return Ok(Value::NumArr(out));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("unrecognized value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(s[start..].trim());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster spec
+seed = 42
+name = "five-node"     # inline comment
+verbose = true
+
+[cluster]
+hosts = 5
+idle_w = 110.5
+caps = [32, 64, 500]
+
+[sched]
+policy = "energy_aware"
+thresholds = [0.2, 0.85]
+
+[[workloads]]
+kind = "terasort"
+gb = 50
+
+[[workloads]]
+kind = "kmeans"
+gb = 10
+"#;
+
+    #[test]
+    fn parses_root_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.root.f64("seed", 0.0), 42.0);
+        assert_eq!(c.root.str("name", ""), "five-node");
+        assert!(c.root.bool("verbose", false));
+    }
+
+    #[test]
+    fn parses_tables() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.table("cluster").usize("hosts", 0), 5);
+        assert!((c.table("cluster").f64("idle_w", 0.0) - 110.5).abs() < 1e-12);
+        assert_eq!(c.table("sched").str("policy", ""), "energy_aware");
+        assert_eq!(
+            c.table("cluster").f64_arr("caps").unwrap(),
+            &[32.0, 64.0, 500.0]
+        );
+    }
+
+    #[test]
+    fn parses_arrays_of_tables() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let ws = c.array("workloads");
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].str("kind", ""), "terasort");
+        assert_eq!(ws[1].f64("gb", 0.0), 10.0);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.root.f64("nothing", 7.5), 7.5);
+        assert_eq!(c.table("nope").usize("x", 3), 3);
+        assert!(c.array("none").is_empty());
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let c = Config::parse("label = \"a#b\"").unwrap();
+        assert_eq!(c.root.str("label", ""), "a#b");
+    }
+
+    #[test]
+    fn string_arrays() {
+        let c = Config::parse(r#"kinds = ["wordcount", "grep"]"#).unwrap();
+        assert_eq!(
+            c.root.str_arr("kinds").unwrap(),
+            &["wordcount".to_string(), "grep".to_string()]
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("x = 1\nbogus line\n").unwrap_err();
+        assert!(err.msg.contains("line 2"), "{}", err.msg);
+    }
+
+    #[test]
+    fn require_f64_errors() {
+        let c = Config::parse("a = \"s\"").unwrap();
+        assert!(c.root.require_f64("a").is_err());
+        assert!(c.root.require_f64("missing").is_err());
+        let c2 = Config::parse("a = 3").unwrap();
+        assert_eq!(c2.root.require_f64("a").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn empty_array_is_num_arr() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.root.f64_arr("xs").unwrap(), &[] as &[f64]);
+    }
+}

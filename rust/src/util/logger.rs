@@ -1,0 +1,70 @@
+//! Tiny leveled logger implementing the `log` facade.
+//!
+//! `env_logger` is not in the offline vendor set; this does the 10% we
+//! need: level filtering via `ECOSCHED_LOG` (error|warn|info|debug|trace),
+//! timestamps relative to process start, and module-path prefixes.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct Logger {
+    start: Instant,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!(
+                "[{t:9.3}s {lvl} {}] {}",
+                record.module_path().unwrap_or("?"),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops. Level comes from
+/// `ECOSCHED_LOG` (default: warn, so tests and benches stay quiet).
+pub fn init() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let level = match std::env::var("ECOSCHED_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("info") => LevelFilter::Info,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Warn,
+        };
+        let logger = Box::new(Logger {
+            start: Instant::now(),
+        });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,13 @@
+//! Utility substrates built from scratch (the offline vendor set lacks
+//! `rand`, `serde`, `clap`, `criterion`, `proptest`): deterministic RNG,
+//! statistics, JSON, config parsing, table/CSV rendering, logging,
+//! time-series, and the bench harness.
+
+pub mod bench;
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timeline;

@@ -1,0 +1,302 @@
+//! Deterministic pseudo-random number generation for the simulator.
+//!
+//! The offline crate set has no `rand`, so we implement the generators we
+//! need from scratch: [`SplitMix64`] for seeding / cheap streams and
+//! [`Xoshiro256`] (xoshiro256**) as the workhorse generator, plus the
+//! distributions the workload models and noise injectors use
+//! (uniform, normal, exponential, Pareto, categorical).
+//!
+//! Every stochastic component of `ecosched` draws from a seeded stream so
+//! experiments are reproducible bit-for-bit; the paper averages 3 runs,
+//! we run 3 seeds.
+
+/// SplitMix64: tiny, fast, passes BigCrush when used for seeding.
+/// Reference: Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
+/// Generators" (OOPSLA 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 — the main generator. Public-domain algorithm by
+/// Blackman & Vigna (<https://prng.di.unimi.it/>).
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 as the authors recommend (avoids the all-zero
+    /// state and decorrelates nearby integer seeds).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent child stream. Used to give each host,
+    /// workload, and noise source its own stream so adding a component
+    /// never perturbs the draws of another (stable randomness).
+    pub fn child(&mut self, tag: u64) -> Xoshiro256 {
+        let mixed = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Xoshiro256::seed_from_u64(mixed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of entropy.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi >= lo);
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift rejection.
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in [lo, hi) (half-open).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided; trig is fine
+    /// off the hot path — the sim draws a handful per event).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        // Guard against log(0).
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Normal clamped to [lo, hi] — used for bounded noise like
+    /// per-sample telemetry jitter.
+    pub fn normal_clamped(&mut self, mean: f64, std: f64, lo: f64, hi: f64) -> f64 {
+        self.normal(mean, std).clamp(lo, hi)
+    }
+
+    /// Log-normal with the given *underlying* mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Used for Poisson
+    /// arrival inter-arrival times.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        -u.ln() / lambda
+    }
+
+    /// Bounded Pareto — heavy-tailed dataset / burst sizes.
+    pub fn pareto(&mut self, scale: f64, shape: f64) -> f64 {
+        let u = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        scale / u.powf(1.0 / shape)
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_sequence_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_differs_by_seed() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_per_seed() {
+        let mut a = Xoshiro256::seed_from_u64(7);
+        let mut b = Xoshiro256::seed_from_u64(7);
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x), "{x} out of [0,1)");
+        }
+    }
+
+    #[test]
+    fn uniform_respects_bounds() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        for _ in 0..10_000 {
+            let x = r.uniform(-3.0, 5.0);
+            assert!((-3.0..5.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_is_unbiased_enough() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[r.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 5;
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < (expect / 10) as u64,
+                "bucket count {c} too far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seed_from_u64(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(2.0, 3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 9.0).abs() < 0.3, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Xoshiro256::seed_from_u64(17);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn pareto_respects_scale() {
+        let mut r = Xoshiro256::seed_from_u64(19);
+        for _ in 0..10_000 {
+            assert!(r.pareto(5.0, 1.5) >= 5.0);
+        }
+    }
+
+    #[test]
+    fn categorical_prefers_heavy_weight() {
+        let mut r = Xoshiro256::seed_from_u64(23);
+        let mut hits = [0usize; 3];
+        for _ in 0..30_000 {
+            hits[r.categorical(&[1.0, 8.0, 1.0])] += 1;
+        }
+        assert!(hits[1] > hits[0] * 4 && hits[1] > hits[2] * 4, "{hits:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(29);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn child_streams_are_independent_of_sibling_count() {
+        // Drawing a child with the same tag after the same parent history
+        // yields the same stream.
+        let mut p1 = Xoshiro256::seed_from_u64(31);
+        let mut p2 = Xoshiro256::seed_from_u64(31);
+        let mut c1 = p1.child(5);
+        let mut c2 = p2.child(5);
+        assert_eq!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn normal_clamped_within_bounds() {
+        let mut r = Xoshiro256::seed_from_u64(37);
+        for _ in 0..5_000 {
+            let x = r.normal_clamped(0.0, 10.0, -1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! Statistics toolkit: summary statistics, percentiles, confidence
+//! intervals, online (Welford) accumulators, and histograms.
+//!
+//! `criterion` is not available in the offline crate set, so the bench
+//! harness (`rust/benches/harness.rs`) and the experiment reports both
+//! build on this module.
+
+/// Summary of a sample: n, mean, std (sample), min/max, percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let n = sorted.len();
+        let mean = mean(&sorted);
+        Summary {
+            n,
+            mean,
+            std: std_dev(&sorted),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+
+    /// Half-width of the ~95% normal-approximation confidence interval.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.std / (self.n as f64).sqrt()
+    }
+}
+
+/// Arithmetic mean. Panics on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for n<2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile on a *sorted* slice, q in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice (copies + sorts).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    percentile_sorted(&sorted, q)
+}
+
+/// Welford online mean/variance accumulator — used by telemetry ring
+/// buffers and the coordinator's overhead accounting, where samples
+/// stream in and we cannot afford to retain them all.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Merge another accumulator (Chan et al. parallel variance).
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket histogram over [lo, hi); out-of-range values clamp into
+/// the edge buckets. Used for utilization distributions (§V-D).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Histogram {
+        assert!(hi > lo && nbuckets > 0);
+        Histogram {
+            lo,
+            hi,
+            buckets: vec![0; nbuckets],
+            total: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let nb = self.buckets.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * nb as f64) as isize;
+        let idx = idx.clamp(0, nb as isize - 1) as usize;
+        self.buckets[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Fraction of mass in bucket i.
+    pub fn frac(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.buckets[i] as f64 / self.total as f64
+        }
+    }
+
+    /// Bucket label "lo–hi" for report rows; unit-interval histograms
+    /// (utilization) render as percentages.
+    pub fn label(&self, i: usize) -> String {
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        let (a, b) = (self.lo + w * i as f64, self.lo + w * (i + 1) as f64);
+        if self.hi <= 1.0 + 1e-9 {
+            format!("{:.0}–{:.0}%", a * 100.0, b * 100.0)
+        } else {
+            format!("{a:.0}–{b:.0}")
+        }
+    }
+}
+
+/// Simple ordinary-least-squares y = a + b·x fit; returns (a, b, r2).
+/// Used by experiment sanity checks (e.g. energy vs dataset size).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    let r2 = if sxx == 0.0 || syy == 0.0 {
+        1.0
+    } else {
+        (sxy * sxy) / (sxx * syy)
+    };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        // Sample std of this classic set is ~2.138.
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile(&[42.0], 99.0), 42.0);
+    }
+
+    #[test]
+    fn summary_fields_consistent() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!(s.p95 > 94.0 && s.p95 < 97.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 0.37).sin() * 10.0).collect();
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((o.std() - std_dev(&xs)).abs() < 1e-9);
+        assert_eq!(o.n(), 1000);
+    }
+
+    #[test]
+    fn online_merge_matches_single_stream() {
+        let xs: Vec<f64> = (0..500).map(|i| i as f64).collect();
+        let ys: Vec<f64> = (500..1000).map(|i| i as f64 * 1.5).collect();
+        let mut a = Online::new();
+        let mut b = Online::new();
+        for &x in &xs {
+            a.push(x);
+        }
+        for &y in &ys {
+            b.push(y);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let mut all = Online::new();
+        for &x in xs.iter().chain(&ys) {
+            all.push(x);
+        }
+        assert!((merged.mean() - all.mean()).abs() < 1e-9);
+        assert!((merged.std() - all.std()).abs() < 1e-9);
+        assert_eq!(merged.n(), 1000);
+    }
+
+    #[test]
+    fn online_empty_is_zero() {
+        let o = Online::new();
+        assert_eq!(o.mean(), 0.0);
+        assert_eq!(o.std(), 0.0);
+        assert_eq!(o.n(), 0);
+    }
+
+    #[test]
+    fn histogram_clamps_and_counts() {
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        h.push(-5.0); // clamps into bucket 0
+        h.push(5.0);
+        h.push(95.0);
+        h.push(150.0); // clamps into bucket 9
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.buckets()[0], 2);
+        assert_eq!(h.buckets()[9], 2);
+        assert!((h.frac(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_labels() {
+        let h = Histogram::new(0.0, 100.0, 4);
+        assert_eq!(h.label(0), "0–25");
+        assert_eq!(h.label(3), "75–100");
+        // Unit-interval histograms render percentages.
+        let u = Histogram::new(0.0, 1.0, 10);
+        assert_eq!(u.label(0), "0–10%");
+        assert_eq!(u.label(9), "90–100%");
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let small = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        let xs: Vec<f64> = (0..400).map(|i| 1.0 + (i % 4) as f64).collect();
+        let large = Summary::of(&xs);
+        assert!(large.ci95() < small.ci95());
+    }
+}

@@ -1,0 +1,270 @@
+//! Plain-text / markdown table rendering and CSV output for experiment
+//! reports. All paper tables are printed through this module so the
+//! formatting (alignment, units, ±std columns) is uniform.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct TableBuilder {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str, headers: &[&str]) -> TableBuilder {
+        TableBuilder {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, aligns: &[Align]) -> TableBuilder {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-ables.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned monospace table with a title rule.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * (ncols - 1);
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.title);
+        let _ = writeln!(out, "{}", "=".repeat(total.max(self.title.chars().count())));
+        for (i, h) in self.headers.iter().enumerate() {
+            if i > 0 {
+                out.push_str(" | ");
+            }
+            pad(&mut out, h, widths[i], self.aligns[i]);
+        }
+        out.push('\n');
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(" | ");
+                }
+                pad(&mut out, c, widths[i], self.aligns[i]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let seps: Vec<&str> = self
+            .aligns
+            .iter()
+            .map(|a| match a {
+                Align::Left => ":--",
+                Align::Right => "--:",
+            })
+            .collect();
+        let _ = writeln!(out, "| {} |", seps.join(" | "));
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", csv_row(&self.headers));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", csv_row(row));
+        }
+        out
+    }
+
+    /// Write CSV under `results/`, creating the directory.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render_csv())
+    }
+}
+
+fn pad(out: &mut String, s: &str, width: usize, align: Align) {
+    let len = s.chars().count();
+    let fill = width.saturating_sub(len);
+    match align {
+        Align::Left => {
+            out.push_str(s);
+            out.push_str(&" ".repeat(fill));
+        }
+        Align::Right => {
+            out.push_str(&" ".repeat(fill));
+            out.push_str(s);
+        }
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Format helpers used across experiment reports.
+pub fn fmt_f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+pub fn fmt_pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{mean:.decimals$} ± {std:.decimals$}")
+}
+
+/// Joules → human-friendly Wh/kWh.
+pub fn fmt_energy(joules: f64) -> String {
+    let wh = joules / 3600.0;
+    if wh >= 1000.0 {
+        format!("{:.2} kWh", wh / 1000.0)
+    } else {
+        format!("{wh:.1} Wh")
+    }
+}
+
+/// Seconds → "1h02m", "3m20s", "42s".
+pub fn fmt_dur(secs: f64) -> String {
+    let s = secs.round() as u64;
+    if s >= 3600 {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    } else if s >= 60 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{s}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TableBuilder {
+        let mut t = TableBuilder::new("Test", &["workload", "energy", "savings"]);
+        t.row(&["terasort".into(), "1234.5".into(), "19.0%".into()]);
+        t.row(&["kmeans".into(), "987.0".into(), "15.2%".into()]);
+        t
+    }
+
+    #[test]
+    fn render_contains_all_cells() {
+        let r = sample().render();
+        for s in ["workload", "terasort", "19.0%", "kmeans", "987.0"] {
+            assert!(r.contains(s), "missing {s} in\n{r}");
+        }
+    }
+
+    #[test]
+    fn alignment_right_pads_left() {
+        let r = sample().render();
+        // "energy" column is right-aligned: "1234.5" and "987.0" end at
+        // the same column.
+        let lines: Vec<&str> = r.lines().collect();
+        let terasort = lines.iter().find(|l| l.contains("terasort")).unwrap();
+        let kmeans = lines.iter().find(|l| l.contains("kmeans")).unwrap();
+        let t_end = terasort.find("1234.5").unwrap() + "1234.5".len();
+        let k_end = kmeans.find("987.0").unwrap() + "987.0".len();
+        assert_eq!(t_end, k_end);
+    }
+
+    #[test]
+    fn markdown_has_separator() {
+        let md = sample().render_markdown();
+        assert!(md.contains("| :-- | --: | --: |"), "{md}");
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = TableBuilder::new("q", &["a", "b"]);
+        t.row(&["x,y".into(), "pla\"in".into()]);
+        let csv = t.render_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"pla\"\"in\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = TableBuilder::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_pct(0.1925), "19.2%");
+        assert_eq!(fmt_pm(1.234, 0.056, 2), "1.23 ± 0.06");
+        assert_eq!(fmt_energy(3600.0), "1.0 Wh");
+        assert_eq!(fmt_energy(7.2e6), "2.00 kWh");
+        assert_eq!(fmt_dur(42.4), "42s");
+        assert_eq!(fmt_dur(200.0), "3m20s");
+        assert_eq!(fmt_dur(3725.0), "1h02m");
+    }
+}

@@ -1,0 +1,251 @@
+//! Time-series recording: (t, value) samples with step-function
+//! integration. Used for active-host counts, utilization timelines, and
+//! power traces (§V-D plots and the energy meter's integration checks).
+
+/// A step-function time series: value is `v[i]` on `[t[i], t[i+1])`.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    ts: Vec<f64>,
+    vs: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// Record a sample. Times must be non-decreasing; a sample at the
+    /// same time overwrites (last write wins — matches events that
+    /// change state multiple times in one instant).
+    pub fn push(&mut self, t: f64, v: f64) {
+        if let Some(&last) = self.ts.last() {
+            assert!(
+                t >= last,
+                "timeline must be monotone: got {t} after {last}"
+            );
+            if (t - last).abs() < 1e-12 {
+                *self.vs.last_mut().unwrap() = v;
+                return;
+            }
+        }
+        self.ts.push(t);
+        self.vs.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    pub fn times(&self) -> &[f64] {
+        &self.ts
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.vs
+    }
+
+    /// Value at time t (step semantics); None before the first sample.
+    pub fn at(&self, t: f64) -> Option<f64> {
+        if self.ts.is_empty() || t < self.ts[0] {
+            return None;
+        }
+        // Binary search for the last sample with ts <= t.
+        let idx = match self
+            .ts
+            .binary_search_by(|x| x.partial_cmp(&t).expect("NaN time"))
+        {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        Some(self.vs[idx])
+    }
+
+    /// ∫ v dt over [t0, t1] with step semantics. The series is treated
+    /// as holding its last value until t1.
+    pub fn integrate(&self, t0: f64, t1: f64) -> f64 {
+        assert!(t1 >= t0);
+        if self.ts.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for i in 0..self.ts.len() {
+            let seg_start = self.ts[i].max(t0);
+            let seg_end = if i + 1 < self.ts.len() {
+                self.ts[i + 1].min(t1)
+            } else {
+                t1
+            };
+            if seg_end > seg_start {
+                total += self.vs[i] * (seg_end - seg_start);
+            }
+        }
+        total
+    }
+
+    /// Time-weighted mean over [t0, t1].
+    pub fn time_mean(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        self.integrate(t0, t1) / (t1 - t0)
+    }
+
+    /// Total time in [t0, t1] during which value ≥ threshold.
+    pub fn time_above(&self, threshold: f64, t0: f64, t1: f64) -> f64 {
+        if self.ts.is_empty() || t1 <= t0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for i in 0..self.ts.len() {
+            if self.vs[i] < threshold {
+                continue;
+            }
+            let seg_start = self.ts[i].max(t0);
+            let seg_end = if i + 1 < self.ts.len() {
+                self.ts[i + 1].min(t1)
+            } else {
+                t1
+            };
+            if seg_end > seg_start {
+                total += seg_end - seg_start;
+            }
+        }
+        total
+    }
+
+    /// Downsample to `n` evenly spaced points over [t0, t1] — for ASCII
+    /// plots and CSV figure exports.
+    pub fn resample(&self, t0: f64, t1: f64, n: usize) -> Vec<(f64, f64)> {
+        assert!(n >= 2);
+        (0..n)
+            .map(|i| {
+                let t = t0 + (t1 - t0) * i as f64 / (n - 1) as f64;
+                (t, self.at(t).unwrap_or(0.0))
+            })
+            .collect()
+    }
+}
+
+/// Render a compact ASCII sparkline of a series (figure exports get the
+/// CSV; the terminal gets this).
+pub fn sparkline(values: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|v| {
+            let idx = (((v - lo) / span) * 7.0).round() as usize;
+            TICKS[idx.min(7)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl() -> Timeline {
+        let mut t = Timeline::new();
+        t.push(0.0, 100.0);
+        t.push(10.0, 200.0);
+        t.push(20.0, 50.0);
+        t
+    }
+
+    #[test]
+    fn at_step_semantics() {
+        let t = tl();
+        assert_eq!(t.at(-1.0), None);
+        assert_eq!(t.at(0.0), Some(100.0));
+        assert_eq!(t.at(9.99), Some(100.0));
+        assert_eq!(t.at(10.0), Some(200.0));
+        assert_eq!(t.at(100.0), Some(50.0));
+    }
+
+    #[test]
+    fn integrate_full_range() {
+        let t = tl();
+        // 10s*100 + 10s*200 + 10s*50 = 3500 over [0,30].
+        assert!((t.integrate(0.0, 30.0) - 3500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integrate_partial_range() {
+        let t = tl();
+        // [5, 15]: 5s*100 + 5s*200 = 1500.
+        assert!((t.integrate(5.0, 15.0) - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integrate_before_first_sample_is_zero() {
+        let t = tl();
+        assert_eq!(t.integrate(-10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn time_mean() {
+        let t = tl();
+        assert!((t.time_mean(0.0, 20.0) - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_above_threshold() {
+        let t = tl();
+        // ≥100 during [0,20): 20 s out of [0,30].
+        assert!((t.time_above(100.0, 0.0, 30.0) - 20.0).abs() < 1e-9);
+        // ≥250 never.
+        assert_eq!(t.time_above(250.0, 0.0, 30.0), 0.0);
+    }
+
+    #[test]
+    fn same_time_overwrites() {
+        let mut t = Timeline::new();
+        t.push(1.0, 5.0);
+        t.push(1.0, 7.0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.at(1.0), Some(7.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn non_monotone_panics() {
+        let mut t = Timeline::new();
+        t.push(5.0, 1.0);
+        t.push(4.0, 1.0);
+    }
+
+    #[test]
+    fn resample_endpoints() {
+        let t = tl();
+        let pts = t.resample(0.0, 30.0, 4);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0], (0.0, 100.0));
+        assert_eq!(pts[3].0, 30.0);
+        assert_eq!(pts[3].1, 50.0);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 1.0, 0.5]);
+        assert_eq!(s.chars().count(), 3);
+        let first = s.chars().next().unwrap();
+        let second = s.chars().nth(1).unwrap();
+        assert!(first < second);
+    }
+
+    #[test]
+    fn sparkline_empty_and_flat() {
+        assert_eq!(sparkline(&[]), "");
+        let flat = sparkline(&[2.0, 2.0]);
+        assert_eq!(flat.chars().count(), 2);
+    }
+}

@@ -1,0 +1,129 @@
+//! ETL pipeline workload model (§IV-B: Python extract/transform tasks
+//! against a PostgreSQL backend — warehousing / data-preparation jobs).
+//!
+//! The pipeline processes the dataset in chunks; each chunk runs
+//! extract (network read from the source system + staging writes),
+//! transform (CPU), and load (bulk insert into PostgreSQL: disk +
+//! network, throttled by DB backpressure). The result is a bursty,
+//! I/O-dominated profile with idle-ish CPU — the class the paper finds
+//! easiest to consolidate and to schedule into off-peak windows (§V-C).
+
+use crate::cluster::Demand;
+use crate::util::rng::Xoshiro256;
+use crate::workload::model::Phase;
+
+/// Chunk size the pipeline commits at (GB).
+const CHUNK_GB: f64 = 5.0;
+
+/// DB backpressure factor: the load phase's effective throughput is
+/// reduced when the (simulated) PostgreSQL instance compacts/checkpoints;
+/// modeled as a per-chunk slowdown in [1.0, 1.6].
+fn backpressure(rng: &mut Xoshiro256) -> f64 {
+    1.0 + rng.pareto(0.05, 2.5).min(0.6)
+}
+
+pub fn etl(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    let chunks = (gb / CHUNK_GB).ceil().max(1.0) as usize;
+    let chunk_gb = gb / chunks as f64;
+    let mut phases = Vec::with_capacity(3 * chunks);
+    for _ in 0..chunks {
+        phases.push(Phase {
+            name: "etl-extract",
+            duration: 6.0 * chunk_gb * rng.lognormal(0.0, 0.1),
+            demand: Demand {
+                cpu: 2.0,
+                mem_gb: 4.0,
+                disk_mbps: 50.0,
+                net_mbps: 35.0,
+            }
+            .scaled(rng.uniform(0.95, 1.05)),
+        });
+        phases.push(Phase {
+            name: "etl-transform",
+            duration: 4.0 * chunk_gb * rng.lognormal(0.0, 0.08),
+            demand: Demand {
+                cpu: 4.5,
+                mem_gb: 6.0,
+                disk_mbps: 25.0,
+                net_mbps: 2.0,
+            }
+            .scaled(rng.uniform(0.95, 1.05)),
+        });
+        phases.push(Phase {
+            name: "etl-load",
+            duration: 5.0 * chunk_gb * backpressure(rng),
+            demand: Demand {
+                cpu: 2.0,
+                mem_gb: 4.0,
+                disk_mbps: 120.0,
+                net_mbps: 22.0,
+            }
+            .scaled(rng.uniform(0.95, 1.05)),
+        });
+    }
+    phases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(3)
+    }
+
+    #[test]
+    fn chunked_structure() {
+        let p = etl(12.0, &mut rng());
+        // ceil(12/5) = 3 chunks × 3 phases.
+        assert_eq!(p.len(), 9);
+        assert_eq!(p[0].name, "etl-extract");
+        assert_eq!(p[1].name, "etl-transform");
+        assert_eq!(p[2].name, "etl-load");
+    }
+
+    #[test]
+    fn io_dominates_cpu_time() {
+        let p = etl(20.0, &mut rng());
+        let io_time: f64 = p
+            .iter()
+            .filter(|ph| ph.demand.disk_mbps + ph.demand.net_mbps > 50.0)
+            .map(|ph| ph.duration)
+            .sum();
+        let total: f64 = p.iter().map(|ph| ph.duration).sum();
+        assert!(io_time / total > 0.6, "io fraction {}", io_time / total);
+    }
+
+    #[test]
+    fn transform_is_the_only_cpu_phase() {
+        let p = etl(10.0, &mut rng());
+        for ph in &p {
+            if ph.name == "etl-transform" {
+                assert!(ph.demand.cpu > 4.0);
+            } else {
+                assert!(ph.demand.cpu < 3.0, "{} cpu {}", ph.name, ph.demand.cpu);
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_extends_load_but_bounded() {
+        let mut r = rng();
+        for _ in 0..200 {
+            let b = backpressure(&mut r);
+            assert!((1.0..=1.6).contains(&b), "backpressure {b}");
+        }
+    }
+
+    #[test]
+    fn small_dataset_single_chunk() {
+        assert_eq!(etl(3.0, &mut rng()).len(), 3);
+    }
+
+    #[test]
+    fn duration_scales_with_size() {
+        let small: f64 = etl(5.0, &mut rng()).iter().map(|p| p.duration).sum();
+        let large: f64 = etl(25.0, &mut rng()).iter().map(|p| p.duration).sum();
+        assert!(large > 3.5 * small);
+    }
+}

@@ -1,0 +1,236 @@
+//! Hadoop MapReduce workload models: WordCount, TeraSort, Grep
+//! (§IV-B: dataset sizes 5–50 GB, varying I/O and shuffle intensity).
+//!
+//! Each benchmark is modeled as map → shuffle → reduce phases whose
+//! durations scale with dataset size and whose demand vectors reproduce
+//! the published resource signatures: TeraSort is shuffle-dominated
+//! (network + disk), Grep is a scan (disk-dominated, tiny shuffle),
+//! WordCount is CPU-leaning with a moderate shuffle.
+//!
+//! Demands are per worker VM, sized for the `MEDIUM` flavor
+//! (8 vCPU / 16 GB / 200 MB/s disk / 60 MB/s net).
+
+use crate::cluster::Demand;
+use crate::util::rng::Xoshiro256;
+use crate::workload::model::Phase;
+
+/// Relative jitter applied to durations (lognormal σ) and demands
+/// (uniform ±5 %) — run-to-run variability the paper averages away over
+/// three runs.
+const DUR_SIGMA: f64 = 0.08;
+
+fn jit_dur(rng: &mut Xoshiro256, base: f64) -> f64 {
+    base * rng.lognormal(0.0, DUR_SIGMA)
+}
+
+fn jit_demand(rng: &mut Xoshiro256, d: Demand) -> Demand {
+    let k = rng.uniform(0.95, 1.05);
+    d.scaled(k)
+}
+
+pub fn wordcount(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    vec![
+        Phase {
+            name: "wc-map",
+            duration: jit_dur(rng, 8.0 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 7.0,
+                    mem_gb: 8.0,
+                    disk_mbps: 110.0,
+                    net_mbps: 3.0,
+                },
+            ),
+        },
+        Phase {
+            name: "wc-shuffle",
+            duration: jit_dur(rng, 2.0 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 2.0,
+                    mem_gb: 8.0,
+                    disk_mbps: 30.0,
+                    net_mbps: 25.0,
+                },
+            ),
+        },
+        Phase {
+            name: "wc-reduce",
+            duration: jit_dur(rng, 2.5 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 5.0,
+                    mem_gb: 8.0,
+                    disk_mbps: 60.0,
+                    net_mbps: 5.0,
+                },
+            ),
+        },
+    ]
+}
+
+pub fn terasort(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    vec![
+        Phase {
+            name: "ts-map",
+            duration: jit_dur(rng, 6.0 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 5.0,
+                    mem_gb: 8.0,
+                    disk_mbps: 160.0,
+                    net_mbps: 5.0,
+                },
+            ),
+        },
+        Phase {
+            // The dominant phase: all-to-all shuffle saturating the NIC
+            // with heavy spill traffic — this is what makes TeraSort the
+            // paper's best consolidation case (§V-A: 19 % savings).
+            name: "ts-shuffle",
+            duration: jit_dur(rng, 8.0 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 2.5,
+                    mem_gb: 8.0,
+                    disk_mbps: 70.0,
+                    net_mbps: 30.0,
+                },
+            ),
+        },
+        Phase {
+            name: "ts-reduce",
+            duration: jit_dur(rng, 5.0 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 4.0,
+                    mem_gb: 8.0,
+                    disk_mbps: 170.0,
+                    net_mbps: 8.0,
+                },
+            ),
+        },
+    ]
+}
+
+pub fn grep(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    vec![
+        Phase {
+            name: "grep-scan",
+            duration: jit_dur(rng, 5.0 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 3.5,
+                    mem_gb: 6.0,
+                    disk_mbps: 190.0,
+                    net_mbps: 2.0,
+                },
+            ),
+        },
+        Phase {
+            name: "grep-shuffle",
+            duration: jit_dur(rng, 0.4 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 1.0,
+                    mem_gb: 4.0,
+                    disk_mbps: 10.0,
+                    net_mbps: 10.0,
+                },
+            ),
+        },
+        Phase {
+            name: "grep-reduce",
+            duration: jit_dur(rng, 0.3 * gb),
+            demand: jit_demand(
+                rng,
+                Demand {
+                    cpu: 1.5,
+                    mem_gb: 4.0,
+                    disk_mbps: 20.0,
+                    net_mbps: 3.0,
+                },
+            ),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(1)
+    }
+
+    #[test]
+    fn durations_scale_with_dataset_size() {
+        let small: f64 = terasort(5.0, &mut rng()).iter().map(|p| p.duration).sum();
+        let large: f64 = terasort(50.0, &mut rng()).iter().map(|p| p.duration).sum();
+        assert!(large > 8.0 * small, "50GB {large} vs 5GB {small}");
+    }
+
+    #[test]
+    fn terasort_is_shuffle_dominated() {
+        let phases = terasort(20.0, &mut rng());
+        let shuffle = phases.iter().find(|p| p.name == "ts-shuffle").unwrap();
+        for p in &phases {
+            assert!(shuffle.duration >= p.duration * 0.99);
+        }
+        // Network is the shuffle's dominant demand (per-worker share
+        // of the shared 1 GbE NIC).
+        assert!(shuffle.demand.net_mbps > 25.0);
+    }
+
+    #[test]
+    fn grep_is_scan_dominated() {
+        let phases = grep(20.0, &mut rng());
+        let scan = &phases[0];
+        assert!(scan.demand.disk_mbps > 150.0);
+        let scan_frac =
+            scan.duration / phases.iter().map(|p| p.duration).sum::<f64>();
+        assert!(scan_frac > 0.8, "scan fraction {scan_frac}");
+    }
+
+    #[test]
+    fn wordcount_map_is_cpu_leaning() {
+        let phases = wordcount(20.0, &mut rng());
+        let map = &phases[0];
+        // CPU demand near the 8-vCPU flavor cap; I/O moderate.
+        assert!(map.demand.cpu > 6.0);
+        assert!(map.demand.disk_mbps < 150.0);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let a: f64 = wordcount(10.0, &mut rng()).iter().map(|p| p.duration).sum();
+        let b: f64 = wordcount(10.0, &mut rng()).iter().map(|p| p.duration).sum();
+        assert_eq!(a, b, "same seed, same phases");
+        let nominal = (8.0 + 2.0 + 2.5) * 10.0;
+        assert!((a / nominal - 1.0).abs() < 0.35, "jitter too large: {a} vs {nominal}");
+    }
+
+    #[test]
+    fn demands_fit_medium_flavor() {
+        for phases in [
+            wordcount(50.0, &mut rng()),
+            terasort(50.0, &mut rng()),
+            grep(50.0, &mut rng()),
+        ] {
+            for p in phases {
+                assert!(p.demand.cpu <= 8.0 * 1.05, "{} cpu {}", p.name, p.demand.cpu);
+                assert!(p.demand.mem_gb <= 16.0 * 1.05);
+                assert!(p.demand.disk_mbps <= 200.0 * 1.05);
+                assert!(p.demand.net_mbps <= 60.0 * 1.05);
+            }
+        }
+    }
+}

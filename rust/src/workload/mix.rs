@@ -1,0 +1,126 @@
+//! Workload mixes: the tenant compositions experiments run against.
+
+use crate::util::rng::Xoshiro256;
+use crate::workload::model::WorkloadKind;
+
+/// A categorical distribution over workload kinds.
+#[derive(Debug, Clone)]
+pub struct Mix {
+    pub name: &'static str,
+    kinds: Vec<WorkloadKind>,
+    weights: Vec<f64>,
+}
+
+impl Mix {
+    pub fn new(name: &'static str, entries: &[(WorkloadKind, f64)]) -> Mix {
+        assert!(!entries.is_empty());
+        assert!(entries.iter().all(|(_, w)| *w > 0.0));
+        Mix {
+            name,
+            kinds: entries.iter().map(|(k, _)| *k).collect(),
+            weights: entries.iter().map(|(_, w)| *w).collect(),
+        }
+    }
+
+    /// The paper's evaluation mix: all three categories, Hadoop split
+    /// across its three benchmarks (§IV-B).
+    pub fn paper() -> Mix {
+        Mix::new(
+            "paper",
+            &[
+                (WorkloadKind::HadoopWordCount, 1.0),
+                (WorkloadKind::HadoopTeraSort, 1.0),
+                (WorkloadKind::HadoopGrep, 1.0),
+                (WorkloadKind::SparkLogReg, 1.5),
+                (WorkloadKind::SparkKMeans, 1.5),
+                (WorkloadKind::EtlPipeline, 3.0),
+            ],
+        )
+    }
+
+    /// Single-kind mix (per-benchmark campaigns, Table 1 rows).
+    pub fn only(kind: WorkloadKind) -> Mix {
+        Mix::new(kind.name_static(), &[(kind, 1.0)])
+    }
+
+    /// CPU-heavy tenant (Spark analytics shop).
+    pub fn cpu_heavy() -> Mix {
+        Mix::new(
+            "cpu_heavy",
+            &[
+                (WorkloadKind::SparkLogReg, 3.0),
+                (WorkloadKind::SparkKMeans, 3.0),
+                (WorkloadKind::HadoopWordCount, 1.0),
+            ],
+        )
+    }
+
+    /// I/O-heavy tenant (warehousing + batch sort).
+    pub fn io_heavy() -> Mix {
+        Mix::new(
+            "io_heavy",
+            &[
+                (WorkloadKind::HadoopTeraSort, 2.0),
+                (WorkloadKind::HadoopGrep, 2.0),
+                (WorkloadKind::EtlPipeline, 3.0),
+            ],
+        )
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256) -> WorkloadKind {
+        self.kinds[rng.categorical(&self.weights)]
+    }
+}
+
+impl WorkloadKind {
+    /// `name()` with 'static lifetime for Mix labels.
+    pub fn name_static(&self) -> &'static str {
+        self.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mix_covers_all_kinds() {
+        let mix = Mix::paper();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..2000 {
+            seen.insert(mix.sample(&mut rng));
+        }
+        assert_eq!(seen.len(), WorkloadKind::ALL.len());
+    }
+
+    #[test]
+    fn only_mix_is_pure() {
+        let mix = Mix::only(WorkloadKind::HadoopTeraSort);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..100 {
+            assert_eq!(mix.sample(&mut rng), WorkloadKind::HadoopTeraSort);
+        }
+    }
+
+    #[test]
+    fn weights_bias_sampling() {
+        let mix = Mix::cpu_heavy();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut spark = 0;
+        let n = 5000;
+        for _ in 0..n {
+            if mix.sample(&mut rng).category() == "spark" {
+                spark += 1;
+            }
+        }
+        let frac = spark as f64 / n as f64;
+        assert!((0.8..0.93).contains(&frac), "spark fraction {frac}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weight_rejected() {
+        Mix::new("bad", &[(WorkloadKind::EtlPipeline, 0.0)]);
+    }
+}

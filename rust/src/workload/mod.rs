@@ -1,0 +1,66 @@
+//! Big-data workload models — the simulated stand-ins for the paper's
+//! benchmark suite (Hadoop MapReduce, Spark MLlib, ETL pipelines) plus
+//! trace generation for multi-tenant campaigns.
+
+pub mod etl;
+pub mod hadoop;
+pub mod mix;
+pub mod model;
+pub mod spark;
+pub mod tracegen;
+
+pub use mix::Mix;
+pub use model::{Job, JobId, JobState, Phase, WorkloadKind};
+pub use tracegen::{Arrivals, TraceSpec};
+
+use crate::cluster::flavor::{Flavor, MEDIUM};
+use crate::util::rng::Xoshiro256;
+
+/// Generate the phase list for a job of the given kind and size.
+pub fn phases_for(kind: WorkloadKind, gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    match kind {
+        WorkloadKind::HadoopWordCount => hadoop::wordcount(gb, rng),
+        WorkloadKind::HadoopTeraSort => hadoop::terasort(gb, rng),
+        WorkloadKind::HadoopGrep => hadoop::grep(gb, rng),
+        WorkloadKind::SparkLogReg => spark::logreg(gb, rng),
+        WorkloadKind::SparkKMeans => spark::kmeans(gb, rng),
+        WorkloadKind::EtlPipeline => etl::etl(gb, rng),
+    }
+}
+
+/// Worker VM flavor per kind. All benchmarks use MEDIUM workers —
+/// matching the per-worker demand calibration in each model module.
+pub fn flavor_for(_kind: WorkloadKind) -> Flavor {
+    MEDIUM
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_for_dispatches_every_kind() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for kind in WorkloadKind::ALL {
+            let phases = phases_for(kind, 10.0, &mut rng);
+            assert!(!phases.is_empty(), "{kind:?}");
+            let total: f64 = phases.iter().map(|p| p.duration).sum();
+            assert!(total > 10.0, "{kind:?} too short: {total}");
+            assert!(total < 4000.0, "{kind:?} too long: {total}");
+        }
+    }
+
+    #[test]
+    fn demands_never_exceed_worker_flavor() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for kind in WorkloadKind::ALL {
+            let f = flavor_for(kind);
+            for p in phases_for(kind, 50.0, &mut rng) {
+                // capped_by() in the cluster enforces this at runtime;
+                // models should stay within ~5 % of the flavor already.
+                assert!(p.demand.cpu <= f.vcpus * 1.05, "{kind:?}/{}", p.name);
+                assert!(p.demand.mem_gb <= f.mem_gb * 1.05, "{kind:?}/{}", p.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Job execution model: a job is a sequence of *phases*, each with a
+//! nominal solo duration and a resource demand vector. Contention on
+//! the hosting machine slows a phase in its bottleneck dimensions —
+//! this is the mechanism through which bad placements extend job
+//! completion time (and hence threaten SLAs) while good co-location
+//! saves energy at no JCT cost.
+
+use crate::cluster::Demand;
+
+/// Stable job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// The benchmark suite of the paper's evaluation (§IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkloadKind {
+    HadoopWordCount,
+    HadoopTeraSort,
+    HadoopGrep,
+    SparkLogReg,
+    SparkKMeans,
+    EtlPipeline,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 6] = [
+        WorkloadKind::HadoopWordCount,
+        WorkloadKind::HadoopTeraSort,
+        WorkloadKind::HadoopGrep,
+        WorkloadKind::SparkLogReg,
+        WorkloadKind::SparkKMeans,
+        WorkloadKind::EtlPipeline,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::HadoopWordCount => "wordcount",
+            WorkloadKind::HadoopTeraSort => "terasort",
+            WorkloadKind::HadoopGrep => "grep",
+            WorkloadKind::SparkLogReg => "logreg",
+            WorkloadKind::SparkKMeans => "kmeans",
+            WorkloadKind::EtlPipeline => "etl",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<WorkloadKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == name)
+    }
+
+    /// Paper workload category (§IV-B).
+    pub fn category(&self) -> &'static str {
+        match self {
+            WorkloadKind::HadoopWordCount
+            | WorkloadKind::HadoopTeraSort
+            | WorkloadKind::HadoopGrep => "hadoop",
+            WorkloadKind::SparkLogReg | WorkloadKind::SparkKMeans => "spark",
+            WorkloadKind::EtlPipeline => "etl",
+        }
+    }
+}
+
+/// One execution phase: nominal solo duration and flat demand.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    /// Solo duration in seconds (no contention, full frequency).
+    pub duration: f64,
+    /// Resource demand while the phase runs (per worker VM).
+    pub demand: Demand,
+}
+
+impl Phase {
+    /// Progress rate on a host with per-dimension contention factors
+    /// `(cpu, mem, disk, net)` — the minimum factor over dimensions the
+    /// phase *meaningfully* uses. Thresholds approximate max-min
+    /// fairness: a phase sipping 3 MB/s of network on a congested NIC
+    /// still gets its share (small flows are unaffected by
+    /// oversubscription), so only phases demanding a sizeable fraction
+    /// of the worker flavor's budget are gated by that dimension.
+    pub fn progress_rate(&self, contention: (f64, f64, f64, f64)) -> f64 {
+        let (c, m, d, n) = contention;
+        let mut rate: f64 = 1.0;
+        if self.demand.cpu > 0.2 {
+            rate = rate.min(c);
+        }
+        if self.demand.mem_gb > 0.5 {
+            rate = rate.min(m);
+        }
+        if self.demand.disk_mbps > 25.0 {
+            rate = rate.min(d);
+        }
+        if self.demand.net_mbps > 9.0 {
+            rate = rate.min(n);
+        }
+        rate.max(0.01) // forward progress guarantee (no livelock)
+    }
+}
+
+/// Job lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Finished,
+}
+
+/// A job instance: immutable description plus execution progress.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub kind: WorkloadKind,
+    /// Dataset size in GB (the 5–50 GB sweep of §IV-B).
+    pub gb: f64,
+    pub phases: Vec<Phase>,
+    pub submit_at: f64,
+    pub state: JobState,
+    pub started_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    /// Index of the currently executing phase.
+    pub phase_idx: usize,
+    /// Accumulated progress-time within the current phase (s).
+    pub phase_progress: f64,
+    /// Job paused until this time (migration stop-and-copy stall).
+    pub stalled_until: f64,
+    /// Cumulative seconds lost to contention (JCT − solo gap source).
+    pub slowdown_secs: f64,
+}
+
+impl Job {
+    pub fn new(id: JobId, kind: WorkloadKind, gb: f64, phases: Vec<Phase>, submit_at: f64) -> Job {
+        assert!(!phases.is_empty());
+        Job {
+            id,
+            kind,
+            gb,
+            phases,
+            submit_at,
+            state: JobState::Queued,
+            started_at: None,
+            finished_at: None,
+            phase_idx: 0,
+            phase_progress: 0.0,
+            stalled_until: 0.0,
+            slowdown_secs: 0.0,
+        }
+    }
+
+    /// Solo JCT: the sum of nominal phase durations — the SLA baseline.
+    pub fn solo_duration(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration).sum()
+    }
+
+    /// Current demand; `Demand::ZERO` when not running or stalled.
+    pub fn current_demand(&self, now: f64) -> Demand {
+        if self.state != JobState::Running || now < self.stalled_until {
+            return Demand::ZERO;
+        }
+        self.phases[self.phase_idx].demand
+    }
+
+    pub fn current_phase(&self) -> &Phase {
+        &self.phases[self.phase_idx]
+    }
+
+    pub fn start(&mut self, now: f64) {
+        assert_eq!(self.state, JobState::Queued);
+        self.state = JobState::Running;
+        self.started_at = Some(now);
+    }
+
+    /// Advance the job by `dt` seconds of wall time under the given
+    /// host contention. Returns `true` when the job finishes in this
+    /// step.
+    pub fn advance(&mut self, now: f64, dt: f64, contention: (f64, f64, f64, f64)) -> bool {
+        if self.state != JobState::Running {
+            return false;
+        }
+        if now + dt <= self.stalled_until {
+            self.slowdown_secs += dt;
+            return false;
+        }
+        // Portion of the step not stalled.
+        let effective_dt = (now + dt - self.stalled_until.max(now)).min(dt);
+        self.slowdown_secs += dt - effective_dt;
+        let mut remaining = effective_dt;
+        while remaining > 1e-12 {
+            let rate = self.phases[self.phase_idx].progress_rate(contention);
+            let need = self.phases[self.phase_idx].duration - self.phase_progress;
+            let wall_to_finish = need / rate;
+            if wall_to_finish <= remaining {
+                remaining -= wall_to_finish;
+                self.slowdown_secs += wall_to_finish * (1.0 - rate);
+                self.phase_progress = 0.0;
+                self.phase_idx += 1;
+                if self.phase_idx == self.phases.len() {
+                    self.phase_idx = self.phases.len() - 1; // keep index valid
+                    self.state = JobState::Finished;
+                    self.finished_at = Some(now + dt - remaining);
+                    return true;
+                }
+            } else {
+                self.phase_progress += remaining * rate;
+                self.slowdown_secs += remaining * (1.0 - rate);
+                remaining = 0.0;
+            }
+        }
+        false
+    }
+
+    /// Actual JCT once finished.
+    pub fn jct(&self) -> Option<f64> {
+        Some(self.finished_at? - self.started_at?)
+    }
+
+    /// Stall the job (stop-and-copy during migration).
+    pub fn stall(&mut self, until: f64) {
+        self.stalled_until = self.stalled_until.max(until);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phase(name: &'static str, dur: f64, cpu: f64, disk: f64) -> Phase {
+        Phase {
+            name,
+            duration: dur,
+            demand: Demand {
+                cpu,
+                mem_gb: 4.0,
+                disk_mbps: disk,
+                net_mbps: 0.0,
+            },
+        }
+    }
+
+    fn job() -> Job {
+        Job::new(
+            JobId(0),
+            WorkloadKind::HadoopWordCount,
+            10.0,
+            vec![phase("map", 100.0, 6.0, 50.0), phase("reduce", 50.0, 4.0, 20.0)],
+            0.0,
+        )
+    }
+
+    #[test]
+    fn solo_duration_is_phase_sum() {
+        assert_eq!(job().solo_duration(), 150.0);
+    }
+
+    #[test]
+    fn uncontended_job_finishes_in_solo_time() {
+        let mut j = job();
+        j.start(0.0);
+        let mut t = 0.0;
+        let mut done = false;
+        while t < 200.0 && !done {
+            done = j.advance(t, 1.0, (1.0, 1.0, 1.0, 1.0));
+            t += 1.0;
+        }
+        assert!(done);
+        let jct = j.jct().unwrap();
+        assert!((jct - 150.0).abs() < 1e-6, "jct={jct}");
+        assert!(j.slowdown_secs < 1e-9);
+    }
+
+    #[test]
+    fn contention_extends_jct_proportionally() {
+        let mut j = job();
+        j.start(0.0);
+        let mut t = 0.0;
+        let mut done = false;
+        // CPU at half speed the whole time → JCT doubles.
+        while t < 400.0 && !done {
+            done = j.advance(t, 1.0, (0.5, 1.0, 1.0, 1.0));
+            t += 1.0;
+        }
+        assert!(done);
+        assert!((j.jct().unwrap() - 300.0).abs() < 1.0);
+        assert!((j.slowdown_secs - 150.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn phase_boundary_within_one_step() {
+        // A single big step must cross phase boundaries correctly.
+        let mut j = job();
+        j.start(0.0);
+        let done = j.advance(0.0, 150.0, (1.0, 1.0, 1.0, 1.0));
+        assert!(done);
+        assert_eq!(j.finished_at, Some(150.0));
+    }
+
+    #[test]
+    fn stall_pauses_progress() {
+        let mut j = job();
+        j.start(0.0);
+        j.stall(10.0);
+        assert_eq!(j.current_demand(5.0), Demand::ZERO);
+        // First 10 s stalled: after 20 s only 10 s of progress.
+        j.advance(0.0, 20.0, (1.0, 1.0, 1.0, 1.0));
+        assert!((j.phase_progress - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn progress_rate_ignores_unused_dimensions() {
+        let p = phase("cpu-only", 10.0, 6.0, 0.0);
+        // Disk fully contended but phase uses no disk.
+        assert_eq!(p.progress_rate((1.0, 1.0, 0.1, 0.1)), 1.0);
+        // CPU contended: gated.
+        assert_eq!(p.progress_rate((0.25, 1.0, 1.0, 1.0)), 0.25);
+    }
+
+    #[test]
+    fn progress_rate_has_floor() {
+        let p = phase("x", 10.0, 6.0, 50.0);
+        assert!(p.progress_rate((0.0, 0.0, 0.0, 0.0)) >= 0.01);
+    }
+
+    #[test]
+    fn queued_job_demands_nothing() {
+        let j = job();
+        assert_eq!(j.current_demand(0.0), Demand::ZERO);
+        assert_eq!(j.state, JobState::Queued);
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in WorkloadKind::ALL {
+            assert_eq!(WorkloadKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(WorkloadKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn categories() {
+        assert_eq!(WorkloadKind::HadoopTeraSort.category(), "hadoop");
+        assert_eq!(WorkloadKind::SparkKMeans.category(), "spark");
+        assert_eq!(WorkloadKind::EtlPipeline.category(), "etl");
+    }
+}

@@ -1,0 +1,136 @@
+//! Spark MLlib workload models: Logistic Regression and K-Means
+//! (§IV-B: CPU-intensive analytical pipelines).
+//!
+//! Both are iterative: a cache-warm-up phase reads the dataset from
+//! disk into executor memory, then supersteps alternate a CPU-dominant
+//! compute phase with a brief all-reduce/broadcast synchronization
+//! pulse on the network. This reproduces the §V-C observation that
+//! Spark jobs have *limited consolidation potential* (the CPU demand is
+//! near the flavor cap almost continuously) but benefit from placement
+//! that avoids CPU contention.
+
+use crate::cluster::Demand;
+use crate::util::rng::Xoshiro256;
+use crate::workload::model::Phase;
+
+fn warmup(gb: f64, rng: &mut Xoshiro256) -> Phase {
+    Phase {
+        name: "spark-cache-warmup",
+        duration: 1.6 * gb * rng.lognormal(0.0, 0.08),
+        demand: Demand {
+            cpu: 3.0,
+            mem_gb: (0.9 * gb).min(14.0),
+            disk_mbps: 150.0,
+            net_mbps: 8.0,
+        }
+        .scaled(rng.uniform(0.95, 1.05)),
+    }
+}
+
+fn iteration(name: &'static str, cpu: f64, secs: f64, gb: f64, rng: &mut Xoshiro256) -> Phase {
+    Phase {
+        name,
+        duration: secs * rng.lognormal(0.0, 0.06),
+        demand: Demand {
+            cpu,
+            mem_gb: (0.6 * gb + 2.0).min(12.0),
+            disk_mbps: 4.0,
+            net_mbps: 3.0,
+        }
+        .scaled(rng.uniform(0.97, 1.03)),
+    }
+}
+
+fn sync_pulse(name: &'static str, rng: &mut Xoshiro256) -> Phase {
+    Phase {
+        name,
+        duration: rng.uniform(1.5, 3.0),
+        demand: Demand {
+            cpu: 1.0,
+            mem_gb: 4.0,
+            disk_mbps: 2.0,
+            net_mbps: 20.0,
+        },
+    }
+}
+
+/// Logistic Regression: gradient passes over the cached dataset.
+/// 10 iterations; per-iteration time scales with data size.
+pub fn logreg(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    let mut phases = vec![warmup(gb, rng)];
+    let iters = 10;
+    for _ in 0..iters {
+        phases.push(iteration("lr-gradient", 7.8, 1.8 * gb + 10.0, gb, rng));
+        phases.push(sync_pulse("lr-allreduce", rng));
+    }
+    phases
+}
+
+/// K-Means: assignment + update steps; slightly more iterations,
+/// marginally lower arithmetic intensity than LR.
+pub fn kmeans(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    let mut phases = vec![warmup(gb, rng)];
+    let iters = 12;
+    for _ in 0..iters {
+        phases.push(iteration("km-assign", 7.4, 1.5 * gb + 8.0, gb, rng));
+        phases.push(sync_pulse("km-broadcast", rng));
+    }
+    phases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(2)
+    }
+
+    #[test]
+    fn iterative_structure() {
+        let lr = logreg(10.0, &mut rng());
+        assert_eq!(lr.len(), 1 + 2 * 10);
+        let km = kmeans(10.0, &mut rng());
+        assert_eq!(km.len(), 1 + 2 * 12);
+        assert_eq!(lr[0].name, "spark-cache-warmup");
+    }
+
+    #[test]
+    fn compute_phases_are_cpu_dominant() {
+        let lr = logreg(10.0, &mut rng());
+        let grad = lr.iter().find(|p| p.name == "lr-gradient").unwrap();
+        // CPU near the 8-vCPU cap; disk/net negligible.
+        assert!(grad.demand.cpu > 7.0);
+        assert!(grad.demand.disk_mbps < 10.0);
+        assert!(grad.demand.net_mbps < 10.0);
+    }
+
+    #[test]
+    fn cpu_time_dominates_wall_profile() {
+        let lr = logreg(10.0, &mut rng());
+        let total: f64 = lr.iter().map(|p| p.duration).sum();
+        let cpu_time: f64 = lr
+            .iter()
+            .filter(|p| p.demand.cpu > 6.0)
+            .map(|p| p.duration)
+            .sum();
+        assert!(cpu_time / total > 0.75, "cpu fraction {}", cpu_time / total);
+    }
+
+    #[test]
+    fn memory_tracks_dataset_but_respects_flavor() {
+        let small = logreg(5.0, &mut rng());
+        let large = logreg(50.0, &mut rng());
+        let m_small = small[1].demand.mem_gb;
+        let m_large = large[1].demand.mem_gb;
+        assert!(m_large >= m_small);
+        assert!(m_large <= 16.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: f64 = kmeans(8.0, &mut rng()).iter().map(|p| p.duration).sum();
+        let b: f64 = kmeans(8.0, &mut rng()).iter().map(|p| p.duration).sum();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,224 @@
+//! Workload trace generation: arrival processes and job synthesis.
+//!
+//! The paper's campaigns run each benchmark category under both
+//! schedulers on the five-node testbed. We reproduce that as traces:
+//! a list of (kind, size, submit-time) tuples realized into [`Job`]s
+//! with per-job seeded phase jitter. Arrivals follow either a Poisson
+//! process (steady multi-tenant load) or a diurnal profile (the
+//! day/night cycle that gives ETL its off-peak opportunity, §V-C).
+
+use crate::util::rng::Xoshiro256;
+use crate::workload::mix::Mix;
+use crate::workload::model::{Job, JobId, WorkloadKind};
+use crate::workload::phases_for;
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Homogeneous Poisson with the given mean inter-arrival (s).
+    Poisson { mean_gap: f64 },
+    /// Poisson modulated by a 24 h sinusoid compressed into the
+    /// campaign: rate peaks mid-campaign and troughs at the edges.
+    /// `peak_to_trough` ≥ 1 controls the swing.
+    Diurnal { mean_gap: f64, peak_to_trough: f64 },
+    /// All jobs submitted at t=0 (closed batch, like the paper's
+    /// per-benchmark runs).
+    Batch,
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub mix: Mix,
+    pub n_jobs: usize,
+    pub arrivals: Arrivals,
+    /// Campaign horizon (s) used by the diurnal modulator.
+    pub horizon: f64,
+}
+
+impl TraceSpec {
+    /// Realize the trace into jobs, deterministically per seed.
+    pub fn generate(&self, seed: u64) -> Vec<Job> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut arrival_rng = rng.child(0xA11);
+        let mut t = 0.0;
+        let mut jobs = Vec::with_capacity(self.n_jobs);
+        for i in 0..self.n_jobs {
+            let kind = self.mix.sample(&mut rng);
+            let gb = sample_gb(kind, &mut rng);
+            let submit_at = match self.arrivals {
+                Arrivals::Batch => 0.0,
+                Arrivals::Poisson { mean_gap } => {
+                    t += arrival_rng.exponential(1.0 / mean_gap);
+                    t
+                }
+                Arrivals::Diurnal {
+                    mean_gap,
+                    peak_to_trough,
+                } => {
+                    // Thin a Poisson stream by the diurnal envelope.
+                    let gap = loop {
+                        let g = arrival_rng.exponential(1.0 / mean_gap);
+                        let phase = ((t + g) / self.horizon).clamp(0.0, 1.0);
+                        let envelope = diurnal_envelope(phase, peak_to_trough);
+                        if arrival_rng.next_f64() < envelope {
+                            break g;
+                        }
+                        t += g;
+                    };
+                    t += gap;
+                    t
+                }
+            };
+            let mut job_rng = rng.child(0xB0B + i as u64);
+            let phases = phases_for(kind, gb, &mut job_rng);
+            jobs.push(Job::new(JobId(i as u64), kind, gb, phases, submit_at));
+        }
+        jobs
+    }
+}
+
+/// Relative arrival intensity at campaign phase `x` in [0,1]:
+/// sinusoid peaking at x = 0.5, normalized to max 1.
+fn diurnal_envelope(x: f64, peak_to_trough: f64) -> f64 {
+    let trough = 1.0 / peak_to_trough.max(1.0);
+    let s = 0.5 - 0.5 * (2.0 * std::f64::consts::PI * x).cos(); // 0 at edges, 1 mid
+    trough + (1.0 - trough) * s
+}
+
+/// Dataset sizes per kind (§IV-B: Hadoop 5–50 GB; Spark bounded by
+/// executor memory; ETL mid-sized warehousing batches).
+pub fn sample_gb(kind: WorkloadKind, rng: &mut Xoshiro256) -> f64 {
+    let (lo, hi) = gb_range(kind);
+    // Mild heavy tail: most jobs small, a few near the max.
+    let u = rng.next_f64().powf(1.4);
+    (lo + (hi - lo) * u).round().max(1.0)
+}
+
+pub fn gb_range(kind: WorkloadKind) -> (f64, f64) {
+    match kind {
+        WorkloadKind::HadoopWordCount
+        | WorkloadKind::HadoopTeraSort
+        | WorkloadKind::HadoopGrep => (5.0, 50.0),
+        WorkloadKind::SparkLogReg | WorkloadKind::SparkKMeans => (5.0, 20.0),
+        WorkloadKind::EtlPipeline => (5.0, 25.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::mix::Mix;
+
+    fn spec(arrivals: Arrivals) -> TraceSpec {
+        TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: 60,
+            arrivals,
+            horizon: 7200.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = spec(Arrivals::Poisson { mean_gap: 60.0 });
+        let a = s.generate(7);
+        let b = s.generate(7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.gb, y.gb);
+            assert_eq!(x.submit_at, y.submit_at);
+            assert_eq!(x.solo_duration(), y.solo_duration());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let s = spec(Arrivals::Poisson { mean_gap: 60.0 });
+        let a = s.generate(1);
+        let b = s.generate(2);
+        let same = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| x.kind == y.kind && x.gb == y.gb)
+            .count();
+        assert!(same < a.len(), "seeds produced identical traces");
+    }
+
+    #[test]
+    fn poisson_gaps_average_out() {
+        let s = TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: 2000,
+            arrivals: Arrivals::Poisson { mean_gap: 30.0 },
+            horizon: 1e9,
+        };
+        let jobs = s.generate(11);
+        let last = jobs.last().unwrap().submit_at;
+        let mean_gap = last / (jobs.len() - 1) as f64;
+        assert!((mean_gap - 30.0).abs() < 3.0, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn batch_arrivals_all_at_zero() {
+        let s = spec(Arrivals::Batch);
+        assert!(s.generate(3).iter().all(|j| j.submit_at == 0.0));
+    }
+
+    #[test]
+    fn diurnal_concentrates_mid_campaign() {
+        let s = TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: 600,
+            arrivals: Arrivals::Diurnal {
+                mean_gap: 8.0,
+                peak_to_trough: 4.0,
+            },
+            horizon: 7200.0,
+        };
+        let jobs = s.generate(5);
+        let horizon = 7200.0;
+        let mid = jobs
+            .iter()
+            .filter(|j| j.submit_at > horizon * 0.3 && j.submit_at < horizon * 0.7)
+            .count() as f64;
+        let edge = jobs
+            .iter()
+            .filter(|j| j.submit_at < horizon * 0.2)
+            .count() as f64;
+        assert!(
+            mid / 0.4 > edge / 0.2,
+            "diurnal should concentrate arrivals mid-campaign (mid {mid}, edge {edge})"
+        );
+    }
+
+    #[test]
+    fn sizes_respect_ranges() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        for kind in WorkloadKind::ALL {
+            let (lo, hi) = gb_range(kind);
+            for _ in 0..200 {
+                let gb = sample_gb(kind, &mut rng);
+                assert!(gb >= lo && gb <= hi, "{kind:?} size {gb}");
+            }
+        }
+    }
+
+    #[test]
+    fn envelope_bounds() {
+        for i in 0..=10 {
+            let e = diurnal_envelope(i as f64 / 10.0, 4.0);
+            assert!((0.25..=1.0).contains(&e));
+        }
+        assert!((diurnal_envelope(0.5, 4.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn job_ids_are_sequential() {
+        let jobs = spec(Arrivals::Batch).generate(1);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, JobId(i as u64));
+        }
+    }
+}

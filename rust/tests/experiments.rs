@@ -1,0 +1,63 @@
+//! Shape-level assertions over the paper-reproduction experiments in
+//! fast mode: every table/figure generator runs, produces the right
+//! structure, and the headline directions hold.
+
+use ecosched::exp::{self, ExpContext};
+use ecosched::profile::WorkloadClass;
+use std::path::PathBuf;
+
+fn ctx() -> ExpContext {
+    let mut c = ExpContext::fast();
+    c.out_dir = std::env::temp_dir().join("ecosched-exp-test");
+    // Oracle predictor: these tests must not require artifacts.
+    c.artifacts = PathBuf::from("/nonexistent");
+    c
+}
+
+#[test]
+fn all_experiment_ids_run_in_fast_mode() {
+    let ctx = ctx();
+    for id in exp::ALL {
+        assert!(exp::run(id, &ctx), "experiment {id} failed to run");
+        assert!(
+            ctx.out_dir.join(format!("{id}.csv")).exists(),
+            "{id}.csv missing"
+        );
+    }
+    assert!(exp::run("scale", &ctx));
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn class_expectations_hold() {
+    // §V-C classification claims (Eq. 2 over the phase models).
+    use ecosched::cluster::flavor::MEDIUM;
+    use ecosched::profile::{classify, ResourceVector};
+    let mut rng = ecosched::util::rng::Xoshiro256::seed_from_u64(31);
+    for (kind, expect) in ecosched::exp::classes::class_expectations() {
+        let phases = ecosched::workload::phases_for(kind, 20.0, &mut rng);
+        let got = classify(&ResourceVector::from_phases(&phases, &MEDIUM));
+        assert_eq!(got, expect, "{kind:?}");
+    }
+    assert_ne!(WorkloadClass::CpuBound, WorkloadClass::IoBound);
+}
+
+#[test]
+fn fig3_direction_headline() {
+    // Full-size mixed campaign: savings positive, compliance 100 %.
+    let mut c = ExpContext::default();
+    c.artifacts = PathBuf::from("/nonexistent");
+    c.seeds = vec![1];
+    let pair = ecosched::exp::common::run_pair(&c, &ecosched::workload::Mix::paper(), 5);
+    assert!(
+        pair.savings() > 0.10,
+        "mixed savings {:.1} % below band",
+        pair.savings() * 100.0
+    );
+    assert!(pair.compliance() >= 1.0 - 1e-9);
+    assert!(
+        pair.jct_deviation().abs() < 0.05,
+        "JCT deviation {:.1} %",
+        pair.jct_deviation() * 100.0
+    );
+}

@@ -1,0 +1,205 @@
+//! Integration tests across modules: full campaigns under every
+//! policy, consolidation dynamics, DVFS effects, history-driven
+//! profiling, failure-ish edges (saturation, tiny clusters), and the
+//! paper's headline comparisons at the shape level.
+
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::exp::common::standard_trace;
+use ecosched::sla::SlaSpec;
+use ecosched::workload::{Arrivals, Mix, TraceSpec, WorkloadKind};
+
+fn cfg(seed: u64) -> CampaignConfig {
+    CampaignConfig {
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_policy_completes_the_same_trace() {
+    let trace = standard_trace(Mix::paper(), 16, 3);
+    for policy in ["round_robin", "first_fit", "best_fit", "energy_aware"] {
+        let mut coord = Coordinator::new(cfg(3), make_policy(policy).unwrap());
+        let r = coord.run(trace.clone());
+        assert_eq!(r.jobs.len(), 16, "{policy}");
+        assert!(r.energy_j > 0.0);
+        assert!(r.sla_compliance > 0.9, "{policy}: {}", r.sla_compliance);
+    }
+}
+
+#[test]
+fn headline_energy_savings_with_sla_intact() {
+    // §V-A + §V-B shape: energy-aware wins on energy-per-work with
+    // zero violations and small JCT deviation.
+    let trace = standard_trace(Mix::paper(), 24, 1);
+    let mut base = Coordinator::new(cfg(1), make_policy("round_robin").unwrap());
+    let b = base.run(trace.clone());
+    let mut opt = Coordinator::new(cfg(1), make_policy("energy_aware").unwrap());
+    let o = opt.run(trace);
+    let savings = 1.0 - o.j_per_solo_second() / b.j_per_solo_second();
+    assert!(
+        savings > 0.08,
+        "expected ≥8 % savings at moderate load, got {:.1} %",
+        savings * 100.0
+    );
+    assert_eq!(o.sla_violations, 0);
+    // §V-B: mean JCT deviation below 5 %.
+    let jct_b: f64 = b.jobs.iter().map(|j| j.jct).sum::<f64>() / b.jobs.len() as f64;
+    let jct_o: f64 = o.jobs.iter().map(|j| j.jct).sum::<f64>() / o.jobs.len() as f64;
+    assert!(
+        (jct_o / jct_b - 1.0).abs() < 0.05,
+        "JCT deviation {:.1} %",
+        (jct_o / jct_b - 1.0) * 100.0
+    );
+}
+
+#[test]
+fn consolidation_powers_hosts_down() {
+    let trace = standard_trace(Mix::paper(), 20, 5);
+    let mut coord = Coordinator::new(cfg(5), make_policy("energy_aware").unwrap());
+    let r = coord.run(trace);
+    assert!(r.host_off_s > 0.0, "no host-off time recorded");
+    let mean_on = r.hosts_on_trace.time_mean(0.0, r.makespan);
+    assert!(mean_on < 4.6, "mean hosts-on {mean_on}");
+}
+
+#[test]
+fn disabling_consolidation_erases_power_downs() {
+    let trace = standard_trace(Mix::paper(), 16, 7);
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            seed: 7,
+            consolidation: None,
+            ..Default::default()
+        },
+        make_policy("energy_aware").unwrap(),
+    );
+    let r = coord.run(trace);
+    assert_eq!(r.power_cycles, 0);
+    assert_eq!(r.migrations, 0);
+}
+
+#[test]
+fn saturated_cluster_still_completes_and_reports_violations_honestly() {
+    // Overload: 40 jobs arriving almost at once on 5 hosts. Jobs must
+    // still all finish; SLA accounting must stay coherent (violations
+    // allowed here — this is far beyond the paper's operating point).
+    let trace = TraceSpec {
+        mix: Mix::cpu_heavy(),
+        n_jobs: 40,
+        arrivals: Arrivals::Poisson { mean_gap: 3.0 },
+        horizon: 3600.0,
+    }
+    .generate(11);
+    let mut coord = Coordinator::new(cfg(11), make_policy("energy_aware").unwrap());
+    let r = coord.run(trace);
+    assert_eq!(r.jobs.len(), 40);
+    assert!(r.sla_compliance <= 1.0);
+    assert!(r.deferrals > 0, "saturation must show up as deferrals");
+}
+
+#[test]
+fn single_host_cluster_degenerate_case() {
+    let trace = TraceSpec {
+        mix: Mix::only(WorkloadKind::HadoopGrep),
+        n_jobs: 6,
+        arrivals: Arrivals::Poisson { mean_gap: 60.0 },
+        horizon: 3600.0,
+    }
+    .generate(13);
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            n_hosts: 1,
+            seed: 13,
+            ..Default::default()
+        },
+        make_policy("energy_aware").unwrap(),
+    );
+    let r = coord.run(trace);
+    assert_eq!(r.jobs.len(), 6);
+    // min_hosts_on=1: the only host must never power off.
+    assert_eq!(r.power_cycles, 0);
+}
+
+#[test]
+fn history_improves_over_campaigns() {
+    // Run two campaigns through the same coordinator: the second one
+    // profiles recurring kinds from history (Eq. 1 static path).
+    let mut coord = Coordinator::new(cfg(17), make_policy("energy_aware").unwrap());
+    let t1 = standard_trace(Mix::paper(), 12, 17);
+    coord.run(t1);
+    let n_hist = coord.history.len();
+    assert_eq!(n_hist, 12);
+    for kind in WorkloadKind::ALL {
+        if coord.history.of_kind(kind).count() > 0 {
+            assert!(coord.history.mean_profile(kind).is_some());
+        }
+    }
+    let t2 = standard_trace(Mix::paper(), 12, 18);
+    let r2 = coord.run(t2);
+    assert_eq!(coord.history.len(), n_hist + 12);
+    assert_eq!(r2.sla_violations, 0);
+}
+
+#[test]
+fn tight_sla_forces_more_spread_than_loose() {
+    // Tighter slack ⇒ the scheduler must be at least as conservative
+    // (no more energy savings than the loose-SLA run).
+    let trace = standard_trace(Mix::paper(), 18, 19);
+    let run_with = |slack: f64| {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed: 19,
+                sla: SlaSpec { slack, tau: 1.0 },
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        coord.run(trace.clone())
+    };
+    let tight = run_with(0.02);
+    let loose = run_with(0.30);
+    assert_eq!(tight.jobs.len(), loose.jobs.len());
+    // Both comply with their own contracts at this load.
+    assert_eq!(loose.sla_violations, 0);
+}
+
+#[test]
+fn diurnal_trace_consolidates_in_troughs() {
+    let trace = TraceSpec {
+        mix: Mix::io_heavy(),
+        n_jobs: 24,
+        arrivals: Arrivals::Diurnal {
+            mean_gap: 40.0,
+            peak_to_trough: 4.0,
+        },
+        horizon: 5400.0,
+    }
+    .generate(23);
+    let mut coord = Coordinator::new(cfg(23), make_policy("energy_aware").unwrap());
+    let r = coord.run(trace);
+    assert_eq!(r.jobs.len(), 24);
+    // Hosts-on must vary over the day (consolidation follows load).
+    let series: Vec<f64> = r
+        .hosts_on_trace
+        .resample(0.0, r.makespan, 50)
+        .iter()
+        .map(|(_, v)| *v)
+        .collect();
+    let max = series.iter().cloned().fold(0.0f64, f64::max);
+    let min = series.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(max - min >= 1.0, "hosts-on flat: {min}..{max}");
+}
+
+#[test]
+fn overhead_stays_under_paper_bound() {
+    // §V-E: profiling + prediction below 5 % CPU.
+    let trace = standard_trace(Mix::paper(), 20, 29);
+    let mut coord = Coordinator::new(cfg(29), make_policy("energy_aware").unwrap());
+    let r = coord.run(trace);
+    assert!(
+        r.overhead.cpu_share(r.makespan) < 0.05,
+        "controller share {:.4}",
+        r.overhead.cpu_share(r.makespan)
+    );
+}

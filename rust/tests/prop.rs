@@ -1,0 +1,287 @@
+//! Property-based tests — randomized invariants with a from-scratch
+//! harness (`proptest` is not in the offline vendor set). Each
+//! property runs across many seeded random scenarios; failures print
+//! the seed for reproduction.
+
+use ecosched::cluster::{Cluster, Demand, HostId, VmState};
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::predict::{oracle_eval, synthesize};
+use ecosched::profile::FEAT_DIM;
+use ecosched::util::rng::Xoshiro256;
+use ecosched::workload::{Arrivals, Mix, TraceSpec};
+
+/// Mini property harness: run `f` for `n` cases with derived seeds.
+fn for_all_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 1..=n {
+        f(seed);
+    }
+}
+
+#[test]
+fn prop_cluster_operations_preserve_invariants() {
+    // Random sequences of place/migrate/finish/terminate never break
+    // reservation accounting or cross-references.
+    for_all_seeds(25, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut cluster = Cluster::homogeneous(4);
+        let mut live: Vec<ecosched::cluster::VmId> = Vec::new();
+        let mut t = 0.0;
+        for step in 0..120 {
+            t += rng.uniform(0.1, 5.0);
+            cluster.advance_power_states(t);
+            match rng.range(0, 4) {
+                0 => {
+                    // Place a new VM anywhere it fits.
+                    let flavor = ecosched::cluster::flavor::CATALOG[rng.range(0, 3)];
+                    let feas = cluster.feasible_hosts(&flavor);
+                    if !feas.is_empty() {
+                        let host = feas[rng.range(0, feas.len())];
+                        let vm = cluster.create_vm(
+                            flavor,
+                            ecosched::workload::JobId(step as u64),
+                            t,
+                        );
+                        cluster.place_vm(vm, host).expect("fits");
+                        live.push(vm);
+                    }
+                }
+                1 => {
+                    // Migrate a random running VM.
+                    if !live.is_empty() {
+                        let vm = live[rng.range(0, live.len())];
+                        if matches!(cluster.vms[&vm].state, VmState::Running) {
+                            let flavor = cluster.vms[&vm].flavor;
+                            let from = cluster.vms[&vm].host.unwrap();
+                            let targets: Vec<HostId> = cluster
+                                .feasible_hosts(&flavor)
+                                .into_iter()
+                                .filter(|&h| h != from)
+                                .collect();
+                            if !targets.is_empty() {
+                                let to = targets[rng.range(0, targets.len())];
+                                let _ = cluster.start_migration(vm, to, t, 50.0);
+                            }
+                        }
+                    }
+                }
+                2 => {
+                    // Finish any in-flight migration.
+                    let migrating: Vec<_> = live
+                        .iter()
+                        .copied()
+                        .filter(|vm| {
+                            matches!(cluster.vms[vm].state, VmState::Migrating { .. })
+                        })
+                        .collect();
+                    for vm in migrating {
+                        cluster.finish_migration(vm);
+                    }
+                }
+                _ => {
+                    // Terminate a random running VM.
+                    if !live.is_empty() {
+                        let idx = rng.range(0, live.len());
+                        let vm = live[idx];
+                        if matches!(cluster.vms[&vm].state, VmState::Running) {
+                            cluster.terminate_vm(vm);
+                            live.swap_remove(idx);
+                        }
+                    }
+                }
+            }
+            cluster
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+        }
+    });
+}
+
+#[test]
+fn prop_all_jobs_complete_across_seeds() {
+    // However the campaign unfolds, every submitted job completes and
+    // internal accounting stays consistent.
+    for_all_seeds(6, |seed| {
+        let trace = TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: 14,
+            arrivals: Arrivals::Poisson { mean_gap: 30.0 },
+            horizon: 3600.0,
+        }
+        .generate(seed);
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        let report = coord.run(trace);
+        assert_eq!(report.jobs.len(), 14, "seed {seed}: all jobs complete");
+        assert!(report.makespan < 4.0 * 3600.0, "seed {seed}: runaway makespan");
+    });
+}
+
+#[test]
+fn prop_energy_accounting_consistent() {
+    // Measured energy ≈ ∫ power dt; per-host energies sum to the
+    // total; noise-free meter equals ground truth.
+    for_all_seeds(5, |seed| {
+        let trace = TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: 10,
+            arrivals: Arrivals::Poisson { mean_gap: 45.0 },
+            horizon: 3600.0,
+        }
+        .generate(seed);
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed,
+                meter_noise: 0.0,
+                ..Default::default()
+            },
+            make_policy("best_fit").unwrap(),
+        );
+        let r = coord.run(trace);
+        let per_host: f64 = r.per_host_energy_j.iter().sum();
+        assert!(
+            (per_host - r.energy_j).abs() < 1e-6,
+            "seed {seed}: per-host sum {per_host} != total {}",
+            r.energy_j
+        );
+        assert!(
+            (r.energy_j - r.energy_true_j).abs() < 1e-6,
+            "no noise configured"
+        );
+        let integral = r.power_trace.integrate(0.0, r.makespan);
+        let rel = (integral - r.energy_j).abs() / r.energy_j;
+        assert!(rel < 0.02, "seed {seed}: trace integral off by {rel}");
+    });
+}
+
+#[test]
+fn prop_campaigns_deterministic() {
+    for_all_seeds(3, |seed| {
+        let run = || {
+            let trace = TraceSpec {
+                mix: Mix::paper(),
+                n_jobs: 8,
+                arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+                horizon: 3600.0,
+            }
+            .generate(seed);
+            let mut coord = Coordinator::new(
+                CampaignConfig {
+                    seed,
+                    ..Default::default()
+                },
+                make_policy("energy_aware").unwrap(),
+            );
+            coord.run(trace)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.energy_j, b.energy_j, "seed {seed}");
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.power_cycles, b.power_cycles);
+    });
+}
+
+#[test]
+fn prop_oracle_monotone_in_host_load_for_cpu_jobs() {
+    // More CPU-loaded host ⇒ never less predicted slowdown for a
+    // CPU-bound workload (placement sanity).
+    for_all_seeds(200, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut f = [0f32; FEAT_DIM];
+        f[0] = rng.uniform(0.5, 1.0) as f32; // cpu-bound workload
+        f[1] = rng.uniform(0.1, 0.6) as f32;
+        f[13] = 1.0;
+        let u1 = rng.uniform(0.0, 0.9);
+        let u2 = (u1 + rng.uniform(0.0, 1.0 - u1)).min(1.0);
+        let mut lo = f;
+        lo[8] = u1 as f32;
+        let mut hi = f;
+        hi[8] = u2 as f32;
+        let (p_lo, p_hi) = (oracle_eval(&lo), oracle_eval(&hi));
+        assert!(
+            p_hi.slowdown >= p_lo.slowdown - 1e-9,
+            "seed {seed}: slowdown not monotone ({} vs {})",
+            p_lo.slowdown,
+            p_hi.slowdown
+        );
+    });
+}
+
+#[test]
+fn prop_predictions_finite_and_bounded_everywhere() {
+    // Oracle + dataset labels stay in their documented ranges across
+    // the whole sampled feature space.
+    let ds = synthesize(5000, 99, None);
+    for (i, x) in ds.xs.iter().enumerate() {
+        let p = oracle_eval(x);
+        assert!(p.power_w.is_finite() && p.power_w >= 0.0, "row {i}");
+        assert!(p.power_w < 200.0, "row {i}: power {}", p.power_w);
+        assert!((0.0..=2.0).contains(&p.slowdown), "row {i}");
+    }
+}
+
+#[test]
+fn prop_sla_never_violated_by_energy_aware_at_moderate_load() {
+    // The core paper claim, stress-tested across seeds.
+    for_all_seeds(6, |seed| {
+        let trace = ecosched::exp::common::standard_trace(Mix::paper(), 18, seed);
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        let r = coord.run(trace);
+        assert_eq!(
+            r.sla_violations, 0,
+            "seed {seed}: {} violations",
+            r.sla_violations
+        );
+    });
+}
+
+#[test]
+fn prop_demand_application_conserves_totals() {
+    // Sum of host demands == sum of capped VM demands, regardless of
+    // placement pattern.
+    for_all_seeds(20, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut cluster = Cluster::homogeneous(3);
+        let mut demands = std::collections::BTreeMap::new();
+        for i in 0..8 {
+            let flavor = ecosched::cluster::flavor::MEDIUM;
+            let feas = cluster.feasible_hosts(&flavor);
+            if feas.is_empty() {
+                break;
+            }
+            let host = feas[rng.range(0, feas.len())];
+            let vm = cluster.create_vm(flavor, ecosched::workload::JobId(i), 0.0);
+            cluster.place_vm(vm, host).unwrap();
+            demands.insert(
+                vm,
+                Demand {
+                    cpu: rng.uniform(0.0, 10.0),
+                    mem_gb: rng.uniform(0.0, 20.0),
+                    disk_mbps: rng.uniform(0.0, 250.0),
+                    net_mbps: rng.uniform(0.0, 80.0),
+                },
+            );
+        }
+        cluster.apply_demands(&demands);
+        let host_total: f64 = cluster.hosts.iter().map(|h| h.demand.cpu).sum();
+        let vm_total: f64 = demands
+            .iter()
+            .map(|(vm, d)| d.capped_by(&cluster.vms[vm].flavor).cpu)
+            .sum();
+        assert!(
+            (host_total - vm_total).abs() < 1e-9,
+            "seed {seed}: {host_total} vs {vm_total}"
+        );
+    });
+}

@@ -1,0 +1,164 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! Require `make artifacts` to have run; each test skips (with a
+//! loud message) when artifacts are absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use ecosched::predict::{
+    synthesize, EnergyPredictor, MlpWeights, NativeMlp, Trainer, XlaMlp,
+};
+use ecosched::profile::FEAT_DIM;
+use ecosched::runtime::Runtime;
+use ecosched::util::rng::Xoshiro256;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("ECOSCHED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+fn random_feats(n: usize, seed: u64) -> Vec<[f32; FEAT_DIM]> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut f = [0f32; FEAT_DIM];
+            for v in f.iter_mut() {
+                *v = rng.next_f64() as f32;
+            }
+            f
+        })
+        .collect()
+}
+
+#[test]
+fn meta_loads_and_matches_crate_constants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    assert_eq!(rt.meta.feat_dim, FEAT_DIM);
+    assert_eq!(rt.meta.hidden, vec![64, 32]);
+    assert_eq!(rt.meta.out_dim, 2);
+}
+
+#[test]
+fn predict_artifact_executes_and_matches_native_mlp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let weights = MlpWeights::init(11);
+    let mut xla = XlaMlp::new(Runtime::new(&dir).unwrap(), weights.clone()).unwrap();
+    let mut native = NativeMlp::new(weights);
+    let feats = random_feats(100, 1); // < batch → exercises padding
+    let from_xla = xla.predict(&feats);
+    let from_native = native.predict(&feats);
+    assert_eq!(from_xla.len(), 100);
+    for (i, (a, b)) in from_xla.iter().zip(&from_native).enumerate() {
+        assert!(
+            (a.power_w - b.power_w).abs() < 1e-2,
+            "row {i}: xla {} vs native {}",
+            a.power_w,
+            b.power_w
+        );
+        assert!((a.slowdown - b.slowdown).abs() < 1e-4, "row {i}");
+    }
+}
+
+#[test]
+fn predict_handles_multi_chunk_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let weights = MlpWeights::init(13);
+    let mut xla = XlaMlp::new(Runtime::new(&dir).unwrap(), weights.clone()).unwrap();
+    let feats = random_feats(300, 2); // 3 chunks of 128
+    let out = xla.predict(&feats);
+    assert_eq!(out.len(), 300);
+    // Chunking must not change results vs one-at-a-time.
+    let single = xla.predict(&feats[200..201]);
+    assert!((single[0].power_w - out[200].power_w).abs() < 1e-6);
+}
+
+#[test]
+fn train_step_reduces_loss_and_beats_init() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = synthesize(4096, 7, None);
+    let (train, val) = ds.split(0.9);
+    let init = MlpWeights::init(42);
+
+    // Baseline: untrained validation MSE.
+    let mut untrained = NativeMlp::new(init.clone());
+    let mse0 = val.mse(|x| {
+        let (a, b) = untrained.forward(x);
+        [a, b]
+    });
+
+    let mut trainer = Trainer::new(Runtime::new(&dir).unwrap(), init).unwrap();
+    let report = trainer.train(&train, &val, 12, 1).expect("training");
+    assert!(report.steps > 0);
+    let first = report.loss_curve.first().copied().unwrap();
+    let last = report.loss_curve.last().copied().unwrap();
+    assert!(
+        last < first * 0.6,
+        "loss did not drop: {first:.5} → {last:.5}"
+    );
+    assert!(
+        report.val_mse < mse0 * 0.5,
+        "val mse {:.5} vs untrained {:.5}",
+        report.val_mse,
+        mse0
+    );
+
+    // Trained weights flow back into the XLA predictor and agree with
+    // the native path (full weight round-trip through PJRT).
+    let mut xla = XlaMlp::new(Runtime::new(&dir).unwrap(), trainer.weights.clone()).unwrap();
+    let mut native = NativeMlp::new(trainer.weights.clone());
+    let feats = random_feats(32, 3);
+    for (a, b) in xla.predict(&feats).iter().zip(native.predict(&feats)) {
+        assert!((a.power_w - b.power_w).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn featurize_artifact_matches_native_featurization() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let batch = rt.meta.batch;
+    let window = rt.meta.window;
+    // Build windows: [batch, window, 4].
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut data = vec![0f32; batch * window * 4];
+    for v in data.iter_mut() {
+        *v = rng.next_f64() as f32;
+    }
+    let out = rt
+        .execute_f32(
+            "featurize",
+            &[(&data, &[batch as i64, window as i64, 4])],
+        )
+        .expect("featurize exec");
+    let y = &out[0];
+    assert_eq!(y.len(), batch * 7);
+    // Independent check of row 0: means + maxes + burstiness.
+    let row: Vec<f64> = (0..window).map(|t| data[t * 4] as f64).collect();
+    let mean_cpu = row.iter().sum::<f64>() / window as f64;
+    assert!((y[0] as f64 - mean_cpu).abs() < 1e-5, "mean cpu");
+    let max_cpu = row.iter().cloned().fold(0.0f64, f64::max);
+    assert!((y[4] as f64 - max_cpu).abs() < 1e-5, "cpu peak");
+    let var = row.iter().map(|x| (x - mean_cpu).powi(2)).sum::<f64>() / window as f64;
+    let burst = var.sqrt() / mean_cpu;
+    assert!((y[6] as f64 - burst).abs() < 1e-4, "burstiness");
+}
+
+#[test]
+fn exec_count_tracks_executions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaMlp::new(Runtime::new(&dir).unwrap(), MlpWeights::init(1)).unwrap();
+    let feats = random_feats(10, 9);
+    assert_eq!(xla.exec_count(), 0);
+    xla.predict(&feats);
+    assert_eq!(xla.exec_count(), 1);
+    xla.predict(&random_feats(200, 9)); // 2 chunks
+    assert_eq!(xla.exec_count(), 3);
+}
