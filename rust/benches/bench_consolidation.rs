@@ -4,7 +4,9 @@
 use ecosched::cluster::{Cluster, Demand, HostId};
 use ecosched::predict::OraclePredictor;
 use ecosched::profile::ResourceVector;
-use ecosched::sched::{ConsolidationParams, Consolidator, VmContext};
+use ecosched::sched::{
+    ConsolidationParams, Consolidator, ControlLoop, ScheduleContext, VmContext,
+};
 use ecosched::sim::Telemetry;
 use ecosched::util::bench::{bench_header, Bench};
 use ecosched::workload::JobId;
@@ -68,9 +70,12 @@ fn main() {
         let (c, t, ctxs) = setup(n);
         let mut cons = Consolidator::new(ConsolidationParams::default());
         let mut pred = OraclePredictor;
+        let ctx = ScheduleContext::new(1000.0, &c)
+            .with_telemetry(&t)
+            .with_vm_ctx(&ctxs);
         Bench::new(&format!("scan/{n}-hosts/{}-vms", 2 * n))
             .run(|| {
-                std::hint::black_box(cons.scan(1000.0, &c, &t, &ctxs, &mut pred));
+                std::hint::black_box(cons.scan(&ctx, Some(&mut pred)));
             })
             .print();
     }

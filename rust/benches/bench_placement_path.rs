@@ -1,11 +1,15 @@
 //! Bench: the placement decision path (profile → features → predict →
-//! argmin) — the latency §V-E's overhead claim rests on.
+//! argmin) — the latency §V-E's overhead claim rests on — plus the
+//! batched API: `decide_batch` (one predictor call per burst) against
+//! the per-job sequential loop at batch sizes {1, 8, 64}.
 //! Paper artifact: Fig. 2 stages / Table 5 decision latency.
 
 use ecosched::cluster::{Cluster, Demand, HostId};
 use ecosched::predict::{EnergyPredictor, MlpWeights, NativeMlp, OraclePredictor};
 use ecosched::profile::{build_features, ResourceVector};
-use ecosched::sched::{Decision, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest};
+use ecosched::sched::{
+    Decision, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, ScheduleContext,
+};
 use ecosched::util::bench::{bench_header, Bench};
 use ecosched::workload::JobId;
 
@@ -39,6 +43,21 @@ fn request() -> PlacementRequest {
     }
 }
 
+/// A burst of distinct requests (varied workload vectors so candidate
+/// filtering doesn't collapse to one shape).
+fn burst(b: usize) -> Vec<PlacementRequest> {
+    (0..b)
+        .map(|i| {
+            let mut r = request();
+            r.job = JobId(i as u64);
+            r.vector.cpu = 0.2 + 0.6 * (i % 7) as f64 / 7.0;
+            r.vector.disk = 0.2 + 0.5 * (i % 5) as f64 / 5.0;
+            r.remaining_solo = 300.0 + 60.0 * i as f64;
+            r
+        })
+        .collect()
+}
+
 fn main() {
     bench_header("placement_path");
     let req = request();
@@ -55,10 +74,11 @@ fn main() {
     // Full decision, oracle predictor (pure-rust floor).
     for n in [5usize, 20, 80] {
         let cluster = loaded_cluster(n);
+        let ctx = ScheduleContext::new(0.0, &cluster);
         let mut policy = EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default());
         Bench::new(&format!("decide/oracle/{n}-hosts"))
             .run(|| {
-                std::hint::black_box(policy.decide(&req, &cluster));
+                std::hint::black_box(policy.decide(&req, &ctx));
             })
             .print();
     }
@@ -66,15 +86,49 @@ fn main() {
     // Full decision, native MLP.
     for n in [5usize, 20, 80] {
         let cluster = loaded_cluster(n);
+        let ctx = ScheduleContext::new(0.0, &cluster);
         let mut policy = EnergyAware::new(
             Box::new(NativeMlp::new(MlpWeights::init(42))),
             EnergyAwareParams::default(),
         );
         Bench::new(&format!("decide/native-mlp/{n}-hosts"))
             .run(|| {
-                std::hint::black_box(policy.decide(&req, &cluster));
+                std::hint::black_box(policy.decide(&req, &ctx));
             })
             .print();
+    }
+
+    // Batched API: decide_batch (one predictor invocation for the
+    // whole burst) vs the sequential per-job loop, 20-host cluster.
+    for b in [1usize, 8, 64] {
+        let cluster = loaded_cluster(20);
+        let ctx = ScheduleContext::new(0.0, &cluster);
+        let reqs = burst(b);
+        let mut batched = EnergyAware::new(
+            Box::new(NativeMlp::new(MlpWeights::init(42))),
+            EnergyAwareParams::default(),
+        );
+        Bench::new(&format!("decide_batch/native-mlp/batch={b}"))
+            .run(|| {
+                std::hint::black_box(batched.decide_batch(&reqs, &ctx));
+            })
+            .print_throughput("decisions", b as f64);
+        let mut sequential = EnergyAware::new(
+            Box::new(NativeMlp::new(MlpWeights::init(42))),
+            EnergyAwareParams::default(),
+        );
+        Bench::new(&format!("decide_seq/native-mlp/batch={b}"))
+            .run(|| {
+                for r in &reqs {
+                    std::hint::black_box(sequential.decide(r, &ctx));
+                }
+            })
+            .print_throughput("decisions", b as f64);
+        // The two paths must agree bit-for-bit.
+        assert_eq!(
+            batched.decide_batch(&reqs, &ctx),
+            reqs.iter().map(|r| sequential.decide(r, &ctx)).collect::<Vec<_>>()
+        );
     }
 
     // Full decision through the XLA/PJRT path (the production Eq. 4).
@@ -84,13 +138,14 @@ fn main() {
             .unwrap_or_else(|| MlpWeights::init(42));
         for n in [5usize, 20, 80] {
             let cluster = loaded_cluster(n);
+            let ctx = ScheduleContext::new(0.0, &cluster);
             let runtime = ecosched::runtime::Runtime::new(&artifacts).expect("runtime");
             let xla = ecosched::predict::XlaMlp::new(runtime, weights.clone()).expect("xla");
             let mut policy = EnergyAware::new(Box::new(xla), EnergyAwareParams::default());
             let r = Bench::new(&format!("decide/xla-mlp/{n}-hosts"))
                 .samples(12)
                 .run(|| {
-                    std::hint::black_box(policy.decide(&req, &cluster));
+                    std::hint::black_box(policy.decide(&req, &ctx));
                 });
             r.print();
         }
@@ -112,6 +167,7 @@ fn main() {
 
     // Sanity: decisions must actually place under this load.
     let cluster = loaded_cluster(5);
+    let ctx = ScheduleContext::new(0.0, &cluster);
     let mut policy = EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default());
-    assert!(matches!(policy.decide(&req, &cluster), Decision::Place(_)));
+    assert!(matches!(policy.decide(&req, &ctx), Decision::Place(_)));
 }

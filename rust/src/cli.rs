@@ -14,9 +14,16 @@ pub struct Args {
     positionals: Vec<String>,
 }
 
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("argument error: {0}")]
+#[derive(Debug, Clone)]
 pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse raw args (without argv[0]). `n_subcommands` leading bare

@@ -351,19 +351,28 @@ fn sub_reservation(r: &Demand, f: &Flavor) -> Demand {
 }
 
 /// Placement errors surfaced to the scheduler.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlacementError {
-    #[error("no such VM")]
     NoSuchVm,
-    #[error("VM is not pending")]
     NotPending,
-    #[error("VM is not running")]
     NotRunning,
-    #[error("VM does not fit on target host")]
     DoesNotFit,
-    #[error("source and destination host are the same")]
     SameHost,
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PlacementError::NoSuchVm => "no such VM",
+            PlacementError::NotPending => "VM is not pending",
+            PlacementError::NotRunning => "VM is not running",
+            PlacementError::DoesNotFit => "VM does not fit on target host",
+            PlacementError::SameHost => "source and destination host are the same",
+        })
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 #[cfg(test)]
 mod tests {

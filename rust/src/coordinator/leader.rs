@@ -1,23 +1,30 @@
 //! The coordinator: drives a full campaign — job arrivals, profiling,
-//! predictive placement, consolidation scans, DVFS, migrations, power
-//! management, SLA and energy accounting — over the discrete-event
-//! engine. This is the system whose two configurations (round-robin
-//! baseline vs energy-aware) the paper's evaluation compares.
+//! batched predictive placement, the periodic control loops
+//! (consolidation + DVFS), migrations, power management, SLA and
+//! energy accounting — over the discrete-event engine. This is the
+//! system whose two configurations (round-robin baseline vs
+//! energy-aware) the paper's evaluation compares.
+//!
+//! Placement is batch-first: every submit burst and every deferred-
+//! queue drain goes through [`PlacementPolicy::decide_batch`] against
+//! one frozen [`ScheduleContext`], so a learned policy pays one
+//! predictor invocation per burst instead of one per job. A decision
+//! targeting a host an earlier placement in the same burst already
+//! touched is re-decided individually against the updated cluster,
+//! so the admission guards see in-burst load exactly as the
+//! sequential path would.
 
-use crate::cluster::{
-    power::BOOT_SECS,
-    Cluster, Demand, HostId, VmId, VmState,
-};
-use crate::coordinator::report::{CampaignReport, JobRecord, Overhead};
+use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState};
+use crate::coordinator::report::CampaignReport;
+use crate::coordinator::state::CampaignState;
 use crate::profile::{ExecutionRecord, HistoryStore, ResourceVector};
 use crate::sched::{
-    Action, Consolidator, Decision, DvfsGovernor, PlacementPolicy, PlacementRequest,
+    Consolidator, ControlAction, ControlLoop, Decision, DvfsGovernor, PlacementPolicy,
+    PlacementRequest, ScheduleContext,
 };
-use crate::sim::{EnergyMeter, EventQueue, Telemetry, SAMPLE_INTERVAL};
-use crate::sla::{SlaSpec, SlaTracker};
-use crate::util::stats::Histogram;
+use crate::sim::{EventQueue, SAMPLE_INTERVAL};
+use crate::sla::SlaSpec;
 use crate::workload::{flavor_for, Job, JobId, JobState};
-use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Campaign configuration.
@@ -30,7 +37,7 @@ pub struct CampaignConfig {
     /// policies that want it — used by ablations).
     pub consolidation: Option<crate::sched::ConsolidationParams>,
     pub dvfs: Option<crate::sched::DvfsParams>,
-    /// Seconds between consolidation/DVFS scans.
+    /// Seconds between control-loop scans.
     pub scan_interval: f64,
     /// Watts-Up-Pro relative noise (0 disables).
     pub meter_noise: f64,
@@ -84,41 +91,22 @@ impl Coordinator {
     /// (config.seed, trace).
     pub fn run(&mut self, trace: Vec<Job>) -> CampaignReport {
         let cfg = self.config.clone();
-        let mut cluster = Cluster::homogeneous(cfg.n_hosts);
-        let mut meter = EnergyMeter::new(cfg.n_hosts, cfg.seed, cfg.meter_noise);
-        let mut telemetry = Telemetry::new(cfg.n_hosts, cfg.seed, cfg.telemetry_noise);
-        let mut sla = SlaTracker::new(cfg.sla);
-        let mut consolidator = cfg.consolidation.map(Consolidator::new);
-        let dvfs = cfg.dvfs.map(DvfsGovernor::new);
+        let mut st = CampaignState::new(&cfg);
+        // The periodic control loops, unified behind one trait. Order
+        // matters: consolidation actuates before DVFS observes.
+        let mut loops: Vec<Box<dyn ControlLoop>> = Vec::new();
+        if let Some(params) = cfg.consolidation {
+            loops.push(Box::new(Consolidator::new(params)));
+        }
+        if let Some(params) = cfg.dvfs {
+            loops.push(Box::new(DvfsGovernor::new(params)));
+        }
         let mut queue: EventQueue<Event> = EventQueue::new();
-        let mut jobs: BTreeMap<JobId, Job> = BTreeMap::new();
-        let mut vm_of_job: BTreeMap<JobId, VmId> = BTreeMap::new();
-        let mut job_of_vm: BTreeMap<VmId, JobId> = BTreeMap::new();
-        let mut profiles: BTreeMap<JobId, ResourceVector> = BTreeMap::new();
-        let mut deferred: Vec<JobId> = Vec::new();
-        let mut waiting_boot: Vec<(JobId, HostId)> = Vec::new();
-        let mut job_energy: BTreeMap<JobId, f64> = BTreeMap::new();
-        let mut job_stall: BTreeMap<JobId, f64> = BTreeMap::new();
-        let mut pending_stalls: BTreeMap<VmId, f64> = BTreeMap::new();
-        let mut overhead = Overhead::default();
-        let mut migrations: u64 = 0;
-        let mut migration_stall_s = 0.0;
-        let mut deferrals: u64 = 0;
-        let mut util_hist = Histogram::new(0.0, 1.0, 10);
-        let mut per_host_cpu: Vec<crate::util::stats::Online> =
-            (0..cfg.n_hosts).map(|_| crate::util::stats::Online::new()).collect();
-        let mut host_off_s = 0.0;
-        let n_jobs = trace.len();
-        let mut completed = 0usize;
-        // At most ONE RetryQueue event may be pending at a time —
-        // otherwise k deferred jobs re-deferring from one retry spawn
-        // k new retries (exponential event growth).
-        let mut next_retry: Option<f64> = None;
-
+        st.n_jobs = trace.len();
         for job in trace {
-            sla.register(job.id, job.solo_duration());
+            st.sla.register(job.id, job.solo_duration());
             queue.push(job.submit_at, Event::Submit(job.id));
-            jobs.insert(job.id, job);
+            st.jobs.insert(job.id, job);
         }
         queue.push(1.0, Event::Tick);
 
@@ -127,387 +115,416 @@ impl Coordinator {
         while let Some((now, ev)) = queue.pop() {
             n_events += 1;
             if n_events % 1_000_000 == 0 {
-                eprintln!("[coordinator] {n_events} events, sim t={now:.1}, queue len {}", queue.len());
+                eprintln!(
+                    "[coordinator] {n_events} events, sim t={now:.1}, queue len {}",
+                    queue.len()
+                );
             }
             if now > cfg.max_sim_time {
                 break;
             }
             match ev {
                 Event::Submit(id) => {
-                    self.try_place(
-                        now, id, &mut cluster, &mut jobs, &mut vm_of_job, &mut job_of_vm,
-                        &mut profiles, &mut deferred, &mut waiting_boot, &mut queue,
-                        &mut next_retry, &mut overhead, &mut deferrals,
-                    );
+                    // Coalesce the whole same-instant submit burst into
+                    // one batched decision (consecutive head events
+                    // only, so FIFO tie-breaking is preserved).
+                    let mut burst = vec![id];
+                    loop {
+                        let next = match queue.peek() {
+                            Some((t, &Event::Submit(next))) if t <= now => next,
+                            _ => break,
+                        };
+                        burst.push(next);
+                        queue.pop();
+                    }
+                    self.place_batch(now, &burst, &mut st, &mut queue);
                 }
                 Event::RetryQueue => {
-                    next_retry = None;
-                    let mut retry: Vec<JobId> = std::mem::take(&mut deferred);
+                    st.next_retry = None;
+                    let mut retry: Vec<JobId> = std::mem::take(&mut st.deferred);
                     // Boot completions are handled by the state machine;
                     // waiting_boot entries whose host is now On get placed.
                     // A host that was ShuttingDown when we asked for it
                     // ignored the power_on — ask again once it is Off.
                     let mut still_waiting = Vec::new();
-                    for (id, host) in std::mem::take(&mut waiting_boot) {
-                        if cluster.host(host).state.is_on() {
+                    for (id, host) in std::mem::take(&mut st.waiting_boot) {
+                        if st.cluster.host(host).state.is_on() {
                             retry.push(id);
                         } else {
-                            if cluster.host(host).state.is_off() {
-                                cluster.host_mut(host).power_on(now);
-                                request_retry(&mut queue, &mut next_retry, now + BOOT_SECS + 0.5);
+                            if st.cluster.host(host).state.is_off() {
+                                st.cluster.host_mut(host).power_on(now);
+                                request_retry(
+                                    &mut queue,
+                                    &mut st.next_retry,
+                                    now + BOOT_SECS + 0.5,
+                                );
                             }
                             still_waiting.push((id, host));
                         }
                     }
-                    waiting_boot = still_waiting;
-                    for id in retry {
-                        self.try_place(
-                            now, id, &mut cluster, &mut jobs, &mut vm_of_job, &mut job_of_vm,
-                            &mut profiles, &mut deferred, &mut waiting_boot, &mut queue,
-                            &mut next_retry, &mut overhead, &mut deferrals,
-                        );
-                    }
+                    st.waiting_boot = still_waiting;
+                    // Drain the whole retry queue through one batch.
+                    self.place_batch(now, &retry, &mut st, &mut queue);
                 }
                 Event::MigrationDone(vm_id) => {
                     if matches!(
-                        cluster.vms.get(&vm_id).map(|v| v.state),
+                        st.cluster.vms.get(&vm_id).map(|v| v.state),
                         Some(VmState::Migrating { .. })
                     ) {
-                        cluster.finish_migration(vm_id);
+                        st.cluster.finish_migration(vm_id);
                         // Stop-and-copy stall happens at cut-over, not
                         // during the pre-copy.
                         if let (Some(&job_id), Some(&stall)) =
-                            (job_of_vm.get(&vm_id), pending_stalls.get(&vm_id))
+                            (st.job_of_vm.get(&vm_id), st.pending_stalls.get(&vm_id))
                         {
-                            jobs.get_mut(&job_id).unwrap().stall(now + stall);
+                            st.jobs.get_mut(&job_id).unwrap().stall(now + stall);
                         }
-                        pending_stalls.remove(&vm_id);
+                        st.pending_stalls.remove(&vm_id);
                     }
                 }
                 Event::Tick => {
-                    let dt = 1.0;
-                    cluster.advance_power_states(now);
-
-                    // Gather per-VM demands from job phase state.
-                    let mut demands: BTreeMap<VmId, Demand> = BTreeMap::new();
-                    for (&vm_id, &job_id) in &job_of_vm {
-                        let job = &jobs[&job_id];
-                        if job.state == JobState::Running {
-                            demands.insert(vm_id, job.current_demand(now));
-                        }
-                    }
-                    cluster.apply_demands(&demands);
-
-                    // Advance jobs under their hosts' contention.
-                    let mut finished: Vec<(JobId, VmId)> = Vec::new();
-                    for (&vm_id, &job_id) in &job_of_vm {
-                        let vm = &cluster.vms[&vm_id];
-                        if !vm.is_active() {
-                            continue;
-                        }
-                        let host = match vm.state {
-                            VmState::Migrating { from, .. } => from,
-                            _ => vm.host.expect("active VM has host"),
-                        };
-                        let contention = cluster.host(host).contention();
-                        if contention.0 < 0.999 || contention.1 < 0.999
-                            || contention.2 < 0.999 || contention.3 < 0.999
-                        {
-                            log::debug!(
-                                "t={now:.0} {job_id} on {host} contended {contention:?} demand {:?}",
-                                cluster.host(host).demand
-                            );
-                        }
-                        let job = jobs.get_mut(&job_id).unwrap();
-                        if job.state == JobState::Running
-                            && job.advance(now - dt, dt, contention)
-                        {
-                            finished.push((job_id, vm_id));
-                        }
-                    }
-
-                    // Energy attribution, then metering.
-                    for host in &cluster.hosts {
-                        if !host.state.is_on() || host.vms.is_empty() {
-                            continue;
-                        }
-                        let p = host.power();
-                        let weights: Vec<f64> = host
-                            .vms
-                            .iter()
-                            .map(|vm| {
-                                demands
-                                    .get(vm)
-                                    .map(|d| {
-                                        d.cpu / 32.0
-                                            + d.mem_gb / 64.0
-                                            + d.disk_mbps / 500.0
-                                            + d.net_mbps / 117.0
-                                    })
-                                    .unwrap_or(0.0)
-                                    .max(1e-6)
-                            })
-                            .collect();
-                        let wsum: f64 = weights.iter().sum();
-                        for (vm, w) in host.vms.iter().zip(&weights) {
-                            if let Some(&job_id) = job_of_vm.get(vm) {
-                                *job_energy.entry(job_id).or_default() += p * dt * w / wsum;
-                            }
-                        }
-                    }
-                    meter.sample(now, &cluster);
-                    for h in &cluster.hosts {
-                        if !h.state.is_on() {
-                            host_off_s += dt;
-                        }
-                    }
-
-                    // Telemetry at 5 s cadence.
-                    if (now / SAMPLE_INTERVAL).fract().abs() < 1e-9 {
-                        telemetry.sample(now, &cluster, &demands);
-                        for h in &cluster.hosts {
-                            if h.state.is_on() {
-                                let u = h.utilization().cpu;
-                                util_hist.push(u);
-                                per_host_cpu[h.id.0].push(u);
-                            }
-                        }
-                    }
-
-                    // Consolidation + DVFS scans.
-                    if now - last_scan >= cfg.scan_interval - 1e-9 {
-                        last_scan = now;
-                        let t0 = Instant::now();
-                        if self.policy.wants_consolidation() {
-                            if let Some(cons) = consolidator.as_mut() {
-                                let mut ctxs = BTreeMap::new();
-                                for (&vm_id, &job_id) in &job_of_vm {
-                                    let job = &jobs[&job_id];
-                                    if job.state != JobState::Running {
-                                        continue;
-                                    }
-                                    let remaining = remaining_solo(job);
-                                    let elapsed = now - job.started_at.unwrap_or(now);
-                                    ctxs.insert(
-                                        vm_id,
-                                        crate::sched::VmContext {
-                                            vector: profiles
-                                                .get(&job_id)
-                                                .copied()
-                                                .unwrap_or_default(),
-                                            remaining_solo: remaining,
-                                            slack_left: sla.slack_left(
-                                                job_id, elapsed, remaining,
-                                            ),
-                                        },
-                                    );
-                                }
-                                let actions = {
-                                    let predictor = policy_predictor(self.policy.as_mut());
-                                    match predictor {
-                                        Some(p) => cons.scan(now, &cluster, &telemetry, &ctxs, p),
-                                        None => Vec::new(),
-                                    }
-                                };
-                                for action in actions {
-                                    match action {
-                                        Action::PowerOff(h) => {
-                                            if cluster.host(h).vms.is_empty()
-                                                && cluster.host(h).state.is_on()
-                                            {
-                                                cluster.host_mut(h).power_off(now);
-                                            }
-                                        }
-                                        Action::Migrate { vm, to } => {
-                                            let link = link_headroom(&cluster, vm, to);
-                                            if let Ok(cost) =
-                                                cluster.start_migration(vm, to, now, link)
-                                            {
-                                                migrations += 1;
-                                                migration_stall_s += cost.stall;
-                                                pending_stalls.insert(vm, cost.stall);
-                                                if let Some(&job_id) = job_of_vm.get(&vm) {
-                                                    *job_stall.entry(job_id).or_default() +=
-                                                        cost.stall;
-                                                }
-                                                queue.push(now + cost.duration,
-                                                    Event::MigrationDone(vm));
-                                            }
-                                        }
-                                    }
-                                }
-                            }
-                            if let Some(gov) = dvfs.as_ref() {
-                                for sf in gov.scan(&cluster, &telemetry) {
-                                    cluster.host_mut(sf.host).set_freq(sf.freq);
-                                }
-                            }
-                        }
-                        overhead.scan_wall_s += t0.elapsed().as_secs_f64();
-                    }
-
-                    // Completions: release resources, record outcomes.
-                    let had_finished = !finished.is_empty();
-                    for (job_id, vm_id) in finished {
-                        // A migration may still be in flight; cut it over
-                        // so termination is clean.
-                        if matches!(cluster.vms[&vm_id].state, VmState::Migrating { .. }) {
-                            cluster.finish_migration(vm_id);
-                        }
-                        let migrations_n = cluster.vms[&vm_id].migrations;
-                        cluster.terminate_vm(vm_id);
-                        telemetry.forget_vm(vm_id);
-                        let job = &jobs[&job_id];
-                        let jct = job.jct().expect("finished job has jct");
-                        sla.complete(job_id, jct);
-                        completed += 1;
-                        let profile = profiles.get(&job_id).copied().unwrap_or_default();
-                        self.history.push(ExecutionRecord {
-                            kind: job.kind,
-                            gb: job.gb,
-                            profile,
-                            jct,
-                            solo: job.solo_duration(),
-                            energy_j: job_energy.get(&job_id).copied().unwrap_or(0.0),
-                            host_cpu_mean: 0.0,
-                        });
-                        let _ = migrations_n;
-                    }
-                    if had_finished && !deferred.is_empty() {
-                        request_retry(&mut queue, &mut next_retry, now);
-                    }
-                    if !deferred.is_empty() || !waiting_boot.is_empty() {
-                        // Periodic retry while anything waits.
-                        if (now as u64) % 15 == 0 {
-                            request_retry(&mut queue, &mut next_retry, now + 0.5);
-                        }
-                    }
-                    if completed < n_jobs {
+                    self.tick(now, &mut st, &mut queue, &mut loops, &mut last_scan, &cfg);
+                    if st.counters.completed < st.n_jobs {
                         queue.push_in(1.0, Event::Tick);
                     }
                 }
             }
         }
 
-        let makespan = queue.now();
-        let idle_w = cluster.hosts[0].spec.power.p_idle;
-        let jobs_out: Vec<JobRecord> = jobs
-            .values()
-            .filter(|j| j.state == JobState::Finished)
-            .map(|j| {
-                let jct = j.jct().unwrap();
-                JobRecord {
-                    id: j.id,
-                    kind: j.kind,
-                    gb: j.gb,
-                    submit_at: j.submit_at,
-                    jct,
-                    solo: j.solo_duration(),
-                    slowdown: jct / j.solo_duration() - 1.0,
-                    energy_j: job_energy.get(&j.id).copied().unwrap_or(0.0),
-                    wait: j.started_at.unwrap() - j.submit_at,
-                    migrations: vm_of_job
-                        .get(&j.id)
-                        .and_then(|vm| cluster.vms.get(vm))
-                        .map(|v| v.migrations)
-                        .unwrap_or(0),
-                    sla_met: sla.jobs()[&j.id].met.unwrap_or(false),
-                }
-            })
-            .collect();
+        st.report(self.policy.name(), self.config.seed, queue.now())
+    }
 
-        CampaignReport {
-            policy: self.policy.name(),
-            seed: self.config.seed,
-            makespan,
-            energy_j: meter.total_j(),
-            energy_true_j: meter.total_true_j(),
-            active_energy_j: meter.active_j(idle_w, makespan),
-            per_host_energy_j: meter.per_host_j().to_vec(),
-            jobs: jobs_out,
-            sla_compliance: sla.compliance(),
-            sla_violations: sla.n_violations(),
-            mean_slowdown: sla.mean_slowdown(),
-            migrations,
-            migration_stall_s,
-            power_cycles: cluster.hosts.iter().map(|h| h.power_cycles).sum(),
-            host_off_s,
-            power_trace: meter.power_trace.clone(),
-            hosts_on_trace: meter.hosts_on_trace.clone(),
-            util_hist,
-            per_host_mean_cpu: per_host_cpu.iter().map(|o| o.mean()).collect(),
-            overhead,
-            deferrals,
+    /// One simulated second: demand propagation, job progress, energy
+    /// accounting, telemetry, control-loop scans, and completions.
+    fn tick(
+        &mut self,
+        now: f64,
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+        loops: &mut [Box<dyn ControlLoop>],
+        last_scan: &mut f64,
+        cfg: &CampaignConfig,
+    ) {
+        let dt = 1.0;
+        st.cluster.advance_power_states(now);
+
+        // Gather per-VM demands from job phase state.
+        let mut demands: std::collections::BTreeMap<VmId, Demand> =
+            std::collections::BTreeMap::new();
+        for (&vm_id, &job_id) in &st.job_of_vm {
+            let job = &st.jobs[&job_id];
+            if job.state == JobState::Running {
+                demands.insert(vm_id, job.current_demand(now));
+            }
+        }
+        st.cluster.apply_demands(&demands);
+
+        // Advance jobs under their hosts' contention.
+        let mut finished: Vec<(JobId, VmId)> = Vec::new();
+        for (&vm_id, &job_id) in &st.job_of_vm {
+            let vm = &st.cluster.vms[&vm_id];
+            if !vm.is_active() {
+                continue;
+            }
+            let host = match vm.state {
+                VmState::Migrating { from, .. } => from,
+                _ => vm.host.expect("active VM has host"),
+            };
+            let contention = st.cluster.host(host).contention();
+            if contention.0 < 0.999
+                || contention.1 < 0.999
+                || contention.2 < 0.999
+                || contention.3 < 0.999
+            {
+                log::debug!(
+                    "t={now:.0} {job_id} on {host} contended {contention:?} demand {:?}",
+                    st.cluster.host(host).demand
+                );
+            }
+            let job = st.jobs.get_mut(&job_id).unwrap();
+            if job.state == JobState::Running && job.advance(now - dt, dt, contention) {
+                finished.push((job_id, vm_id));
+            }
+        }
+
+        // Energy attribution, then metering.
+        for host in &st.cluster.hosts {
+            if !host.state.is_on() || host.vms.is_empty() {
+                continue;
+            }
+            let p = host.power();
+            let weights: Vec<f64> = host
+                .vms
+                .iter()
+                .map(|vm| {
+                    demands
+                        .get(vm)
+                        .map(|d| {
+                            d.cpu / 32.0
+                                + d.mem_gb / 64.0
+                                + d.disk_mbps / 500.0
+                                + d.net_mbps / 117.0
+                        })
+                        .unwrap_or(0.0)
+                        .max(1e-6)
+                })
+                .collect();
+            let wsum: f64 = weights.iter().sum();
+            for (vm, w) in host.vms.iter().zip(&weights) {
+                if let Some(&job_id) = st.job_of_vm.get(vm) {
+                    *st.job_energy.entry(job_id).or_default() += p * dt * w / wsum;
+                }
+            }
+        }
+        st.meter.sample(now, &st.cluster);
+        for h in &st.cluster.hosts {
+            if !h.state.is_on() {
+                st.counters.host_off_s += dt;
+            }
+        }
+
+        // Telemetry at 5 s cadence.
+        if (now / SAMPLE_INTERVAL).fract().abs() < 1e-9 {
+            st.telemetry.sample(now, &st.cluster, &demands);
+            for h in &st.cluster.hosts {
+                if h.state.is_on() {
+                    let u = h.utilization().cpu;
+                    st.util_hist.push(u);
+                    st.per_host_cpu[h.id.0].push(u);
+                }
+            }
+        }
+
+        // Control-loop scans on the configured cadence.
+        if now - *last_scan >= cfg.scan_interval - 1e-9 {
+            *last_scan = now;
+            let t0 = Instant::now();
+            if self.policy.wants_consolidation() {
+                self.run_control_loops(now, st, queue, loops);
+            }
+            st.overhead.scan_wall_s += t0.elapsed().as_secs_f64();
+        }
+
+        // Completions: release resources, record outcomes.
+        let had_finished = !finished.is_empty();
+        for (job_id, vm_id) in finished {
+            // A migration may still be in flight; cut it over so
+            // termination is clean.
+            if matches!(st.cluster.vms[&vm_id].state, VmState::Migrating { .. }) {
+                st.cluster.finish_migration(vm_id);
+            }
+            st.cluster.terminate_vm(vm_id);
+            st.telemetry.forget_vm(vm_id);
+            let job = &st.jobs[&job_id];
+            let jct = job.jct().expect("finished job has jct");
+            st.sla.complete(job_id, jct);
+            st.counters.completed += 1;
+            let profile = st.profiles.get(&job_id).copied().unwrap_or_default();
+            self.history.push(ExecutionRecord {
+                kind: job.kind,
+                gb: job.gb,
+                profile,
+                jct,
+                solo: job.solo_duration(),
+                energy_j: st.job_energy.get(&job_id).copied().unwrap_or(0.0),
+                host_cpu_mean: 0.0,
+            });
+        }
+        if had_finished && !st.deferred.is_empty() {
+            request_retry(queue, &mut st.next_retry, now);
+        }
+        if !st.deferred.is_empty() || !st.waiting_boot.is_empty() {
+            // Periodic retry while anything waits.
+            if (now as u64) % 15 == 0 {
+                request_retry(queue, &mut st.next_retry, now + 0.5);
+            }
         }
     }
 
-    /// Placement path: profile → classify → predict → place.
-    #[allow(clippy::too_many_arguments)]
-    fn try_place(
+    /// Run every control loop once, actuating each loop's actions
+    /// before the next loop scans (consolidation's power-downs and
+    /// migrations are visible to the DVFS governor).
+    fn run_control_loops(
         &mut self,
         now: f64,
-        id: JobId,
-        cluster: &mut Cluster,
-        jobs: &mut BTreeMap<JobId, Job>,
-        vm_of_job: &mut BTreeMap<JobId, VmId>,
-        job_of_vm: &mut BTreeMap<VmId, JobId>,
-        profiles: &mut BTreeMap<JobId, ResourceVector>,
-        deferred: &mut Vec<JobId>,
-        waiting_boot: &mut Vec<(JobId, HostId)>,
+        st: &mut CampaignState,
         queue: &mut EventQueue<Event>,
-        next_retry: &mut Option<f64>,
-        overhead: &mut Overhead,
-        deferrals: &mut u64,
+        loops: &mut [Box<dyn ControlLoop>],
     ) {
-        let job = &jobs[&id];
-        if job.state != JobState::Queued {
+        let vm_ctx = st.vm_contexts(now);
+        for control in loops.iter_mut() {
+            let actions = {
+                let ctx = ScheduleContext::new(now, &st.cluster)
+                    .with_telemetry(&st.telemetry)
+                    .with_history(&self.history)
+                    .with_vm_ctx(&vm_ctx);
+                control.scan(&ctx, self.policy.scoring_handle())
+            };
+            for action in actions {
+                match action {
+                    ControlAction::PowerOff(h) => {
+                        let host = st.cluster.host(h);
+                        if host.vms.is_empty() && host.state.is_on() {
+                            st.cluster.host_mut(h).power_off(now);
+                        }
+                    }
+                    ControlAction::Migrate { vm, to } => {
+                        let link = link_headroom(&st.cluster, vm, to);
+                        if let Ok(cost) = st.cluster.start_migration(vm, to, now, link) {
+                            st.counters.migrations += 1;
+                            st.counters.migration_stall_s += cost.stall;
+                            st.pending_stalls.insert(vm, cost.stall);
+                            if let Some(&job_id) = st.job_of_vm.get(&vm) {
+                                *st.job_stall.entry(job_id).or_default() += cost.stall;
+                            }
+                            queue.push(now + cost.duration, Event::MigrationDone(vm));
+                        }
+                    }
+                    ControlAction::SetFreq { host, freq } => {
+                        st.cluster.host_mut(host).set_freq(freq);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Batched placement path: profile → decide_batch → actuate.
+    /// `ids` may contain jobs that are no longer queued; they are
+    /// skipped.
+    fn place_batch(
+        &mut self,
+        now: f64,
+        ids: &[JobId],
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+    ) {
+        let t0 = Instant::now();
+        let mut reqs: Vec<PlacementRequest> = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let job = match st.jobs.get(&id) {
+                Some(j) if j.state == JobState::Queued => j,
+                _ => continue,
+            };
+            let flavor = flavor_for(job.kind);
+            // Eq. 1 profiling: history first (recurring kind), else the
+            // phase model (the "static execution log" for a first run).
+            let vector = self
+                .history
+                .mean_profile(job.kind)
+                .unwrap_or_else(|| ResourceVector::from_phases(&job.phases, &flavor));
+            st.profiles.insert(id, vector);
+            reqs.push(PlacementRequest {
+                job: id,
+                flavor,
+                vector,
+                remaining_solo: job.solo_duration(),
+            });
+        }
+        if reqs.is_empty() {
             return;
         }
-        let t0 = Instant::now();
-        let flavor = flavor_for(job.kind);
-        // Eq. 1 profiling: history first (recurring kind), else the
-        // phase model (the "static execution log" for a first run).
-        let vector = self
-            .history
-            .mean_profile(job.kind)
-            .unwrap_or_else(|| ResourceVector::from_phases(&job.phases, &flavor));
-        profiles.insert(id, vector);
-        let req = PlacementRequest {
-            job: id,
-            flavor,
-            vector,
-            remaining_solo: job.solo_duration(),
+        let decisions = {
+            let ctx = ScheduleContext::new(now, &st.cluster)
+                .with_telemetry(&st.telemetry)
+                .with_history(&self.history);
+            self.policy.decide_batch(&reqs, &ctx)
         };
-        let decision = self.policy.decide(&req, cluster);
-        overhead.n_decisions += 1;
-        overhead.decision_wall_s += t0.elapsed().as_secs_f64();
+        assert_eq!(
+            decisions.len(),
+            reqs.len(),
+            "decide_batch must return one decision per request"
+        );
+        st.overhead.n_decisions += reqs.len() as u64;
+        st.overhead.decision_wall_s += t0.elapsed().as_secs_f64();
+        // Predictive policies consult expected load and utilization
+        // beyond the reservations `fits` checks, so any in-burst
+        // placement invalidates their snapshot decisions for that
+        // host. Reservation-only policies (round-robin, first/best
+        // fit) stay valid as long as the flavor still fits — and
+        // re-deciding them needlessly would double-advance stateful
+        // cursors.
+        let guard_sensitive = self.policy.scoring_handle().is_some();
+        let mut placed_hosts: Vec<HostId> = Vec::new();
+        for (req, decision) in reqs.iter().zip(decisions) {
+            self.apply_decision(now, req, decision, st, queue, &mut placed_hosts, guard_sensitive);
+        }
+    }
+
+    /// Actuate one decision. A `Place` the batch snapshot can no
+    /// longer justify — the flavor no longer fits, or (for predictive
+    /// policies) an earlier placement in the same burst changed the
+    /// host's expected load — is re-decided against the updated
+    /// cluster, so admission guards (Eq. 9, I/O headroom) see
+    /// in-burst placements the way the sequential path would.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_decision(
+        &mut self,
+        now: f64,
+        req: &PlacementRequest,
+        mut decision: Decision,
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+        placed_hosts: &mut Vec<HostId>,
+        guard_sensitive: bool,
+    ) {
+        let stale = match decision {
+            Decision::Place(host) => {
+                (guard_sensitive && placed_hosts.contains(&host))
+                    || !st
+                        .cluster
+                        .host(host)
+                        .fits(&req.flavor, st.cluster.reserved(host))
+            }
+            // A boot request for a host that is no longer Off was
+            // already actuated by an earlier burst member; the
+            // sequential path would have booted a *different* host
+            // (parallel capacity ramp-up), so re-decide live.
+            Decision::PowerOnAndPlace(host) => !st.cluster.host(host).state.is_off(),
+            Decision::Defer => false,
+        };
+        if stale {
+            let t0 = Instant::now();
+            decision = {
+                let ctx = ScheduleContext::new(now, &st.cluster)
+                    .with_telemetry(&st.telemetry)
+                    .with_history(&self.history);
+                self.policy.decide(req, &ctx)
+            };
+            st.overhead.n_decisions += 1;
+            st.overhead.decision_wall_s += t0.elapsed().as_secs_f64();
+        }
         match decision {
             Decision::Place(host) => {
-                let vm = cluster.create_vm(flavor, id, now);
-                cluster
+                let vm = st.cluster.create_vm(req.flavor, req.job, now);
+                st.cluster
                     .place_vm(vm, host)
                     .expect("policy returned infeasible host");
                 // Record the profiled mean demand for workload-aware
                 // admission on later placements.
-                cluster.vms.get_mut(&vm).unwrap().expected = crate::cluster::Demand {
-                    cpu: vector.cpu * flavor.vcpus,
-                    mem_gb: vector.mem * flavor.mem_gb,
-                    disk_mbps: vector.disk * flavor.disk_mbps,
-                    net_mbps: vector.net * flavor.net_mbps,
+                st.cluster.vms.get_mut(&vm).unwrap().expected = Demand {
+                    cpu: req.vector.cpu * req.flavor.vcpus,
+                    mem_gb: req.vector.mem * req.flavor.mem_gb,
+                    disk_mbps: req.vector.disk * req.flavor.disk_mbps,
+                    net_mbps: req.vector.net * req.flavor.net_mbps,
                 };
-                vm_of_job.insert(id, vm);
-                job_of_vm.insert(vm, id);
-                jobs.get_mut(&id).unwrap().start(now);
+                st.vm_of_job.insert(req.job, vm);
+                st.job_of_vm.insert(vm, req.job);
+                st.jobs.get_mut(&req.job).unwrap().start(now);
+                if !placed_hosts.contains(&host) {
+                    placed_hosts.push(host);
+                }
             }
             Decision::PowerOnAndPlace(host) => {
-                cluster.host_mut(host).power_on(now);
-                waiting_boot.push((id, host));
-                request_retry(queue, next_retry, now + BOOT_SECS + 0.5);
+                // The staleness check above guarantees the host is
+                // still Off here; power_on itself is idempotent.
+                st.cluster.host_mut(host).power_on(now);
+                st.waiting_boot.push((req.job, host));
+                request_retry(queue, &mut st.next_retry, now + BOOT_SECS + 0.5);
             }
             Decision::Defer => {
-                *deferrals += 1;
-                deferred.push(id);
-                request_retry(queue, next_retry, now + 5.0);
+                st.counters.deferrals += 1;
+                st.deferred.push(req.job);
+                request_retry(queue, &mut st.next_retry, now + 5.0);
             }
         }
     }
@@ -532,16 +549,6 @@ fn link_headroom(cluster: &Cluster, vm: VmId, to: HostId) -> f64 {
     let free_src = cap - cluster.host(from).demand.net_mbps - cluster.host(from).migration_net;
     let free_dst = cap - cluster.host(to).demand.net_mbps - cluster.host(to).migration_net;
     free_src.min(free_dst).clamp(10.0, 80.0)
-}
-
-/// Borrow the predictor out of an energy-aware policy for the
-/// consolidation scan; other policies don't consolidate.
-fn policy_predictor(
-    policy: &mut dyn PlacementPolicy,
-) -> Option<&mut (dyn crate::predict::EnergyPredictor + '_)> {
-    policy
-        .as_energy_aware()
-        .map(|ea| ea.predictor.as_mut() as &mut dyn crate::predict::EnergyPredictor)
 }
 
 /// Schedule a RetryQueue event unless one is already pending at or

@@ -1,11 +1,13 @@
-//! The coordinator (L3's leader): campaign driver, placement path,
-//! consolidation actuation, and outcome reporting.
+//! The coordinator (L3's leader): campaign driver, batched placement
+//! path, control-loop actuation, and outcome reporting.
 
 pub mod leader;
 pub mod report;
+pub mod state;
 
 pub use leader::{remaining_solo, CampaignConfig, Coordinator};
 pub use report::{CampaignReport, JobRecord, Overhead};
+pub use state::{CampaignState, Counters};
 
 use crate::predict::{EnergyPredictor, NativeMlp, OraclePredictor};
 use crate::sched::{

@@ -1,0 +1,183 @@
+//! Typed campaign state — everything `Coordinator::run` mutates while
+//! driving a campaign, gathered into one struct instead of ~20 loose
+//! maps threaded through helper signatures.
+
+use crate::cluster::{Cluster, HostId, VmId};
+use crate::coordinator::leader::{remaining_solo, CampaignConfig};
+use crate::coordinator::report::{CampaignReport, JobRecord, Overhead};
+use crate::profile::ResourceVector;
+use crate::sched::VmContext;
+use crate::sim::{EnergyMeter, Telemetry};
+use crate::sla::SlaTracker;
+use crate::util::stats::{Histogram, Online};
+use crate::workload::{Job, JobId, JobState};
+use std::collections::BTreeMap;
+
+/// Monotonic campaign counters (reported at the end of the run).
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    pub migrations: u64,
+    pub migration_stall_s: f64,
+    pub deferrals: u64,
+    /// Host-seconds spent not powered on (off, shutting down, or
+    /// booting).
+    pub host_off_s: f64,
+    pub completed: usize,
+}
+
+/// The mutable state of one campaign run.
+pub struct CampaignState {
+    pub cluster: Cluster,
+    pub meter: EnergyMeter,
+    pub telemetry: Telemetry,
+    pub sla: SlaTracker,
+    /// All jobs of the trace, by id.
+    pub jobs: BTreeMap<JobId, Job>,
+    pub vm_of_job: BTreeMap<JobId, VmId>,
+    pub job_of_vm: BTreeMap<VmId, JobId>,
+    /// Eq. 1 profiles captured at placement time.
+    pub profiles: BTreeMap<JobId, ResourceVector>,
+    /// Jobs waiting for a later placement retry.
+    pub deferred: Vec<JobId>,
+    /// Jobs waiting for a host to finish booting.
+    pub waiting_boot: Vec<(JobId, HostId)>,
+    /// Energy attribution per job (J).
+    pub job_energy: BTreeMap<JobId, f64>,
+    /// Migration stall attribution per job (s).
+    pub job_stall: BTreeMap<JobId, f64>,
+    /// Stop-and-copy stalls to apply at migration cut-over.
+    pub pending_stalls: BTreeMap<VmId, f64>,
+    pub overhead: Overhead,
+    pub counters: Counters,
+    /// CPU-utilization distribution over (host, sample) pairs.
+    pub util_hist: Histogram,
+    pub per_host_cpu: Vec<Online>,
+    /// At most ONE RetryQueue event may be pending at a time —
+    /// otherwise k deferred jobs re-deferring from one retry spawn
+    /// k new retries (exponential event growth).
+    pub next_retry: Option<f64>,
+    /// Number of jobs in the trace.
+    pub n_jobs: usize,
+}
+
+impl CampaignState {
+    pub fn new(cfg: &CampaignConfig) -> CampaignState {
+        CampaignState {
+            cluster: Cluster::homogeneous(cfg.n_hosts),
+            meter: EnergyMeter::new(cfg.n_hosts, cfg.seed, cfg.meter_noise),
+            telemetry: Telemetry::new(cfg.n_hosts, cfg.seed, cfg.telemetry_noise),
+            sla: SlaTracker::new(cfg.sla),
+            jobs: BTreeMap::new(),
+            vm_of_job: BTreeMap::new(),
+            job_of_vm: BTreeMap::new(),
+            profiles: BTreeMap::new(),
+            deferred: Vec::new(),
+            waiting_boot: Vec::new(),
+            job_energy: BTreeMap::new(),
+            job_stall: BTreeMap::new(),
+            pending_stalls: BTreeMap::new(),
+            overhead: Overhead::default(),
+            counters: Counters::default(),
+            util_hist: Histogram::new(0.0, 1.0, 10),
+            per_host_cpu: (0..cfg.n_hosts).map(|_| Online::new()).collect(),
+            next_retry: None,
+            n_jobs: 0,
+        }
+    }
+
+    /// Per-VM runtime context for the control loops: current profile,
+    /// remaining solo work, and SLA slack of every running job.
+    pub fn vm_contexts(&self, now: f64) -> BTreeMap<VmId, VmContext> {
+        let mut ctxs = BTreeMap::new();
+        for (&vm_id, &job_id) in &self.job_of_vm {
+            let job = &self.jobs[&job_id];
+            if job.state != JobState::Running {
+                continue;
+            }
+            let remaining = remaining_solo(job);
+            let elapsed = now - job.started_at.unwrap_or(now);
+            ctxs.insert(
+                vm_id,
+                VmContext {
+                    vector: self.profiles.get(&job_id).copied().unwrap_or_default(),
+                    remaining_solo: remaining,
+                    slack_left: self.sla.slack_left(job_id, elapsed, remaining),
+                },
+            );
+        }
+        ctxs
+    }
+
+    /// Assemble the campaign report.
+    pub fn report(&self, policy: &'static str, seed: u64, makespan: f64) -> CampaignReport {
+        let idle_w = self.cluster.hosts[0].spec.power.p_idle;
+        let jobs_out: Vec<JobRecord> = self
+            .jobs
+            .values()
+            .filter(|j| j.state == JobState::Finished)
+            .map(|j| {
+                let jct = j.jct().unwrap();
+                JobRecord {
+                    id: j.id,
+                    kind: j.kind,
+                    gb: j.gb,
+                    submit_at: j.submit_at,
+                    jct,
+                    solo: j.solo_duration(),
+                    slowdown: jct / j.solo_duration() - 1.0,
+                    energy_j: self.job_energy.get(&j.id).copied().unwrap_or(0.0),
+                    wait: j.started_at.unwrap() - j.submit_at,
+                    migrations: self
+                        .vm_of_job
+                        .get(&j.id)
+                        .and_then(|vm| self.cluster.vms.get(vm))
+                        .map(|v| v.migrations)
+                        .unwrap_or(0),
+                    sla_met: self.sla.jobs()[&j.id].met.unwrap_or(false),
+                }
+            })
+            .collect();
+
+        CampaignReport {
+            policy,
+            seed,
+            makespan,
+            energy_j: self.meter.total_j(),
+            energy_true_j: self.meter.total_true_j(),
+            active_energy_j: self.meter.active_j(idle_w, makespan),
+            per_host_energy_j: self.meter.per_host_j().to_vec(),
+            jobs: jobs_out,
+            sla_compliance: self.sla.compliance(),
+            sla_violations: self.sla.n_violations(),
+            mean_slowdown: self.sla.mean_slowdown(),
+            migrations: self.counters.migrations,
+            migration_stall_s: self.counters.migration_stall_s,
+            power_cycles: self.cluster.hosts.iter().map(|h| h.power_cycles).sum(),
+            host_off_s: self.counters.host_off_s,
+            power_trace: self.meter.power_trace.clone(),
+            hosts_on_trace: self.meter.hosts_on_trace.clone(),
+            util_hist: self.util_hist.clone(),
+            per_host_mean_cpu: self.per_host_cpu.iter().map(|o| o.mean()).collect(),
+            overhead: self.overhead.clone(),
+            deferrals: self.counters.deferrals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_state_is_empty() {
+        let cfg = CampaignConfig::default();
+        let st = CampaignState::new(&cfg);
+        assert_eq!(st.cluster.n_hosts(), cfg.n_hosts);
+        assert!(st.jobs.is_empty());
+        assert!(st.vm_contexts(0.0).is_empty());
+        assert_eq!(st.counters.deferrals, 0);
+        let r = st.report("test", cfg.seed, 0.0);
+        assert_eq!(r.jobs.len(), 0);
+        assert_eq!(r.seed, cfg.seed);
+    }
+}

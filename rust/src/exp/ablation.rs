@@ -93,12 +93,16 @@ pub fn run_abl2(ctx: &ExpContext) -> TableBuilder {
     let lin = LinearModel::fit(&train.xs, &train.ys, 1e-4);
     let lin_mse = val.mse(|x| lin.eval(x));
     let mlp_mse = if ctx.has_artifacts() {
-        let w = ctx.ensure_weights();
-        let mut m = crate::predict::NativeMlp::new(w);
-        val.mse(|x| {
-            let (a, b) = m.forward(x);
-            [a, b]
-        })
+        match ctx.ensure_weights() {
+            Some(w) => {
+                let mut m = crate::predict::NativeMlp::new(w);
+                val.mse(|x| {
+                    let (a, b) = m.forward(x);
+                    [a, b]
+                })
+            }
+            None => f64::NAN,
+        }
     } else {
         f64::NAN
     };

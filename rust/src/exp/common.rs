@@ -58,13 +58,21 @@ impl ExpContext {
     /// The production predictor: the trained MLP through the XLA/PJRT
     /// path. Trains + persists weights on first use; falls back to the
     /// analytic oracle when artifacts are absent (with a warning), so
-    /// experiments remain runnable on a fresh checkout.
+    /// experiments remain runnable on a fresh checkout. The same
+    /// instance serves placement (`decide_batch`) and the control
+    /// loops (via the policy's scoring handle).
     pub fn make_predictor(&self) -> Box<dyn EnergyPredictor> {
         if !self.has_artifacts() {
             log::warn!("artifacts missing; experiments use the oracle predictor");
             return Box::new(OraclePredictor);
         }
-        let weights = self.ensure_weights();
+        let Some(weights) = self.ensure_weights() else {
+            // Artifacts exist but no trained weights and no runtime
+            // to train with: untrained-MLP scores would be noise, so
+            // keep the analytic oracle.
+            log::warn!("no trained weights and no XLA runtime; using the oracle predictor");
+            return Box::new(OraclePredictor);
+        };
         match Runtime::new(&self.artifacts).and_then(|rt| XlaMlp::new(rt, weights.clone())) {
             Ok(xla) => Box::new(xla),
             Err(e) => {
@@ -75,16 +83,24 @@ impl ExpContext {
     }
 
     /// Trained weights, training once and caching to
-    /// `artifacts/weights.json`.
-    pub fn ensure_weights(&self) -> MlpWeights {
+    /// `artifacts/weights.json`. `None` when no cached weights exist
+    /// and the XLA runtime (which owns `train_step.hlo`) is
+    /// unavailable — callers must not score with untrained weights.
+    pub fn ensure_weights(&self) -> Option<MlpWeights> {
         let path = self.artifacts.join("weights.json");
         if let Some(w) = MlpWeights::load(&path) {
-            return w;
+            return Some(w);
         }
         log::info!("training f_θ (first run) …");
+        let rt = match Runtime::new(&self.artifacts) {
+            Ok(rt) => rt,
+            Err(e) => {
+                log::warn!("XLA runtime unavailable ({e}); cannot train f_θ");
+                return None;
+            }
+        };
         let ds = synthesize(4096, 7, None);
         let (train, val) = ds.split(0.9);
-        let rt = Runtime::new(&self.artifacts).expect("artifacts present");
         let mut trainer = Trainer::new(rt, MlpWeights::init(42)).expect("trainer");
         let report = trainer.train(&train, &val, 30, 1).expect("training");
         log::info!(
@@ -94,7 +110,7 @@ impl ExpContext {
             report.val_mse
         );
         trainer.weights.save(&path).expect("persist weights");
-        trainer.weights
+        Some(trainer.weights)
     }
 
     /// The paper's energy-aware policy with the production predictor.

@@ -15,8 +15,33 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for batched
 //!   placement scoring and telemetry featurization.
 //!
+//! ## The L3 scheduling API
+//!
+//! Scheduling flows through three abstractions in [`sched`]:
+//!
+//! 1. [`sched::ScheduleContext`] — one read-only view (cluster +
+//!    telemetry window + history + sim clock) assembled by the
+//!    coordinator at each decision point.
+//! 2. [`sched::PlacementPolicy::decide_batch`] — the coordinator's
+//!    only placement entry point: every same-instant submit burst and
+//!    every deferred-queue drain is decided as a batch against one
+//!    frozen context. The energy-aware policy builds the full
+//!    (request × feasible-host) feature matrix and scores it with a
+//!    single predictor invocation — exactly the `[B, 16]` batch the
+//!    L1 `score_hosts` kernel streams through the MXU as
+//!    `(B×16)·(16×64)·(64×32)·(32×2)`; the sequential per-job loop is
+//!    the trait's default fallback and is bit-identical by contract.
+//! 3. [`sched::ControlLoop`] — the periodic scans (adaptive
+//!    consolidation, DVFS governor, future loops such as carbon-aware
+//!    capping) unified behind one trait that emits
+//!    [`sched::ControlAction`]s; loops borrow the policy's predictor
+//!    through an explicit [`sched::ScoringHandle`] — no downcasts.
+//!
 //! Python never runs at decision time: [`runtime`] loads
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).
+//! The offline build links an API-compatible stub instead; the
+//! predictor then falls back to the native-Rust MLP when trained
+//! weights exist on disk, else to the analytic oracle.
 
 pub mod cli;
 pub mod cluster;

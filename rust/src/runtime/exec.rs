@@ -5,15 +5,26 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact not found: {0}")]
     ArtifactMissing(PathBuf),
-    #[error("artifact metadata invalid: {0}")]
     BadMeta(String),
-    #[error("xla error: {0}")]
     Xla(String),
 }
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::ArtifactMissing(p) => {
+                write!(f, "artifact not found: {}", p.display())
+            }
+            RuntimeError::BadMeta(msg) => write!(f, "artifact metadata invalid: {msg}"),
+            RuntimeError::Xla(msg) => write!(f, "xla error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
 
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {

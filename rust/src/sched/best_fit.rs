@@ -2,8 +2,8 @@
 //! placement is smallest (tightest pack). Energy-agnostic but
 //! consolidation-friendly — the strongest non-learned baseline.
 
-use crate::cluster::Cluster;
 use crate::sched::policy::{Decision, PlacementPolicy, PlacementRequest};
+use crate::sched::ScheduleContext;
 
 #[derive(Debug, Default)]
 pub struct BestFit;
@@ -13,7 +13,8 @@ impl PlacementPolicy for BestFit {
         "best_fit"
     }
 
-    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
+    fn decide(&mut self, req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision {
+        let cluster = ctx.cluster;
         let mut best: Option<(f64, crate::cluster::HostId)> = None;
         for host in &cluster.hosts {
             if !host.fits(&req.flavor, cluster.reserved(host.id)) {
@@ -44,7 +45,7 @@ impl PlacementPolicy for BestFit {
 mod tests {
     use super::*;
     use crate::cluster::flavor::MEDIUM;
-    use crate::cluster::HostId;
+    use crate::cluster::{Cluster, HostId};
     use crate::profile::ResourceVector;
     use crate::workload::JobId;
 
@@ -55,6 +56,10 @@ mod tests {
             vector: ResourceVector::default(),
             remaining_solo: 100.0,
         }
+    }
+
+    fn decide(p: &mut BestFit, req: &PlacementRequest, c: &Cluster) -> Decision {
+        p.decide(req, &ScheduleContext::new(0.0, c))
     }
 
     #[test]
@@ -69,7 +74,7 @@ mod tests {
         }
         let mut bf = BestFit;
         // Tightest = host 1 (least leftover after placement).
-        assert_eq!(bf.decide(&req(), &c), Decision::Place(HostId(1)));
+        assert_eq!(decide(&mut bf, &req(), &c), Decision::Place(HostId(1)));
     }
 
     #[test]
@@ -78,7 +83,7 @@ mod tests {
         let mut bf = BestFit;
         let mut placements = Vec::new();
         for _ in 0..8 {
-            match bf.decide(&req(), &c) {
+            match decide(&mut bf, &req(), &c) {
                 Decision::Place(h) => {
                     let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
                     c.place_vm(vm, h).unwrap();
@@ -89,6 +94,6 @@ mod tests {
         }
         // 4 per host by memory; first host fills completely first.
         assert_eq!(placements, vec![0, 0, 0, 0, 1, 1, 1, 1]);
-        assert_eq!(bf.decide(&req(), &c), Decision::Defer);
+        assert_eq!(decide(&mut bf, &req(), &c), Decision::Defer);
     }
 }

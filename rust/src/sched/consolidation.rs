@@ -5,16 +5,20 @@
 //! U_h^cpu > δ_high ⇒ restrict placements / relieve pressure
 //! ```
 //!
-//! The scan runs periodically, uses *sustained* utilization from
-//! telemetry (not instantaneous spikes), schedules migrations only in
-//! low-activity windows (§III-C's "migrations are scheduled during
-//! low-activity intervals"), and evacuates at most one donor host per
-//! scan to avoid migration storms.
+//! The scan runs periodically as a [`ControlLoop`], uses *sustained*
+//! utilization from the context's telemetry window (not instantaneous
+//! spikes), schedules migrations only in low-activity windows
+//! (§III-C's "migrations are scheduled during low-activity
+//! intervals"), and evacuates at most one donor host per scan to
+//! avoid migration storms. Migration targets are scored through the
+//! placement policy's predictor, borrowed via the scan's
+//! [`ScoringHandle`].
 
-use crate::cluster::{Cluster, HostId, VmId, VmState};
+use crate::cluster::{HostId, VmId, VmState};
 use crate::predict::EnergyPredictor;
 use crate::profile::{build_features, ResourceVector};
-use crate::sim::Telemetry;
+use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
+use crate::sched::ScheduleContext;
 use std::collections::BTreeMap;
 
 /// Consolidation tunables (`abl1` sweeps δ_low × δ_high).
@@ -61,13 +65,6 @@ impl Default for ConsolidationParams {
 /// (40 MB/s throttle on a ~117 MB/s NIC).
 pub const MIGRATION_NET_UTIL: f64 = 40.0 / 117.0;
 
-/// Actions the scan emits for the coordinator to actuate.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Action {
-    Migrate { vm: VmId, to: HostId },
-    PowerOff(HostId),
-}
-
 /// Per-VM context the scan needs from the coordinator.
 #[derive(Debug, Clone)]
 pub struct VmContext {
@@ -96,27 +93,19 @@ impl Consolidator {
     }
 
     /// One scan pass. Pure planning: no cluster mutation here.
-    pub fn scan(
+    fn plan(
         &mut self,
-        now: f64,
-        cluster: &Cluster,
-        telemetry: &Telemetry,
-        vm_ctx: &BTreeMap<VmId, VmContext>,
+        ctx: &ScheduleContext<'_>,
         predictor: &mut dyn EnergyPredictor,
-    ) -> Vec<Action> {
+    ) -> Vec<ControlAction> {
+        let now = ctx.now;
+        let cluster = ctx.cluster;
         let mut actions = Vec::new();
         let n = cluster.n_hosts();
-        // Sustained per-host CPU utilization.
+        // Sustained per-host CPU utilization (telemetry window, with
+        // instantaneous fallback — shared helper on the context).
         let sustained: Vec<f64> = (0..n)
-            .map(|i| {
-                let ring = &telemetry.hosts[i];
-                let last = ring.last_n(self.params.window_samples);
-                if last.is_empty() {
-                    cluster.hosts[i].utilization().cpu
-                } else {
-                    last.iter().map(|s| s.util.cpu).sum::<f64>() / last.len() as f64
-                }
-            })
+            .map(|i| ctx.sustained_cpu(HostId(i), self.params.window_samples))
             .collect();
 
         // Eq. 9 bookkeeping.
@@ -159,7 +148,7 @@ impl Consolidator {
             {
                 break;
             }
-            actions.push(Action::PowerOff(h));
+            actions.push(ControlAction::PowerOff(h));
             powering_off.push(h);
             hosts_on -= 1;
             empty_on -= 1;
@@ -207,7 +196,7 @@ impl Consolidator {
         let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
         for &vm_id in &cluster.hosts[donor.0].vms {
             let vm = &cluster.vms[&vm_id];
-            let ctx = match vm_ctx.get(&vm_id) {
+            let vctx = match ctx.vm_context(vm_id) {
                 Some(c) => c,
                 None => return actions, // missing context: be conservative
             };
@@ -216,7 +205,7 @@ impl Consolidator {
             // cannot free the donor early enough to pay for the copy's
             // network pressure — let it drain instead.
             let copy_secs = vm.flavor.mem_gb * 1024.0 * 1.3 / 40.0;
-            if ctx.remaining_solo < copy_secs {
+            if vctx.remaining_solo < copy_secs {
                 return actions;
             }
             let mut cands: Vec<HostId> = Vec::new();
@@ -252,11 +241,11 @@ impl Consolidator {
                     net: inst.net.max(prof.net),
                 };
                 let (pc, pm, pd, pn) =
-                    crate::predict::oracle::post_utilization(&ctx.vector, &u);
-                if (ctx.vector.cpu > 0.1 && pc > 0.90)
-                    || (ctx.vector.mem > 0.1 && pm > 0.90)
-                    || (ctx.vector.disk > 0.1 && pd > 0.90)
-                    || (ctx.vector.net > 0.1 && pn > 0.90)
+                    crate::predict::oracle::post_utilization(&vctx.vector, &u);
+                if (vctx.vector.cpu > 0.1 && pc > 0.90)
+                    || (vctx.vector.mem > 0.1 && pm > 0.90)
+                    || (vctx.vector.disk > 0.1 && pd > 0.90)
+                    || (vctx.vector.net > 0.1 && pn > 0.90)
                 {
                     continue;
                 }
@@ -268,7 +257,7 @@ impl Consolidator {
                     continue;
                 }
                 cands.push(host.id);
-                feats.push(build_features(&ctx.vector, ctx.remaining_solo, host));
+                feats.push(build_features(&vctx.vector, vctx.remaining_solo, host));
             }
             if cands.is_empty() {
                 return actions; // cannot fully evacuate: give up this scan
@@ -276,7 +265,7 @@ impl Consolidator {
             let preds = predictor.predict(&feats);
             let mut best: Option<(HostId, f64)> = None;
             for (i, p) in preds.iter().enumerate() {
-                if p.slowdown > self.params.max_slowdown.min(ctx.slack_left) {
+                if p.slowdown > self.params.max_slowdown.min(vctx.slack_left) {
                     continue;
                 }
                 // Same amortized-idle-floor objective as placement.
@@ -298,9 +287,28 @@ impl Consolidator {
             }
         }
         for (vm, to) in planned {
-            actions.push(Action::Migrate { vm, to });
+            actions.push(ControlAction::Migrate { vm, to });
         }
         actions
+    }
+}
+
+impl ControlLoop for Consolidator {
+    fn name(&self) -> &'static str {
+        "consolidation"
+    }
+
+    fn scan(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        scoring: Option<ScoringHandle<'_>>,
+    ) -> Vec<ControlAction> {
+        // Migration targets are ranked by predicted energy/slowdown;
+        // without a predictor there is nothing safe to plan.
+        match scoring {
+            Some(predictor) => self.plan(ctx, predictor),
+            None => Vec::new(),
+        }
     }
 }
 
@@ -308,8 +316,9 @@ impl Consolidator {
 mod tests {
     use super::*;
     use crate::cluster::flavor::MEDIUM;
-    use crate::cluster::Demand;
+    use crate::cluster::{Cluster, Demand};
     use crate::predict::OraclePredictor;
+    use crate::sim::Telemetry;
     use crate::workload::JobId;
 
     fn ctx() -> VmContext {
@@ -326,6 +335,20 @@ mod tests {
             remaining_solo: 1200.0,
             slack_left: 0.08,
         }
+    }
+
+    fn scan_at(
+        cons: &mut Consolidator,
+        now: f64,
+        c: &Cluster,
+        t: &Telemetry,
+        ctxs: &BTreeMap<VmId, VmContext>,
+    ) -> Vec<ControlAction> {
+        let mut pred = OraclePredictor;
+        let sctx = ScheduleContext::new(now, c)
+            .with_telemetry(t)
+            .with_vm_ctx(ctxs);
+        cons.scan(&sctx, Some(&mut pred))
     }
 
     /// Cluster with a lightly-loaded donor (host 0, one VM) and a
@@ -368,21 +391,23 @@ mod tests {
             spare_hosts: 0,
             ..Default::default()
         });
-        let mut pred = OraclePredictor;
         // First scan observes host 2 empty; no power-off before the
         // grace period elapses (hysteresis).
-        let first = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        let first = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
         assert!(
-            !first.contains(&Action::PowerOff(HostId(2))),
+            !first.contains(&ControlAction::PowerOff(HostId(2))),
             "power-off before grace: {first:?}"
         );
         // After the grace period: host 2 powers off; host 0 (< δ_low)
         // evacuates its VM to host 1.
-        let actions = cons.scan(1000.0 + 151.0, &c, &t, &ctxs, &mut pred);
-        assert!(actions.contains(&Action::PowerOff(HostId(2))), "{actions:?}");
+        let actions = scan_at(&mut cons, 1000.0 + 151.0, &c, &t, &ctxs);
+        assert!(
+            actions.contains(&ControlAction::PowerOff(HostId(2))),
+            "{actions:?}"
+        );
         let vm0 = *c.hosts[0].vms.first().unwrap();
         assert!(
-            actions.contains(&Action::Migrate { vm: vm0, to: HostId(1) }),
+            actions.contains(&ControlAction::Migrate { vm: vm0, to: HostId(1) }),
             "{actions:?}"
         );
     }
@@ -394,12 +419,11 @@ mod tests {
             spare_hosts: 1,
             ..Default::default()
         });
-        let mut pred = OraclePredictor;
-        cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
-        let actions = cons.scan(2000.0, &c, &t, &ctxs, &mut pred);
+        scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
+        let actions = scan_at(&mut cons, 2000.0, &c, &t, &ctxs);
         // Host 2 is the ONLY empty host → kept on as the spare.
         assert!(
-            !actions.iter().any(|a| matches!(a, Action::PowerOff(_))),
+            !actions.iter().any(|a| matches!(a, ControlAction::PowerOff(_))),
             "{actions:?}"
         );
     }
@@ -411,8 +435,8 @@ mod tests {
         c.advance_power_states(100.0);
         let t = Telemetry::new(2, 1, 0.0);
         let mut cons = Consolidator::new(ConsolidationParams::default());
-        let mut pred = OraclePredictor;
-        let actions = cons.scan(1000.0, &c, &t, &BTreeMap::new(), &mut pred);
+        let empty = BTreeMap::new();
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &empty);
         // Host 0 is empty but it's the last one on.
         assert!(actions.is_empty(), "{actions:?}");
     }
@@ -431,10 +455,9 @@ mod tests {
             t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
         }
         let mut cons = Consolidator::new(ConsolidationParams::default());
-        let mut pred = OraclePredictor;
-        let actions = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
         assert!(
-            !actions.iter().any(|a| matches!(a, Action::Migrate { .. })),
+            !actions.iter().any(|a| matches!(a, ControlAction::Migrate { .. })),
             "migrations must wait for a low-activity window: {actions:?}"
         );
     }
@@ -448,8 +471,7 @@ mod tests {
             t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
         }
         let mut cons = Consolidator::new(ConsolidationParams::default());
-        let mut pred = OraclePredictor;
-        cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
         assert!(cons.restricted.contains(&HostId(1)));
     }
 
@@ -463,10 +485,9 @@ mod tests {
         c.host_mut(HostId(1)).demand.cpu = 31.0;
         ctxs.get_mut(&vm0).unwrap().vector.cpu = 0.9;
         let mut cons = Consolidator::new(ConsolidationParams::default());
-        let mut pred = OraclePredictor;
-        let actions = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
         assert!(
-            !actions.iter().any(|a| matches!(a, Action::Migrate { .. })),
+            !actions.iter().any(|a| matches!(a, ControlAction::Migrate { .. })),
             "{actions:?}"
         );
     }
@@ -476,11 +497,21 @@ mod tests {
         let (mut c, ctxs, t) = setup();
         c.host_mut(HostId(0)).migration_net = 50.0;
         let mut cons = Consolidator::new(ConsolidationParams::default());
-        let mut pred = OraclePredictor;
-        let actions = cons.scan(1000.0, &c, &t, &ctxs, &mut pred);
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
         assert!(
-            !actions.iter().any(|a| matches!(a, Action::Migrate { .. })),
+            !actions.iter().any(|a| matches!(a, ControlAction::Migrate { .. })),
             "{actions:?}"
         );
+    }
+
+    #[test]
+    fn plans_nothing_without_a_scoring_handle() {
+        let (c, ctxs, t) = setup();
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let sctx = ScheduleContext::new(5000.0, &c)
+            .with_telemetry(&t)
+            .with_vm_ctx(&ctxs);
+        assert!(cons.scan(&sctx, None).is_empty());
+        assert_eq!(cons.name(), "consolidation");
     }
 }

@@ -1,0 +1,128 @@
+//! The scheduling context: one read-only view of everything a
+//! placement policy or control loop may consult when deciding —
+//! cluster state, the telemetry window, execution history, per-VM
+//! runtime context, and the simulation clock.
+//!
+//! Policies used to receive a bare `&Cluster`; control loops each
+//! took their own ad-hoc argument lists and recomputed sustained
+//! utilization independently. `ScheduleContext` replaces both: the
+//! coordinator assembles it once per decision point and every
+//! consumer reads through the same lens.
+
+use crate::cluster::{Cluster, HostId, VmId};
+use crate::profile::HistoryStore;
+use crate::sched::consolidation::VmContext;
+use crate::sim::telemetry::HostSample;
+use crate::sim::Telemetry;
+use std::collections::BTreeMap;
+
+/// Read-only decision context. Optional layers (telemetry, history,
+/// per-VM context) degrade gracefully: helpers fall back to
+/// instantaneous cluster state when a layer is absent, so unit tests
+/// can build a context from a cluster alone.
+pub struct ScheduleContext<'a> {
+    /// Simulation clock (seconds).
+    pub now: f64,
+    /// Cluster state: hosts, VMs, reservations.
+    pub cluster: &'a Cluster,
+    /// Telemetry rings (sustained-utilization windows).
+    pub telemetry: Option<&'a Telemetry>,
+    /// Execution history (Eq. 1 profiles of recurring kinds).
+    pub history: Option<&'a HistoryStore>,
+    /// Per-VM runtime context (profiles, remaining work, SLA slack)
+    /// for control loops that plan migrations.
+    pub vm_ctx: Option<&'a BTreeMap<VmId, VmContext>>,
+}
+
+impl<'a> ScheduleContext<'a> {
+    pub fn new(now: f64, cluster: &'a Cluster) -> ScheduleContext<'a> {
+        ScheduleContext {
+            now,
+            cluster,
+            telemetry: None,
+            history: None,
+            vm_ctx: None,
+        }
+    }
+
+    pub fn with_telemetry(mut self, telemetry: &'a Telemetry) -> ScheduleContext<'a> {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
+    pub fn with_history(mut self, history: &'a HistoryStore) -> ScheduleContext<'a> {
+        self.history = Some(history);
+        self
+    }
+
+    pub fn with_vm_ctx(mut self, vm_ctx: &'a BTreeMap<VmId, VmContext>) -> ScheduleContext<'a> {
+        self.vm_ctx = Some(vm_ctx);
+        self
+    }
+
+    /// Runtime context of one VM, if the coordinator provided it.
+    pub fn vm_context(&self, vm: VmId) -> Option<&'a VmContext> {
+        self.vm_ctx.and_then(|m| m.get(&vm))
+    }
+
+    /// The most recent `n` telemetry samples for a host (oldest →
+    /// newest); empty when no telemetry layer is attached.
+    pub fn host_window(&self, host: HostId, n: usize) -> Vec<HostSample> {
+        self.telemetry
+            .map(|t| t.hosts[host.0].last_n(n))
+            .unwrap_or_default()
+    }
+
+    /// Sustained CPU utilization of a host over the last `n` samples,
+    /// falling back to the instantaneous reading when the window is
+    /// empty (campaign start, or no telemetry attached).
+    pub fn sustained_cpu(&self, host: HostId, n: usize) -> f64 {
+        let w = self.host_window(host, n);
+        if w.is_empty() {
+            self.cluster.host(host).utilization().cpu
+        } else {
+            w.iter().map(|s| s.util.cpu).sum::<f64>() / w.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Demand;
+
+    #[test]
+    fn bare_context_falls_back_to_instantaneous() {
+        let mut c = Cluster::homogeneous(2);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 16.0,
+            mem_gb: 8.0,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        };
+        let ctx = ScheduleContext::new(10.0, &c);
+        assert!(ctx.host_window(HostId(0), 12).is_empty());
+        assert!((ctx.sustained_cpu(HostId(0), 12) - 0.5).abs() < 1e-9);
+        assert_eq!(ctx.sustained_cpu(HostId(1), 12), 0.0);
+        assert!(ctx.vm_context(VmId(0)).is_none());
+    }
+
+    #[test]
+    fn telemetry_window_feeds_sustained_cpu() {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 8.0,
+            mem_gb: 4.0,
+            disk_mbps: 0.0,
+            net_mbps: 0.0,
+        };
+        let mut t = Telemetry::new(1, 1, 0.0);
+        let demands = BTreeMap::new();
+        for k in 1..=6 {
+            t.sample(k as f64 * 5.0, &c, &demands);
+        }
+        let ctx = ScheduleContext::new(30.0, &c).with_telemetry(&t);
+        assert_eq!(ctx.host_window(HostId(0), 4).len(), 4);
+        assert!((ctx.sustained_cpu(HostId(0), 6) - 0.25).abs() < 1e-9);
+    }
+}

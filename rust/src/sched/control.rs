@@ -1,0 +1,47 @@
+//! Unified periodic control loops (§III-C's adaptive consolidation
+//! and DVFS, plus any future loop — e.g. carbon-aware capping).
+//!
+//! A [`ControlLoop`] observes the [`ScheduleContext`] on the
+//! coordinator's scan cadence and emits [`ControlAction`]s; the
+//! coordinator actuates them. Loops that score candidate placements
+//! (consolidation's migration targets) borrow the placement policy's
+//! prediction engine through an explicit [`ScoringHandle`] — the
+//! replacement for the old `as_energy_aware()` downcast hack.
+
+use crate::cluster::{HostId, VmId};
+use crate::predict::EnergyPredictor;
+use crate::sched::ScheduleContext;
+
+/// One actuation a control loop requests from the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControlAction {
+    /// Live-migrate a VM to a new host.
+    Migrate { vm: VmId, to: HostId },
+    /// Power a (necessarily empty) host down.
+    PowerOff(HostId),
+    /// Set a host's DVFS point.
+    SetFreq { host: HostId, freq: f64 },
+}
+
+/// Borrowed access to the placement policy's prediction engine, lent
+/// to control loops for the duration of one scan. Explicit and
+/// object-safe: no `Any`-style downcasting anywhere in `sched`.
+pub type ScoringHandle<'a> = &'a mut dyn EnergyPredictor;
+
+/// A periodic datacenter control loop.
+///
+/// `scan` is pure planning — implementations must not assume their
+/// actions are actuated (the coordinator re-validates each one
+/// against live cluster state before applying it).
+pub trait ControlLoop {
+    fn name(&self) -> &'static str;
+
+    /// One scan pass: observe the context, plan actions. `scoring` is
+    /// the placement policy's predictor when it has one; loops that
+    /// need predictions should plan nothing without it.
+    fn scan(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        scoring: Option<ScoringHandle<'_>>,
+    ) -> Vec<ControlAction>;
+}

@@ -3,9 +3,12 @@
 //! looks at sustained CPU vs I/O utilization and picks a p-state:
 //! hosts doing I/O with an idle-ish CPU clock down; hosts with real
 //! CPU demand stay at full frequency. Hysteresis prevents flapping.
+//!
+//! Runs as a [`ControlLoop`] on the coordinator's scan cadence; it
+//! needs no predictor, so it ignores the scoring handle.
 
-use crate::cluster::{Cluster, HostId};
-use crate::sim::Telemetry;
+use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
+use crate::sched::ScheduleContext;
 
 #[derive(Debug, Clone, Copy)]
 pub struct DvfsParams {
@@ -30,13 +33,6 @@ impl Default for DvfsParams {
     }
 }
 
-/// Frequency change directive.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct SetFreq {
-    pub host: HostId,
-    pub freq: f64,
-}
-
 #[derive(Debug, Default)]
 pub struct DvfsGovernor {
     pub params: DvfsParams,
@@ -46,15 +42,25 @@ impl DvfsGovernor {
     pub fn new(params: DvfsParams) -> DvfsGovernor {
         DvfsGovernor { params }
     }
+}
 
-    pub fn scan(&self, cluster: &Cluster, telemetry: &Telemetry) -> Vec<SetFreq> {
+impl ControlLoop for DvfsGovernor {
+    fn name(&self) -> &'static str {
+        "dvfs"
+    }
+
+    fn scan(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        _scoring: Option<ScoringHandle<'_>>,
+    ) -> Vec<ControlAction> {
+        let cluster = ctx.cluster;
         let mut out = Vec::new();
         for host in &cluster.hosts {
             if !host.state.is_on() {
                 continue;
             }
-            let ring = &telemetry.hosts[host.id.0];
-            let last = ring.last_n(self.params.window_samples);
+            let last = ctx.host_window(host.id, self.params.window_samples);
             if last.is_empty() {
                 continue;
             }
@@ -78,7 +84,7 @@ impl DvfsGovernor {
                     || cpu_full_clock > self.params.cpu_restore * host.freq
                     || expected_cpu > self.params.cpu_low)
             {
-                out.push(SetFreq {
+                out.push(ControlAction::SetFreq {
                     host: host.id,
                     freq: 1.0,
                 });
@@ -94,7 +100,7 @@ impl DvfsGovernor {
                 } else {
                     0.7
                 };
-                out.push(SetFreq {
+                out.push(ControlAction::SetFreq {
                     host: host.id,
                     freq: target,
                 });
@@ -107,7 +113,8 @@ impl DvfsGovernor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Demand;
+    use crate::cluster::{Cluster, Demand, HostId};
+    use crate::sim::Telemetry;
     use std::collections::BTreeMap;
 
     fn telemetry_for(cluster: &Cluster, n_hosts: usize) -> Telemetry {
@@ -116,6 +123,11 @@ mod tests {
             t.sample(k as f64 * 5.0, cluster, &BTreeMap::new());
         }
         t
+    }
+
+    fn scan(gov: &mut DvfsGovernor, c: &Cluster, t: &Telemetry) -> Vec<ControlAction> {
+        let ctx = ScheduleContext::new(100.0, c).with_telemetry(t);
+        gov.scan(&ctx, None)
     }
 
     #[test]
@@ -128,10 +140,14 @@ mod tests {
             net_mbps: 20.0,
         };
         let t = telemetry_for(&c, 1);
-        let gov = DvfsGovernor::new(DvfsParams::default());
-        let actions = gov.scan(&c, &t);
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        let actions = scan(&mut gov, &c, &t);
         assert_eq!(actions.len(), 1);
-        assert!(actions[0].freq < 1.0);
+        assert!(matches!(
+            actions[0],
+            ControlAction::SetFreq { freq, .. } if freq < 1.0
+        ));
+        assert_eq!(gov.name(), "dvfs");
     }
 
     #[test]
@@ -144,8 +160,8 @@ mod tests {
             net_mbps: 20.0,
         };
         let t = telemetry_for(&c, 1);
-        let gov = DvfsGovernor::new(DvfsParams::default());
-        assert!(gov.scan(&c, &t).is_empty());
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        assert!(scan(&mut gov, &c, &t).is_empty());
     }
 
     #[test]
@@ -154,8 +170,8 @@ mod tests {
         // (power-down is consolidation's job, not DVFS's).
         let c = Cluster::homogeneous(1);
         let t = telemetry_for(&c, 1);
-        let gov = DvfsGovernor::new(DvfsParams::default());
-        assert!(gov.scan(&c, &t).is_empty());
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        assert!(scan(&mut gov, &c, &t).is_empty());
     }
 
     #[test]
@@ -169,11 +185,11 @@ mod tests {
             net_mbps: 20.0,
         };
         let t = telemetry_for(&c, 1);
-        let gov = DvfsGovernor::new(DvfsParams::default());
-        let actions = gov.scan(&c, &t);
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        let actions = scan(&mut gov, &c, &t);
         assert_eq!(
             actions,
-            vec![SetFreq {
+            vec![ControlAction::SetFreq {
                 host: HostId(0),
                 freq: 1.0
             }]
@@ -186,7 +202,16 @@ mod tests {
         c.host_mut(HostId(0)).power_off(0.0);
         c.advance_power_states(100.0);
         let t = telemetry_for(&c, 1);
-        let gov = DvfsGovernor::new(DvfsParams::default());
-        assert!(gov.scan(&c, &t).is_empty());
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        assert!(scan(&mut gov, &c, &t).is_empty());
+    }
+
+    #[test]
+    fn no_telemetry_means_no_actions() {
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).demand.disk_mbps = 600.0;
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        let ctx = ScheduleContext::new(0.0, &c);
+        assert!(gov.scan(&ctx, None).is_empty());
     }
 }

@@ -14,11 +14,18 @@
 //! slack. If no powered-on host qualifies, it asks for a powered-off
 //! host (paying the boot-energy transient in the objective) rather
 //! than violating Eq. 7.
+//!
+//! Batching: `decide_batch` assembles the feature rows of *every*
+//! (request, candidate-host) pair into one matrix and issues a single
+//! predictor call — the shape the L1 `score_hosts` kernel executes as
+//! one (B × 16)·(16 × 64)·(64 × 32)·(32 × 2) pipeline. Per-row
+//! results are independent of batch composition (dense per-row math),
+//! so batched decisions are bit-identical to the sequential loop.
 
 use crate::cluster::{Cluster, HostId};
-use crate::predict::EnergyPredictor;
-use crate::profile::build_features;
+use crate::predict::{EnergyPredictor, Prediction};
 use crate::sched::policy::{powered_off, Decision, PlacementPolicy, PlacementRequest};
+use crate::sched::{ScheduleContext, ScoringHandle};
 
 /// Tunables (defaults follow §III-C and the SLA slack of §V-B).
 #[derive(Debug, Clone, Copy)]
@@ -56,9 +63,13 @@ impl Default for EnergyAwareParams {
 pub struct EnergyAware {
     pub predictor: Box<dyn EnergyPredictor>,
     pub params: EnergyAwareParams,
-    /// Scratch buffers (no allocation per decision on the hot path).
+    /// Scratch buffers reused across decisions (the only per-call
+    /// allocation is the predictor's output vector): the flattened
+    /// candidate list and feature matrix for the whole batch, plus
+    /// per-request `[start, end)` spans into them.
     feats: Vec<[f32; crate::profile::FEAT_DIM]>,
     cands: Vec<HostId>,
+    spans: Vec<(usize, usize)>,
 }
 
 impl EnergyAware {
@@ -68,18 +79,14 @@ impl EnergyAware {
             params,
             feats: Vec::new(),
             cands: Vec::new(),
+            spans: Vec::new(),
         }
     }
 
-    /// Score all candidates and pick argmin of predicted energy.
-    /// Returns (host, predicted energy J, predicted slowdown).
-    fn best_candidate(
-        &mut self,
-        req: &PlacementRequest,
-        cluster: &Cluster,
-    ) -> Option<(HostId, f64, f64)> {
-        self.feats.clear();
-        self.cands.clear();
+    /// Append this request's SLA-safe candidate hosts (and their
+    /// feature rows) to the scratch buffers; returns the span.
+    fn gather_candidates(&mut self, req: &PlacementRequest, cluster: &Cluster) -> (usize, usize) {
+        let start = self.cands.len();
         for host in &cluster.hosts {
             if !host.fits(&req.flavor, cluster.reserved(host.id)) {
                 continue;
@@ -118,31 +125,40 @@ impl EnergyAware {
                 host.freq,
             ));
         }
-        if self.cands.is_empty() {
-            return None;
-        }
-        let preds = self.predictor.predict(&self.feats);
-        let mut best: Option<(HostId, f64, f64)> = None;
-        for (i, p) in preds.iter().enumerate() {
+        (start, self.cands.len())
+    }
+
+    /// Argmin of predicted energy-to-completion over one request's
+    /// candidate span `[start, end)`, honoring the Eq. 7 guard.
+    fn argmin_energy(
+        &self,
+        req: &PlacementRequest,
+        cluster: &Cluster,
+        preds: &[Prediction],
+        start: usize,
+        end: usize,
+    ) -> Option<HostId> {
+        let mut best: Option<(HostId, f64)> = None;
+        for k in start..end {
+            let p = &preds[k];
             if p.slowdown > self.params.max_slowdown {
                 continue; // Eq. 7 predictive guard
             }
             // Eq. 6 minimizes *total* cluster energy, not marginal
-            // power: under the linear Eq. 5 model the marginal draw of
-            // a placement is nearly host-independent, and the real
+            // power: under the linear Eq. 5 model the marginal draw
+            // of a placement is nearly host-independent, and the real
             // lever is the idle floor of hosts kept on. Charge each
             // candidate an amortized share of its host's idle power —
             // an empty host carries the full P_idle for this job's
             // duration, a busy host's floor is already paid for.
-            let host = cluster.host(self.cands[i]);
+            let host = cluster.host(self.cands[k]);
             let idle_share = host.spec.power.p_idle / (host.vms.len() as f64 + 1.0);
-            let energy =
-                (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown);
-            if best.map(|(_, e, _)| energy < e).unwrap_or(true) {
-                best = Some((self.cands[i], energy, p.slowdown));
+            let energy = (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown);
+            if best.map(|(_, e)| energy < e).unwrap_or(true) {
+                best = Some((self.cands[k], energy));
             }
         }
-        best
+        best.map(|(host, _)| host)
     }
 }
 
@@ -151,24 +167,84 @@ impl PlacementPolicy for EnergyAware {
         "energy_aware"
     }
 
-    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
-        if let Some((host, _energy, _s)) = self.best_candidate(req, cluster) {
-            return Decision::Place(host);
+    /// Single-request fast path: same gather → predict → argmin as
+    /// the batch, without materializing a decision vector.
+    fn decide(&mut self, req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision {
+        let cluster = ctx.cluster;
+        self.feats.clear();
+        self.cands.clear();
+        self.spans.clear();
+        let (start, end) = self.gather_candidates(req, cluster);
+        let preds = if self.feats.is_empty() {
+            Vec::new()
+        } else {
+            self.predictor.predict(&self.feats)
+        };
+        match self.argmin_energy(req, cluster, &preds, start, end) {
+            Some(host) => Decision::Place(host),
+            // No SLA-safe powered-on host: boot one rather than
+            // violate Eq. 7 (capacity beats consolidation when they
+            // conflict).
+            None => match powered_off(cluster).first().copied() {
+                Some(h) => Decision::PowerOnAndPlace(h),
+                None => Decision::Defer,
+            },
         }
-        // No SLA-safe powered-on host: boot one rather than violate
-        // Eq. 7 (capacity beats consolidation when they conflict).
-        if let Some(&h) = powered_off(cluster).first() {
-            return Decision::PowerOnAndPlace(h);
+    }
+
+    /// Native batched path: one predictor invocation scores the full
+    /// (pending requests × feasible hosts) feature matrix.
+    fn decide_batch(
+        &mut self,
+        reqs: &[PlacementRequest],
+        ctx: &ScheduleContext<'_>,
+    ) -> Vec<Decision> {
+        let cluster = ctx.cluster;
+        self.feats.clear();
+        self.cands.clear();
+        self.spans.clear();
+        for req in reqs {
+            let span = self.gather_candidates(req, cluster);
+            self.spans.push(span);
         }
-        Decision::Defer
+        let preds = if self.feats.is_empty() {
+            Vec::new()
+        } else {
+            self.predictor.predict(&self.feats)
+        };
+        // Boot fallback: the first powered-off host, identical for
+        // every request in the frozen context (the coordinator
+        // re-decides duplicate boot requests against the live
+        // cluster, spreading them across hosts). Computed lazily —
+        // the common all-candidates-placeable case never pays the
+        // host scan.
+        let mut boot: Option<Option<HostId>> = None;
+        let mut out = Vec::with_capacity(reqs.len());
+        for (req, &(start, end)) in reqs.iter().zip(&self.spans) {
+            out.push(match self.argmin_energy(req, cluster, &preds, start, end) {
+                Some(host) => Decision::Place(host),
+                // No SLA-safe powered-on host: boot one rather than
+                // violate Eq. 7 (capacity beats consolidation when
+                // they conflict).
+                None => {
+                    let fallback =
+                        *boot.get_or_insert_with(|| powered_off(cluster).first().copied());
+                    match fallback {
+                        Some(h) => Decision::PowerOnAndPlace(h),
+                        None => Decision::Defer,
+                    }
+                }
+            });
+        }
+        out
     }
 
     fn wants_consolidation(&self) -> bool {
         true
     }
 
-    fn as_energy_aware(&mut self) -> Option<&mut EnergyAware> {
-        Some(self)
+    fn scoring_handle(&mut self) -> Option<ScoringHandle<'_>> {
+        Some(self.predictor.as_mut())
     }
 }
 
@@ -183,6 +259,11 @@ mod tests {
 
     fn policy() -> EnergyAware {
         EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default())
+    }
+
+    fn decide(p: &mut EnergyAware, req: &PlacementRequest, c: &Cluster) -> Decision {
+        let ctx = ScheduleContext::new(0.0, c);
+        p.decide(req, &ctx)
     }
 
     fn io_req() -> PlacementRequest {
@@ -230,7 +311,7 @@ mod tests {
             net_mbps: 40.0,
         };
         let mut p = policy();
-        assert_eq!(p.decide(&io_req(), &c), Decision::Place(HostId(0)));
+        assert_eq!(decide(&mut p, &io_req(), &c), Decision::Place(HostId(0)));
     }
 
     use crate::cluster::HostId;
@@ -247,7 +328,7 @@ mod tests {
             net_mbps: 0.0,
         };
         let mut p = policy();
-        assert_eq!(p.decide(&cpu_req(), &c), Decision::Place(HostId(1)));
+        assert_eq!(decide(&mut p, &cpu_req(), &c), Decision::Place(HostId(1)));
     }
 
     #[test]
@@ -262,7 +343,7 @@ mod tests {
         let mut p = policy();
         // Even an I/O job (which would suffer no slowdown) is kept off
         // the hot host by Eq. 9.
-        assert_eq!(p.decide(&io_req(), &c), Decision::Place(HostId(1)));
+        assert_eq!(decide(&mut p, &io_req(), &c), Decision::Place(HostId(1)));
     }
 
     #[test]
@@ -281,7 +362,7 @@ mod tests {
         c.advance_power_states(100.0);
         let mut p = policy();
         assert_eq!(
-            p.decide(&cpu_req(), &c),
+            decide(&mut p, &cpu_req(), &c),
             Decision::PowerOnAndPlace(HostId(2))
         );
     }
@@ -295,7 +376,7 @@ mod tests {
         }
         let mut p = policy();
         // Memory is fully reserved and no off host exists.
-        assert_eq!(p.decide(&io_req(), &c), Decision::Defer);
+        assert_eq!(decide(&mut p, &io_req(), &c), Decision::Defer);
         assert!(p.wants_consolidation());
     }
 
@@ -313,7 +394,44 @@ mod tests {
             net_mbps: 40.0,
         };
         let mut p = policy();
-        let d = p.decide(&io_req(), &c);
+        let d = decide(&mut p, &io_req(), &c);
         assert_eq!(d, Decision::Place(HostId(0)));
+    }
+
+    #[test]
+    fn batch_matches_sequential_loop_bit_for_bit() {
+        let mut c = Cluster::homogeneous(3);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 10.0,
+            mem_gb: 20.0,
+            disk_mbps: 300.0,
+            net_mbps: 50.0,
+        };
+        c.host_mut(HostId(1)).demand = Demand {
+            cpu: 24.0,
+            mem_gb: 8.0,
+            disk_mbps: 50.0,
+            net_mbps: 10.0,
+        };
+        let reqs: Vec<PlacementRequest> = (0..6)
+            .map(|i| {
+                let mut r = if i % 2 == 0 { io_req() } else { cpu_req() };
+                r.job = JobId(i as u64);
+                r.remaining_solo = 120.0 + 97.0 * i as f64;
+                r
+            })
+            .collect();
+        let ctx = ScheduleContext::new(0.0, &c);
+        let batch = policy().decide_batch(&reqs, &ctx);
+        let mut seq_policy = policy();
+        let seq: Vec<Decision> = reqs.iter().map(|r| seq_policy.decide(r, &ctx)).collect();
+        assert_eq!(batch, seq);
+    }
+
+    #[test]
+    fn scoring_handle_exposes_predictor() {
+        let mut p = policy();
+        let handle = p.scoring_handle().expect("energy-aware has a predictor");
+        assert_eq!(handle.name(), "oracle");
     }
 }

@@ -2,8 +2,8 @@
 //! classic bin-packing baseline — denser than round-robin but blind to
 //! workload behaviour and energy.
 
-use crate::cluster::Cluster;
 use crate::sched::policy::{Decision, PlacementPolicy, PlacementRequest};
+use crate::sched::ScheduleContext;
 
 #[derive(Debug, Default)]
 pub struct FirstFit;
@@ -13,9 +13,9 @@ impl PlacementPolicy for FirstFit {
         "first_fit"
     }
 
-    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
-        for host in &cluster.hosts {
-            if host.fits(&req.flavor, cluster.reserved(host.id)) {
+    fn decide(&mut self, req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision {
+        for host in &ctx.cluster.hosts {
+            if host.fits(&req.flavor, ctx.cluster.reserved(host.id)) {
                 return Decision::Place(host.id);
             }
         }
@@ -27,7 +27,7 @@ impl PlacementPolicy for FirstFit {
 mod tests {
     use super::*;
     use crate::cluster::flavor::{LARGE, MEDIUM};
-    use crate::cluster::HostId;
+    use crate::cluster::{Cluster, HostId};
     use crate::profile::ResourceVector;
     use crate::workload::JobId;
 
@@ -40,17 +40,21 @@ mod tests {
         }
     }
 
+    fn decide(p: &mut FirstFit, req: &PlacementRequest, c: &Cluster) -> Decision {
+        p.decide(req, &ScheduleContext::new(0.0, c))
+    }
+
     #[test]
     fn packs_first_host_until_full() {
         let mut c = Cluster::homogeneous(2);
         let mut ff = FirstFit;
         // MEDIUM = 16 GB → 4 fit in 64 GB.
         for _ in 0..4 {
-            assert_eq!(ff.decide(&req(), &c), Decision::Place(HostId(0)));
+            assert_eq!(decide(&mut ff, &req(), &c), Decision::Place(HostId(0)));
             let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
             c.place_vm(vm, HostId(0)).unwrap();
         }
-        assert_eq!(ff.decide(&req(), &c), Decision::Place(HostId(1)));
+        assert_eq!(decide(&mut ff, &req(), &c), Decision::Place(HostId(1)));
     }
 
     #[test]
@@ -65,6 +69,6 @@ mod tests {
             flavor: LARGE,
             ..req()
         };
-        assert_eq!(ff.decide(&r, &c), Decision::Defer);
+        assert_eq!(decide(&mut ff, &r, &c), Decision::Defer);
     }
 }

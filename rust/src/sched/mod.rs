@@ -1,9 +1,22 @@
-//! Scheduling policies (§III-C): the energy-aware predictive scheduler
-//! (Eqs. 6–9), the round-robin baseline (§IV-E), classic bin-packing
-//! baselines, adaptive consolidation, and the DVFS governor.
+//! Scheduling layer (§III-C): the batch-first placement API and the
+//! unified periodic control loops.
+//!
+//! * [`ScheduleContext`] — one read-only view (cluster + telemetry
+//!   window + history + sim clock) every decision consults.
+//! * [`PlacementPolicy`] — batch-first placement: `decide_batch`
+//!   scores a whole submit burst against one frozen context; the
+//!   energy-aware policy runs it as a single predictor call over the
+//!   full (request × host) feature matrix.
+//! * [`ControlLoop`] — the periodic scans (adaptive consolidation,
+//!   DVFS governor) behind one trait, borrowing the policy's
+//!   predictor through an explicit [`ScoringHandle`].
+//! * Policies: the energy-aware predictive scheduler (Eqs. 6–9), the
+//!   round-robin baseline (§IV-E), and classic bin-packing baselines.
 
 pub mod best_fit;
 pub mod consolidation;
+pub mod context;
+pub mod control;
 pub mod dvfs;
 pub mod energy_aware;
 pub mod first_fit;
@@ -11,8 +24,10 @@ pub mod policy;
 pub mod round_robin;
 
 pub use best_fit::BestFit;
-pub use consolidation::{Action, ConsolidationParams, Consolidator, VmContext};
-pub use dvfs::{DvfsGovernor, DvfsParams, SetFreq};
+pub use consolidation::{ConsolidationParams, Consolidator, VmContext};
+pub use context::ScheduleContext;
+pub use control::{ControlAction, ControlLoop, ScoringHandle};
+pub use dvfs::{DvfsGovernor, DvfsParams};
 pub use energy_aware::{EnergyAware, EnergyAwareParams};
 pub use first_fit::FirstFit;
 pub use policy::{Decision, PlacementPolicy, PlacementRequest};

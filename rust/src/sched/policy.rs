@@ -1,8 +1,16 @@
-//! Placement-policy interface: given a profiled workload and the
-//! cluster state, choose a host (or ask for capacity).
+//! Placement-policy interface: given profiled workloads and the
+//! scheduling context, choose hosts (or ask for capacity).
+//!
+//! The interface is batch-first: the coordinator hands every submit
+//! burst and deferred-queue drain to [`PlacementPolicy::decide_batch`]
+//! against one frozen [`ScheduleContext`]. Policies with a learned
+//! predictor override it to score the full (request × candidate-host)
+//! feature matrix in a single predictor call — the shape the L1
+//! `score_hosts` Pallas kernel is built for.
 
 use crate::cluster::{Cluster, Flavor, HostId};
 use crate::profile::ResourceVector;
+use crate::sched::{ScheduleContext, ScoringHandle};
 use crate::workload::JobId;
 
 /// Everything a policy may consult about the workload being placed.
@@ -33,19 +41,31 @@ pub enum Decision {
 pub trait PlacementPolicy {
     fn name(&self) -> &'static str;
 
-    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision;
+    /// Decide placement for a single request.
+    fn decide(&mut self, req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision;
 
-    /// Whether this policy wants the consolidation loop active
-    /// (the baseline round-robin runs without it, §IV-E).
+    /// Decide a whole batch against the same frozen context. The
+    /// default is the sequential loop; native implementations must be
+    /// decision-equivalent to it — bit-identical output on the same
+    /// `(reqs, ctx)` — which the batch-API tests assert.
+    fn decide_batch(
+        &mut self,
+        reqs: &[PlacementRequest],
+        ctx: &ScheduleContext<'_>,
+    ) -> Vec<Decision> {
+        reqs.iter().map(|req| self.decide(req, ctx)).collect()
+    }
+
+    /// Whether this policy wants the periodic control loops active
+    /// (the baseline round-robin runs without them, §IV-E).
     fn wants_consolidation(&self) -> bool {
         false
     }
 
-    /// Access to the policy's prediction engine, if it has one — the
-    /// consolidation scan reuses it to score migration targets. (Rust
-    /// trait objects have no downcasting without `Any`; this keeps the
-    /// coupling explicit and object-safe.)
-    fn as_energy_aware(&mut self) -> Option<&mut crate::sched::EnergyAware> {
+    /// The policy's prediction engine, if it has one — control loops
+    /// borrow it through this handle to score migration targets.
+    /// Object-safe and explicit; no downcasting.
+    fn scoring_handle(&mut self) -> Option<ScoringHandle<'_>> {
         None
     }
 }
@@ -80,5 +100,47 @@ mod tests {
             vec![HostId(0), HostId(1)]
         );
         assert_eq!(powered_off(&c), vec![HostId(2)]);
+    }
+
+    #[test]
+    fn default_decide_batch_is_the_sequential_loop() {
+        // A policy whose decisions depend on internal mutable state:
+        // the default decide_batch must advance that state exactly as
+        // the sequential loop would.
+        struct Cycler {
+            next: usize,
+        }
+        impl PlacementPolicy for Cycler {
+            fn name(&self) -> &'static str {
+                "cycler"
+            }
+            fn decide(&mut self, _req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision {
+                let n = ctx.cluster.n_hosts();
+                let h = HostId(self.next % n);
+                self.next += 1;
+                Decision::Place(h)
+            }
+        }
+        let c = Cluster::homogeneous(2);
+        let ctx = ScheduleContext::new(0.0, &c);
+        let req = PlacementRequest {
+            job: crate::workload::JobId(0),
+            flavor: MEDIUM,
+            vector: ResourceVector::default(),
+            remaining_solo: 10.0,
+        };
+        let reqs = vec![req.clone(), req.clone(), req];
+        let batch = Cycler { next: 0 }.decide_batch(&reqs, &ctx);
+        let mut seq_policy = Cycler { next: 0 };
+        let seq: Vec<Decision> = reqs.iter().map(|r| seq_policy.decide(r, &ctx)).collect();
+        assert_eq!(batch, seq);
+        assert_eq!(
+            batch,
+            vec![
+                Decision::Place(HostId(0)),
+                Decision::Place(HostId(1)),
+                Decision::Place(HostId(0)),
+            ]
+        );
     }
 }

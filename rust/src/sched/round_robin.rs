@@ -3,8 +3,8 @@
 //! characteristics" (§IV-E). It never powers hosts down and never
 //! consolidates; it skips hosts that cannot fit the flavor.
 
-use crate::cluster::Cluster;
 use crate::sched::policy::{Decision, PlacementPolicy, PlacementRequest};
+use crate::sched::ScheduleContext;
 
 #[derive(Debug, Default)]
 pub struct RoundRobin {
@@ -16,7 +16,8 @@ impl PlacementPolicy for RoundRobin {
         "round_robin"
     }
 
-    fn decide(&mut self, req: &PlacementRequest, cluster: &Cluster) -> Decision {
+    fn decide(&mut self, req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision {
+        let cluster = ctx.cluster;
         let n = cluster.n_hosts();
         for k in 0..n {
             let idx = (self.next + k) % n;
@@ -34,7 +35,7 @@ impl PlacementPolicy for RoundRobin {
 mod tests {
     use super::*;
     use crate::cluster::flavor::{LARGE, MEDIUM};
-    use crate::cluster::HostId;
+    use crate::cluster::{Cluster, HostId};
     use crate::profile::ResourceVector;
     use crate::workload::JobId;
 
@@ -47,12 +48,16 @@ mod tests {
         }
     }
 
+    fn decide(p: &mut RoundRobin, req: &PlacementRequest, c: &Cluster) -> Decision {
+        p.decide(req, &ScheduleContext::new(0.0, c))
+    }
+
     #[test]
     fn cycles_across_hosts() {
         let mut c = Cluster::homogeneous(3);
         let mut rr = RoundRobin::default();
         let seq: Vec<Decision> = (0..6).map(|_| {
-            let d = rr.decide(&req(MEDIUM), &c);
+            let d = decide(&mut rr, &req(MEDIUM), &c);
             if let Decision::Place(h) = d {
                 let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
                 c.place_vm(vm, h).unwrap();
@@ -81,7 +86,7 @@ mod tests {
             c.place_vm(vm, HostId(0)).unwrap();
         }
         let mut rr = RoundRobin::default();
-        assert_eq!(rr.decide(&req(LARGE), &c), Decision::Place(HostId(1)));
+        assert_eq!(decide(&mut rr, &req(LARGE), &c), Decision::Place(HostId(1)));
     }
 
     #[test]
@@ -92,7 +97,7 @@ mod tests {
             c.place_vm(vm, HostId(0)).unwrap();
         }
         let mut rr = RoundRobin::default();
-        assert_eq!(rr.decide(&req(LARGE), &c), Decision::Defer);
+        assert_eq!(decide(&mut rr, &req(LARGE), &c), Decision::Defer);
         assert!(!rr.wants_consolidation());
     }
 }

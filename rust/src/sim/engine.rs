@@ -100,6 +100,13 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// The next event (time + payload) without popping — the
+    /// coordinator uses this to coalesce same-instant submit bursts
+    /// into one batched placement decision.
+    pub fn peek(&self) -> Option<(f64, &E)> {
+        self.heap.peek().map(|e| (e.time, &e.event))
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -168,6 +175,18 @@ mod tests {
         assert_eq!(q.now(), 0.0);
         assert_eq!(q.len(), 1);
         assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn peek_sees_the_fifo_head() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "second");
+        q.push(0.5, "first");
+        assert_eq!(q.peek(), Some((0.5, &"first")));
+        q.pop();
+        assert_eq!(q.peek(), Some((1.0, &"second")));
+        q.pop();
+        assert_eq!(q.peek(), None);
     }
 
     #[test]

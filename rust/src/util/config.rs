@@ -126,11 +126,18 @@ pub struct Config {
     pub arrays: BTreeMap<String, Vec<Table>>,
 }
 
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("config error: {msg}")]
+#[derive(Debug, Clone)]
 pub struct ConfigError {
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl ConfigError {
     fn new(msg: impl Into<String>) -> Self {

@@ -1,0 +1,360 @@
+//! Tests for the batched scheduling API: `decide_batch` must be
+//! decision-equivalent (bit-identical) to the sequential `decide`
+//! loop on a frozen context, the energy-aware policy must score a
+//! whole burst through ONE predictor invocation, and the unified
+//! `ControlLoop` trait must preserve the consolidation safety rails
+//! (single-donor evacuation, `min_hosts_on`, the migration-ceiling
+//! gate).
+
+use ecosched::cluster::{Cluster, Demand, HostId, VmId};
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::predict::{oracle_eval, EnergyPredictor, Prediction};
+use ecosched::profile::{ResourceVector, FEAT_DIM};
+use ecosched::sched::{
+    ConsolidationParams, Consolidator, ControlAction, ControlLoop, Decision, DvfsGovernor,
+    DvfsParams, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest,
+    ScheduleContext, VmContext,
+};
+use ecosched::sim::Telemetry;
+use ecosched::workload::{flavor_for, Arrivals, JobId, Mix, TraceSpec};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Placement requests captured from a fixed-seed campaign trace.
+fn requests(n: usize, seed: u64) -> Vec<PlacementRequest> {
+    TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: n,
+        arrivals: Arrivals::Poisson { mean_gap: 30.0 },
+        horizon: 7200.0,
+    }
+    .generate(seed)
+    .iter()
+    .map(|job| {
+        let flavor = flavor_for(job.kind);
+        PlacementRequest {
+            job: job.id,
+            flavor,
+            vector: ResourceVector::from_phases(&job.phases, &flavor),
+            remaining_solo: job.solo_duration(),
+        }
+    })
+    .collect()
+}
+
+/// A few representative cluster states: idle, mixed load, one host
+/// hot + one powered off, and memory-saturated.
+fn cluster_states() -> Vec<Cluster> {
+    let idle = Cluster::homogeneous(4);
+
+    let mut mixed = Cluster::homogeneous(4);
+    for i in 0..4 {
+        mixed.host_mut(HostId(i)).demand = Demand {
+            cpu: (i as f64 * 7.0) % 26.0,
+            mem_gb: (i as f64 * 11.0) % 40.0,
+            disk_mbps: (i as f64 * 130.0) % 700.0,
+            net_mbps: (i as f64 * 23.0) % 90.0,
+        };
+    }
+    for i in 0..3 {
+        let vm = mixed.create_vm(
+            ecosched::cluster::flavor::MEDIUM,
+            JobId(100 + i as u64),
+            0.0,
+        );
+        mixed.place_vm(vm, HostId(i)).unwrap();
+    }
+
+    let mut hot_and_off = Cluster::homogeneous(4);
+    hot_and_off.host_mut(HostId(0)).demand.cpu = 30.0;
+    hot_and_off.host_mut(HostId(3)).power_off(0.0);
+    hot_and_off.advance_power_states(500.0);
+
+    let mut saturated = Cluster::homogeneous(2);
+    for h in 0..2 {
+        for k in 0..4 {
+            let vm = saturated.create_vm(
+                ecosched::cluster::flavor::MEDIUM,
+                JobId(200 + (h * 4 + k) as u64),
+                0.0,
+            );
+            saturated.place_vm(vm, HostId(h)).unwrap();
+        }
+    }
+
+    vec![idle, mixed, hot_and_off, saturated]
+}
+
+#[test]
+fn decide_batch_matches_sequential_for_every_policy() {
+    let reqs = requests(12, 42);
+    for state in cluster_states() {
+        let ctx = ScheduleContext::new(0.0, &state);
+        for name in ["round_robin", "first_fit", "best_fit", "energy_aware"] {
+            // Two fresh instances: stateful policies (round-robin's
+            // cursor) must advance identically along both paths.
+            let mut batched = make_policy(name).unwrap();
+            let mut sequential = make_policy(name).unwrap();
+            let batch = batched.decide_batch(&reqs, &ctx);
+            let seq: Vec<Decision> =
+                reqs.iter().map(|r| sequential.decide(r, &ctx)).collect();
+            assert_eq!(batch, seq, "policy {name} diverged");
+        }
+    }
+}
+
+/// Oracle-equivalent predictor that counts invocations and rows.
+struct CountingOracle {
+    calls: Rc<Cell<u64>>,
+    rows: Rc<Cell<u64>>,
+}
+
+impl EnergyPredictor for CountingOracle {
+    fn name(&self) -> &'static str {
+        "counting-oracle"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        self.calls.set(self.calls.get() + 1);
+        self.rows.set(self.rows.get() + feats.len() as u64);
+        feats.iter().map(oracle_eval).collect()
+    }
+}
+
+#[test]
+fn energy_aware_scores_a_burst_in_one_predictor_call() {
+    let reqs = requests(16, 7);
+    let cluster = Cluster::homogeneous(5);
+    let ctx = ScheduleContext::new(0.0, &cluster);
+
+    let calls = Rc::new(Cell::new(0u64));
+    let rows = Rc::new(Cell::new(0u64));
+    let mut policy = EnergyAware::new(
+        Box::new(CountingOracle {
+            calls: Rc::clone(&calls),
+            rows: Rc::clone(&rows),
+        }),
+        EnergyAwareParams::default(),
+    );
+    let decisions = policy.decide_batch(&reqs, &ctx);
+    assert_eq!(decisions.len(), reqs.len());
+    assert_eq!(calls.get(), 1, "batch must be ONE predictor invocation");
+    // All 5 hosts are feasible for every request on an idle cluster.
+    assert_eq!(rows.get(), (reqs.len() * 5) as u64);
+
+    // The sequential loop pays one invocation per request.
+    calls.set(0);
+    for r in &reqs {
+        policy.decide(r, &ctx);
+    }
+    assert_eq!(calls.get(), reqs.len() as u64);
+}
+
+#[test]
+fn batched_campaign_is_deterministic_and_completes() {
+    let run = || {
+        let trace = TraceSpec {
+            mix: Mix::paper(),
+            n_jobs: 12,
+            arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+            horizon: 3600.0,
+        }
+        .generate(21);
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed: 21,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        coord.run(trace)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.jobs.len(), 12);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.migrations, b.migrations);
+    let jct_a: Vec<f64> = a.jobs.iter().map(|j| j.jct).collect();
+    let jct_b: Vec<f64> = b.jobs.iter().map(|j| j.jct).collect();
+    assert_eq!(jct_a, jct_b);
+}
+
+#[test]
+fn simultaneous_submit_burst_places_every_job() {
+    // Batch arrivals: every job submits at t=0 — the whole trace goes
+    // through one decide_batch call and must still complete.
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: 10,
+        arrivals: Arrivals::Batch,
+        horizon: 3600.0,
+    }
+    .generate(5);
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            seed: 5,
+            ..Default::default()
+        },
+        make_policy("energy_aware").unwrap(),
+    );
+    let r = coord.run(trace);
+    assert_eq!(r.jobs.len(), 10, "all burst jobs must finish");
+    assert!(r.overhead.n_decisions >= 10);
+}
+
+// ---- ControlLoop safety rails under the unified trait ----
+
+fn vm_context() -> VmContext {
+    VmContext {
+        vector: ResourceVector {
+            cpu: 0.15,
+            mem: 0.4,
+            disk: 0.5,
+            net: 0.3,
+            cpu_peak: 0.2,
+            io_peak: 0.6,
+            burstiness: 0.1,
+        },
+        remaining_solo: 1500.0,
+        slack_left: 0.08,
+    }
+}
+
+/// Two lightly-loaded donors + one loaded receiver, with telemetry.
+fn two_donor_setup() -> (Cluster, BTreeMap<VmId, VmContext>, Telemetry) {
+    let mut c = Cluster::homogeneous(4);
+    let mut ctxs = BTreeMap::new();
+    for h in 0..3 {
+        let vm = c.create_vm(ecosched::cluster::flavor::MEDIUM, JobId(h as u64), 0.0);
+        c.place_vm(vm, HostId(h)).unwrap();
+        ctxs.insert(vm, vm_context());
+    }
+    // Hosts 0 and 1: donors far below δ_low. Host 2: healthy receiver.
+    for h in 0..2 {
+        c.host_mut(HostId(h)).demand = Demand {
+            cpu: 1.0,
+            mem_gb: 4.0,
+            disk_mbps: 40.0,
+            net_mbps: 10.0,
+        };
+    }
+    c.host_mut(HostId(2)).demand = Demand {
+        cpu: 12.0,
+        mem_gb: 14.0,
+        disk_mbps: 120.0,
+        net_mbps: 30.0,
+    };
+    let mut t = Telemetry::new(4, 1, 0.0);
+    for k in 1..=6 {
+        t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+    }
+    (c, ctxs, t)
+}
+
+#[test]
+fn control_loop_evacuates_at_most_one_donor_per_scan() {
+    let (c, ctxs, t) = two_donor_setup();
+    let mut cons = Consolidator::new(ConsolidationParams::default());
+    let mut pred = ecosched::predict::OraclePredictor;
+    let ctx = ScheduleContext::new(1000.0, &c)
+        .with_telemetry(&t)
+        .with_vm_ctx(&ctxs);
+    let actions = cons.scan(&ctx, Some(&mut pred));
+    let migrated_from: Vec<HostId> = actions
+        .iter()
+        .filter_map(|a| match a {
+            ControlAction::Migrate { vm, .. } => c.vms[vm].host,
+            _ => None,
+        })
+        .collect();
+    assert!(
+        !migrated_from.is_empty(),
+        "expected an evacuation: {actions:?}"
+    );
+    let first = migrated_from[0];
+    assert!(
+        migrated_from.iter().all(|&h| h == first),
+        "migrations must come from ONE donor per scan: {actions:?}"
+    );
+}
+
+#[test]
+fn control_loop_respects_min_hosts_on() {
+    let mut c = Cluster::homogeneous(3);
+    c.host_mut(HostId(1)).power_off(0.0);
+    c.host_mut(HostId(2)).power_off(0.0);
+    c.advance_power_states(200.0);
+    let t = Telemetry::new(3, 1, 0.0);
+    let empty = BTreeMap::new();
+    let mut cons = Consolidator::new(ConsolidationParams {
+        min_hosts_on: 1,
+        empty_grace_s: 0.0,
+        ..Default::default()
+    });
+    let mut pred = ecosched::predict::OraclePredictor;
+    let ctx = ScheduleContext::new(1000.0, &c)
+        .with_telemetry(&t)
+        .with_vm_ctx(&empty);
+    let actions = cons.scan(&ctx, Some(&mut pred));
+    // Host 0 is empty and past grace, but it is the last host on.
+    assert!(
+        !actions
+            .iter()
+            .any(|a| matches!(a, ControlAction::PowerOff(_))),
+        "{actions:?}"
+    );
+}
+
+#[test]
+fn control_loop_gates_migrations_on_cluster_utilization() {
+    let (mut c, ctxs, _) = two_donor_setup();
+    // Push the receiver (and one donor) busy enough that the cluster
+    // mean exceeds the migration ceiling.
+    c.host_mut(HostId(1)).demand.cpu = 32.0;
+    c.host_mut(HostId(2)).demand.cpu = 32.0;
+    c.host_mut(HostId(3)).demand.cpu = 32.0;
+    let mut t = Telemetry::new(4, 1, 0.0);
+    for k in 1..=6 {
+        t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+    }
+    let mut cons = Consolidator::new(ConsolidationParams::default());
+    let mut pred = ecosched::predict::OraclePredictor;
+    let ctx = ScheduleContext::new(1000.0, &c)
+        .with_telemetry(&t)
+        .with_vm_ctx(&ctxs);
+    let actions = cons.scan(&ctx, Some(&mut pred));
+    assert!(
+        !actions
+            .iter()
+            .any(|a| matches!(a, ControlAction::Migrate { .. })),
+        "migrations must wait for a low-activity window: {actions:?}"
+    );
+}
+
+#[test]
+fn dvfs_governor_emits_setfreq_through_the_same_trait() {
+    let mut c = Cluster::homogeneous(2);
+    c.host_mut(HostId(0)).demand = Demand {
+        cpu: 2.0,
+        mem_gb: 8.0,
+        disk_mbps: 650.0,
+        net_mbps: 10.0,
+    };
+    let mut t = Telemetry::new(2, 1, 0.0);
+    for k in 1..=15 {
+        t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+    }
+    let mut gov = DvfsGovernor::new(DvfsParams::default());
+    let ctx = ScheduleContext::new(100.0, &c).with_telemetry(&t);
+    // The governor needs no scoring handle.
+    let actions = gov.scan(&ctx, None);
+    assert_eq!(actions.len(), 1);
+    assert!(matches!(
+        actions[0],
+        ControlAction::SetFreq {
+            host: HostId(0),
+            freq
+        } if freq < 1.0
+    ));
+}
