@@ -1,14 +1,18 @@
 //! Bench: consolidation scan cost (Tables 3/4, Ablation 1) as cluster
 //! size grows — the coordinator must stay off the critical path.
+//!
+//! Measures the batched scan (ONE predictor call per scan) against
+//! the sequential per-donor-VM reference (`scan_sequential`) at each
+//! cluster size, and writes `BENCH_consolidation.json`.
 
 use ecosched::cluster::{Cluster, Demand, HostId};
-use ecosched::predict::OraclePredictor;
+use ecosched::predict::{MlpWeights, NativeMlp};
 use ecosched::profile::ResourceVector;
 use ecosched::sched::{
     ConsolidationParams, Consolidator, ControlLoop, ScheduleContext, VmContext,
 };
 use ecosched::sim::Telemetry;
-use ecosched::util::bench::{bench_header, Bench};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
 use ecosched::workload::JobId;
 use std::collections::BTreeMap;
 
@@ -66,17 +70,36 @@ fn setup(n_hosts: usize) -> (Cluster, Telemetry, BTreeMap<ecosched::cluster::VmI
 
 fn main() {
     bench_header("consolidation");
-    for n in [5usize, 20, 80] {
+    let mut report = JsonReport::new("consolidation");
+    let short = short_mode();
+    let samples = if short { 5 } else { 20 };
+    let sizes: &[usize] = if short { &[5, 20] } else { &[5, 20, 80] };
+    for &n in sizes {
         let (c, t, ctxs) = setup(n);
-        let mut cons = Consolidator::new(ConsolidationParams::default());
-        let mut pred = OraclePredictor;
+        // The MLP predictor exercises the real batched-GEMM scoring
+        // path (the oracle is closed-form and would hide it).
+        let mut pred = NativeMlp::new(MlpWeights::init(42));
         let ctx = ScheduleContext::new(1000.0, &c)
             .with_telemetry(&t)
             .with_vm_ctx(&ctxs);
-        Bench::new(&format!("scan/{n}-hosts/{}-vms", 2 * n))
+
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let r = Bench::new(&format!("scan-batched/{n}-hosts/{}-vms", 2 * n))
+            .samples(samples)
             .run(|| {
                 std::hint::black_box(cons.scan(&ctx, Some(&mut pred)));
-            })
-            .print();
+            });
+        r.print();
+        report.record_with(&r, &[("hosts", n as f64), ("batched", 1.0)]);
+
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let r = Bench::new(&format!("scan-sequential/{n}-hosts/{}-vms", 2 * n))
+            .samples(samples)
+            .run(|| {
+                std::hint::black_box(cons.scan_sequential(&ctx, &mut pred));
+            });
+        r.print();
+        report.record_with(&r, &[("hosts", n as f64), ("batched", 0.0)]);
     }
+    report.write().expect("write BENCH_consolidation.json");
 }

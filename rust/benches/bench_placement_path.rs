@@ -3,6 +3,8 @@
 //! batched API: `decide_batch` (one predictor call per burst) against
 //! the per-job sequential loop at batch sizes {1, 8, 64}.
 //! Paper artifact: Fig. 2 stages / Table 5 decision latency.
+//! Results are written to `BENCH_placement_path.json`; `BENCH_SHORT`
+//! shrinks sample counts and cluster sizes for the CI smoke job.
 
 use ecosched::cluster::{Cluster, Demand, HostId};
 use ecosched::predict::{EnergyPredictor, MlpWeights, NativeMlp, OraclePredictor};
@@ -10,7 +12,7 @@ use ecosched::profile::{build_features, ResourceVector};
 use ecosched::sched::{
     Decision, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, ScheduleContext,
 };
-use ecosched::util::bench::{bench_header, Bench};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
 use ecosched::workload::JobId;
 
 fn loaded_cluster(n: usize) -> Cluster {
@@ -60,42 +62,50 @@ fn burst(b: usize) -> Vec<PlacementRequest> {
 
 fn main() {
     bench_header("placement_path");
+    let mut report = JsonReport::new("placement_path");
+    let short = short_mode();
+    let samples = if short { 5 } else { 20 };
+    let sizes: &[usize] = if short { &[5, 20] } else { &[5, 20, 80] };
     let req = request();
 
     // Feature construction alone.
     let cluster = loaded_cluster(5);
     let host = cluster.host(HostId(0));
-    Bench::new("build_features(1 host)")
-        .run(|| {
-            std::hint::black_box(build_features(&req.vector, req.remaining_solo, host));
-        })
-        .print();
+    let r = Bench::new("build_features(1 host)").samples(samples).run(|| {
+        std::hint::black_box(build_features(&req.vector, req.remaining_solo, host));
+    });
+    r.print();
+    report.record(&r);
 
     // Full decision, oracle predictor (pure-rust floor).
-    for n in [5usize, 20, 80] {
+    for &n in sizes {
         let cluster = loaded_cluster(n);
         let ctx = ScheduleContext::new(0.0, &cluster);
         let mut policy = EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default());
-        Bench::new(&format!("decide/oracle/{n}-hosts"))
+        let r = Bench::new(&format!("decide/oracle/{n}-hosts"))
+            .samples(samples)
             .run(|| {
                 std::hint::black_box(policy.decide(&req, &ctx));
-            })
-            .print();
+            });
+        r.print();
+        report.record_with(&r, &[("hosts", n as f64)]);
     }
 
     // Full decision, native MLP.
-    for n in [5usize, 20, 80] {
+    for &n in sizes {
         let cluster = loaded_cluster(n);
         let ctx = ScheduleContext::new(0.0, &cluster);
         let mut policy = EnergyAware::new(
             Box::new(NativeMlp::new(MlpWeights::init(42))),
             EnergyAwareParams::default(),
         );
-        Bench::new(&format!("decide/native-mlp/{n}-hosts"))
+        let r = Bench::new(&format!("decide/native-mlp/{n}-hosts"))
+            .samples(samples)
             .run(|| {
                 std::hint::black_box(policy.decide(&req, &ctx));
-            })
-            .print();
+            });
+        r.print();
+        report.record_with(&r, &[("hosts", n as f64)]);
     }
 
     // Batched API: decide_batch (one predictor invocation for the
@@ -108,22 +118,26 @@ fn main() {
             Box::new(NativeMlp::new(MlpWeights::init(42))),
             EnergyAwareParams::default(),
         );
-        Bench::new(&format!("decide_batch/native-mlp/batch={b}"))
+        let r = Bench::new(&format!("decide_batch/native-mlp/batch={b}"))
+            .samples(samples)
             .run(|| {
                 std::hint::black_box(batched.decide_batch(&reqs, &ctx));
-            })
-            .print_throughput("decisions", b as f64);
+            });
+        r.print_throughput("decisions", b as f64);
+        report.record_with(&r, &[("batch", b as f64), ("batched", 1.0)]);
         let mut sequential = EnergyAware::new(
             Box::new(NativeMlp::new(MlpWeights::init(42))),
             EnergyAwareParams::default(),
         );
-        Bench::new(&format!("decide_seq/native-mlp/batch={b}"))
+        let r = Bench::new(&format!("decide_seq/native-mlp/batch={b}"))
+            .samples(samples)
             .run(|| {
                 for r in &reqs {
                     std::hint::black_box(sequential.decide(r, &ctx));
                 }
-            })
-            .print_throughput("decisions", b as f64);
+            });
+        r.print_throughput("decisions", b as f64);
+        report.record_with(&r, &[("batch", b as f64), ("batched", 0.0)]);
         // The two paths must agree bit-for-bit.
         assert_eq!(
             batched.decide_batch(&reqs, &ctx),
@@ -170,4 +184,6 @@ fn main() {
     let ctx = ScheduleContext::new(0.0, &cluster);
     let mut policy = EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default());
     assert!(matches!(policy.decide(&req, &ctx), Decision::Place(_)));
+
+    report.write().expect("write BENCH_placement_path.json");
 }

@@ -1,62 +1,117 @@
-//! Bench: predictor inference — oracle vs native MLP vs decision tree
-//! vs linear (Table 5 / Ablation 2 latency column).
+//! Bench: predictor inference (Table 5 / Ablation 2 latency column).
+//!
+//! The headline comparison is per-row scoring (one `predict` call per
+//! feature row — what the scheduler's hot path degenerated to before
+//! the batched GEMM pipeline) vs `forward_batch`-backed `predict_into`
+//! (one call, reusable arena) across batch sizes {1, 8, 64, 128,
+//! 1024}. Results are written to `BENCH_predict.json` (see
+//! `util::bench::JsonReport`) so the perf trajectory is recorded.
 
 use ecosched::predict::{
     synthesize, DecisionTree, EnergyPredictor, LinearModel, LinearPredictor, MlpWeights,
-    NativeMlp, OraclePredictor, TreeParams, TreePredictor,
+    NativeMlp, OraclePredictor, Prediction, TreeParams, TreePredictor,
 };
 use ecosched::profile::FEAT_DIM;
-use ecosched::util::bench::{bench_header, Bench};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
+
+/// Batch sizes the scheduler actually sees: single placements, submit
+/// bursts, consolidation scans, and full-fleet sweeps.
+const BATCHES: [usize; 5] = [1, 8, 64, 128, 1024];
 
 fn main() {
     bench_header("predict");
+    let mut report = JsonReport::new("predict");
+    let short = short_mode();
+    let samples = if short { 5 } else { 20 };
     let ds = synthesize(2000, 7, None);
+
+    // Per-row vs batched GEMM scoring of the native MLP.
+    let mut mlp = NativeMlp::new(MlpWeights::init(42));
+    let mut out: Vec<Prediction> = Vec::new();
+    for &batch in &BATCHES {
+        let feats: Vec<[f32; FEAT_DIM]> =
+            (0..batch).map(|i| ds.xs[i % ds.xs.len()]).collect();
+
+        let r = Bench::new(&format!("native-mlp/per-row/B{batch}"))
+            .samples(samples)
+            .run(|| {
+                for row in &feats {
+                    std::hint::black_box(mlp.predict(std::slice::from_ref(row)));
+                }
+            });
+        r.print_throughput("rows", batch as f64);
+        report.record_with(
+            &r,
+            &[
+                ("batch", batch as f64),
+                ("rows_per_s", batch as f64 / r.per_iter.mean),
+            ],
+        );
+
+        let r = Bench::new(&format!("native-mlp/forward_batch/B{batch}"))
+            .samples(samples)
+            .run(|| {
+                mlp.predict_into(&feats, &mut out);
+                std::hint::black_box(&out);
+            });
+        r.print_throughput("rows", batch as f64);
+        report.record_with(
+            &r,
+            &[
+                ("batch", batch as f64),
+                ("rows_per_s", batch as f64 / r.per_iter.mean),
+            ],
+        );
+    }
+
+    // Cross-model comparison at the historical batch of 256.
     let feats: Vec<[f32; FEAT_DIM]> = ds.xs[..256].to_vec();
 
     let mut oracle = OraclePredictor;
-    Bench::new("oracle/batch-256")
-        .run(|| {
-            std::hint::black_box(oracle.predict(&feats));
-        })
-        .print_throughput("scores", 256.0);
+    let r = Bench::new("oracle/batch-256").samples(samples).run(|| {
+        oracle.predict_into(&feats, &mut out);
+        std::hint::black_box(&out);
+    });
+    r.print_throughput("scores", 256.0);
+    report.record_with(&r, &[("batch", 256.0)]);
 
-    let mut mlp = NativeMlp::new(MlpWeights::init(42));
-    Bench::new("native-mlp/batch-256")
-        .run(|| {
-            std::hint::black_box(mlp.predict(&feats));
-        })
-        .print_throughput("scores", 256.0);
+    let r = Bench::new("native-mlp/batch-256").samples(samples).run(|| {
+        mlp.predict_into(&feats, &mut out);
+        std::hint::black_box(&out);
+    });
+    r.print_throughput("scores", 256.0);
+    report.record_with(&r, &[("batch", 256.0)]);
 
     let tree = DecisionTree::fit(&ds.xs, &ds.ys, TreeParams::default());
     let mut tp = TreePredictor { tree };
-    Bench::new("dtree/batch-256")
-        .run(|| {
-            std::hint::black_box(tp.predict(&feats));
-        })
-        .print_throughput("scores", 256.0);
+    let r = Bench::new("dtree/batch-256").samples(samples).run(|| {
+        std::hint::black_box(tp.predict(&feats));
+    });
+    r.print_throughput("scores", 256.0);
+    report.record_with(&r, &[("batch", 256.0)]);
 
     let mut lp = LinearPredictor {
         model: LinearModel::fit(&ds.xs, &ds.ys, 1e-4),
     };
-    Bench::new("linear/batch-256")
-        .run(|| {
-            std::hint::black_box(lp.predict(&feats));
-        })
-        .print_throughput("scores", 256.0);
+    let r = Bench::new("linear/batch-256").samples(samples).run(|| {
+        std::hint::black_box(lp.predict(&feats));
+    });
+    r.print_throughput("scores", 256.0);
+    report.record_with(&r, &[("batch", 256.0)]);
 
-    // Model-fit costs (offline path).
-    Bench::new("dtree fit/2000")
-        .samples(5)
-        .iters(1)
-        .run(|| {
+    // Model-fit costs (offline path) — skipped in short mode.
+    if !short {
+        let r = Bench::new("dtree fit/2000").samples(5).iters(1).run(|| {
             std::hint::black_box(DecisionTree::fit(&ds.xs, &ds.ys, TreeParams::default()));
-        })
-        .print();
-    Bench::new("linear fit/2000")
-        .samples(5)
-        .iters(1)
-        .run(|| {
+        });
+        r.print();
+        report.record(&r);
+        let r = Bench::new("linear fit/2000").samples(5).iters(1).run(|| {
             std::hint::black_box(LinearModel::fit(&ds.xs, &ds.ys, 1e-4));
-        })
-        .print();
+        });
+        r.print();
+        report.record(&r);
+    }
+
+    report.write().expect("write BENCH_predict.json");
 }

@@ -150,6 +150,16 @@ impl Host {
             })
     }
 
+    /// Amortized share of the idle power floor a new tenant on this
+    /// host would carry: an empty host charges the full `P_idle` to
+    /// its first tenant, a busy host's floor is already paid for. The
+    /// single definition behind the energy objective of both the
+    /// placement argmin (via the [`crate::cluster::HostView`]
+    /// snapshot) and the consolidation target selection.
+    pub fn idle_share(&self) -> f64 {
+        self.spec.power.p_idle / (self.vms.len() as f64 + 1.0)
+    }
+
     /// Free capacity in absolute units (for feasibility checks).
     /// Memory is a hard constraint; cpu/io can be oversubscribed but we
     /// report headroom against nominal capacity.
@@ -166,16 +176,7 @@ impl Host {
     /// Would a VM of this flavor fit under the memory hard-constraint
     /// and a CPU oversubscription cap?
     pub fn fits(&self, flavor: &crate::cluster::flavor::Flavor, reserved: &Demand) -> bool {
-        if !self.state.accepts_vms() {
-            return false;
-        }
-        let cap = self.spec.capacity();
-        // Memory never oversubscribes (KVM ballooning is off in the
-        // paper's setup); CPU allows 1.5× oversubscription like the
-        // OpenStack default of cpu_allocation_ratio.
-        let mem_ok = reserved.mem_gb + flavor.mem_gb <= cap.mem_gb + 1e-9;
-        let cpu_ok = reserved.cpu + flavor.vcpus <= cap.cpu * 1.5 + 1e-9;
-        mem_ok && cpu_ok
+        self.state.accepts_vms() && admission_fits(&self.spec.capacity(), reserved, flavor)
     }
 
     /// Begin booting the host at `now`; no-op unless powered off.
@@ -216,6 +217,22 @@ impl Host {
             .unwrap();
         self.freq = freq;
     }
+}
+
+/// Admission arithmetic shared by [`Host::fits`] and the snapshot
+/// [`crate::cluster::HostView::fits`] used on the batched scoring
+/// path. Memory never oversubscribes (KVM ballooning is off in the
+/// paper's setup); CPU allows 1.5× oversubscription like the
+/// OpenStack default `cpu_allocation_ratio`. One function so the two
+/// paths can never disagree on a borderline placement.
+pub fn admission_fits(
+    cap: &Demand,
+    reserved: &Demand,
+    flavor: &crate::cluster::flavor::Flavor,
+) -> bool {
+    let mem_ok = reserved.mem_gb + flavor.mem_gb <= cap.mem_gb + 1e-9;
+    let cpu_ok = reserved.cpu + flavor.vcpus <= cap.cpu * 1.5 + 1e-9;
+    mem_ok && cpu_ok
 }
 
 #[cfg(test)]

@@ -1,0 +1,168 @@
+//! Per-host scoring views: the pruned, flat snapshot the batched
+//! placement path iterates instead of the live `Host` objects.
+//!
+//! `EnergyAware::decide_batch` used to recompute effective utilization
+//! (max of instantaneous and profiled load) for every (request, host)
+//! pair — and `Cluster::expected_load` itself walked the whole VM
+//! inventory per host, making a burst of R requests over H hosts an
+//! O(R·H·V) scan. With the incrementally-maintained expected-load
+//! cache (see `cluster::mod`) a view build is O(H), done **once per
+//! frozen decision context**; hot hosts (Eq. 9, above `delta_high`)
+//! and non-accepting hosts are pruned here, so each request only
+//! touches the surviving shortlist.
+
+use crate::cluster::flavor::Flavor;
+use crate::cluster::host::admission_fits;
+use crate::cluster::{Cluster, Demand, HostId, Utilization};
+
+/// One host's placement-relevant state, snapshotted at view-build
+/// time. `Copy` so policies can keep a scratch `Vec<HostView>` and
+/// iterate it while mutating their other buffers.
+#[derive(Debug, Clone, Copy)]
+pub struct HostView {
+    pub id: HostId,
+    /// Effective utilization: componentwise max of instantaneous and
+    /// profiled expected load — a host whose ETL tenants are between
+    /// I/O bursts is *not* free capacity.
+    pub util: Utilization,
+    pub n_vms: usize,
+    pub freq: f64,
+    /// Amortized idle-floor share a new tenant would carry
+    /// (snapshotted from [`crate::cluster::Host::idle_share`]).
+    pub idle_share: f64,
+    /// Flavor-based reservations (admission control).
+    pub reserved: Demand,
+    /// Nominal capacity (admission control).
+    pub capacity: Demand,
+}
+
+impl HostView {
+    /// Same admission predicate as [`crate::cluster::Host::fits`]
+    /// (views only contain hosts that accept VMs, so the power-state
+    /// check is already paid).
+    pub fn fits(&self, flavor: &Flavor) -> bool {
+        admission_fits(&self.capacity, &self.reserved, flavor)
+    }
+}
+
+impl Cluster {
+    /// Effective utilization of one host: componentwise max of
+    /// instantaneous and profiled expected load — a host whose ETL
+    /// tenants are between I/O bursts is *not* free capacity. The
+    /// single definition shared by the placement views and the
+    /// consolidation scan, so the two can never disagree on which
+    /// hosts are hot.
+    pub fn effective_util(&self, id: HostId) -> Utilization {
+        let inst = self.hosts[id.0].utilization();
+        let prof = self.expected_util(id);
+        Utilization {
+            cpu: inst.cpu.max(prof.cpu),
+            mem: inst.mem.max(prof.mem),
+            disk: inst.disk.max(prof.disk),
+            net: inst.net.max(prof.net),
+        }
+    }
+
+    /// Build the pruned scoring views for one frozen decision point
+    /// into `out` (cleared first; callers reuse the buffer). Hosts
+    /// that do not accept VMs or whose effective CPU utilization
+    /// exceeds `delta_high` (Eq. 9) are excluded, so per-request
+    /// candidate gathering never touches them.
+    pub fn scoring_views(&self, delta_high: f64, out: &mut Vec<HostView>) {
+        out.clear();
+        for host in &self.hosts {
+            if !host.state.accepts_vms() {
+                continue;
+            }
+            let util = self.effective_util(host.id);
+            if util.cpu > delta_high {
+                continue;
+            }
+            out.push(HostView {
+                id: host.id,
+                util,
+                n_vms: host.vms.len(),
+                freq: host.freq,
+                idle_share: host.idle_share(),
+                reserved: *self.reserved(host.id),
+                capacity: host.spec.capacity(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::{CATALOG, MEDIUM};
+    use crate::util::rng::Xoshiro256;
+    use crate::workload::JobId;
+
+    #[test]
+    fn views_prune_hot_and_off_hosts() {
+        let mut c = Cluster::homogeneous(3);
+        c.host_mut(HostId(0)).demand.cpu = 30.0; // 0.94 > 0.85
+        c.host_mut(HostId(2)).power_off(0.0);
+        c.advance_power_states(100.0);
+        let mut views = Vec::new();
+        c.scoring_views(0.85, &mut views);
+        assert_eq!(views.len(), 1);
+        assert_eq!(views[0].id, HostId(1));
+        assert_eq!(views[0].capacity.mem_gb, 64.0);
+    }
+
+    #[test]
+    fn view_fits_agrees_with_host_fits_on_random_states() {
+        // The snapshot predicate and the live predicate must be the
+        // same function of the same numbers — borderline disagreement
+        // would make the coordinator actuate an infeasible decision.
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..200 {
+            let mut c = Cluster::homogeneous(2);
+            for _ in 0..rng.range(0, 5) {
+                let flavor = CATALOG[rng.range(0, 3)];
+                let feas = c.feasible_hosts(&flavor);
+                if feas.is_empty() {
+                    continue;
+                }
+                let host = feas[rng.range(0, feas.len())];
+                let vm = c.create_vm(flavor, JobId(0), 0.0);
+                c.place_vm(vm, host).unwrap();
+            }
+            let mut views = Vec::new();
+            c.scoring_views(1.01, &mut views);
+            for v in &views {
+                for flavor in &CATALOG {
+                    assert_eq!(
+                        v.fits(flavor),
+                        c.host(v.id).fits(flavor, c.reserved(v.id)),
+                        "fits divergence on {}",
+                        v.id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn effective_util_reflects_profiled_load() {
+        let mut c = Cluster::homogeneous(1);
+        let vm = c.create_vm(MEDIUM, JobId(0), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        // Quiet instantaneous demand, heavy profiled expectation.
+        c.set_expected_demand(
+            vm,
+            Demand {
+                cpu: 16.0,
+                mem_gb: 8.0,
+                disk_mbps: 0.0,
+                net_mbps: 0.0,
+            },
+        );
+        let mut views = Vec::new();
+        c.scoring_views(1.01, &mut views);
+        assert!((views[0].util.cpu - 0.5).abs() < 1e-9);
+        assert_eq!(views[0].n_vms, 1);
+        assert_eq!(views[0].idle_share, c.host(HostId(0)).idle_share());
+    }
+}

@@ -4,11 +4,13 @@
 
 pub mod flavor;
 pub mod host;
+pub mod index;
 pub mod power;
 pub mod vm;
 
 pub use flavor::Flavor;
 pub use host::{Host, HostId, HostSpec, Utilization};
+pub use index::HostView;
 pub use power::{PowerModel, PowerState};
 pub use vm::{migration_cost, Vm, VmId, VmState};
 
@@ -36,6 +38,17 @@ impl Demand {
         self.mem_gb += other.mem_gb;
         self.disk_mbps += other.disk_mbps;
         self.net_mbps += other.net_mbps;
+    }
+
+    /// Componentwise subtraction, deliberately unclamped: the
+    /// expected-load cache pairs every `sub` with an earlier `add`,
+    /// and clamping would silently absorb bookkeeping bugs that
+    /// `check_invariants` is meant to catch.
+    pub fn sub(&mut self, other: &Demand) {
+        self.cpu -= other.cpu;
+        self.mem_gb -= other.mem_gb;
+        self.disk_mbps -= other.disk_mbps;
+        self.net_mbps -= other.net_mbps;
     }
 
     pub fn scaled(&self, k: f64) -> Demand {
@@ -71,6 +84,13 @@ pub struct Cluster {
     /// Per-migration network charge, so completion releases exactly
     /// what start charged.
     migration_net_of: BTreeMap<VmId, f64>,
+    /// Incrementally-maintained per-host expected load: resident VMs'
+    /// profiled mean demands plus incoming migrations. Makes
+    /// [`Cluster::expected_load`] O(1) on the batched scoring path
+    /// (it used to walk the whole VM inventory per host). Kept
+    /// consistent by every mutator; `Vm::expected` may only change
+    /// through [`Cluster::set_expected_demand`].
+    expected_cache: Vec<Demand>,
 }
 
 impl Cluster {
@@ -83,6 +103,7 @@ impl Cluster {
             next_vm: 0,
             reserved: vec![Demand::ZERO; n],
             migration_net_of: BTreeMap::new(),
+            expected_cache: vec![Demand::ZERO; n],
         }
     }
 
@@ -126,6 +147,7 @@ impl Cluster {
         let vm = self.vms.get_mut(&vm_id).unwrap();
         vm.host = Some(host_id);
         vm.state = VmState::Running;
+        let expected = vm.expected;
         self.hosts[host_id.0].vms.push(vm_id);
         self.reserved[host_id.0].add(&Demand {
             cpu: flavor.vcpus,
@@ -133,7 +155,30 @@ impl Cluster {
             disk_mbps: 0.0,
             net_mbps: 0.0,
         });
+        self.expected_cache[host_id.0].add(&expected);
         Ok(())
+    }
+
+    /// Update a VM's profiled mean demand, keeping the per-host
+    /// expected-load cache consistent. This is the only sanctioned
+    /// way to change `Vm::expected` once the VM exists — a direct
+    /// field write would silently desynchronize the cache (caught by
+    /// [`Cluster::check_invariants`]).
+    pub fn set_expected_demand(&mut self, vm_id: VmId, expected: Demand) {
+        let vm = self.vms.get_mut(&vm_id).expect("set_expected_demand on unknown VM");
+        let old = vm.expected;
+        vm.expected = expected;
+        // Mirror expected_load's attribution: residents count on the
+        // host that lists them (the source while migrating), and a
+        // migrating VM additionally counts on its destination.
+        let (resident, incoming) = match vm.state {
+            VmState::Migrating { from, to, .. } => (Some(from), Some(to)),
+            _ => (vm.host, None),
+        };
+        for host in [resident, incoming].into_iter().flatten() {
+            self.expected_cache[host.0].sub(&old);
+            self.expected_cache[host.0].add(&expected);
+        }
     }
 
     /// Begin a live migration; completes via [`Cluster::finish_migration`].
@@ -164,6 +209,10 @@ impl Cluster {
             to,
             done: now + cost.duration,
         };
+        let expected = vm.expected;
+        // The destination carries the VM's expected load from copy
+        // start (expected_load counts migrating VMs on both ends).
+        self.expected_cache[to.0].add(&expected);
         // Reserve on the destination for the duration of the copy; the
         // source keeps its reservation until cut-over.
         self.reserved[to.0].add(&Demand {
@@ -192,6 +241,10 @@ impl Cluster {
         vm.state = VmState::Running;
         vm.host = Some(to);
         vm.migrations += 1;
+        let expected = vm.expected;
+        // Source residency ends; the destination's share (added at
+        // migration start) becomes the resident contribution.
+        self.expected_cache[from.0].sub(&expected);
         self.hosts[from.0].vms.retain(|&v| v != vm_id);
         self.hosts[to.0].vms.push(vm_id);
         self.reserved[from.0] = sub_reservation(&self.reserved[from.0], &flavor);
@@ -211,9 +264,11 @@ impl Cluster {
         );
         let host = vm.host.take().expect("running VM has a host");
         let flavor = vm.flavor;
+        let expected = vm.expected;
         vm.state = VmState::Terminated;
         self.hosts[host.0].vms.retain(|&v| v != vm_id);
         self.reserved[host.0] = sub_reservation(&self.reserved[host.0], &flavor);
+        self.expected_cache[host.0].sub(&expected);
     }
 
     /// Overwrite per-host demand from per-VM demands. Called once per
@@ -247,8 +302,19 @@ impl Cluster {
     /// Profiled (expected-mean) load on a host: sum of resident VMs'
     /// expected demands plus incoming migrations. Workload-aware
     /// policies use this instead of instantaneous demand — a host full
-    /// of I/O jobs in a quiet phase is *not* free capacity.
+    /// of I/O jobs in a quiet phase is *not* free capacity. O(1): the
+    /// cache is maintained incrementally by every cluster mutator (the
+    /// old implementation walked the VM inventory per call, which made
+    /// batched candidate gathering O(hosts × VMs); it survives as
+    /// [`Cluster::recompute_expected_load`] for the invariant check).
     pub fn expected_load(&self, id: HostId) -> Demand {
+        self.expected_cache[id.0]
+    }
+
+    /// Reference recomputation of [`Cluster::expected_load`] from the
+    /// VM inventory — O(VMs), used by `check_invariants` to verify the
+    /// incremental cache.
+    fn recompute_expected_load(&self, id: HostId) -> Demand {
         let mut total = Demand::ZERO;
         for vm_id in &self.hosts[id.0].vms {
             total.add(&self.vms[vm_id].expected);
@@ -263,7 +329,9 @@ impl Cluster {
         total
     }
 
-    /// Expected utilization from [`Cluster::expected_load`], clamped.
+    /// Expected utilization from [`Cluster::expected_load`], clamped
+    /// to [0, 1] (the incremental cache can carry ±ε float residue
+    /// after add/sub cycles).
     pub fn expected_util(&self, id: HostId) -> host::Utilization {
         let host = &self.hosts[id.0];
         if !host.state.is_on() {
@@ -272,10 +340,10 @@ impl Cluster {
         let cap = host.spec.capacity();
         let e = self.expected_load(id);
         host::Utilization {
-            cpu: (e.cpu / (cap.cpu * host.freq)).min(1.0),
-            mem: (e.mem_gb / cap.mem_gb).min(1.0),
-            disk: (e.disk_mbps / cap.disk_mbps).min(1.0),
-            net: (e.net_mbps / cap.net_mbps).min(1.0),
+            cpu: (e.cpu / (cap.cpu * host.freq)).clamp(0.0, 1.0),
+            mem: (e.mem_gb / cap.mem_gb).clamp(0.0, 1.0),
+            disk: (e.disk_mbps / cap.disk_mbps).clamp(0.0, 1.0),
+            net: (e.net_mbps / cap.net_mbps).clamp(0.0, 1.0),
         }
     }
 
@@ -335,6 +403,20 @@ impl Cluster {
             }
             if r.mem_gb > h.spec.mem_gb + 1e-6 {
                 return Err(format!("{} memory over-reserved: {}", h.id, r.mem_gb));
+            }
+            // The incremental expected-load cache agrees with a fresh
+            // recomputation from the VM inventory.
+            let cached = self.expected_cache[h.id.0];
+            let fresh = self.recompute_expected_load(h.id);
+            if (cached.cpu - fresh.cpu).abs() > 1e-6
+                || (cached.mem_gb - fresh.mem_gb).abs() > 1e-6
+                || (cached.disk_mbps - fresh.disk_mbps).abs() > 1e-6
+                || (cached.net_mbps - fresh.net_mbps).abs() > 1e-6
+            {
+                return Err(format!(
+                    "{} expected-load cache {cached:?} != recomputed {fresh:?}",
+                    h.id
+                ));
             }
         }
         Ok(())
@@ -517,6 +599,39 @@ mod tests {
         );
         c.apply_demands(&demands);
         assert_eq!(c.host(HostId(0)).demand, Demand::ZERO);
+    }
+
+    #[test]
+    fn expected_load_cache_tracks_migration_lifecycle() {
+        let mut c = cluster();
+        let vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        let d = Demand {
+            cpu: 3.0,
+            mem_gb: 6.0,
+            disk_mbps: 80.0,
+            net_mbps: 12.0,
+        };
+        c.set_expected_demand(vm, d);
+        assert_eq!(c.expected_load(HostId(0)), d);
+        c.check_invariants().unwrap();
+        // During the copy both ends carry the expected load.
+        c.start_migration(vm, HostId(1), 0.0, 100.0).unwrap();
+        assert_eq!(c.expected_load(HostId(0)), d);
+        assert_eq!(c.expected_load(HostId(1)), d);
+        // Updating the profile mid-migration adjusts both ends.
+        let d2 = Demand { cpu: 5.0, ..d };
+        c.set_expected_demand(vm, d2);
+        assert_eq!(c.expected_load(HostId(0)), d2);
+        assert_eq!(c.expected_load(HostId(1)), d2);
+        c.check_invariants().unwrap();
+        c.finish_migration(vm);
+        assert_eq!(c.expected_load(HostId(0)).cpu, 0.0);
+        assert_eq!(c.expected_load(HostId(1)), d2);
+        c.check_invariants().unwrap();
+        c.terminate_vm(vm);
+        assert_eq!(c.expected_load(HostId(1)).cpu, 0.0);
+        c.check_invariants().unwrap();
     }
 
     #[test]

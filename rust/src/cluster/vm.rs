@@ -46,8 +46,12 @@ pub struct Vm {
     pub migrations: u32,
     /// Profiled mean demand of the hosted job (absolute units) — the
     /// workload-aware load estimate schedulers use instead of the
-    /// instantaneous demand, which phases swing around it.
-    pub expected: crate::cluster::Demand,
+    /// instantaneous demand, which phases swing around it. Write
+    /// access is restricted to the `cluster` module so
+    /// [`crate::cluster::Cluster::set_expected_demand`] stays the only
+    /// writer — a direct write would desynchronize the incremental
+    /// expected-load cache.
+    pub(in crate::cluster) expected: crate::cluster::Demand,
 }
 
 impl Vm {
@@ -66,6 +70,12 @@ impl Vm {
 
     pub fn is_active(&self) -> bool {
         matches!(self.state, VmState::Running | VmState::Migrating { .. })
+    }
+
+    /// Profiled mean demand (read-only; updates go through
+    /// [`crate::cluster::Cluster::set_expected_demand`]).
+    pub fn expected(&self) -> crate::cluster::Demand {
+        self.expected
     }
 }
 

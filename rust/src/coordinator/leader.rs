@@ -500,13 +500,17 @@ impl Coordinator {
                     .place_vm(vm, host)
                     .expect("policy returned infeasible host");
                 // Record the profiled mean demand for workload-aware
-                // admission on later placements.
-                st.cluster.vms.get_mut(&vm).unwrap().expected = Demand {
-                    cpu: req.vector.cpu * req.flavor.vcpus,
-                    mem_gb: req.vector.mem * req.flavor.mem_gb,
-                    disk_mbps: req.vector.disk * req.flavor.disk_mbps,
-                    net_mbps: req.vector.net * req.flavor.net_mbps,
-                };
+                // admission on later placements (through the setter so
+                // the expected-load cache stays consistent).
+                st.cluster.set_expected_demand(
+                    vm,
+                    Demand {
+                        cpu: req.vector.cpu * req.flavor.vcpus,
+                        mem_gb: req.vector.mem * req.flavor.mem_gb,
+                        disk_mbps: req.vector.disk * req.flavor.disk_mbps,
+                        net_mbps: req.vector.net * req.flavor.net_mbps,
+                    },
+                );
                 st.vm_of_job.insert(req.job, vm);
                 st.job_of_vm.insert(vm, req.job);
                 st.jobs.get_mut(&req.job).unwrap().start(now);

@@ -25,17 +25,26 @@
 //! 2. [`sched::PlacementPolicy::decide_batch`] — the coordinator's
 //!    only placement entry point: every same-instant submit burst and
 //!    every deferred-queue drain is decided as a batch against one
-//!    frozen context. The energy-aware policy builds the full
-//!    (request × feasible-host) feature matrix and scores it with a
-//!    single predictor invocation — exactly the `[B, 16]` batch the
-//!    L1 `score_hosts` kernel streams through the MXU as
-//!    `(B×16)·(16×64)·(64×32)·(32×2)`; the sequential per-job loop is
-//!    the trait's default fallback and is bit-identical by contract.
+//!    frozen context. The energy-aware policy prunes hosts once per
+//!    batch through [`cluster::HostView`] snapshots (backed by the
+//!    cluster's O(1) incremental expected-load cache), builds the
+//!    full (request × feasible-host) feature matrix in a reusable
+//!    scoring arena, and scores it with a single
+//!    [`predict::EnergyPredictor::predict_into`] invocation — exactly
+//!    the `[B, 16]` batch the L1 `score_hosts` kernel streams through
+//!    the MXU as `(B×16)·(16×64)·(64×32)·(32×2)`. The native
+//!    predictor executes that shape as blocked, arena-backed matmuls
+//!    (`NativeMlp::forward_batch`), bit-identical to the row-by-row
+//!    path; the sequential per-job loop is the trait's default
+//!    fallback and is bit-identical by contract.
 //! 3. [`sched::ControlLoop`] — the periodic scans (adaptive
 //!    consolidation, DVFS governor, future loops such as carbon-aware
 //!    capping) unified behind one trait that emits
 //!    [`sched::ControlAction`]s; loops borrow the policy's predictor
 //!    through an explicit [`sched::ScoringHandle`] — no downcasts.
+//!    The consolidation scan scores its whole (donor VM × target)
+//!    matrix with ONE predictor call per scan, same arena discipline
+//!    as placement.
 //!
 //! Python never runs at decision time: [`runtime`] loads
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).

@@ -22,11 +22,25 @@ pub struct Prediction {
 
 /// Prediction engine interface. Batch-oriented: the energy-aware
 /// scheduler scores all candidate hosts in one call.
+///
+/// The hot path is [`EnergyPredictor::predict_into`]: the scheduler
+/// and the consolidation scan both hold a reusable output buffer, so
+/// steady-state scoring performs no per-call allocation.
+/// Implementations should override it (the default delegates to
+/// `predict`, which allocates a fresh vector per call).
 pub trait EnergyPredictor {
     fn name(&self) -> &'static str;
 
-    /// Score a batch of feature vectors.
+    /// Score a batch of feature vectors into a fresh vector.
     fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction>;
+
+    /// Score a batch of feature vectors into a caller-provided buffer.
+    /// `out` is cleared first and holds exactly one [`Prediction`] per
+    /// input row on return.
+    fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
+        out.clear();
+        out.extend(self.predict(feats));
+    }
 }
 
 /// Output normalization shared by training and inference:

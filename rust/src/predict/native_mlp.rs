@@ -4,24 +4,62 @@
 //! artifacts are absent (unit tests, docs examples), and (c) as the
 //! parity oracle for the Pallas kernel (pytest checks kernel == jnp;
 //! the integration test checks XLA == native within f32 tolerance).
+//!
+//! # Batched execution
+//!
+//! [`NativeMlp::forward_batch`] runs the whole
+//! `(B×16)·(16×64)·(64×32)·(32×2)` pipeline as blocked matmuls: rows
+//! are processed in blocks of [`BLOCK`] so the activation scratch
+//! stays L2-resident regardless of batch size, and weights/biases
+//! stay hot in L1 across the rows of a block. Everything —
+//! activations and results — lives in a reusable arena inside the
+//! struct, so steady-state scoring performs **zero** allocation.
+//!
+//! Each row runs the *same* broadcast-form GEMV as the single-row
+//! path (`out[j] = b[j] + Σ_i x[i]·w[i][j]`, `i` ascending), so
+//! `forward_batch` is bit-identical to row-by-row
+//! [`NativeMlp::forward`] — asserted across batch sizes and random
+//! weights in `rust/tests/parity.rs`. A transposed-weight dot-product
+//! formulation was considered and rejected: without reassociation
+//! (`-ffast-math` is never on for this crate) LLVM cannot vectorize a
+//! float reduction, which serializes the inner dot on the add-latency
+//! chain — an order of magnitude slower than the broadcast form,
+//! whose per-`j` lanes are independent and autovectorize.
+//!
+//! # Branch-free kernels
+//!
+//! `dense` used to skip `xi == 0.0` input rows. That saved work only
+//! when feature rows contained exact zeros (common for idle-host
+//! features, rare otherwise) and made per-call FLOPs — and therefore
+//! benchmark numbers — data-dependent: the same batch size could
+//! differ several-fold in latency depending on host load. The kernel
+//! is now branch-free: every call does the same
+//! `B·(16·64 + 64·32 + 32·2)` multiply-adds, and
+//! `BENCH_predict.json` (written by `benches/bench_predict.rs`)
+//! tracks the flat per-row cost across batch sizes {1, 8, 64, 128,
+//! 1024} so the tradeoff stays measured rather than assumed.
 
 use crate::predict::engine::{
     decode_output, EnergyPredictor, MlpWeights, Prediction, HIDDEN1, HIDDEN2, OUT_DIM,
 };
 use crate::profile::FEAT_DIM;
 
+/// Row-block size for batched execution: bounds the activation arena
+/// at `BLOCK·(64+32+2)` floats (~50 KiB, L2-resident) and matches the
+/// XLA artifact's AOT batch so native-vs-XLA comparisons chunk alike.
+pub const BLOCK: usize = 128;
+
 /// Row-major GEMV: y[j] = Σ_i x[i]·w[i·cols + j] + b[j], then ReLU if
-/// `relu`. Simple loops — rustc autovectorizes these fine for our
-/// sizes; see benches/bench_predict.rs for the measured comparison.
+/// `relu`. Branch-free (see module docs): every input row is
+/// accumulated, so FLOPs are batch-shape-independent. Simple loops —
+/// rustc autovectorizes the per-`j` lanes; see
+/// benches/bench_predict.rs for the measured comparison.
 fn dense(x: &[f32], w: &[f32], b: &[f32], cols: usize, relu: bool, out: &mut [f32]) {
     debug_assert_eq!(w.len(), x.len() * cols);
     debug_assert_eq!(b.len(), cols);
     debug_assert_eq!(out.len(), cols);
     out.copy_from_slice(b);
     for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
         let row = &w[i * cols..(i + 1) * cols];
         for (o, &wj) in out.iter_mut().zip(row) {
             *o += xi * wj;
@@ -36,14 +74,43 @@ fn dense(x: &[f32], w: &[f32], b: &[f32], cols: usize, relu: bool, out: &mut [f3
     }
 }
 
-/// Native MLP predictor.
+/// Batched layer: `rows` independent [`dense`] GEMVs over one flat
+/// `[rows·in_dim]` input and `[rows·cols]` output. Reusing the exact
+/// single-row kernel per row is what makes batched == single
+/// bit-for-bit *by construction*; the batch win comes from arena
+/// reuse (zero allocation), one dispatch, and weights staying hot
+/// across rows.
+fn dense_batch(
+    x: &[f32],
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    cols: usize,
+    relu: bool,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len() * cols, y.len() * in_dim);
+    for (xr, yr) in x.chunks_exact(in_dim).zip(y.chunks_exact_mut(cols)) {
+        dense(xr, w, b, cols, relu, yr);
+    }
+}
+
+/// Native MLP predictor with a reusable scoring arena.
 #[derive(Debug, Clone)]
 pub struct NativeMlp {
-    pub weights: MlpWeights,
-    // Scratch buffers reused across calls (no allocation on hot path).
+    weights: MlpWeights,
+    // Single-row scratch (forward).
     h1: Vec<f32>,
     h2: Vec<f32>,
     y: Vec<f32>,
+    // Batched arena: one BLOCK of activations plus the full-batch
+    // output, all reused across calls (the input rows are read in
+    // place — `&[[f32; FEAT_DIM]]` is already a contiguous row-major
+    // matrix).
+    bh1: Vec<f32>,
+    bh2: Vec<f32>,
+    by: Vec<f32>,
+    out: Vec<(f32, f32)>,
 }
 
 impl NativeMlp {
@@ -54,7 +121,21 @@ impl NativeMlp {
             h1: vec![0.0; HIDDEN1],
             h2: vec![0.0; HIDDEN2],
             y: vec![0.0; OUT_DIM],
+            bh1: vec![0.0; BLOCK * HIDDEN1],
+            bh2: vec![0.0; BLOCK * HIDDEN2],
+            by: vec![0.0; BLOCK * OUT_DIM],
+            out: Vec::new(),
         }
+    }
+
+    pub fn weights(&self) -> &MlpWeights {
+        &self.weights
+    }
+
+    /// Swap in new parameters.
+    pub fn set_weights(&mut self, weights: MlpWeights) {
+        assert!(weights.shapes_ok());
+        self.weights = weights;
     }
 
     /// Forward one feature vector; returns the raw (y0, y1) pair.
@@ -65,6 +146,49 @@ impl NativeMlp {
         // Output activation: softplus keeps both outputs positive and
         // smooth (must match model.py).
         (softplus(self.y[0]), softplus(self.y[1]))
+    }
+
+    /// Forward a whole batch through the blocked GEMM pipeline;
+    /// returns one raw (y0, y1) pair per input row, bit-identical to
+    /// calling [`NativeMlp::forward`] row by row. The returned slice
+    /// borrows the internal arena — no allocation at steady state.
+    pub fn forward_batch(&mut self, feats: &[[f32; FEAT_DIM]]) -> &[(f32, f32)] {
+        self.out.clear();
+        self.out.reserve(feats.len());
+        for chunk in feats.chunks(BLOCK) {
+            let rows = chunk.len();
+            dense_batch(
+                chunk.as_flattened(),
+                FEAT_DIM,
+                &self.weights.w1,
+                &self.weights.b1,
+                HIDDEN1,
+                true,
+                &mut self.bh1[..rows * HIDDEN1],
+            );
+            dense_batch(
+                &self.bh1[..rows * HIDDEN1],
+                HIDDEN1,
+                &self.weights.w2,
+                &self.weights.b2,
+                HIDDEN2,
+                true,
+                &mut self.bh2[..rows * HIDDEN2],
+            );
+            dense_batch(
+                &self.bh2[..rows * HIDDEN2],
+                HIDDEN2,
+                &self.weights.w3,
+                &self.weights.b3,
+                OUT_DIM,
+                false,
+                &mut self.by[..rows * OUT_DIM],
+            );
+            for yr in self.by[..rows * OUT_DIM].chunks_exact(OUT_DIM) {
+                self.out.push((softplus(yr[0]), softplus(yr[1])));
+            }
+        }
+        &self.out
     }
 }
 
@@ -81,19 +205,24 @@ impl EnergyPredictor for NativeMlp {
     }
 
     fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
-        feats
-            .iter()
-            .map(|f| {
-                let (y0, y1) = self.forward(f);
-                decode_output(y0, y1)
-            })
-            .collect()
+        let mut out = Vec::with_capacity(feats.len());
+        self.predict_into(feats, &mut out);
+        out
+    }
+
+    fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
+        out.clear();
+        out.reserve(feats.len());
+        for &(y0, y1) in self.forward_batch(feats) {
+            out.push(decode_output(y0, y1));
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Xoshiro256;
 
     #[test]
     fn forward_is_deterministic_and_finite() {
@@ -115,6 +244,33 @@ mod tests {
         let mut out = [0.0f32; 3];
         dense(&x, &w, &b, 3, false, &mut out);
         assert_eq!(out, [9.5, 12.5, 15.5]);
+    }
+
+    #[test]
+    fn dense_handles_zero_inputs_branch_free() {
+        // A zero input contributes nothing but is still accumulated —
+        // same result as the manual computation, constant FLOPs.
+        let x = [0.0f32, 2.0];
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.5f32; 3];
+        let mut out = [0.0f32; 3];
+        dense(&x, &w, &b, 3, false, &mut out);
+        assert_eq!(out, [8.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn dense_batch_runs_rows_independently() {
+        // Two rows through a 2×3 layer equal two single-row calls.
+        let x = [1.0f32, 2.0, 0.5, -1.0];
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.5f32; 3];
+        let mut y = [0.0f32; 6];
+        dense_batch(&x, 2, &w, &b, 3, false, &mut y);
+        let mut row = [0.0f32; 3];
+        dense(&x[..2], &w, &b, 3, false, &mut row);
+        assert_eq!(&y[..3], &row);
+        dense(&x[2..], &w, &b, 3, false, &mut row);
+        assert_eq!(&y[3..], &row);
     }
 
     #[test]
@@ -146,6 +302,51 @@ mod tests {
         let (y0, _) = m.forward(&f1);
         assert!((batch[0].power_w - y0 as f64 * 100.0).abs() < 1e-4);
         assert_ne!(batch[0], batch[1]);
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_forward() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let mut m = NativeMlp::new(MlpWeights::init(31));
+        // Rows with exact zeros exercise the branch-free accumulation.
+        let feats: Vec<[f32; FEAT_DIM]> = (0..BLOCK + 5)
+            .map(|_| {
+                let mut f = [0f32; FEAT_DIM];
+                for x in f.iter_mut() {
+                    *x = if rng.chance(0.25) {
+                        0.0
+                    } else {
+                        rng.uniform(-1.0, 2.0) as f32
+                    };
+                }
+                f
+            })
+            .collect();
+        let singles: Vec<(f32, f32)> = feats.iter().map(|f| m.forward(f)).collect();
+        let batched = m.forward_batch(&feats).to_vec();
+        assert_eq!(batched, singles, "batched path must be bit-identical");
+    }
+
+    #[test]
+    fn predict_into_reuses_buffer_and_matches_predict() {
+        let mut m = NativeMlp::new(MlpWeights::init(5));
+        let feats = vec![[0.4f32; FEAT_DIM]; 10];
+        let fresh = m.predict(&feats);
+        let mut buf = vec![Prediction { power_w: -1.0, slowdown: -1.0 }; 3];
+        m.predict_into(&feats, &mut buf);
+        assert_eq!(buf, fresh);
+    }
+
+    #[test]
+    fn set_weights_changes_outputs() {
+        let mut m = NativeMlp::new(MlpWeights::init(1));
+        let f = [0.5f32; FEAT_DIM];
+        let before = m.forward_batch(&[f])[0];
+        m.set_weights(MlpWeights::init(2));
+        let after = m.forward_batch(&[f])[0];
+        assert_ne!(before, after);
+        // Batched path still agrees with the single-row path.
+        assert_eq!(after, m.forward(&f));
     }
 
     #[test]

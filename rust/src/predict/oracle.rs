@@ -115,6 +115,11 @@ impl EnergyPredictor for OraclePredictor {
     fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
         feats.iter().map(oracle_eval).collect()
     }
+
+    fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
+        out.clear();
+        out.extend(feats.iter().map(oracle_eval));
+    }
 }
 
 #[cfg(test)]
@@ -199,5 +204,10 @@ mod tests {
         assert_eq!(out.len(), 7);
         assert!(out.windows(2).all(|w| w[0] == w[1]));
         assert_eq!(o.name(), "oracle");
+        // The buffer-reusing path clears stale contents and agrees.
+        let mut buf = out.clone();
+        buf.push(out[0]);
+        o.predict_into(&feats, &mut buf);
+        assert_eq!(buf, out);
     }
 }

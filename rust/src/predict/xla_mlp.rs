@@ -7,7 +7,7 @@
 //! discarded), larger batches run in chunks.
 
 use crate::predict::engine::{decode_output, EnergyPredictor, MlpWeights, Prediction};
-use crate::profile::{flatten_batch, FEAT_DIM};
+use crate::profile::FEAT_DIM;
 use crate::runtime::{Runtime, RuntimeError};
 
 pub struct XlaMlp {
@@ -77,14 +77,18 @@ impl XlaMlp {
         self.runtime.exec_count
     }
 
-    /// Score one padded chunk of exactly `self.batch` rows. Only the
-    /// feature tensor is uploaded; the staged weight buffers are
-    /// reused.
-    fn run_chunk(&mut self, chunk: &[[f32; FEAT_DIM]]) -> Result<Vec<Prediction>, RuntimeError> {
+    /// Score one padded chunk of exactly `self.batch` rows, appending
+    /// the decoded predictions to `out`. Only the feature tensor is
+    /// uploaded; the staged weight buffers are reused.
+    fn run_chunk(
+        &mut self,
+        chunk: &[[f32; FEAT_DIM]],
+        out: &mut Vec<Prediction>,
+    ) -> Result<(), RuntimeError> {
         debug_assert!(chunk.len() <= self.batch);
         let rows = chunk.len();
         self.buf.clear();
-        self.buf.extend_from_slice(&flatten_batch(chunk));
+        self.buf.extend_from_slice(chunk.as_flattened());
         self.buf.resize(self.batch * FEAT_DIM, 0.0);
         let feats_buf = self
             .runtime
@@ -94,12 +98,37 @@ impl XlaMlp {
         for b in &self.weight_bufs {
             args.push(b);
         }
-        let out = self.runtime.execute_buffers("predict", &args)?;
-        let y = &out[0]; // [batch, 2] flattened
+        let result = self.runtime.execute_buffers("predict", &args)?;
+        let y = &result[0]; // [batch, 2] flattened
         debug_assert_eq!(y.len(), self.batch * 2);
-        Ok((0..rows)
-            .map(|i| decode_output(y[2 * i], y[2 * i + 1]))
-            .collect())
+        out.extend(
+            y[..rows * 2]
+                .chunks_exact(2)
+                .map(|p| decode_output(p[0], p[1])),
+        );
+        Ok(())
+    }
+
+    /// Fallible batched scoring into a caller-provided buffer
+    /// (cleared first) — the allocation-free path `predict_into`
+    /// wraps.
+    pub fn try_predict_into(
+        &mut self,
+        feats: &[[f32; FEAT_DIM]],
+        out: &mut Vec<Prediction>,
+    ) -> Result<(), RuntimeError> {
+        out.clear();
+        out.reserve(feats.len());
+        for chunk in feats.chunks(self.batch) {
+            if let Err(e) = self.run_chunk(chunk, out) {
+                // Never hand back a partial prediction vector — a
+                // caller that recovers from the error must not pair
+                // stale rows with fresh features.
+                out.clear();
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 
     /// Fallible batched scoring.
@@ -108,9 +137,7 @@ impl XlaMlp {
         feats: &[[f32; FEAT_DIM]],
     ) -> Result<Vec<Prediction>, RuntimeError> {
         let mut out = Vec::with_capacity(feats.len());
-        for chunk in feats.chunks(self.batch) {
-            out.extend(self.run_chunk(chunk)?);
-        }
+        self.try_predict_into(feats, &mut out)?;
         Ok(out)
     }
 }
@@ -124,6 +151,11 @@ impl EnergyPredictor for XlaMlp {
         // The runtime is loaded and validated at construction; an
         // execution error here is unrecoverable misconfiguration.
         self.try_predict(feats).expect("predict.hlo execution failed")
+    }
+
+    fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
+        self.try_predict_into(feats, out)
+            .expect("predict.hlo execution failed")
     }
 }
 

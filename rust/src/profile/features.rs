@@ -69,15 +69,10 @@ pub fn build_features_from(
     f
 }
 
-/// Flatten a batch of feature vectors row-major — the layout the
-/// `predict.hlo` executable takes as its `[B, FEAT_DIM]` input.
-pub fn flatten_batch(rows: &[[f32; FEAT_DIM]]) -> Vec<f32> {
-    let mut out = Vec::with_capacity(rows.len() * FEAT_DIM);
-    for r in rows {
-        out.extend_from_slice(r);
-    }
-    out
-}
+// A `[B, FEAT_DIM]` batch of rows is already the contiguous row-major
+// layout the `predict.hlo` executable takes — consumers flatten with
+// `slice::as_flattened`, no copy needed (the old `flatten_batch`
+// helper allocated a Vec per call and is gone).
 
 #[cfg(test)]
 mod tests {
@@ -146,12 +141,13 @@ mod tests {
     }
 
     #[test]
-    fn flatten_is_row_major() {
+    fn batch_rows_flatten_row_major() {
         let mut a = [0f32; FEAT_DIM];
         let mut b = [0f32; FEAT_DIM];
         a[0] = 1.0;
         b[0] = 2.0;
-        let flat = flatten_batch(&[a, b]);
+        let batch = [a, b];
+        let flat = batch.as_flattened();
         assert_eq!(flat.len(), 2 * FEAT_DIM);
         assert_eq!(flat[0], 1.0);
         assert_eq!(flat[FEAT_DIM], 2.0);

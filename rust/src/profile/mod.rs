@@ -8,6 +8,6 @@ pub mod history;
 pub mod vector;
 
 pub use classifier::{classify, WorkloadClass};
-pub use features::{build_features, flatten_batch, FEAT_DIM};
+pub use features::{build_features, FEAT_DIM};
 pub use history::{ExecutionRecord, HistoryStore};
 pub use vector::ResourceVector;

@@ -13,10 +13,23 @@
 //! avoid migration storms. Migration targets are scored through the
 //! placement policy's predictor, borrowed via the scan's
 //! [`ScoringHandle`].
+//!
+//! # Batched scoring
+//!
+//! The scan scores the full (donor VM × candidate target) matrix with
+//! **one** predictor call per scan, through the same reusable-arena
+//! `predict_into` path `decide_batch` uses (it used to issue one call
+//! per donor VM). Candidate gathering applies every filter that does
+//! not depend on targets chosen for *earlier* VMs in the same scan;
+//! the planned-load fit check — the only sequential dependence — is
+//! applied afterwards at selection time, so the emitted actions are
+//! identical to the per-VM loop. The per-VM reference survives as
+//! [`Consolidator::scan_sequential`] and the equivalence is a
+//! property test in `rust/tests/prop.rs`.
 
-use crate::cluster::{HostId, VmId, VmState};
-use crate::predict::EnergyPredictor;
-use crate::profile::{build_features, ResourceVector};
+use crate::cluster::{Cluster, Flavor, Host, HostId, Utilization, VmId, VmState};
+use crate::predict::{EnergyPredictor, Prediction};
+use crate::profile::{build_features, ResourceVector, FEAT_DIM};
 use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
 use crate::sched::ScheduleContext;
 use std::collections::BTreeMap;
@@ -81,6 +94,41 @@ pub struct Consolidator {
     pub restricted: Vec<HostId>,
     /// When each host was first observed empty (hysteresis state).
     empty_since: BTreeMap<HostId, f64>,
+    /// Scoring arena, refilled in place each scan: candidate targets,
+    /// their feature rows, per-VM `[start, end)` spans, and the
+    /// predictor output — no steady-state allocation on the scan
+    /// path.
+    feats: Vec<[f32; FEAT_DIM]>,
+    cands: Vec<HostId>,
+    spans: Vec<(VmId, usize, usize)>,
+    preds: Vec<Prediction>,
+}
+
+/// Everything the evacuation planner needs from the first half of a
+/// scan: Eq. 9 bookkeeping, power-off planning, the low-activity
+/// gate, and donor selection. Shared by the batched scan and the
+/// sequential reference so the two can only differ in how targets
+/// are *scored*.
+struct ScanPrelude {
+    actions: Vec<ControlAction>,
+    sustained: Vec<f64>,
+    /// `None` when the cluster is busy (migrations postponed) or no
+    /// host qualifies under Eq. 8. The per-host state the target
+    /// filter needs lives *inside* the option so it cannot be read
+    /// on a donor-less scan (and is never computed for one).
+    evacuation: Option<Evacuation>,
+}
+
+/// The Eq. 8 donor plus the per-host scan state the target filter
+/// consumes, computed once per scan — VM-independent within the
+/// frozen context, so the gather loop must not recompute it per
+/// (donor VM × target) pair.
+struct Evacuation {
+    donor: HostId,
+    /// Per-host flag: planned for power-off this scan.
+    off_planned: Vec<bool>,
+    /// Per-host effective utilization — max(instantaneous, profiled).
+    utils: Vec<Utilization>,
 }
 
 impl Consolidator {
@@ -89,15 +137,17 @@ impl Consolidator {
             params,
             restricted: Vec::new(),
             empty_since: BTreeMap::new(),
+            feats: Vec::new(),
+            cands: Vec::new(),
+            spans: Vec::new(),
+            preds: Vec::new(),
         }
     }
 
-    /// One scan pass. Pure planning: no cluster mutation here.
-    fn plan(
-        &mut self,
-        ctx: &ScheduleContext<'_>,
-        predictor: &mut dyn EnergyPredictor,
-    ) -> Vec<ControlAction> {
+    /// First half of a scan: restriction bookkeeping, hysteresis
+    /// power-offs, the low-activity migration gate, and Eq. 8 donor
+    /// selection. Pure planning: no cluster mutation here.
+    fn prelude(&mut self, ctx: &ScheduleContext<'_>) -> ScanPrelude {
         let now = ctx.now;
         let cluster = ctx.cluster;
         let mut actions = Vec::new();
@@ -164,126 +214,297 @@ impl Consolidator {
         } else {
             on_utils.iter().sum::<f64>() / on_utils.len() as f64
         };
-        if cluster_mean > self.params.migration_util_ceiling {
-            return actions; // busy: postpone consolidation migrations
+        let donor = if cluster_mean > self.params.migration_util_ceiling {
+            None // busy: postpone consolidation migrations
+        } else {
+            // Eq. 8: pick ONE donor — the least-utilized on-host below
+            // δ_low that still runs VMs and is migration-quiet.
+            (0..n)
+                .filter(|&i| {
+                    let h = &cluster.hosts[i];
+                    h.state.is_on()
+                        && !h.vms.is_empty()
+                        && sustained[i] < self.params.delta_low
+                        && h.migration_net == 0.0
+                        && h.vms.iter().all(|vm| {
+                            matches!(cluster.vms[vm].state, VmState::Running)
+                        })
+                })
+                .min_by(|&a, &b| sustained[a].partial_cmp(&sustained[b]).unwrap())
+                .map(HostId)
+        };
+        // Per-host scan state for the target filter is only computed
+        // when a donor exists — the common busy/no-donor scan skips
+        // the O(hosts) effective-utilization sweep entirely.
+        let evacuation = donor.map(|donor| {
+            let mut off_planned = vec![false; n];
+            for h in &powering_off {
+                off_planned[h.0] = true;
+            }
+            Evacuation {
+                donor,
+                off_planned,
+                utils: (0..n).map(|i| cluster.effective_util(HostId(i))).collect(),
+            }
+        });
+        ScanPrelude {
+            actions,
+            sustained,
+            evacuation,
         }
+    }
 
-        // Eq. 8: pick ONE donor — the least-utilized on-host below
-        // δ_low that still runs VMs and is migration-quiet.
-        let donor = (0..n)
-            .filter(|&i| {
-                let h = &cluster.hosts[i];
-                h.state.is_on()
-                    && !h.vms.is_empty()
-                    && sustained[i] < self.params.delta_low
-                    && h.migration_net == 0.0
-                    && h.vms.iter().all(|vm| {
-                        matches!(cluster.vms[vm].state, VmState::Running)
-                    })
-            })
-            .min_by(|&a, &b| sustained[a].partial_cmp(&sustained[b]).unwrap())
-            .map(HostId);
+    /// Static target filters for migrating a donor VM (of `flavor`,
+    /// with runtime context `vctx`) onto `host`: everything except the
+    /// planned-load fit check, whose inputs depend on targets chosen
+    /// for earlier VMs in the same scan and which is therefore applied
+    /// at selection time. One predicate shared by the batched scan's
+    /// gather phase and the sequential reference, so the two candidate
+    /// sets cannot drift. Per-host scan state (sustained utilization,
+    /// effective utilization, power-off plan) comes precomputed from
+    /// the prelude's [`Evacuation`].
+    #[allow(clippy::too_many_arguments)]
+    fn target_ok(
+        &self,
+        cluster: &Cluster,
+        sustained: &[f64],
+        ev: &Evacuation,
+        host: &Host,
+        flavor: &Flavor,
+        vctx: &VmContext,
+    ) -> bool {
+        if host.id == ev.donor || !host.state.is_on() {
+            return false;
+        }
+        // Never migrate onto a host we just planned to power off, and
+        // never onto an *empty* host — moving load to an empty machine
+        // swaps hosts instead of shrinking the active set.
+        if ev.off_planned[host.id.0] || host.vms.is_empty() {
+            return false;
+        }
+        // Eq. 9 restriction on sustained utilization.
+        if sustained[host.id.0] > self.params.delta_high {
+            return false;
+        }
+        // Base admission fit (the planned-load variant, which only
+        // shrinks this set, is re-checked at selection time).
+        if !host.fits(flavor, cluster.reserved(host.id)) {
+            return false;
+        }
+        // Same effective-load headroom the placement path uses.
+        let u = &ev.utils[host.id.0];
+        let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&vctx.vector, u);
+        if (vctx.vector.cpu > 0.1 && pc > 0.90)
+            || (vctx.vector.mem > 0.1 && pm > 0.90)
+            || (vctx.vector.disk > 0.1 && pd > 0.90)
+            || (vctx.vector.net > 0.1 && pn > 0.90)
+        {
+            return false;
+        }
+        // The migration copy itself occupies ~0.34 of a 1 GbE NIC on
+        // the receiving end; co-located network-heavy phases must
+        // still fit beside it.
+        if pn + MIGRATION_NET_UTIL > 0.95 {
+            return false;
+        }
+        true
+    }
 
-        let Some(donor) = donor else {
+    /// Selection step shared by the batched scan and the sequential
+    /// reference: among one VM's candidates (already filtered by
+    /// [`Consolidator::target_ok`]), re-check admission against the
+    /// load planned onto each target earlier in this scan, apply the
+    /// SLA slowdown gate, and argmin the amortized-idle-floor cost.
+    /// One function so a tweak to the cost formula or the planned-load
+    /// accounting cannot break the batched == sequential equivalence
+    /// the property test guards.
+    #[allow(clippy::too_many_arguments)]
+    fn select_target(
+        &self,
+        cluster: &Cluster,
+        flavor: &Flavor,
+        vctx: &VmContext,
+        cands: &[HostId],
+        preds: &[Prediction],
+        extra_mem: &BTreeMap<HostId, f64>,
+        extra_cpu: &BTreeMap<HostId, f64>,
+    ) -> Option<HostId> {
+        let mut best: Option<(HostId, f64)> = None;
+        for (&cand, p) in cands.iter().zip(preds) {
+            // Planned-load fit: targets filled by earlier VMs in this
+            // scan may no longer take this one.
+            let host = cluster.host(cand);
+            let mut reserved = *cluster.reserved(cand);
+            reserved.mem_gb += extra_mem.get(&cand).copied().unwrap_or(0.0);
+            reserved.cpu += extra_cpu.get(&cand).copied().unwrap_or(0.0);
+            if !host.fits(flavor, &reserved) {
+                continue;
+            }
+            if p.slowdown > self.params.max_slowdown.min(vctx.slack_left) {
+                continue;
+            }
+            // Same amortized-idle-floor objective as placement
+            // (shared via Host::idle_share).
+            let cost = (p.power_w + host.idle_share()) * (1.0 + p.slowdown);
+            if best.map(|(_, c)| cost < c).unwrap_or(true) {
+                best = Some((cand, cost));
+            }
+        }
+        best.map(|(host, _)| host)
+    }
+
+    /// Pre-copy duration at the 40 MB/s throttle: migrating a VM whose
+    /// remaining work is shorter than the copy itself cannot free the
+    /// donor early enough to pay for the copy's network pressure.
+    fn copy_secs(flavor: &Flavor) -> f64 {
+        flavor.mem_gb * 1024.0 * 1.3 / 40.0
+    }
+
+    /// One scan pass, batched: score the full (donor VM × candidate
+    /// target) matrix with ONE predictor call, then run the
+    /// sequential selection with planned-load accounting. Emits the
+    /// same actions as [`Consolidator::scan_sequential`]. Pure
+    /// planning: no cluster mutation here.
+    fn plan(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        predictor: &mut dyn EnergyPredictor,
+    ) -> Vec<ControlAction> {
+        let prelude = self.prelude(ctx);
+        let mut actions = prelude.actions;
+        let Some(ref ev) = prelude.evacuation else {
             return actions;
         };
+        let cluster = ctx.cluster;
 
-        // Plan a target for every VM on the donor; abort wholesale if
-        // any VM has no SLA-safe target (partial evacuation strands
-        // the host at even lower utilization).
-        let mut planned: Vec<(VmId, HostId)> = Vec::new();
-        let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
-        let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
-        for &vm_id in &cluster.hosts[donor.0].vms {
+        // Gather phase: one feature row per (donor VM, viable target)
+        // pair, every filter except the planned-load fit.
+        self.feats.clear();
+        self.cands.clear();
+        self.spans.clear();
+        for &vm_id in &cluster.hosts[ev.donor.0].vms {
             let vm = &cluster.vms[&vm_id];
             let vctx = match ctx.vm_context(vm_id) {
                 Some(c) => c,
                 None => return actions, // missing context: be conservative
             };
-            // Pre-copy duration at the 40 MB/s throttle: migrating a
-            // VM whose remaining work is shorter than the copy itself
-            // cannot free the donor early enough to pay for the copy's
-            // network pressure — let it drain instead.
-            let copy_secs = vm.flavor.mem_gb * 1024.0 * 1.3 / 40.0;
-            if vctx.remaining_solo < copy_secs {
+            if vctx.remaining_solo < Self::copy_secs(&vm.flavor) {
+                return actions; // let it drain instead
+            }
+            let start = self.cands.len();
+            for host in &cluster.hosts {
+                if !self.target_ok(cluster, &prelude.sustained, ev, host, &vm.flavor, vctx) {
+                    continue;
+                }
+                self.cands.push(host.id);
+                self.feats
+                    .push(build_features(&vctx.vector, vctx.remaining_solo, host));
+            }
+            if self.cands.len() == start {
+                return actions; // cannot fully evacuate: give up this scan
+            }
+            self.spans.push((vm_id, start, self.cands.len()));
+        }
+
+        // Scoring phase: ONE predictor call for the whole scan.
+        predictor.predict_into(&self.feats, &mut self.preds);
+
+        // Selection phase: plan a target for every VM on the donor in
+        // order, tracking the load earlier selections planned onto
+        // each target; abort wholesale if any VM has no SLA-safe
+        // target (partial evacuation strands the host at even lower
+        // utilization).
+        let mut planned: Vec<(VmId, HostId)> = Vec::new();
+        let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
+        let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
+        for &(vm_id, start, end) in &self.spans {
+            let vm = &cluster.vms[&vm_id];
+            let vctx = ctx.vm_context(vm_id).expect("gathered above");
+            let target = self.select_target(
+                cluster,
+                &vm.flavor,
+                vctx,
+                &self.cands[start..end],
+                &self.preds[start..end],
+                &extra_mem,
+                &extra_cpu,
+            );
+            match target {
+                Some(target) => {
+                    *extra_mem.entry(target).or_default() += vm.flavor.mem_gb;
+                    *extra_cpu.entry(target).or_default() += vm.flavor.vcpus;
+                    planned.push((vm_id, target));
+                }
+                None => return actions, // SLA-unsafe: skip consolidating this host
+            }
+        }
+        for (vm, to) in planned {
+            actions.push(ControlAction::Migrate { vm, to });
+        }
+        actions
+    }
+
+    /// Reference implementation: the pre-batching per-VM loop (one
+    /// predictor call per donor VM). Kept public-but-hidden as the
+    /// parity oracle — `rust/tests/prop.rs` asserts `scan` emits
+    /// identical [`ControlAction`]s across randomized clusters — and
+    /// as the sequential baseline `benches/bench_consolidation.rs`
+    /// measures the batched scan against.
+    #[doc(hidden)]
+    pub fn scan_sequential(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        predictor: ScoringHandle<'_>,
+    ) -> Vec<ControlAction> {
+        let prelude = self.prelude(ctx);
+        let mut actions = prelude.actions;
+        let Some(ref ev) = prelude.evacuation else {
+            return actions;
+        };
+        let cluster = ctx.cluster;
+        let mut planned: Vec<(VmId, HostId)> = Vec::new();
+        let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
+        let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
+        for &vm_id in &cluster.hosts[ev.donor.0].vms {
+            let vm = &cluster.vms[&vm_id];
+            let vctx = match ctx.vm_context(vm_id) {
+                Some(c) => c,
+                None => return actions,
+            };
+            if vctx.remaining_solo < Self::copy_secs(&vm.flavor) {
                 return actions;
             }
             let mut cands: Vec<HostId> = Vec::new();
             let mut feats = Vec::new();
             for host in &cluster.hosts {
-                if host.id == donor || !host.state.is_on() {
-                    continue;
-                }
-                // Never migrate onto a host we just planned to power
-                // off, and never onto an *empty* host — moving load to
-                // an empty machine swaps hosts instead of shrinking
-                // the active set.
-                if powering_off.contains(&host.id) || host.vms.is_empty() {
-                    continue;
-                }
-                // δ_high and planned-load-aware fit check.
-                if sustained[host.id.0] > self.params.delta_high {
-                    continue;
-                }
-                let mut reserved = *cluster.reserved(host.id);
-                reserved.mem_gb += extra_mem.get(&host.id).copied().unwrap_or(0.0);
-                reserved.cpu += extra_cpu.get(&host.id).copied().unwrap_or(0.0);
-                if !host.fits(&vm.flavor, &reserved) {
-                    continue;
-                }
-                // Same effective-load headroom the placement path uses.
-                let inst = host.utilization();
-                let prof = cluster.expected_util(host.id);
-                let u = crate::cluster::Utilization {
-                    cpu: inst.cpu.max(prof.cpu),
-                    mem: inst.mem.max(prof.mem),
-                    disk: inst.disk.max(prof.disk),
-                    net: inst.net.max(prof.net),
-                };
-                let (pc, pm, pd, pn) =
-                    crate::predict::oracle::post_utilization(&vctx.vector, &u);
-                if (vctx.vector.cpu > 0.1 && pc > 0.90)
-                    || (vctx.vector.mem > 0.1 && pm > 0.90)
-                    || (vctx.vector.disk > 0.1 && pd > 0.90)
-                    || (vctx.vector.net > 0.1 && pn > 0.90)
-                {
-                    continue;
-                }
-                let _ = pc;
-                // The migration copy itself occupies ~0.34 of a 1 GbE
-                // NIC on the receiving end; co-located network-heavy
-                // phases must still fit beside it.
-                if pn + MIGRATION_NET_UTIL > 0.95 {
+                if !self.target_ok(cluster, &prelude.sustained, ev, host, &vm.flavor, vctx) {
                     continue;
                 }
                 cands.push(host.id);
                 feats.push(build_features(&vctx.vector, vctx.remaining_solo, host));
             }
             if cands.is_empty() {
-                return actions; // cannot fully evacuate: give up this scan
+                return actions;
             }
+            // One predictor call PER VM — the cost the batched scan
+            // removes.
             let preds = predictor.predict(&feats);
-            let mut best: Option<(HostId, f64)> = None;
-            for (i, p) in preds.iter().enumerate() {
-                if p.slowdown > self.params.max_slowdown.min(vctx.slack_left) {
-                    continue;
-                }
-                // Same amortized-idle-floor objective as placement.
-                let host = cluster.host(cands[i]);
-                let idle_share =
-                    host.spec.power.p_idle / (host.vms.len() as f64 + 1.0);
-                let cost = (p.power_w + idle_share) * (1.0 + p.slowdown);
-                if best.map(|(_, c)| cost < c).unwrap_or(true) {
-                    best = Some((cands[i], cost));
-                }
-            }
-            match best {
-                Some((target, _)) => {
+            let target = self.select_target(
+                cluster,
+                &vm.flavor,
+                vctx,
+                &cands,
+                &preds,
+                &extra_mem,
+                &extra_cpu,
+            );
+            match target {
+                Some(target) => {
                     *extra_mem.entry(target).or_default() += vm.flavor.mem_gb;
                     *extra_cpu.entry(target).or_default() += vm.flavor.vcpus;
                     planned.push((vm_id, target));
                 }
-                None => return actions, // SLA-unsafe: skip consolidating this host
+                None => return actions,
             }
         }
         for (vm, to) in planned {
@@ -501,6 +722,81 @@ mod tests {
         assert!(
             !actions.iter().any(|a| matches!(a, ControlAction::Migrate { .. })),
             "{actions:?}"
+        );
+    }
+
+    /// Oracle-equivalent predictor that counts scoring invocations.
+    struct CountingOracle {
+        calls: u32,
+    }
+
+    impl crate::predict::EnergyPredictor for CountingOracle {
+        fn name(&self) -> &'static str {
+            "counting-oracle"
+        }
+
+        fn predict(&mut self, feats: &[[f32; crate::profile::FEAT_DIM]]) -> Vec<Prediction> {
+            self.calls += 1;
+            crate::predict::OraclePredictor.predict(feats)
+        }
+
+        fn predict_into(
+            &mut self,
+            feats: &[[f32; crate::profile::FEAT_DIM]],
+            out: &mut Vec<Prediction>,
+        ) {
+            self.calls += 1;
+            crate::predict::OraclePredictor.predict_into(feats, out);
+        }
+    }
+
+    #[test]
+    fn scan_issues_exactly_one_predictor_call() {
+        // Donor with TWO VMs: the old path scored each VM separately
+        // (one predictor call per donor VM); the batched scan must
+        // score the whole (VM × target) matrix in ONE call.
+        let (mut c, mut ctxs, _) = setup();
+        let vm2 = c.create_vm(MEDIUM, JobId(2), 0.0);
+        c.place_vm(vm2, HostId(0)).unwrap();
+        ctxs.insert(vm2, ctx());
+        let mut t = Telemetry::new(3, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = CountingOracle { calls: 0 };
+        let sctx = ScheduleContext::new(1000.0, &c)
+            .with_telemetry(&t)
+            .with_vm_ctx(&ctxs);
+        let actions = cons.scan(&sctx, Some(&mut pred));
+        let migrations = actions
+            .iter()
+            .filter(|a| matches!(a, ControlAction::Migrate { .. }))
+            .count();
+        assert_eq!(migrations, 2, "both donor VMs evacuate: {actions:?}");
+        assert_eq!(pred.calls, 1, "one predictor call per scan");
+    }
+
+    #[test]
+    fn batched_scan_matches_sequential_reference() {
+        let (mut c, mut ctxs, _) = setup();
+        let vm2 = c.create_vm(MEDIUM, JobId(2), 0.0);
+        c.place_vm(vm2, HostId(0)).unwrap();
+        ctxs.insert(vm2, ctx());
+        let mut t = Telemetry::new(3, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let sctx = ScheduleContext::new(1000.0, &c)
+            .with_telemetry(&t)
+            .with_vm_ctx(&ctxs);
+        let mut batched = Consolidator::new(ConsolidationParams::default());
+        let mut sequential = Consolidator::new(ConsolidationParams::default());
+        let mut p1 = OraclePredictor;
+        let mut p2 = OraclePredictor;
+        assert_eq!(
+            batched.scan(&sctx, Some(&mut p1)),
+            sequential.scan_sequential(&sctx, &mut p2)
         );
     }
 

@@ -22,7 +22,7 @@
 //! results are independent of batch composition (dense per-row math),
 //! so batched decisions are bit-identical to the sequential loop.
 
-use crate::cluster::{Cluster, HostId};
+use crate::cluster::{HostId, HostView};
 use crate::predict::{EnergyPredictor, Prediction};
 use crate::sched::policy::{powered_off, Decision, PlacementPolicy, PlacementRequest};
 use crate::sched::{ScheduleContext, ScoringHandle};
@@ -63,13 +63,17 @@ impl Default for EnergyAwareParams {
 pub struct EnergyAware {
     pub predictor: Box<dyn EnergyPredictor>,
     pub params: EnergyAwareParams,
-    /// Scratch buffers reused across decisions (the only per-call
-    /// allocation is the predictor's output vector): the flattened
-    /// candidate list and feature matrix for the whole batch, plus
-    /// per-request `[start, end)` spans into them.
+    /// Scratch buffers reused across decisions — the scoring arena.
+    /// No per-call allocation at steady state: the candidate list,
+    /// feature matrix, per-request `[start, end)` spans, pruned host
+    /// views, and the predictor's output all live here and are
+    /// refilled in place ([`EnergyPredictor::predict_into`]).
     feats: Vec<[f32; crate::profile::FEAT_DIM]>,
-    cands: Vec<HostId>,
+    /// Candidate hosts with their precomputed amortized idle share.
+    cands: Vec<(HostId, f64)>,
     spans: Vec<(usize, usize)>,
+    views: Vec<HostView>,
+    preds: Vec<Prediction>,
 }
 
 impl EnergyAware {
@@ -80,34 +84,27 @@ impl EnergyAware {
             feats: Vec::new(),
             cands: Vec::new(),
             spans: Vec::new(),
+            views: Vec::new(),
+            preds: Vec::new(),
         }
     }
 
     /// Append this request's SLA-safe candidate hosts (and their
     /// feature rows) to the scratch buffers; returns the span.
-    fn gather_candidates(&mut self, req: &PlacementRequest, cluster: &Cluster) -> (usize, usize) {
+    ///
+    /// Candidates come from the pruned [`HostView`] snapshot, built
+    /// once per frozen context: hot hosts (Eq. 9) and non-accepting
+    /// hosts are already excluded, and each view carries the O(1)
+    /// cached effective utilization — per-request work no longer
+    /// touches every host or recomputes expected load.
+    fn gather_candidates(&mut self, req: &PlacementRequest, views: &[HostView]) -> (usize, usize) {
         let start = self.cands.len();
-        for host in &cluster.hosts {
-            if !host.fits(&req.flavor, cluster.reserved(host.id)) {
-                continue;
-            }
-            // Effective load: the max of instantaneous utilization and
-            // the profiled mean of resident jobs — a host whose ETL
-            // tenants are between I/O bursts is NOT free capacity.
-            let inst = host.utilization();
-            let prof = cluster.expected_util(host.id);
-            let u = crate::cluster::Utilization {
-                cpu: inst.cpu.max(prof.cpu),
-                mem: inst.mem.max(prof.mem),
-                disk: inst.disk.max(prof.disk),
-                net: inst.net.max(prof.net),
-            };
-            // Eq. 9: restrict placements onto hot hosts.
-            if u.cpu > self.params.delta_high {
+        for v in views {
+            if !v.fits(&req.flavor) {
                 continue;
             }
             // Headroom filter on the dimensions the workload uses.
-            let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&req.vector, &u);
+            let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&req.vector, &v.util);
             let hr = self.params.headroom;
             if (req.vector.cpu > 0.1 && pc > hr)
                 || (req.vector.mem > 0.1 && pm > hr)
@@ -116,13 +113,13 @@ impl EnergyAware {
             {
                 continue;
             }
-            self.cands.push(host.id);
+            self.cands.push((v.id, v.idle_share));
             self.feats.push(crate::profile::features::build_features_from(
                 &req.vector,
                 req.remaining_solo,
-                &u,
-                host.vms.len(),
-                host.freq,
+                &v.util,
+                v.n_vms,
+                v.freq,
             ));
         }
         (start, self.cands.len())
@@ -130,17 +127,11 @@ impl EnergyAware {
 
     /// Argmin of predicted energy-to-completion over one request's
     /// candidate span `[start, end)`, honoring the Eq. 7 guard.
-    fn argmin_energy(
-        &self,
-        req: &PlacementRequest,
-        cluster: &Cluster,
-        preds: &[Prediction],
-        start: usize,
-        end: usize,
-    ) -> Option<HostId> {
+    fn argmin_energy(&self, req: &PlacementRequest, start: usize, end: usize) -> Option<HostId> {
         let mut best: Option<(HostId, f64)> = None;
-        for k in start..end {
-            let p = &preds[k];
+        let cands = &self.cands[start..end];
+        let preds = &self.preds[start..end];
+        for (&(host, idle_share), p) in cands.iter().zip(preds) {
             if p.slowdown > self.params.max_slowdown {
                 continue; // Eq. 7 predictive guard
             }
@@ -151,11 +142,9 @@ impl EnergyAware {
             // candidate an amortized share of its host's idle power —
             // an empty host carries the full P_idle for this job's
             // duration, a busy host's floor is already paid for.
-            let host = cluster.host(self.cands[k]);
-            let idle_share = host.spec.power.p_idle / (host.vms.len() as f64 + 1.0);
             let energy = (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown);
             if best.map(|(_, e)| energy < e).unwrap_or(true) {
-                best = Some((self.cands[k], energy));
+                best = Some((host, energy));
             }
         }
         best.map(|(host, _)| host)
@@ -174,13 +163,15 @@ impl PlacementPolicy for EnergyAware {
         self.feats.clear();
         self.cands.clear();
         self.spans.clear();
-        let (start, end) = self.gather_candidates(req, cluster);
-        let preds = if self.feats.is_empty() {
-            Vec::new()
-        } else {
-            self.predictor.predict(&self.feats)
-        };
-        match self.argmin_energy(req, cluster, &preds, start, end) {
+        cluster.scoring_views(self.params.delta_high, &mut self.views);
+        let views = std::mem::take(&mut self.views);
+        let (start, end) = self.gather_candidates(req, &views);
+        self.views = views;
+        self.preds.clear();
+        if !self.feats.is_empty() {
+            self.predictor.predict_into(&self.feats, &mut self.preds);
+        }
+        match self.argmin_energy(req, start, end) {
             Some(host) => Decision::Place(host),
             // No SLA-safe powered-on host: boot one rather than
             // violate Eq. 7 (capacity beats consolidation when they
@@ -193,7 +184,8 @@ impl PlacementPolicy for EnergyAware {
     }
 
     /// Native batched path: one predictor invocation scores the full
-    /// (pending requests × feasible hosts) feature matrix.
+    /// (pending requests × feasible hosts) feature matrix. The pruned
+    /// host views are built once for the whole batch.
     fn decide_batch(
         &mut self,
         reqs: &[PlacementRequest],
@@ -203,15 +195,17 @@ impl PlacementPolicy for EnergyAware {
         self.feats.clear();
         self.cands.clear();
         self.spans.clear();
+        cluster.scoring_views(self.params.delta_high, &mut self.views);
+        let views = std::mem::take(&mut self.views);
         for req in reqs {
-            let span = self.gather_candidates(req, cluster);
+            let span = self.gather_candidates(req, &views);
             self.spans.push(span);
         }
-        let preds = if self.feats.is_empty() {
-            Vec::new()
-        } else {
-            self.predictor.predict(&self.feats)
-        };
+        self.views = views;
+        self.preds.clear();
+        if !self.feats.is_empty() {
+            self.predictor.predict_into(&self.feats, &mut self.preds);
+        }
         // Boot fallback: the first powered-off host, identical for
         // every request in the frozen context (the coordinator
         // re-decides duplicate boot requests against the live
@@ -221,7 +215,7 @@ impl PlacementPolicy for EnergyAware {
         let mut boot: Option<Option<HostId>> = None;
         let mut out = Vec::with_capacity(reqs.len());
         for (req, &(start, end)) in reqs.iter().zip(&self.spans) {
-            out.push(match self.argmin_energy(req, cluster, &preds, start, end) {
+            out.push(match self.argmin_energy(req, start, end) {
                 Some(host) => Decision::Place(host),
                 // No SLA-safe powered-on host: boot one rather than
                 // violate Eq. 7 (capacity beats consolidation when
@@ -252,7 +246,7 @@ impl PlacementPolicy for EnergyAware {
 mod tests {
     use super::*;
     use crate::cluster::flavor::MEDIUM;
-    use crate::cluster::Demand;
+    use crate::cluster::{Cluster, Demand};
     use crate::predict::OraclePredictor;
     use crate::profile::ResourceVector;
     use crate::workload::JobId;

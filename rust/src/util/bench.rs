@@ -3,7 +3,9 @@
 //! batches, outlier-robust statistics, throughput reporting, and a
 //! uniform one-line output format that `bench_output.txt` collects.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// One benchmark runner with criterion-like ergonomics.
@@ -123,6 +125,72 @@ pub fn bench_header(group: &str) {
     println!("== bench group: {group} ==");
 }
 
+/// True when `BENCH_SHORT` is set (and not "0"): benches shrink
+/// problem sizes / sample counts so the CI smoke job stays fast while
+/// still exercising every measured path and emitting the JSON report.
+pub fn short_mode() -> bool {
+    std::env::var("BENCH_SHORT").is_ok_and(|v| v != "0")
+}
+
+/// Machine-readable bench report: collects [`BenchResult`]s (plus
+/// free-form numeric tags like batch size or throughput) and writes
+/// them as `BENCH_<group>.json` so the repo's perf trajectory is
+/// recorded run over run instead of scraped from stdout. The output
+/// directory comes from `BENCH_JSON_DIR` (default: the current
+/// working directory).
+pub struct JsonReport {
+    group: String,
+    entries: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(group: &str) -> JsonReport {
+        JsonReport {
+            group: group.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one result with extra numeric tags (e.g. `("batch", 64)`
+    /// or `("rows_per_s", rate)`).
+    pub fn record_with(&mut self, r: &BenchResult, tags: &[(&str, f64)]) {
+        let mut e = Json::obj();
+        e.set("name", Json::Str(r.name.clone()))
+            .set("mean_s", Json::Num(r.per_iter.mean))
+            .set("p50_s", Json::Num(r.per_iter.p50))
+            .set("p95_s", Json::Num(r.per_iter.p95))
+            .set("samples", Json::Num(r.per_iter.n as f64))
+            .set("iters", Json::Num(r.total_iters as f64));
+        for (k, v) in tags {
+            e.set(k, Json::Num(*v));
+        }
+        self.entries.push(e);
+    }
+
+    pub fn record(&mut self, r: &BenchResult) {
+        self.record_with(r, &[]);
+    }
+
+    /// Write `BENCH_<group>.json` into `dir` and return its path.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.group));
+        let mut doc = Json::obj();
+        doc.set("group", Json::Str(self.group.clone()))
+            .set("short_mode", Json::Bool(short_mode()))
+            .set("results", Json::Arr(self.entries.clone()));
+        std::fs::write(&path, doc.to_string())?;
+        println!("bench json: {}", path.display());
+        Ok(path)
+    }
+
+    /// Write `BENCH_<group>.json` into `BENCH_JSON_DIR` (default: the
+    /// current working directory) and return its path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(std::path::Path::new(&dir))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +221,26 @@ mod tests {
         assert!(fmt_time(5e-6).contains("µs"));
         assert!(fmt_time(5e-3).contains("ms"));
         assert!(fmt_time(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let r = Bench::new("demo").warmup(0).samples(3).iters(2).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        let mut report = JsonReport::new("unit");
+        report.record_with(&r, &[("batch", 64.0)]);
+        let dir = std::env::temp_dir().join("ecosched-bench-json-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = report.write_to(&dir).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("group").unwrap().as_str(), Some("unit"));
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(results[0].get("batch").unwrap().as_f64(), Some(64.0));
+        assert!(results[0].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

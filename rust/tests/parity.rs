@@ -1,0 +1,79 @@
+//! Parity suite for the batched GEMM inference path: `forward_batch`
+//! must be **bit-identical** to row-by-row `forward` (same per-row
+//! accumulation order), and the `predict_into` buffer path must agree
+//! with `predict`, across batch sizes and random weights.
+
+use ecosched::predict::{EnergyPredictor, MlpWeights, NativeMlp, OraclePredictor, Prediction};
+use ecosched::profile::FEAT_DIM;
+use ecosched::util::rng::Xoshiro256;
+
+/// Feature rows spanning the realistic range, with exact zeros mixed
+/// in to exercise the branch-free accumulation.
+fn random_feats(rng: &mut Xoshiro256, n: usize) -> Vec<[f32; FEAT_DIM]> {
+    (0..n)
+        .map(|_| {
+            let mut f = [0f32; FEAT_DIM];
+            for x in f.iter_mut() {
+                *x = if rng.chance(0.2) {
+                    0.0
+                } else {
+                    rng.uniform(-0.5, 2.0) as f32
+                };
+            }
+            f
+        })
+        .collect()
+}
+
+#[test]
+fn forward_batch_bit_identical_across_batch_sizes_and_weights() {
+    for seed in 1..=6u64 {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut m = NativeMlp::new(MlpWeights::init(seed * 101));
+        for &batch in &[1usize, 2, 17, 128] {
+            let feats = random_feats(&mut rng, batch);
+            let singles: Vec<(f32, f32)> = feats.iter().map(|f| m.forward(f)).collect();
+            let batched = m.forward_batch(&feats).to_vec();
+            assert_eq!(
+                batched, singles,
+                "bitwise divergence at seed {seed} batch {batch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_batch_spanning_multiple_blocks_stays_identical() {
+    // 300 rows forces three internal row blocks (BLOCK = 128).
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let mut m = NativeMlp::new(MlpWeights::init(9));
+    let feats = random_feats(&mut rng, 300);
+    let singles: Vec<(f32, f32)> = feats.iter().map(|f| m.forward(f)).collect();
+    assert_eq!(m.forward_batch(&feats), &singles[..]);
+}
+
+#[test]
+fn predict_into_agrees_with_predict_for_all_predictors() {
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let feats = random_feats(&mut rng, 33);
+    let mut buf: Vec<Prediction> = Vec::new();
+
+    let mut mlp = NativeMlp::new(MlpWeights::init(4));
+    let fresh = mlp.predict(&feats);
+    mlp.predict_into(&feats, &mut buf);
+    assert_eq!(buf, fresh);
+
+    let mut oracle = OraclePredictor;
+    let fresh = oracle.predict(&feats);
+    oracle.predict_into(&feats, &mut buf);
+    assert_eq!(buf, fresh);
+}
+
+#[test]
+fn empty_batch_is_a_no_op() {
+    let mut m = NativeMlp::new(MlpWeights::init(2));
+    assert!(m.forward_batch(&[]).is_empty());
+    let mut buf = vec![Prediction { power_w: 1.0, slowdown: 1.0 }; 4];
+    m.predict_into(&[], &mut buf);
+    assert!(buf.is_empty(), "predict_into clears stale contents");
+}

@@ -5,10 +5,13 @@
 
 use ecosched::cluster::{Cluster, Demand, HostId, VmState};
 use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
-use ecosched::predict::{oracle_eval, synthesize};
-use ecosched::profile::FEAT_DIM;
+use ecosched::predict::{oracle_eval, synthesize, MlpWeights, NativeMlp};
+use ecosched::profile::{ResourceVector, FEAT_DIM};
+use ecosched::sched::{ConsolidationParams, Consolidator, ControlLoop, ScheduleContext, VmContext};
+use ecosched::sim::Telemetry;
 use ecosched::util::rng::Xoshiro256;
-use ecosched::workload::{Arrivals, Mix, TraceSpec};
+use ecosched::workload::{Arrivals, JobId, Mix, TraceSpec};
+use std::collections::BTreeMap;
 
 /// Mini property harness: run `f` for `n` cases with derived seeds.
 fn for_all_seeds(n: u64, f: impl Fn(u64)) {
@@ -42,6 +45,18 @@ fn prop_cluster_operations_preserve_invariants() {
                             t,
                         );
                         cluster.place_vm(vm, host).expect("fits");
+                        // Random profiled demand exercises the
+                        // incremental expected-load cache across the
+                        // migration/terminate lifecycle below.
+                        cluster.set_expected_demand(
+                            vm,
+                            Demand {
+                                cpu: rng.uniform(0.0, 8.0),
+                                mem_gb: rng.uniform(0.0, 16.0),
+                                disk_mbps: rng.uniform(0.0, 200.0),
+                                net_mbps: rng.uniform(0.0, 60.0),
+                            },
+                        );
                         live.push(vm);
                     }
                 }
@@ -93,6 +108,82 @@ fn prop_cluster_operations_preserve_invariants() {
                 .check_invariants()
                 .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
         }
+    });
+}
+
+#[test]
+fn prop_batched_consolidation_scan_matches_sequential() {
+    // The one-predictor-call scan must emit exactly the ControlActions
+    // of the per-VM reference loop, whatever the cluster looks like.
+    for_all_seeds(20, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC0FFEE);
+        let n_hosts = 3 + rng.range(0, 5);
+        let mut c = Cluster::homogeneous(n_hosts);
+        let mut ctxs = BTreeMap::new();
+        for j in 0..(2 * n_hosts) {
+            let flavor = ecosched::cluster::flavor::CATALOG[rng.range(0, 3)];
+            let feas = c.feasible_hosts(&flavor);
+            if feas.is_empty() {
+                continue;
+            }
+            let host = feas[rng.range(0, feas.len())];
+            let vm = c.create_vm(flavor, JobId(j as u64), 0.0);
+            c.place_vm(vm, host).unwrap();
+            if rng.chance(0.5) {
+                c.set_expected_demand(
+                    vm,
+                    Demand {
+                        cpu: rng.uniform(0.0, 6.0),
+                        mem_gb: rng.uniform(0.0, 12.0),
+                        disk_mbps: rng.uniform(0.0, 150.0),
+                        net_mbps: rng.uniform(0.0, 40.0),
+                    },
+                );
+            }
+            ctxs.insert(
+                vm,
+                VmContext {
+                    vector: ResourceVector {
+                        cpu: rng.uniform(0.0, 0.9),
+                        mem: rng.uniform(0.0, 0.9),
+                        disk: rng.uniform(0.0, 0.9),
+                        net: rng.uniform(0.0, 0.9),
+                        cpu_peak: rng.uniform(0.0, 1.0),
+                        io_peak: rng.uniform(0.0, 1.0),
+                        burstiness: rng.uniform(0.0, 1.0),
+                    },
+                    remaining_solo: rng.uniform(100.0, 5000.0),
+                    slack_left: rng.uniform(0.0, 0.1),
+                },
+            );
+        }
+        for h in 0..n_hosts {
+            c.host_mut(HostId(h)).demand = Demand {
+                cpu: rng.uniform(0.0, 20.0),
+                mem_gb: rng.uniform(0.0, 30.0),
+                disk_mbps: rng.uniform(0.0, 400.0),
+                net_mbps: rng.uniform(0.0, 60.0),
+            };
+        }
+        let mut t = Telemetry::new(n_hosts, 1, 0.0);
+        for k in 1..=10 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let ctx = ScheduleContext::new(1000.0, &c)
+            .with_telemetry(&t)
+            .with_vm_ctx(&ctxs);
+        // Same MLP weights on both sides; the batched side scores
+        // through forward_batch, the reference through per-VM calls —
+        // bit-identical kernels make the actions exactly equal.
+        let mut p1 = NativeMlp::new(MlpWeights::init(seed));
+        let mut p2 = NativeMlp::new(MlpWeights::init(seed));
+        let mut batched = Consolidator::new(ConsolidationParams::default());
+        let mut sequential = Consolidator::new(ConsolidationParams::default());
+        let a = batched.scan(&ctx, Some(&mut p1));
+        let b = sequential.scan_sequential(&ctx, &mut p2);
+        assert_eq!(a, b, "seed {seed}: batched {a:?} != sequential {b:?}");
+        c.check_invariants()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
     });
 }
 
