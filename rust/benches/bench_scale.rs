@@ -1,16 +1,167 @@
-//! Bench: coordinator scale-out — campaign wall time vs cluster size
-//! (the §VI-C scale experiment's engine cost).
+//! Bench: scheduler scale-out. Two parts:
+//!
+//! 1. `decide_batch` over the sharded cluster state: host counts
+//!    {256, 1k, 4k, 10k} × shard counts {1, 4, 16}, measuring burst
+//!    decision latency and — via a counting predictor — the feature
+//!    rows scored per decision. With top-K routing the per-decision
+//!    work is bounded by the K largest shards, so rows/decision must
+//!    drop well below the fleet size as shards grow (asserted at 10k
+//!    hosts: the acceptance gate for the sharding refactor).
+//! 2. (full mode only) end-to-end campaign wall time vs cluster size
+//!    — the §VI-C scale experiment's engine cost.
+//!
+//! Results go to `BENCH_scale.json` (`util::bench::JsonReport`);
+//! `BENCH_SHORT` shrinks sample counts but keeps the full sweep so CI
+//! records the scaling curve every run.
 
+use ecosched::cluster::{Cluster, Demand, HostId, ShardedCluster};
 use ecosched::coordinator::make_policy;
 use ecosched::exp::common::run_campaign;
-use ecosched::util::bench::{bench_header, Bench};
-use ecosched::workload::{Arrivals, Mix, TraceSpec};
+use ecosched::predict::{oracle_eval, EnergyPredictor, Prediction};
+use ecosched::profile::{ResourceVector, FEAT_DIM};
+use ecosched::sched::{
+    EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, ScheduleContext,
+};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
+use ecosched::workload::{Arrivals, JobId, Mix, TraceSpec};
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// Oracle-equivalent predictor that counts scored rows — the
+/// per-decision work measure the sub-linearity gate reads.
+struct CountingOracle {
+    rows: Rc<Cell<u64>>,
+}
+
+impl EnergyPredictor for CountingOracle {
+    fn name(&self) -> &'static str {
+        "counting-oracle"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        self.rows.set(self.rows.get() + feats.len() as u64);
+        feats.iter().map(oracle_eval).collect()
+    }
+
+    fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
+        self.rows.set(self.rows.get() + feats.len() as u64);
+        out.clear();
+        out.extend(feats.iter().map(oracle_eval));
+    }
+}
+
+/// Deterministically loaded fleet: mixed demand, everything below
+/// δ_high so pruning does not collapse the candidate sets.
+fn loaded_cluster(n: usize) -> Cluster {
+    let mut c = Cluster::homogeneous(n);
+    for i in 0..n {
+        c.host_mut(HostId(i)).demand = Demand {
+            cpu: (i as f64 * 3.0) % 24.0,
+            mem_gb: (i as f64 * 7.0) % 48.0,
+            disk_mbps: (i as f64 * 40.0) % 400.0,
+            net_mbps: (i as f64 * 11.0) % 100.0,
+        };
+    }
+    c
+}
+
+/// A submit burst of varied requests.
+fn burst(b: usize) -> Vec<PlacementRequest> {
+    (0..b)
+        .map(|i| PlacementRequest {
+            job: JobId(i as u64),
+            flavor: ecosched::cluster::flavor::MEDIUM,
+            vector: ResourceVector {
+                cpu: 0.2 + 0.6 * (i % 7) as f64 / 7.0,
+                mem: 0.5,
+                disk: 0.2 + 0.5 * (i % 5) as f64 / 5.0,
+                net: 0.3,
+                cpu_peak: 0.8,
+                io_peak: 0.5,
+                burstiness: 0.3,
+            },
+            remaining_solo: 300.0 + 60.0 * i as f64,
+        })
+        .collect()
+}
 
 fn main() {
     bench_header("scale");
-    for n_hosts in [5usize, 20, 80] {
-        let n_jobs = 5 * n_hosts;
-        let r = Bench::new(&format!("campaign/energy-aware/{n_hosts}-hosts/{n_jobs}-jobs"))
+    let mut report = JsonReport::new("scale");
+    let short = short_mode();
+    let samples = if short { 3 } else { 10 };
+    const BURST: usize = 64;
+    let reqs = burst(BURST);
+    let top_k = EnergyAwareParams::default().top_k_shards;
+
+    // rows/decision at (10240 hosts, shards=1) and (10240, shards=16)
+    // for the sub-linearity gate.
+    let mut rows_flat_10k = 0.0f64;
+    let mut rows_sharded_10k = 0.0f64;
+
+    for &n_hosts in &[256usize, 1024, 4096, 10240] {
+        let base = loaded_cluster(n_hosts);
+        for &shards in &[1usize, 4, 16] {
+            let sc = ShardedCluster::new(base.clone(), shards);
+            let rows = Rc::new(Cell::new(0u64));
+            let mut policy = EnergyAware::new(
+                Box::new(CountingOracle {
+                    rows: Rc::clone(&rows),
+                }),
+                EnergyAwareParams::default(),
+            );
+            let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+            let mut iters = 0u64;
+            let r = Bench::new(&format!(
+                "decide_batch/{n_hosts}-hosts/{shards}-shards/burst={BURST}"
+            ))
+            .warmup(1)
+            .samples(samples)
+            .run(|| {
+                std::hint::black_box(policy.decide_batch(&reqs, &ctx));
+                iters += 1;
+            });
+            // Rows include the warmup iteration; average over all runs.
+            let rows_per_decision =
+                rows.get() as f64 / ((iters.max(1) as f64) * BURST as f64);
+            r.print_throughput("decisions", BURST as f64);
+            println!("      rows/decision: {rows_per_decision:.0} (fleet {n_hosts})");
+            report.record_with(
+                &r,
+                &[
+                    ("hosts", n_hosts as f64),
+                    ("shards", shards as f64),
+                    ("burst", BURST as f64),
+                    ("top_k", top_k as f64),
+                    ("rows_per_decision", rows_per_decision),
+                ],
+            );
+            if n_hosts == 10240 && shards == 1 {
+                rows_flat_10k = rows_per_decision;
+            }
+            if n_hosts == 10240 && shards == 16 {
+                rows_sharded_10k = rows_per_decision;
+            }
+        }
+    }
+
+    // Acceptance gate: at 10k hosts, top-K routing over 16 shards
+    // must bound per-decision work well below the whole-fleet sweep
+    // (expected ≈ K/shards = 1/4 of it).
+    assert!(
+        rows_sharded_10k < 0.5 * rows_flat_10k,
+        "sharded fan-out not sub-linear: {rows_sharded_10k:.0} rows/decision \
+         vs {rows_flat_10k:.0} unsharded"
+    );
+
+    // End-to-end campaign scale (the §VI-C engine cost) — expensive,
+    // full mode only.
+    if !short {
+        for n_hosts in [5usize, 20, 80] {
+            let n_jobs = 5 * n_hosts;
+            let r = Bench::new(&format!(
+                "campaign/energy-aware/{n_hosts}-hosts/{n_jobs}-jobs"
+            ))
             .warmup(0)
             .samples(3)
             .iters(1)
@@ -28,6 +179,10 @@ fn main() {
                     run_campaign(make_policy("energy_aware").unwrap(), trace, 1, n_hosts);
                 std::hint::black_box(report.energy_j);
             });
-        r.print();
+            r.print();
+            report.record_with(&r, &[("hosts", n_hosts as f64), ("campaign", 1.0)]);
+        }
     }
+
+    report.write().expect("write BENCH_scale.json");
 }

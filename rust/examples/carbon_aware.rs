@@ -4,14 +4,17 @@
 //!
 //! The grid's carbon intensity follows a typical duck-curve day
 //! (compressed into the campaign): dirty morning/evening, clean solar
-//! midday. We weight the consolidation aggressiveness by intensity —
-//! the scheduler defers deferrable (ETL) load toward the clean window
-//! by tightening admission during dirty hours — and report gCO₂ for
-//! baseline vs energy-aware vs carbon-weighted.
+//! midday. The capping logic this example originally sketched now
+//! lives in the scheduler proper as
+//! [`ecosched::sched::PowerCapLoop`]: set a watt budget (here, what a
+//! dirty-grid contract would allow) and the loop holds the fleet
+//! under it by throttling I/O-bound hosts first. We report gCO₂ for
+//! baseline vs energy-aware vs energy-aware-plus-cap.
 //!
 //! Run: `cargo run --release --example carbon_aware`
 
 use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::sched::PowerCapParams;
 use ecosched::util::timeline::sparkline;
 use ecosched::workload::{Arrivals, Mix, TraceSpec};
 
@@ -54,10 +57,25 @@ fn main() {
     let curve: Vec<f64> = (0..64).map(|i| carbon_intensity(i as f64 / 63.0)).collect();
     println!("  {}\n", sparkline(&curve));
 
-    for policy in ["round_robin", "energy_aware"] {
+    // (policy, power cap): the capped run models a dirty-hours grid
+    // contract of ~480 W across the five-host fleet.
+    let configs: [(&str, Option<PowerCapParams>); 3] = [
+        ("round_robin", None),
+        ("energy_aware", None),
+        (
+            "energy_aware",
+            Some(PowerCapParams {
+                budget_w: 480.0,
+                ..Default::default()
+            }),
+        ),
+    ];
+    for (policy, power_cap) in configs {
+        let capped = power_cap.is_some();
         let mut coordinator = Coordinator::new(
             CampaignConfig {
                 seed: 3,
+                power_cap,
                 ..Default::default()
             },
             make_policy(policy).unwrap(),
@@ -65,17 +83,19 @@ fn main() {
         let r = coordinator.run(trace.clone());
         let g = grams_co2(&r);
         println!(
-            "{:<13} energy {:>9.1} Wh | carbon {:>7.1} gCO₂ | SLA {:>5.1} %",
+            "{:<13}{} energy {:>9.1} Wh | carbon {:>7.1} gCO₂ | SLA {:>5.1} %",
             r.policy,
+            if capped { "+cap" } else { "    " },
             r.energy_j / 3600.0,
             g,
             r.sla_compliance * 100.0
         );
     }
     println!(
-        "\nenergy-aware consolidation reduces both joules and gCO₂; a full\n\
-         carbon-aware policy would additionally shift deferrable load into the\n\
-         solar trough — tracked as future work in DESIGN.md (extension of Eq. 6\n\
-         with a time-varying intensity weight)."
+        "\nenergy-aware consolidation reduces both joules and gCO₂, and the\n\
+         PowerCapLoop bounds peak draw during dirty hours; a full carbon-aware\n\
+         policy would additionally shift deferrable load into the solar trough\n\
+         (extension of Eq. 6 with a time-varying intensity weight — feed\n\
+         carbon_intensity() into PowerCapLoop::set_budget between scans)."
     );
 }

@@ -2,7 +2,7 @@
 //! power-state machine. Host state `R_h = (U_cpu, U_mem, U_io)` (Eq. 3)
 //! is derived here from the demands of resident VMs.
 
-use crate::cluster::power::{PowerModel, PowerState, BOOT_SECS, PSTATES, SHUTDOWN_SECS};
+use crate::cluster::power::{snap_to_pstate, PowerModel, PowerState, BOOT_SECS, SHUTDOWN_SECS};
 use crate::cluster::vm::VmId;
 use crate::cluster::Demand;
 
@@ -205,17 +205,7 @@ impl Host {
 
     /// Set the DVFS point to the nearest catalog p-state.
     pub fn set_freq(&mut self, target: f64) {
-        let freq = PSTATES
-            .iter()
-            .copied()
-            .min_by(|a, b| {
-                (a - target)
-                    .abs()
-                    .partial_cmp(&(b - target).abs())
-                    .unwrap()
-            })
-            .unwrap();
-        self.freq = freq;
+        self.freq = snap_to_pstate(target);
     }
 }
 

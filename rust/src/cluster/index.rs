@@ -63,6 +63,32 @@ impl Cluster {
         }
     }
 
+    /// One host's scoring view at this instant, or `None` when the
+    /// host does not accept VMs or its effective CPU utilization
+    /// exceeds `delta_high` (Eq. 9). The single constructor behind
+    /// both the whole-cluster and the per-shard view builders, so the
+    /// flat and sharded placement paths can never disagree on which
+    /// hosts are placeable.
+    pub fn scoring_view_of(&self, id: HostId, delta_high: f64) -> Option<HostView> {
+        let host = &self.hosts[id.0];
+        if !host.state.accepts_vms() {
+            return None;
+        }
+        let util = self.effective_util(id);
+        if util.cpu > delta_high {
+            return None;
+        }
+        Some(HostView {
+            id,
+            util,
+            n_vms: host.vms.len(),
+            freq: host.freq,
+            idle_share: host.idle_share(),
+            reserved: *self.reserved(id),
+            capacity: host.spec.capacity(),
+        })
+    }
+
     /// Build the pruned scoring views for one frozen decision point
     /// into `out` (cleared first; callers reuse the buffer). Hosts
     /// that do not accept VMs or whose effective CPU utilization
@@ -71,22 +97,9 @@ impl Cluster {
     pub fn scoring_views(&self, delta_high: f64, out: &mut Vec<HostView>) {
         out.clear();
         for host in &self.hosts {
-            if !host.state.accepts_vms() {
-                continue;
+            if let Some(v) = self.scoring_view_of(host.id, delta_high) {
+                out.push(v);
             }
-            let util = self.effective_util(host.id);
-            if util.cpu > delta_high {
-                continue;
-            }
-            out.push(HostView {
-                id: host.id,
-                util,
-                n_vms: host.vms.len(),
-                freq: host.freq,
-                idle_share: host.idle_share(),
-                reserved: *self.reserved(host.id),
-                capacity: host.spec.capacity(),
-            });
         }
     }
 }

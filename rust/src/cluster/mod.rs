@@ -6,12 +6,14 @@ pub mod flavor;
 pub mod host;
 pub mod index;
 pub mod power;
+pub mod shard;
 pub mod vm;
 
 pub use flavor::Flavor;
 pub use host::{Host, HostId, HostSpec, Utilization};
 pub use index::HostView;
 pub use power::{PowerModel, PowerState};
+pub use shard::{ShardDigest, ShardMap, ShardedCluster};
 pub use vm::{migration_cost, Vm, VmId, VmState};
 
 use std::collections::BTreeMap;
@@ -69,6 +71,19 @@ impl Demand {
             disk_mbps: self.disk_mbps.min(f.disk_mbps),
             net_mbps: self.net_mbps.min(f.net_mbps),
         }
+    }
+}
+
+/// Flavor-based reservation footprint: admission control reserves
+/// CPU and memory; disk/net are contended, not reserved. The ONE
+/// definition shared by the cluster's reservation accounting and the
+/// shard digests, so the two can never drift.
+pub fn reservation_of(f: &Flavor) -> Demand {
+    Demand {
+        cpu: f.vcpus,
+        mem_gb: f.mem_gb,
+        disk_mbps: 0.0,
+        net_mbps: 0.0,
     }
 }
 
@@ -149,12 +164,7 @@ impl Cluster {
         vm.state = VmState::Running;
         let expected = vm.expected;
         self.hosts[host_id.0].vms.push(vm_id);
-        self.reserved[host_id.0].add(&Demand {
-            cpu: flavor.vcpus,
-            mem_gb: flavor.mem_gb,
-            disk_mbps: 0.0,
-            net_mbps: 0.0,
-        });
+        self.reserved[host_id.0].add(&reservation_of(&flavor));
         self.expected_cache[host_id.0].add(&expected);
         Ok(())
     }
@@ -215,12 +225,7 @@ impl Cluster {
         self.expected_cache[to.0].add(&expected);
         // Reserve on the destination for the duration of the copy; the
         // source keeps its reservation until cut-over.
-        self.reserved[to.0].add(&Demand {
-            cpu: flavor.vcpus,
-            mem_gb: flavor.mem_gb,
-            disk_mbps: 0.0,
-            net_mbps: 0.0,
-        });
+        self.reserved[to.0].add(&reservation_of(&flavor));
         self.hosts[from.0].migration_net += cost.net_mbps;
         self.hosts[to.0].migration_net += cost.net_mbps;
         self.migration_net_of.insert(vm_id, cost.net_mbps);
@@ -385,12 +390,7 @@ impl Cluster {
                 }
                 // Migrating VMs are listed on the source until cut-over;
                 // the destination carries only a reservation.
-                expect.add(&Demand {
-                    cpu: vm.flavor.vcpus,
-                    mem_gb: vm.flavor.mem_gb,
-                    disk_mbps: 0.0,
-                    net_mbps: 0.0,
-                });
+                expect.add(&reservation_of(&vm.flavor));
             }
             let r = &self.reserved[h.id.0];
             // Reservation >= resident flavors (migration targets add
@@ -424,9 +424,10 @@ impl Cluster {
 }
 
 fn sub_reservation(r: &Demand, f: &Flavor) -> Demand {
+    let res = reservation_of(f);
     Demand {
-        cpu: (r.cpu - f.vcpus).max(0.0),
-        mem_gb: (r.mem_gb - f.mem_gb).max(0.0),
+        cpu: (r.cpu - res.cpu).max(0.0),
+        mem_gb: (r.mem_gb - res.mem_gb).max(0.0),
         disk_mbps: r.disk_mbps,
         net_mbps: r.net_mbps,
     }

@@ -15,6 +15,23 @@
 /// Discrete DVFS operating points: relative core frequency.
 pub const PSTATES: [f64; 4] = [1.0, 0.85, 0.7, 0.6];
 
+/// Snap a requested frequency to the nearest catalog p-state — the
+/// ONE snapping rule shared by `Host::set_freq` and planning models
+/// (the power-cap loop) that predict a SetFreq's effect before
+/// actuating it, so plan and actuation can never diverge.
+pub fn snap_to_pstate(target: f64) -> f64 {
+    PSTATES
+        .iter()
+        .copied()
+        .min_by(|a, b| {
+            (a - target)
+                .abs()
+                .partial_cmp(&(b - target).abs())
+                .unwrap()
+        })
+        .unwrap()
+}
+
 /// Linear-in-utilization power model with DVFS-aware CPU term.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PowerModel {

@@ -1,0 +1,617 @@
+//! Sharded cluster state — the fleet-scale layer over [`Cluster`].
+//!
+//! The whole-cluster view stops scaling past a few thousand hosts:
+//! every `decide_batch` candidate sweep and every consolidation scan
+//! walks all hosts, so decision latency grows linearly with fleet
+//! size. [`ShardedCluster`] splits the host set into a fixed,
+//! power-of-two number of shards (SplitMix64 hash of the host id —
+//! stable, no rebalancing) and maintains one [`ShardDigest`] per
+//! shard: a thin aggregate (free-capacity headroom, powered-on count,
+//! per-class expected load) that the coordinator and the fan-out
+//! scheduling paths read *without touching shard interiors*. Policies
+//! route work to the top-K shards by digest headroom and only
+//! materialize those shards' [`HostView`] snapshots.
+//!
+//! Mutations route through the sharded handle (place, migrate,
+//! terminate, expected-demand updates, power transitions) so the
+//! digests stay incrementally consistent — the same discipline the
+//! cluster's own expected-load cache imposes one level down. Reads
+//! pass through [`Deref`] to the inner [`Cluster`] unchanged.
+//! [`ShardedCluster::check_invariants`] cross-checks every digest
+//! against a fresh recomputation from the VM inventory, so a mutation
+//! path that skips the handle is caught by the property tests.
+
+use crate::cluster::flavor::Flavor;
+use crate::cluster::vm::MigrationCost;
+use crate::cluster::{
+    reservation_of, Cluster, Demand, HostId, HostView, PlacementError, VmId, VmState,
+};
+use crate::profile::{classify, ResourceVector, WorkloadClass};
+use std::ops::Deref;
+
+/// Number of per-class load buckets in a [`ShardDigest`] — the Eq. 2
+/// classes: cpu-bound, mem-bound, io-bound, balanced.
+pub const N_LOAD_CLASSES: usize = 4;
+
+/// Digest bucket index of a workload class.
+pub fn class_index(c: WorkloadClass) -> usize {
+    match c {
+        WorkloadClass::CpuBound => 0,
+        WorkloadClass::MemBound => 1,
+        WorkloadClass::IoBound => 2,
+        WorkloadClass::Balanced => 3,
+    }
+}
+
+/// Classify a VM's expected demand (normalized by its flavor) into a
+/// digest bucket — the Eq. 2 dominant-resource rule applied to the
+/// profiled mean instead of a telemetry window. The flavor is the
+/// normalizer (not the host) so the class is stable across
+/// migrations.
+pub fn demand_class(d: &Demand, f: &Flavor) -> usize {
+    let v = ResourceVector {
+        cpu: d.cpu / f.vcpus,
+        mem: d.mem_gb / f.mem_gb,
+        disk: d.disk_mbps / f.disk_mbps,
+        net: d.net_mbps / f.net_mbps,
+        cpu_peak: 0.0,
+        io_peak: 0.0,
+        burstiness: 0.0,
+    };
+    class_index(classify(&v))
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Stable host→shard assignment: hash of the host id masked to a
+/// power-of-two shard count. Fixed at construction, so membership can
+/// be cached everywhere and never rebalances under churn.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardMap {
+    count: usize,
+}
+
+impl ShardMap {
+    pub fn new(count: usize) -> ShardMap {
+        assert!(
+            count.is_power_of_two(),
+            "shard count must be a power of two, got {count}"
+        );
+        ShardMap { count }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn shard_of(&self, host: HostId) -> usize {
+        (splitmix64(host.0 as u64) & (self.count as u64 - 1)) as usize
+    }
+}
+
+/// Cross-shard aggregate of one shard's state — everything the
+/// coordinator and the fan-out paths need to *rank* shards without
+/// reading their interiors. Maintained incrementally by the
+/// [`ShardedCluster`] mutators; `check_invariants` compares it
+/// against [`ShardDigest::compute`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardDigest {
+    /// Member hosts (fixed at construction).
+    pub hosts: usize,
+    /// Hosts currently in the On state.
+    pub on: usize,
+    /// Total nominal capacity of hosts currently accepting VMs.
+    pub capacity_on: Demand,
+    /// Total flavor reservations. Reservations only exist on On hosts
+    /// (admission requires `accepts_vms`), so `capacity_on − reserved`
+    /// is the shard's admission headroom.
+    pub reserved: Demand,
+    /// Total profiled expected load over member hosts (migrating VMs
+    /// count on both ends, mirroring `Cluster::expected_load`).
+    pub expected: Demand,
+    /// Expected load split by Eq. 2 workload class
+    /// (see [`class_index`]).
+    pub per_class: [Demand; N_LOAD_CLASSES],
+}
+
+impl ShardDigest {
+    /// Recompute a digest from cluster state: `hosts` iterates the
+    /// shard's members, `in_shard` tests membership (for attributing
+    /// per-VM class load). The reference the incremental digests are
+    /// checked against.
+    pub fn compute<I, F>(cluster: &Cluster, hosts: I, in_shard: F) -> ShardDigest
+    where
+        I: IntoIterator<Item = HostId>,
+        F: Fn(HostId) -> bool,
+    {
+        let mut d = ShardDigest::default();
+        for h in hosts {
+            let host = &cluster.hosts[h.0];
+            d.hosts += 1;
+            if host.state.is_on() {
+                d.on += 1;
+            }
+            if host.state.accepts_vms() {
+                d.capacity_on.add(&host.spec.capacity());
+            }
+            d.reserved.add(cluster.reserved(h));
+            d.expected.add(&cluster.expected_load(h));
+        }
+        for vm in cluster.vms.values() {
+            let (resident, incoming) = match vm.state {
+                VmState::Migrating { from, to, .. } => (Some(from), Some(to)),
+                _ => (vm.host, None),
+            };
+            let expected = vm.expected();
+            let cls = demand_class(&expected, &vm.flavor);
+            for h in [resident, incoming].into_iter().flatten() {
+                if in_shard(h) {
+                    d.per_class[cls].add(&expected);
+                }
+            }
+        }
+        d
+    }
+
+    /// Admission headroom: accepting capacity minus reservations,
+    /// clamped at zero componentwise.
+    pub fn headroom(&self) -> Demand {
+        Demand {
+            cpu: (self.capacity_on.cpu - self.reserved.cpu).max(0.0),
+            mem_gb: (self.capacity_on.mem_gb - self.reserved.mem_gb).max(0.0),
+            disk_mbps: (self.capacity_on.disk_mbps - self.reserved.disk_mbps).max(0.0),
+            net_mbps: (self.capacity_on.net_mbps - self.reserved.net_mbps).max(0.0),
+        }
+    }
+
+    /// Scalar shard-ranking score. Memory is the admission hard
+    /// constraint; CPU is weighted by the catalog's ~2 GB-per-vCPU
+    /// shape so neither dimension dominates the ranking by unit
+    /// choice alone.
+    pub fn headroom_score(&self) -> f64 {
+        let h = self.headroom();
+        h.mem_gb + 2.0 * h.cpu
+    }
+
+    /// Expected load attributed to one Eq. 2 class.
+    pub fn class_load(&self, c: WorkloadClass) -> Demand {
+        self.per_class[class_index(c)]
+    }
+}
+
+fn demand_close(a: &Demand, b: &Demand) -> bool {
+    (a.cpu - b.cpu).abs() < 1e-6
+        && (a.mem_gb - b.mem_gb).abs() < 1e-6
+        && (a.disk_mbps - b.disk_mbps).abs() < 1e-6
+        && (a.net_mbps - b.net_mbps).abs() < 1e-6
+}
+
+/// The cluster plus its shard map and per-shard digests. Reads deref
+/// to the inner [`Cluster`]; every mutation goes through the methods
+/// below (the "shard handles") so the digests stay consistent.
+///
+/// Power transitions in particular MUST use
+/// [`ShardedCluster::power_on`] / [`ShardedCluster::power_off`] /
+/// [`ShardedCluster::advance_power_states`] rather than reaching a
+/// `&mut Host` directly — the digest's On count and accepting
+/// capacity are maintained there.
+#[derive(Debug)]
+pub struct ShardedCluster {
+    cluster: Cluster,
+    map: ShardMap,
+    /// Member host ids per shard, ascending — iteration order inside
+    /// a shard matches the unsharded host sweep, which is what makes
+    /// single-shard fan-out bit-identical to the flat path.
+    members: Vec<Vec<HostId>>,
+    digests: Vec<ShardDigest>,
+}
+
+impl Deref for ShardedCluster {
+    type Target = Cluster;
+
+    fn deref(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+impl ShardedCluster {
+    pub fn new(cluster: Cluster, shard_count: usize) -> ShardedCluster {
+        let map = ShardMap::new(shard_count);
+        let mut members = vec![Vec::new(); shard_count];
+        for host in &cluster.hosts {
+            members[map.shard_of(host.id)].push(host.id);
+        }
+        let digests = (0..shard_count)
+            .map(|s| {
+                ShardDigest::compute(&cluster, members[s].iter().copied(), |h| {
+                    map.shard_of(h) == s
+                })
+            })
+            .collect();
+        ShardedCluster {
+            cluster,
+            map,
+            members,
+            digests,
+        }
+    }
+
+    /// Explicit read access to the inner cluster (also available
+    /// through [`Deref`]).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.map.count()
+    }
+
+    pub fn shard_of(&self, host: HostId) -> usize {
+        self.map.shard_of(host)
+    }
+
+    pub fn members(&self, shard: usize) -> &[HostId] {
+        &self.members[shard]
+    }
+
+    pub fn digest(&self, shard: usize) -> &ShardDigest {
+        &self.digests[shard]
+    }
+
+    pub fn digests(&self) -> &[ShardDigest] {
+        &self.digests
+    }
+
+    /// Build one shard's pruned scoring views into `out` (cleared
+    /// first) — the per-shard analogue of `Cluster::scoring_views`,
+    /// sharing the same per-host constructor so the two can never
+    /// disagree on which hosts are placeable.
+    pub fn shard_scoring_views(&self, shard: usize, delta_high: f64, out: &mut Vec<HostView>) {
+        out.clear();
+        for &h in &self.members[shard] {
+            if let Some(v) = self.cluster.scoring_view_of(h, delta_high) {
+                out.push(v);
+            }
+        }
+    }
+
+    // ---- shard handles: mutations with incremental digest upkeep ----
+
+    pub fn create_vm(&mut self, flavor: Flavor, job: crate::workload::JobId, now: f64) -> VmId {
+        // A pending VM is unplaced: no digest contribution yet.
+        self.cluster.create_vm(flavor, job, now)
+    }
+
+    pub fn place_vm(&mut self, vm_id: VmId, host_id: HostId) -> Result<(), PlacementError> {
+        let Some((expected, flavor)) = self
+            .cluster
+            .vms
+            .get(&vm_id)
+            .map(|vm| (vm.expected(), vm.flavor))
+        else {
+            return self.cluster.place_vm(vm_id, host_id);
+        };
+        self.cluster.place_vm(vm_id, host_id)?;
+        let d = &mut self.digests[self.map.shard_of(host_id)];
+        d.reserved.add(&reservation_of(&flavor));
+        d.expected.add(&expected);
+        d.per_class[demand_class(&expected, &flavor)].add(&expected);
+        Ok(())
+    }
+
+    pub fn start_migration(
+        &mut self,
+        vm_id: VmId,
+        to: HostId,
+        now: f64,
+        link_mbps: f64,
+    ) -> Result<MigrationCost, PlacementError> {
+        let info = self
+            .cluster
+            .vms
+            .get(&vm_id)
+            .map(|vm| (vm.expected(), vm.flavor));
+        let cost = self.cluster.start_migration(vm_id, to, now, link_mbps)?;
+        let (expected, flavor) = info.expect("VM exists after successful migration start");
+        // The destination carries the reservation and the expected
+        // load from copy start (both ends count while migrating).
+        let d = &mut self.digests[self.map.shard_of(to)];
+        d.reserved.add(&reservation_of(&flavor));
+        d.expected.add(&expected);
+        d.per_class[demand_class(&expected, &flavor)].add(&expected);
+        Ok(cost)
+    }
+
+    pub fn finish_migration(&mut self, vm_id: VmId) {
+        let Some((from, expected, flavor)) =
+            self.cluster.vms.get(&vm_id).and_then(|vm| match vm.state {
+                VmState::Migrating { from, .. } => Some((from, vm.expected(), vm.flavor)),
+                _ => None,
+            })
+        else {
+            // Let the cluster raise its own panic message.
+            self.cluster.finish_migration(vm_id);
+            return;
+        };
+        self.cluster.finish_migration(vm_id);
+        // Source residency (and reservation) ends; the destination's
+        // share was added at migration start.
+        let d = &mut self.digests[self.map.shard_of(from)];
+        d.reserved.sub(&reservation_of(&flavor));
+        d.expected.sub(&expected);
+        d.per_class[demand_class(&expected, &flavor)].sub(&expected);
+    }
+
+    pub fn terminate_vm(&mut self, vm_id: VmId) {
+        let Some((host, expected, flavor)) = self
+            .cluster
+            .vms
+            .get(&vm_id)
+            .and_then(|vm| vm.host.map(|h| (h, vm.expected(), vm.flavor)))
+        else {
+            self.cluster.terminate_vm(vm_id);
+            return;
+        };
+        self.cluster.terminate_vm(vm_id);
+        let d = &mut self.digests[self.map.shard_of(host)];
+        d.reserved.sub(&reservation_of(&flavor));
+        d.expected.sub(&expected);
+        d.per_class[demand_class(&expected, &flavor)].sub(&expected);
+    }
+
+    pub fn set_expected_demand(&mut self, vm_id: VmId, expected: Demand) {
+        let Some((old, flavor, resident, incoming)) = self.cluster.vms.get(&vm_id).map(|vm| {
+            let (r, i) = match vm.state {
+                VmState::Migrating { from, to, .. } => (Some(from), Some(to)),
+                _ => (vm.host, None),
+            };
+            (vm.expected(), vm.flavor, r, i)
+        }) else {
+            self.cluster.set_expected_demand(vm_id, expected);
+            return;
+        };
+        self.cluster.set_expected_demand(vm_id, expected);
+        let (oc, nc) = (
+            demand_class(&old, &flavor),
+            demand_class(&expected, &flavor),
+        );
+        for h in [resident, incoming].into_iter().flatten() {
+            let d = &mut self.digests[self.map.shard_of(h)];
+            d.expected.sub(&old);
+            d.expected.add(&expected);
+            d.per_class[oc].sub(&old);
+            d.per_class[nc].add(&expected);
+        }
+    }
+
+    pub fn apply_demands(
+        &mut self,
+        vm_demands: &std::collections::BTreeMap<VmId, Demand>,
+    ) {
+        // Instantaneous demand is not part of any digest.
+        self.cluster.apply_demands(vm_demands);
+    }
+
+    /// Advance power-state machines, then recount the power-dependent
+    /// digest fields (Booting→On completions happen here). O(hosts),
+    /// same as the underlying advance.
+    pub fn advance_power_states(&mut self, now: f64) {
+        self.cluster.advance_power_states(now);
+        for d in &mut self.digests {
+            d.on = 0;
+            d.capacity_on = Demand::ZERO;
+        }
+        for host in &self.cluster.hosts {
+            let d = &mut self.digests[self.map.shard_of(host.id)];
+            if host.state.is_on() {
+                d.on += 1;
+            }
+            if host.state.accepts_vms() {
+                d.capacity_on.add(&host.spec.capacity());
+            }
+        }
+    }
+
+    /// Begin booting a host (no digest change until the boot
+    /// completes in [`ShardedCluster::advance_power_states`]).
+    pub fn power_on(&mut self, host: HostId, now: f64) {
+        self.cluster.host_mut(host).power_on(now);
+    }
+
+    /// Begin shutting a host down; the shard immediately stops
+    /// counting it as accepting capacity.
+    pub fn power_off(&mut self, host: HostId, now: f64) {
+        let was_accepting = self.cluster.hosts[host.0].state.accepts_vms();
+        let cap = self.cluster.hosts[host.0].spec.capacity();
+        self.cluster.host_mut(host).power_off(now);
+        if was_accepting && !self.cluster.hosts[host.0].state.accepts_vms() {
+            let d = &mut self.digests[self.map.shard_of(host)];
+            d.on -= 1;
+            d.capacity_on.sub(&cap);
+        }
+    }
+
+    /// Set a host's DVFS point (frequency does not enter any digest —
+    /// capacity aggregates are nominal).
+    pub fn set_freq(&mut self, host: HostId, freq: f64) {
+        self.cluster.host_mut(host).set_freq(freq);
+    }
+
+    /// Cluster invariants plus the shard layer's own: the member
+    /// lists partition the host set consistently with the map, and
+    /// every incremental digest matches a fresh recomputation from
+    /// the VM inventory.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.cluster.check_invariants()?;
+        let mut seen = vec![false; self.cluster.n_hosts()];
+        for (s, members) in self.members.iter().enumerate() {
+            for &h in members {
+                if self.map.shard_of(h) != s {
+                    return Err(format!("{h} listed in shard {s} but hashes elsewhere"));
+                }
+                if seen[h.0] {
+                    return Err(format!("{h} listed in more than one shard"));
+                }
+                seen[h.0] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&b| !b) {
+            return Err(format!("host-{missing} missing from the shard map"));
+        }
+        for s in 0..self.map.count() {
+            let fresh = ShardDigest::compute(&self.cluster, self.members[s].iter().copied(), |h| {
+                self.map.shard_of(h) == s
+            });
+            let d = &self.digests[s];
+            if d.hosts != fresh.hosts || d.on != fresh.on {
+                return Err(format!(
+                    "shard {s}: digest counts {}/{} != recomputed {}/{}",
+                    d.hosts, d.on, fresh.hosts, fresh.on
+                ));
+            }
+            if !demand_close(&d.capacity_on, &fresh.capacity_on) {
+                return Err(format!(
+                    "shard {s}: capacity_on {:?} != recomputed {:?}",
+                    d.capacity_on, fresh.capacity_on
+                ));
+            }
+            if !demand_close(&d.reserved, &fresh.reserved) {
+                return Err(format!(
+                    "shard {s}: reserved {:?} != recomputed {:?}",
+                    d.reserved, fresh.reserved
+                ));
+            }
+            if !demand_close(&d.expected, &fresh.expected) {
+                return Err(format!(
+                    "shard {s}: expected {:?} != recomputed {:?}",
+                    d.expected, fresh.expected
+                ));
+            }
+            for k in 0..N_LOAD_CLASSES {
+                if !demand_close(&d.per_class[k], &fresh.per_class[k]) {
+                    return Err(format!(
+                        "shard {s}: class {k} load {:?} != recomputed {:?}",
+                        d.per_class[k], fresh.per_class[k]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::MEDIUM;
+    use crate::workload::JobId;
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn shard_count_must_be_power_of_two() {
+        ShardMap::new(3);
+    }
+
+    #[test]
+    fn members_partition_hosts() {
+        for count in [1usize, 2, 4, 8] {
+            let sc = ShardedCluster::new(Cluster::homogeneous(23), count);
+            let total: usize = (0..count).map(|s| sc.members(s).len()).sum();
+            assert_eq!(total, 23);
+            for s in 0..count {
+                for &h in sc.members(s) {
+                    assert_eq!(sc.shard_of(h), s);
+                }
+                // Ascending member order (matches the unsharded sweep).
+                let m = sc.members(s);
+                assert!(m.windows(2).all(|w| w[0] < w[1]));
+            }
+            sc.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn digest_tracks_placement_lifecycle() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(4), 2);
+        let host = HostId(0);
+        let shard = sc.shard_of(host);
+        let head0 = sc.digest(shard).headroom();
+        let vm = sc.create_vm(MEDIUM, JobId(1), 0.0);
+        sc.place_vm(vm, host).unwrap();
+        sc.check_invariants().unwrap();
+        let head1 = sc.digest(shard).headroom();
+        assert!((head0.mem_gb - head1.mem_gb - MEDIUM.mem_gb).abs() < 1e-9);
+        let d = Demand {
+            cpu: 2.0,
+            mem_gb: 6.0,
+            disk_mbps: 120.0,
+            net_mbps: 20.0,
+        };
+        sc.set_expected_demand(vm, d);
+        sc.check_invariants().unwrap();
+        assert!((sc.digest(shard).expected.mem_gb - 6.0).abs() < 1e-9);
+        // Migrate to a host in the other shard (both ends count during
+        // the copy; the source's share is released at cut-over).
+        let to = (0..4)
+            .map(HostId)
+            .find(|&h| sc.shard_of(h) != shard)
+            .expect("4 hosts hash into both of 2 shards");
+        sc.start_migration(vm, to, 0.0, 100.0).unwrap();
+        sc.check_invariants().unwrap();
+        assert!((sc.digest(sc.shard_of(to)).expected.mem_gb - 6.0).abs() < 1e-9);
+        sc.finish_migration(vm);
+        sc.check_invariants().unwrap();
+        assert!(sc.digest(shard).expected.mem_gb.abs() < 1e-9);
+        sc.terminate_vm(vm);
+        sc.check_invariants().unwrap();
+        assert!(sc.digest(sc.shard_of(to)).expected.mem_gb.abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_transitions_update_digest() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(4), 2);
+        let host = HostId(1);
+        let shard = sc.shard_of(host);
+        let on0 = sc.digest(shard).on;
+        sc.power_off(host, 0.0);
+        assert_eq!(sc.digest(shard).on, on0 - 1);
+        sc.check_invariants().unwrap();
+        sc.advance_power_states(100.0); // ShuttingDown → Off
+        sc.check_invariants().unwrap();
+        sc.power_on(host, 100.0); // Off → Booting: still not on
+        assert_eq!(sc.digest(shard).on, on0 - 1);
+        sc.check_invariants().unwrap();
+        sc.advance_power_states(300.0); // Booting → On
+        assert_eq!(sc.digest(shard).on, on0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn class_buckets_attribute_expected_load() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(2), 1);
+        let vm = sc.create_vm(MEDIUM, JobId(0), 0.0);
+        sc.place_vm(vm, HostId(0)).unwrap();
+        // Disk-dominant expectation → io-bound bucket.
+        sc.set_expected_demand(
+            vm,
+            Demand {
+                cpu: 0.5,
+                mem_gb: 1.0,
+                disk_mbps: 180.0,
+                net_mbps: 5.0,
+            },
+        );
+        let io = sc.digest(0).class_load(WorkloadClass::IoBound);
+        assert!((io.disk_mbps - 180.0).abs() < 1e-9);
+        assert_eq!(
+            sc.digest(0).class_load(WorkloadClass::CpuBound).disk_mbps,
+            0.0
+        );
+        sc.check_invariants().unwrap();
+    }
+}

@@ -13,6 +13,15 @@
 //! touched is re-decided individually against the updated cluster,
 //! so the admission guards see in-burst load exactly as the
 //! sequential path would.
+//!
+//! Cluster state is sharded (`CampaignConfig::shard_count`): the
+//! leader routes every mutation through the
+//! [`crate::cluster::ShardedCluster`] shard handles so the per-shard
+//! digests stay consistent, attaches the shard layer to every
+//! context it freezes (policies fan bursts out across shards, control
+//! loops scan per shard), and tracks per-shard actuation counters in
+//! [`CampaignState`]. `shard_count = 1` (the default) reproduces the
+//! unsharded scheduler bit for bit.
 
 use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState};
 use crate::coordinator::report::CampaignReport;
@@ -31,12 +40,20 @@ use std::time::Instant;
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
     pub n_hosts: usize,
+    /// Cluster shards (power of two). 1 = the whole fleet is one
+    /// shard, which reproduces the unsharded scheduler exactly (the
+    /// shard_count=1 property test pins this down); larger counts
+    /// bound per-decision work by the top-K shards.
+    pub shard_count: usize,
     pub seed: u64,
     pub sla: SlaSpec,
     /// Consolidation scan settings (None disables the loop even for
     /// policies that want it — used by ablations).
     pub consolidation: Option<crate::sched::ConsolidationParams>,
     pub dvfs: Option<crate::sched::DvfsParams>,
+    /// Cluster power capping (None = uncapped). Runs after
+    /// consolidation and DVFS so the cap can override the governor.
+    pub power_cap: Option<crate::sched::PowerCapParams>,
     /// Seconds between control-loop scans.
     pub scan_interval: f64,
     /// Watts-Up-Pro relative noise (0 disables).
@@ -51,10 +68,12 @@ impl Default for CampaignConfig {
     fn default() -> Self {
         CampaignConfig {
             n_hosts: 5,
+            shard_count: 1,
             seed: 42,
             sla: SlaSpec::default(),
             consolidation: Some(crate::sched::ConsolidationParams::default()),
             dvfs: Some(crate::sched::DvfsParams::default()),
+            power_cap: None,
             scan_interval: 30.0,
             meter_noise: 0.01,
             telemetry_noise: 0.02,
@@ -100,6 +119,11 @@ impl Coordinator {
         }
         if let Some(params) = cfg.dvfs {
             loops.push(Box::new(DvfsGovernor::new(params)));
+        }
+        if let Some(params) = cfg.power_cap {
+            // Last: the cap observes (and may override) what the
+            // governor just actuated.
+            loops.push(Box::new(crate::sched::PowerCapLoop::new(params)));
         }
         let mut queue: EventQueue<Event> = EventQueue::new();
         st.n_jobs = trace.len();
@@ -152,7 +176,7 @@ impl Coordinator {
                             retry.push(id);
                         } else {
                             if st.cluster.host(host).state.is_off() {
-                                st.cluster.host_mut(host).power_on(now);
+                                st.cluster.power_on(host, now);
                                 request_retry(
                                     &mut queue,
                                     &mut st.next_retry,
@@ -357,7 +381,8 @@ impl Coordinator {
                 let ctx = ScheduleContext::new(now, &st.cluster)
                     .with_telemetry(&st.telemetry)
                     .with_history(&self.history)
-                    .with_vm_ctx(&vm_ctx);
+                    .with_vm_ctx(&vm_ctx)
+                    .with_shards(&st.cluster);
                 control.scan(&ctx, self.policy.scoring_handle())
             };
             for action in actions {
@@ -365,12 +390,18 @@ impl Coordinator {
                     ControlAction::PowerOff(h) => {
                         let host = st.cluster.host(h);
                         if host.vms.is_empty() && host.state.is_on() {
-                            st.cluster.host_mut(h).power_off(now);
+                            st.cluster.power_off(h, now);
+                            st.shard_counters[st.cluster.shard_of(h)].power_offs += 1;
                         }
                     }
                     ControlAction::Migrate { vm, to } => {
                         let link = link_headroom(&st.cluster, vm, to);
+                        let from = st.cluster.vms.get(&vm).and_then(|v| v.host);
                         if let Ok(cost) = st.cluster.start_migration(vm, to, now, link) {
+                            if let Some(from) = from {
+                                st.shard_counters[st.cluster.shard_of(from)].migrations_out += 1;
+                            }
+                            st.shard_counters[st.cluster.shard_of(to)].migrations_in += 1;
                             st.counters.migrations += 1;
                             st.counters.migration_stall_s += cost.stall;
                             st.pending_stalls.insert(vm, cost.stall);
@@ -381,7 +412,7 @@ impl Coordinator {
                         }
                     }
                     ControlAction::SetFreq { host, freq } => {
-                        st.cluster.host_mut(host).set_freq(freq);
+                        st.cluster.set_freq(host, freq);
                     }
                 }
             }
@@ -426,7 +457,8 @@ impl Coordinator {
         let decisions = {
             let ctx = ScheduleContext::new(now, &st.cluster)
                 .with_telemetry(&st.telemetry)
-                .with_history(&self.history);
+                .with_history(&self.history)
+                .with_shards(&st.cluster);
             self.policy.decide_batch(&reqs, &ctx)
         };
         assert_eq!(
@@ -487,7 +519,8 @@ impl Coordinator {
             decision = {
                 let ctx = ScheduleContext::new(now, &st.cluster)
                     .with_telemetry(&st.telemetry)
-                    .with_history(&self.history);
+                    .with_history(&self.history)
+                    .with_shards(&st.cluster);
                 self.policy.decide(req, &ctx)
             };
             st.overhead.n_decisions += 1;
@@ -514,6 +547,7 @@ impl Coordinator {
                 st.vm_of_job.insert(req.job, vm);
                 st.job_of_vm.insert(vm, req.job);
                 st.jobs.get_mut(&req.job).unwrap().start(now);
+                st.shard_counters[st.cluster.shard_of(host)].placements += 1;
                 if !placed_hosts.contains(&host) {
                     placed_hosts.push(host);
                 }
@@ -521,7 +555,8 @@ impl Coordinator {
             Decision::PowerOnAndPlace(host) => {
                 // The staleness check above guarantees the host is
                 // still Off here; power_on itself is idempotent.
-                st.cluster.host_mut(host).power_on(now);
+                st.cluster.power_on(host, now);
+                st.shard_counters[st.cluster.shard_of(host)].boots += 1;
                 st.waiting_boot.push((req.job, host));
                 request_retry(queue, &mut st.next_retry, now + BOOT_SECS + 0.5);
             }

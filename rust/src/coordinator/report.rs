@@ -25,6 +25,23 @@ pub struct JobRecord {
     pub sla_met: bool,
 }
 
+/// Per-shard actuation counters — what the leader routed through each
+/// shard handle over the campaign. One entry per shard; a campaign
+/// without an explicit shard count has exactly one.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardCounters {
+    /// VMs placed onto this shard's hosts.
+    pub placements: u64,
+    /// Boot requests issued to this shard's hosts.
+    pub boots: u64,
+    /// Migrations arriving into this shard.
+    pub migrations_in: u64,
+    /// Migrations leaving this shard.
+    pub migrations_out: u64,
+    /// Hosts powered off in this shard.
+    pub power_offs: u64,
+}
+
 /// Decision-path overhead accounting (§V-E).
 #[derive(Debug, Clone, Default)]
 pub struct Overhead {
@@ -92,6 +109,8 @@ pub struct CampaignReport {
     pub overhead: Overhead,
     /// Deferred-placement retries that eventually succeeded.
     pub deferrals: u64,
+    /// Per-shard actuation counters (length = configured shard count).
+    pub per_shard: Vec<ShardCounters>,
 }
 
 impl CampaignReport {

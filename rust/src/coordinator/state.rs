@@ -2,9 +2,9 @@
 //! driving a campaign, gathered into one struct instead of ~20 loose
 //! maps threaded through helper signatures.
 
-use crate::cluster::{Cluster, HostId, VmId};
+use crate::cluster::{Cluster, HostId, ShardedCluster, VmId};
 use crate::coordinator::leader::{remaining_solo, CampaignConfig};
-use crate::coordinator::report::{CampaignReport, JobRecord, Overhead};
+use crate::coordinator::report::{CampaignReport, JobRecord, Overhead, ShardCounters};
 use crate::profile::ResourceVector;
 use crate::sched::VmContext;
 use crate::sim::{EnergyMeter, Telemetry};
@@ -27,7 +27,13 @@ pub struct Counters {
 
 /// The mutable state of one campaign run.
 pub struct CampaignState {
-    pub cluster: Cluster,
+    /// Sharded cluster state. Reads deref to the inner cluster; the
+    /// leader routes every mutation through the shard handles so the
+    /// per-shard digests stay consistent.
+    pub cluster: ShardedCluster,
+    /// Per-shard actuation counters (placements, boots, migrations,
+    /// power-offs), indexed by shard.
+    pub shard_counters: Vec<ShardCounters>,
     pub meter: EnergyMeter,
     pub telemetry: Telemetry,
     pub sla: SlaTracker,
@@ -62,8 +68,10 @@ pub struct CampaignState {
 
 impl CampaignState {
     pub fn new(cfg: &CampaignConfig) -> CampaignState {
+        let shard_count = cfg.shard_count.max(1);
         CampaignState {
-            cluster: Cluster::homogeneous(cfg.n_hosts),
+            cluster: ShardedCluster::new(Cluster::homogeneous(cfg.n_hosts), shard_count),
+            shard_counters: vec![ShardCounters::default(); shard_count],
             meter: EnergyMeter::new(cfg.n_hosts, cfg.seed, cfg.meter_noise),
             telemetry: Telemetry::new(cfg.n_hosts, cfg.seed, cfg.telemetry_noise),
             sla: SlaTracker::new(cfg.sla),
@@ -160,6 +168,7 @@ impl CampaignState {
             per_host_mean_cpu: self.per_host_cpu.iter().map(|o| o.mean()).collect(),
             overhead: self.overhead.clone(),
             deferrals: self.counters.deferrals,
+            per_shard: self.shard_counters.clone(),
         }
     }
 }
@@ -179,5 +188,20 @@ mod tests {
         let r = st.report("test", cfg.seed, 0.0);
         assert_eq!(r.jobs.len(), 0);
         assert_eq!(r.seed, cfg.seed);
+        // Default config is a single shard covering the fleet.
+        assert_eq!(r.per_shard.len(), 1);
+        st.cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_state_sizes_counters_to_shard_count() {
+        let cfg = CampaignConfig {
+            shard_count: 4,
+            ..Default::default()
+        };
+        let st = CampaignState::new(&cfg);
+        assert_eq!(st.shard_counters.len(), 4);
+        assert_eq!(st.cluster.shard_count(), 4);
+        st.cluster.check_invariants().unwrap();
     }
 }

@@ -17,12 +17,22 @@
 //!
 //! ## The L3 scheduling API
 //!
-//! Scheduling flows through three abstractions in [`sched`]:
+//! Scheduling flows through four abstractions in [`sched`] and
+//! [`cluster`]:
 //!
-//! 1. [`sched::ScheduleContext`] — one read-only view (cluster +
-//!    telemetry window + history + sim clock) assembled by the
-//!    coordinator at each decision point.
-//! 2. [`sched::PlacementPolicy::decide_batch`] — the coordinator's
+//! 1. [`cluster::ShardedCluster`] — cluster state behind a fixed
+//!    power-of-two shard map (hash of host id). Each shard owns its
+//!    hosts' view snapshots and caches; a thin per-shard
+//!    [`cluster::ShardDigest`] (headroom, powered-on count, per-class
+//!    expected load) is maintained incrementally by the mutation
+//!    handles and read cross-shard without touching shard interiors.
+//!    `shard_count = 1` (the default) reproduces the unsharded
+//!    scheduler bit for bit — a property test pins this down.
+//! 2. [`sched::ScheduleContext`] — one read-only view (cluster +
+//!    telemetry window + history + sim clock + shard layer) assembled
+//!    by the coordinator at each decision point; `context.shard(s)`
+//!    yields a per-shard lens with the same read API.
+//! 3. [`sched::PlacementPolicy::decide_batch`] — the coordinator's
 //!    only placement entry point: every same-instant submit burst and
 //!    every deferred-queue drain is decided as a batch against one
 //!    frozen context. The energy-aware policy prunes hosts once per
@@ -32,19 +42,26 @@
 //!    scoring arena, and scores it with a single
 //!    [`predict::EnergyPredictor::predict_into`] invocation — exactly
 //!    the `[B, 16]` batch the L1 `score_hosts` kernel streams through
-//!    the MXU as `(B×16)·(16×64)·(64×32)·(32×2)`. The native
-//!    predictor executes that shape as blocked, arena-backed matmuls
+//!    the MXU as `(B×16)·(16×64)·(64×32)·(32×2)`. On a sharded
+//!    context the burst fans out to the top-K shards by digest
+//!    headroom (one predictor call per shard, winners merged by
+//!    `(energy, host id)`), bounding per-decision work by the K
+//!    largest shards instead of the fleet. The native predictor
+//!    executes each batch as blocked, arena-backed matmuls
 //!    (`NativeMlp::forward_batch`), bit-identical to the row-by-row
 //!    path; the sequential per-job loop is the trait's default
 //!    fallback and is bit-identical by contract.
-//! 3. [`sched::ControlLoop`] — the periodic scans (adaptive
-//!    consolidation, DVFS governor, future loops such as carbon-aware
-//!    capping) unified behind one trait that emits
-//!    [`sched::ControlAction`]s; loops borrow the policy's predictor
-//!    through an explicit [`sched::ScoringHandle`] — no downcasts.
-//!    The consolidation scan scores its whole (donor VM × target)
-//!    matrix with ONE predictor call per scan, same arena discipline
-//!    as placement.
+//! 4. [`sched::ControlLoop`] — the periodic scans (adaptive
+//!    consolidation, DVFS governor, cluster power capping) unified
+//!    behind one trait that emits [`sched::ControlAction`]s; loops
+//!    borrow the policy's predictor through an explicit
+//!    [`sched::ScoringHandle`] — no downcasts. Scans are per-shard
+//!    passes: consolidation nominates at most one Eq. 8 donor per
+//!    shard and scores its (donor VM × target) matrix with ONE
+//!    predictor call, overflowing to the best remote shard (by
+//!    digest) under a bounded cross-shard budget;
+//!    [`sched::PowerCapLoop`] holds fleet draw under a watt budget by
+//!    walking shards down the DVFS ladder, I/O-bound hosts first.
 //!
 //! Python never runs at decision time: [`runtime`] loads
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).

@@ -16,8 +16,8 @@
 //!
 //! # Batched scoring
 //!
-//! The scan scores the full (donor VM × candidate target) matrix with
-//! **one** predictor call per scan, through the same reusable-arena
+//! The scan scores the full (donor VM × candidate target) matrix of a
+//! donor with **one** predictor call, through the same reusable-arena
 //! `predict_into` path `decide_batch` uses (it used to issue one call
 //! per donor VM). Candidate gathering applies every filter that does
 //! not depend on targets chosen for *earlier* VMs in the same scan;
@@ -26,12 +26,25 @@
 //! identical to the per-VM loop. The per-VM reference survives as
 //! [`Consolidator::scan_sequential`] and the equivalence is a
 //! property test in `rust/tests/prop.rs`.
+//!
+//! # Sharded scans
+//!
+//! With a shard layer on the context the scan becomes a per-shard
+//! pass: each shard nominates at most ONE Eq. 8 donor (so evacuation
+//! stays bounded per shard, not per fleet) and evacuates it to
+//! in-shard targets — one predictor call per donor shard. When a
+//! donor VM has no viable in-shard target, a bounded cross-shard
+//! fallback consults the [`crate::cluster::ShardDigest`]s and gathers
+//! targets from the single best remote shard by headroom;
+//! `cross_shard_budget` caps how many such migrations one scan may
+//! plan. Without shards the context is one shard covering the fleet,
+//! which reproduces the original single-donor scan exactly.
 
 use crate::cluster::{Cluster, Flavor, Host, HostId, Utilization, VmId, VmState};
 use crate::predict::{EnergyPredictor, Prediction};
 use crate::profile::{build_features, ResourceVector, FEAT_DIM};
 use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
-use crate::sched::ScheduleContext;
+use crate::sched::{ScheduleContext, ShardHosts};
 use std::collections::BTreeMap;
 
 /// Consolidation tunables (`abl1` sweeps δ_low × δ_high).
@@ -57,6 +70,12 @@ pub struct ConsolidationParams {
     /// A host must be continuously empty this long before power-off
     /// (hysteresis against placement/consolidation thrash).
     pub empty_grace_s: f64,
+    /// Maximum cross-shard migrations one sharded scan may plan.
+    /// Cross-shard moves are the fallback when a donor VM has no
+    /// in-shard target; bounding them keeps a scan's blast radius at
+    /// the shard scale (irrelevant without a shard layer — a single
+    /// shard has no remote targets).
+    pub cross_shard_budget: usize,
 }
 
 impl Default for ConsolidationParams {
@@ -70,6 +89,7 @@ impl Default for ConsolidationParams {
             max_slowdown: 0.08,
             spare_hosts: 0,
             empty_grace_s: 45.0,
+            cross_shard_budget: 2,
         }
     }
 }
@@ -119,12 +139,17 @@ struct ScanPrelude {
     evacuation: Option<Evacuation>,
 }
 
-/// The Eq. 8 donor plus the per-host scan state the target filter
-/// consumes, computed once per scan — VM-independent within the
-/// frozen context, so the gather loop must not recompute it per
-/// (donor VM × target) pair.
+/// The Eq. 8 donors (at most one per shard) plus the per-host scan
+/// state the target filter consumes, computed once per scan —
+/// VM-independent within the frozen context, so the gather loop must
+/// not recompute it per (donor VM × target) pair.
 struct Evacuation {
-    donor: HostId,
+    /// `(shard, donor host)` pairs, ascending by shard. Without a
+    /// shard layer this holds at most one entry.
+    donors: Vec<(usize, HostId)>,
+    /// Per-host flag: selected as a donor this scan (targets must
+    /// never be donors — they are below δ_low and being drained).
+    donor_flag: Vec<bool>,
     /// Per-host flag: planned for power-off this scan.
     off_planned: Vec<bool>,
     /// Per-host effective utilization — max(instantaneous, profiled).
@@ -214,39 +239,54 @@ impl Consolidator {
         } else {
             on_utils.iter().sum::<f64>() / on_utils.len() as f64
         };
-        let donor = if cluster_mean > self.params.migration_util_ceiling {
-            None // busy: postpone consolidation migrations
+        let donors: Vec<(usize, HostId)> = if cluster_mean > self.params.migration_util_ceiling {
+            Vec::new() // busy: postpone consolidation migrations
         } else {
-            // Eq. 8: pick ONE donor — the least-utilized on-host below
-            // δ_low that still runs VMs and is migration-quiet.
-            (0..n)
-                .filter(|&i| {
-                    let h = &cluster.hosts[i];
-                    h.state.is_on()
-                        && !h.vms.is_empty()
-                        && sustained[i] < self.params.delta_low
-                        && h.migration_net == 0.0
-                        && h.vms.iter().all(|vm| {
-                            matches!(cluster.vms[vm].state, VmState::Running)
+            // Eq. 8, per shard: each shard nominates at most ONE donor
+            // — the least-utilized on-host below δ_low that still runs
+            // VMs and is migration-quiet. Without a shard layer the
+            // whole cluster is one shard, i.e. the original
+            // single-donor scan.
+            (0..ctx.shard_count())
+                .filter_map(|s| {
+                    ctx.shard(s)
+                        .hosts()
+                        .filter(|h| {
+                            let host = &cluster.hosts[h.0];
+                            host.state.is_on()
+                                && !host.vms.is_empty()
+                                && sustained[h.0] < self.params.delta_low
+                                && host.migration_net == 0.0
+                                && host.vms.iter().all(|vm| {
+                                    matches!(cluster.vms[vm].state, VmState::Running)
+                                })
                         })
+                        .min_by(|a, b| sustained[a.0].partial_cmp(&sustained[b.0]).unwrap())
+                        .map(|h| (s, h))
                 })
-                .min_by(|&a, &b| sustained[a].partial_cmp(&sustained[b]).unwrap())
-                .map(HostId)
+                .collect()
         };
         // Per-host scan state for the target filter is only computed
         // when a donor exists — the common busy/no-donor scan skips
         // the O(hosts) effective-utilization sweep entirely.
-        let evacuation = donor.map(|donor| {
+        let evacuation = if donors.is_empty() {
+            None
+        } else {
             let mut off_planned = vec![false; n];
             for h in &powering_off {
                 off_planned[h.0] = true;
             }
-            Evacuation {
-                donor,
+            let mut donor_flag = vec![false; n];
+            for &(_, h) in &donors {
+                donor_flag[h.0] = true;
+            }
+            Some(Evacuation {
+                donors,
+                donor_flag,
                 off_planned,
                 utils: (0..n).map(|i| cluster.effective_util(HostId(i))).collect(),
-            }
-        });
+            })
+        };
         ScanPrelude {
             actions,
             sustained,
@@ -273,7 +313,7 @@ impl Consolidator {
         flavor: &Flavor,
         vctx: &VmContext,
     ) -> bool {
-        if host.id == ev.donor || !host.state.is_on() {
+        if ev.donor_flag[host.id.0] || !host.state.is_on() {
             return false;
         }
         // Never migrate onto a host we just planned to power off, and
@@ -360,11 +400,61 @@ impl Consolidator {
         flavor.mem_gb * 1024.0 * 1.3 / 40.0
     }
 
-    /// One scan pass, batched: score the full (donor VM × candidate
+    /// Gather one donor VM's viable targets from `hosts` into the
+    /// scoring arena — the ONE gather body shared by the in-shard
+    /// pass and the cross-shard fallback, so their candidate sets
+    /// cannot drift (same rationale as the shared
+    /// [`Consolidator::target_ok`] predicate).
+    #[allow(clippy::too_many_arguments)]
+    fn gather_targets(
+        &mut self,
+        cluster: &Cluster,
+        sustained: &[f64],
+        ev: &Evacuation,
+        hosts: ShardHosts<'_>,
+        flavor: &Flavor,
+        vctx: &VmContext,
+    ) {
+        for host_id in hosts {
+            let host = &cluster.hosts[host_id.0];
+            if !self.target_ok(cluster, sustained, ev, host, flavor, vctx) {
+                continue;
+            }
+            self.cands.push(host.id);
+            self.feats
+                .push(build_features(&vctx.vector, vctx.remaining_solo, host));
+        }
+    }
+
+    /// The best remote shard (by digest headroom) to overflow into
+    /// when a donor VM has no in-shard target — the cross-shard pass
+    /// reads only the digests, never a remote shard's interior state.
+    fn best_remote_shard(ctx: &ScheduleContext<'_>, exclude: usize) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for s in 0..ctx.shard_count() {
+            if s == exclude {
+                continue;
+            }
+            let score = ctx.shard_digest(s).headroom_score();
+            if score <= 0.0 {
+                continue;
+            }
+            if best.map(|(_, b)| score > b).unwrap_or(true) {
+                best = Some((s, score));
+            }
+        }
+        best.map(|(s, _)| s)
+    }
+
+    /// One scan pass, batched and shard-aware: for each donor (one
+    /// per shard at most), score its full (donor VM × candidate
     /// target) matrix with ONE predictor call, then run the
-    /// sequential selection with planned-load accounting. Emits the
-    /// same actions as [`Consolidator::scan_sequential`]. Pure
-    /// planning: no cluster mutation here.
+    /// sequential selection with planned-load accounting. Targets
+    /// come from the donor's own shard, with a digest-driven,
+    /// budget-bounded fallback to the best remote shard. Without a
+    /// shard layer this emits the same actions as
+    /// [`Consolidator::scan_sequential`]. Pure planning: no cluster
+    /// mutation here.
     fn plan(
         &mut self,
         ctx: &ScheduleContext<'_>,
@@ -376,80 +466,117 @@ impl Consolidator {
             return actions;
         };
         let cluster = ctx.cluster;
-
-        // Gather phase: one feature row per (donor VM, viable target)
-        // pair, every filter except the planned-load fit.
-        self.feats.clear();
-        self.cands.clear();
-        self.spans.clear();
-        for &vm_id in &cluster.hosts[ev.donor.0].vms {
-            let vm = &cluster.vms[&vm_id];
-            let vctx = match ctx.vm_context(vm_id) {
-                Some(c) => c,
-                None => return actions, // missing context: be conservative
-            };
-            if vctx.remaining_solo < Self::copy_secs(&vm.flavor) {
-                return actions; // let it drain instead
-            }
-            let start = self.cands.len();
-            for host in &cluster.hosts {
-                if !self.target_ok(cluster, &prelude.sustained, ev, host, &vm.flavor, vctx) {
-                    continue;
-                }
-                self.cands.push(host.id);
-                self.feats
-                    .push(build_features(&vctx.vector, vctx.remaining_solo, host));
-            }
-            if self.cands.len() == start {
-                return actions; // cannot fully evacuate: give up this scan
-            }
-            self.spans.push((vm_id, start, self.cands.len()));
-        }
-
-        // Scoring phase: ONE predictor call for the whole scan.
-        predictor.predict_into(&self.feats, &mut self.preds);
-
-        // Selection phase: plan a target for every VM on the donor in
-        // order, tracking the load earlier selections planned onto
-        // each target; abort wholesale if any VM has no SLA-safe
-        // target (partial evacuation strands the host at even lower
-        // utilization).
-        let mut planned: Vec<(VmId, HostId)> = Vec::new();
+        // Planned-load accounting shared across donors: a target
+        // filled by one shard's evacuation is seen by the next.
         let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
         let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
-        for &(vm_id, start, end) in &self.spans {
-            let vm = &cluster.vms[&vm_id];
-            let vctx = ctx.vm_context(vm_id).expect("gathered above");
-            let target = self.select_target(
-                cluster,
-                &vm.flavor,
-                vctx,
-                &self.cands[start..end],
-                &self.preds[start..end],
-                &extra_mem,
-                &extra_cpu,
-            );
-            match target {
-                Some(target) => {
-                    *extra_mem.entry(target).or_default() += vm.flavor.mem_gb;
-                    *extra_cpu.entry(target).or_default() += vm.flavor.vcpus;
-                    planned.push((vm_id, target));
+        let mut cross_budget = self.params.cross_shard_budget;
+        'donors: for &(shard, donor) in &ev.donors {
+            // Gather phase (per-shard pass): one feature row per
+            // (donor VM, viable target) pair, every filter except the
+            // planned-load fit.
+            self.feats.clear();
+            self.cands.clear();
+            self.spans.clear();
+            let mut cross_planned = 0usize;
+            for &vm_id in &cluster.hosts[donor.0].vms {
+                let vm = &cluster.vms[&vm_id];
+                let Some(vctx) = ctx.vm_context(vm_id) else {
+                    continue 'donors; // missing context: be conservative
+                };
+                if vctx.remaining_solo < Self::copy_secs(&vm.flavor) {
+                    continue 'donors; // let it drain instead
                 }
-                None => return actions, // SLA-unsafe: skip consolidating this host
+                let start = self.cands.len();
+                self.gather_targets(
+                    cluster,
+                    &prelude.sustained,
+                    ev,
+                    ctx.shard(shard).hosts(),
+                    &vm.flavor,
+                    vctx,
+                );
+                if self.cands.len() == start {
+                    // No in-shard target: bounded cross-shard fallback
+                    // into the single best remote shard by digest
+                    // headroom.
+                    if cross_planned >= cross_budget {
+                        continue 'donors;
+                    }
+                    let Some(remote) = Self::best_remote_shard(ctx, shard) else {
+                        continue 'donors; // cannot fully evacuate
+                    };
+                    self.gather_targets(
+                        cluster,
+                        &prelude.sustained,
+                        ev,
+                        ctx.shard(remote).hosts(),
+                        &vm.flavor,
+                        vctx,
+                    );
+                    if self.cands.len() == start {
+                        continue 'donors; // cannot fully evacuate: give up this donor
+                    }
+                    cross_planned += 1;
+                }
+                self.spans.push((vm_id, start, self.cands.len()));
             }
-        }
-        for (vm, to) in planned {
-            actions.push(ControlAction::Migrate { vm, to });
+            if self.spans.is_empty() {
+                continue;
+            }
+
+            // Scoring phase: ONE predictor call per donor shard.
+            predictor.predict_into(&self.feats, &mut self.preds);
+
+            // Selection phase: plan a target for every VM on the donor
+            // in order, tracking the load earlier selections planned
+            // onto each target; abandon the donor wholesale if any VM
+            // has no SLA-safe target (partial evacuation strands the
+            // host at even lower utilization). Local copies commit to
+            // the cross-donor accounting only on success.
+            let mut local_mem = extra_mem.clone();
+            let mut local_cpu = extra_cpu.clone();
+            let mut planned: Vec<(VmId, HostId)> = Vec::new();
+            for &(vm_id, start, end) in &self.spans {
+                let vm = &cluster.vms[&vm_id];
+                let vctx = ctx.vm_context(vm_id).expect("gathered above");
+                let target = self.select_target(
+                    cluster,
+                    &vm.flavor,
+                    vctx,
+                    &self.cands[start..end],
+                    &self.preds[start..end],
+                    &local_mem,
+                    &local_cpu,
+                );
+                match target {
+                    Some(target) => {
+                        *local_mem.entry(target).or_default() += vm.flavor.mem_gb;
+                        *local_cpu.entry(target).or_default() += vm.flavor.vcpus;
+                        planned.push((vm_id, target));
+                    }
+                    None => continue 'donors, // SLA-unsafe: skip this donor
+                }
+            }
+            cross_budget -= cross_planned.min(cross_budget);
+            extra_mem = local_mem;
+            extra_cpu = local_cpu;
+            for (vm, to) in planned {
+                actions.push(ControlAction::Migrate { vm, to });
+            }
         }
         actions
     }
 
-    /// Reference implementation: the pre-batching per-VM loop (one
-    /// predictor call per donor VM). Kept public-but-hidden as the
-    /// parity oracle — `rust/tests/prop.rs` asserts `scan` emits
-    /// identical [`ControlAction`]s across randomized clusters — and
-    /// as the sequential baseline `benches/bench_consolidation.rs`
-    /// measures the batched scan against.
+    /// Reference implementation: the pre-batching, pre-sharding
+    /// per-VM loop (one predictor call per donor VM, single donor per
+    /// scan). Kept public-but-hidden as the parity oracle —
+    /// `rust/tests/prop.rs` asserts `scan` emits identical
+    /// [`ControlAction`]s across randomized *unsharded* clusters —
+    /// and as the sequential baseline
+    /// `benches/bench_consolidation.rs` measures the batched scan
+    /// against. Only the first donor is considered, so compare it to
+    /// `scan` on contexts without a shard layer.
     #[doc(hidden)]
     pub fn scan_sequential(
         &mut self,
@@ -461,11 +588,12 @@ impl Consolidator {
         let Some(ref ev) = prelude.evacuation else {
             return actions;
         };
+        let donor = ev.donors[0].1;
         let cluster = ctx.cluster;
         let mut planned: Vec<(VmId, HostId)> = Vec::new();
         let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
         let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
-        for &vm_id in &cluster.hosts[ev.donor.0].vms {
+        for &vm_id in &cluster.hosts[donor.0].vms {
             let vm = &cluster.vms[&vm_id];
             let vctx = match ctx.vm_context(vm_id) {
                 Some(c) => c,
@@ -797,6 +925,72 @@ mod tests {
         assert_eq!(
             batched.scan(&sctx, Some(&mut p1)),
             sequential.scan_sequential(&sctx, &mut p2)
+        );
+    }
+
+    #[test]
+    fn cross_shard_fallback_driven_by_digests() {
+        use crate::cluster::ShardedCluster;
+        // 2 shards over 4 hosts: host 2 hashes alone into shard 0;
+        // hosts 0, 1 and 3 into shard 1 (SplitMix64 of the ids). The
+        // donor is the only member of its shard, so evacuation MUST
+        // overflow into the remote shard the digests rank best.
+        let mut c = Cluster::homogeneous(4);
+        let donor_vm = c.create_vm(MEDIUM, JobId(0), 0.0);
+        c.place_vm(donor_vm, HostId(2)).unwrap();
+        let recv_vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(recv_vm, HostId(0)).unwrap();
+        // Donor far below δ_low; receiver busy enough to not be a
+        // donor itself but still SLA-safe as a target.
+        c.host_mut(HostId(2)).demand = Demand {
+            cpu: 1.5,
+            mem_gb: 6.0,
+            disk_mbps: 80.0,
+            net_mbps: 20.0,
+        };
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 12.0,
+            mem_gb: 12.0,
+            disk_mbps: 100.0,
+            net_mbps: 30.0,
+        };
+        let sc = ShardedCluster::new(c, 2);
+        assert_eq!(sc.shard_of(HostId(2)), 0);
+        assert_eq!(sc.shard_of(HostId(0)), 1);
+        assert_eq!(sc.members(0), &[HostId(2)]);
+        let mut ctxs = BTreeMap::new();
+        ctxs.insert(donor_vm, ctx());
+        ctxs.insert(recv_vm, ctx());
+        let mut t = Telemetry::new(4, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &sc, &BTreeMap::new());
+        }
+        let sctx = ScheduleContext::new(1000.0, &sc)
+            .with_telemetry(&t)
+            .with_vm_ctx(&ctxs)
+            .with_shards(&sc);
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let mut pred = OraclePredictor;
+        let actions = cons.scan(&sctx, Some(&mut pred));
+        assert!(
+            actions.contains(&ControlAction::Migrate {
+                vm: donor_vm,
+                to: HostId(0)
+            }),
+            "expected a cross-shard evacuation: {actions:?}"
+        );
+        // With no cross-shard budget the donor cannot evacuate.
+        let mut cons = Consolidator::new(ConsolidationParams {
+            cross_shard_budget: 0,
+            ..Default::default()
+        });
+        let mut pred = OraclePredictor;
+        let actions = cons.scan(&sctx, Some(&mut pred));
+        assert!(
+            !actions
+                .iter()
+                .any(|a| matches!(a, ControlAction::Migrate { .. })),
+            "budget 0 must suppress cross-shard moves: {actions:?}"
         );
     }
 

@@ -9,7 +9,7 @@
 //! coordinator assembles it once per decision point and every
 //! consumer reads through the same lens.
 
-use crate::cluster::{Cluster, HostId, VmId};
+use crate::cluster::{Cluster, HostId, ShardDigest, ShardedCluster, VmId};
 use crate::profile::HistoryStore;
 use crate::sched::consolidation::VmContext;
 use crate::sim::telemetry::HostSample;
@@ -17,9 +17,10 @@ use crate::sim::Telemetry;
 use std::collections::BTreeMap;
 
 /// Read-only decision context. Optional layers (telemetry, history,
-/// per-VM context) degrade gracefully: helpers fall back to
+/// per-VM context, shards) degrade gracefully: helpers fall back to
 /// instantaneous cluster state when a layer is absent, so unit tests
-/// can build a context from a cluster alone.
+/// can build a context from a cluster alone. Without a shard layer
+/// the context behaves as a single shard covering every host.
 pub struct ScheduleContext<'a> {
     /// Simulation clock (seconds).
     pub now: f64,
@@ -32,6 +33,11 @@ pub struct ScheduleContext<'a> {
     /// Per-VM runtime context (profiles, remaining work, SLA slack)
     /// for control loops that plan migrations.
     pub vm_ctx: Option<&'a BTreeMap<VmId, VmContext>>,
+    /// Sharded cluster layer: shard membership and per-shard digests
+    /// over the SAME cluster as `cluster`. Policies fan `decide_batch`
+    /// out across shards and control loops scan shard by shard when
+    /// this is present.
+    pub shards: Option<&'a ShardedCluster>,
 }
 
 impl<'a> ScheduleContext<'a> {
@@ -42,6 +48,7 @@ impl<'a> ScheduleContext<'a> {
             telemetry: None,
             history: None,
             vm_ctx: None,
+            shards: None,
         }
     }
 
@@ -58,6 +65,59 @@ impl<'a> ScheduleContext<'a> {
     pub fn with_vm_ctx(mut self, vm_ctx: &'a BTreeMap<VmId, VmContext>) -> ScheduleContext<'a> {
         self.vm_ctx = Some(vm_ctx);
         self
+    }
+
+    /// Attach the shard layer. `shards` must wrap the very cluster
+    /// this context reads — the coordinator passes the same
+    /// [`ShardedCluster`] for both (the `cluster` field is its
+    /// deref).
+    pub fn with_shards(mut self, shards: &'a ShardedCluster) -> ScheduleContext<'a> {
+        debug_assert!(
+            std::ptr::eq(shards.cluster(), self.cluster),
+            "with_shards must wrap the context's own cluster"
+        );
+        self.shards = Some(shards);
+        self
+    }
+
+    /// Number of shards this context is split into (1 when no shard
+    /// layer is attached — the whole cluster is one shard).
+    pub fn shard_count(&self) -> usize {
+        self.shards.map(|s| s.shard_count()).unwrap_or(1)
+    }
+
+    /// Per-shard lens with the same read API as the whole-cluster
+    /// view, restricted to one shard's hosts.
+    pub fn shard(&self, id: usize) -> ShardContext<'_, 'a> {
+        ShardContext { ctx: self, id }
+    }
+
+    /// Member hosts of one shard, ascending by id. Without a shard
+    /// layer, shard 0 covers every host.
+    pub fn shard_hosts(&self, id: usize) -> ShardHosts<'a> {
+        match self.shards {
+            Some(sc) => ShardHosts::Members(sc.members(id).iter()),
+            None => {
+                debug_assert_eq!(id, 0, "unsharded context has exactly one shard");
+                ShardHosts::All(0..self.cluster.n_hosts())
+            }
+        }
+    }
+
+    /// One shard's digest. With the shard layer attached this is an
+    /// O(1) copy of the incrementally-maintained digest; WITHOUT it
+    /// the digest is recomputed over every host and VM on each call —
+    /// per-scan callers on unsharded contexts should read it once and
+    /// reuse the value, not treat it as a cheap field access.
+    pub fn shard_digest(&self, id: usize) -> ShardDigest {
+        match self.shards {
+            Some(sc) => *sc.digest(id),
+            None => ShardDigest::compute(
+                self.cluster,
+                (0..self.cluster.n_hosts()).map(HostId),
+                |_| true,
+            ),
+        }
     }
 
     /// Runtime context of one VM, if the coordinator provided it.
@@ -86,6 +146,55 @@ impl<'a> ScheduleContext<'a> {
     }
 }
 
+/// Iterator over one shard's member host ids — a member-list walk
+/// when the shard layer is attached, the plain host range otherwise.
+/// Either way hosts come out ascending by id, which is what keeps the
+/// single-shard paths bit-identical to the unsharded sweeps.
+pub enum ShardHosts<'a> {
+    All(std::ops::Range<usize>),
+    Members(std::slice::Iter<'a, HostId>),
+}
+
+impl Iterator for ShardHosts<'_> {
+    type Item = HostId;
+
+    fn next(&mut self) -> Option<HostId> {
+        match self {
+            ShardHosts::All(r) => r.next().map(HostId),
+            ShardHosts::Members(it) => it.next().copied(),
+        }
+    }
+}
+
+/// Per-shard lens over a [`ScheduleContext`]: the same read API the
+/// whole-cluster view offers, restricted to one shard. Control loops
+/// iterate `ctx.shard(s).hosts()` instead of the raw host vector so
+/// their scans shard cleanly.
+#[derive(Clone, Copy)]
+pub struct ShardContext<'c, 'a> {
+    ctx: &'c ScheduleContext<'a>,
+    /// Shard index.
+    pub id: usize,
+}
+
+impl<'c, 'a> ShardContext<'c, 'a> {
+    pub fn hosts(&self) -> ShardHosts<'a> {
+        self.ctx.shard_hosts(self.id)
+    }
+
+    pub fn digest(&self) -> ShardDigest {
+        self.ctx.shard_digest(self.id)
+    }
+
+    pub fn sustained_cpu(&self, host: HostId, n: usize) -> f64 {
+        self.ctx.sustained_cpu(host, n)
+    }
+
+    pub fn host_window(&self, host: HostId, n: usize) -> Vec<HostSample> {
+        self.ctx.host_window(host, n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +214,42 @@ mod tests {
         assert!((ctx.sustained_cpu(HostId(0), 12) - 0.5).abs() < 1e-9);
         assert_eq!(ctx.sustained_cpu(HostId(1), 12), 0.0);
         assert!(ctx.vm_context(VmId(0)).is_none());
+    }
+
+    #[test]
+    fn unsharded_context_is_one_shard_covering_all_hosts() {
+        let c = Cluster::homogeneous(3);
+        let ctx = ScheduleContext::new(0.0, &c);
+        assert_eq!(ctx.shard_count(), 1);
+        let hosts: Vec<HostId> = ctx.shard(0).hosts().collect();
+        assert_eq!(hosts, vec![HostId(0), HostId(1), HostId(2)]);
+        let digest = ctx.shard(0).digest();
+        assert_eq!(digest.hosts, 3);
+        assert_eq!(digest.on, 3);
+    }
+
+    #[test]
+    fn sharded_context_partitions_hosts_and_reads_digests() {
+        use crate::cluster::ShardedCluster;
+        let sc = ShardedCluster::new(Cluster::homogeneous(8), 2);
+        let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        assert_eq!(ctx.shard_count(), 2);
+        let mut all: Vec<HostId> = (0..2).flat_map(|s| ctx.shard(s).hosts()).collect();
+        all.sort();
+        assert_eq!(all, (0..8).map(HostId).collect::<Vec<_>>());
+        let total_hosts: usize = (0..2).map(|s| ctx.shard(s).digest().hosts).sum();
+        assert_eq!(total_hosts, 8);
+        // Digest reads agree with a fresh recomputation.
+        for s in 0..2 {
+            let d = ctx.shard(s).digest();
+            let fresh = crate::cluster::ShardDigest::compute(
+                &sc,
+                ctx.shard(s).hosts(),
+                |h| sc.shard_of(h) == s,
+            );
+            assert_eq!(d.on, fresh.on);
+            assert_eq!(d.hosts, fresh.hosts);
+        }
     }
 
     #[test]

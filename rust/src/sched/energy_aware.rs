@@ -21,8 +21,17 @@
 //! one (B × 16)·(16 × 64)·(64 × 32)·(32 × 2) pipeline. Per-row
 //! results are independent of batch composition (dense per-row math),
 //! so batched decisions are bit-identical to the sequential loop.
+//!
+//! Sharded fan-out: when the context carries a [`ShardedCluster`],
+//! `decide_batch` routes the burst to the top-K shards by digest
+//! headroom, scores each shard's request×host feature matrix with one
+//! `predict_into` call per shard, and merges winners globally by
+//! `(energy, host id)` — the same argmin the flat sweep computes, so
+//! at shard_count = 1 (or K = shard_count) the fan-out is
+//! action-identical to the unsharded path. Per-decision work is then
+//! bounded by the K largest shards instead of the whole fleet.
 
-use crate::cluster::{HostId, HostView};
+use crate::cluster::{HostId, HostView, ShardedCluster};
 use crate::predict::{EnergyPredictor, Prediction};
 use crate::sched::policy::{powered_off, Decision, PlacementPolicy, PlacementRequest};
 use crate::sched::{ScheduleContext, ScoringHandle};
@@ -47,6 +56,12 @@ pub struct EnergyAwareParams {
     /// instantaneous estimate and leaves no margin for phase shifts
     /// and future arrivals.
     pub headroom: f64,
+    /// Shard fan-out width: `decide_batch` scores the top
+    /// `min(top_k_shards, shard_count)` shards by digest headroom
+    /// when the context carries a sharded cluster. Bounds
+    /// per-decision work by the K largest shards instead of the
+    /// fleet; K = shard_count recovers the exhaustive sweep.
+    pub top_k_shards: usize,
 }
 
 impl Default for EnergyAwareParams {
@@ -56,6 +71,7 @@ impl Default for EnergyAwareParams {
             max_slowdown: 0.05,
             boot_penalty_j: 150.0 * 90.0, // p_transition × boot_secs
             headroom: 0.93,
+            top_k_shards: 4,
         }
     }
 }
@@ -127,7 +143,16 @@ impl EnergyAware {
 
     /// Argmin of predicted energy-to-completion over one request's
     /// candidate span `[start, end)`, honoring the Eq. 7 guard.
-    fn argmin_energy(&self, req: &PlacementRequest, start: usize, end: usize) -> Option<HostId> {
+    /// Candidates are visited ascending by host id, and ties keep the
+    /// first (lowest-id) host — returning the energy alongside the
+    /// winner lets the sharded fan-out merge per-shard argmins into
+    /// exactly this global argmin.
+    fn argmin_energy(
+        &self,
+        req: &PlacementRequest,
+        start: usize,
+        end: usize,
+    ) -> Option<(HostId, f64)> {
         let mut best: Option<(HostId, f64)> = None;
         let cands = &self.cands[start..end];
         let preds = &self.preds[start..end];
@@ -147,7 +172,79 @@ impl EnergyAware {
                 best = Some((host, energy));
             }
         }
-        best.map(|(host, _)| host)
+        best
+    }
+
+    /// Sharded fan-out: route the burst to the top-K shards by digest
+    /// headroom, score one request×host matrix per shard (one
+    /// `predict_into` each), merge winners globally by
+    /// `(energy, host id)`. At K = shard_count the candidate set is
+    /// the whole fleet and the result is action-identical to the flat
+    /// sweep — the shard_count = 1 property test pins this down.
+    fn decide_batch_sharded(
+        &mut self,
+        reqs: &[PlacementRequest],
+        ctx: &ScheduleContext<'_>,
+        sh: &ShardedCluster,
+    ) -> Vec<Decision> {
+        let n_shards = sh.shard_count();
+        let k = self.params.top_k_shards.clamp(1, n_shards);
+        // Rank shards by headroom (descending), lowest id on ties.
+        let mut order: Vec<usize> = (0..n_shards).collect();
+        order.sort_by(|&a, &b| {
+            sh.digest(b)
+                .headroom_score()
+                .partial_cmp(&sh.digest(a).headroom_score())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut best: Vec<Option<(HostId, f64)>> = vec![None; reqs.len()];
+        for &s in &order[..k] {
+            self.feats.clear();
+            self.cands.clear();
+            self.spans.clear();
+            sh.shard_scoring_views(s, self.params.delta_high, &mut self.views);
+            let views = std::mem::take(&mut self.views);
+            for req in reqs {
+                let span = self.gather_candidates(req, &views);
+                self.spans.push(span);
+            }
+            self.views = views;
+            self.preds.clear();
+            if !self.feats.is_empty() {
+                self.predictor.predict_into(&self.feats, &mut self.preds);
+            }
+            for (i, (req, &(start, end))) in reqs.iter().zip(&self.spans).enumerate() {
+                if let Some((host, energy)) = self.argmin_energy(req, start, end) {
+                    let better = match best[i] {
+                        None => true,
+                        // Lexicographic (energy, host id): shard
+                        // iteration order cannot change the winner.
+                        Some((bh, be)) => energy < be || (energy == be && host < bh),
+                    };
+                    if better {
+                        best[i] = Some((host, energy));
+                    }
+                }
+            }
+        }
+        let cluster = ctx.cluster;
+        // Boot fallback, identical to the flat path: first powered-off
+        // host, computed lazily once per batch.
+        let mut boot: Option<Option<HostId>> = None;
+        best.iter()
+            .map(|b| match b {
+                Some((host, _)) => Decision::Place(*host),
+                None => {
+                    let fallback =
+                        *boot.get_or_insert_with(|| powered_off(cluster).first().copied());
+                    match fallback {
+                        Some(h) => Decision::PowerOnAndPlace(h),
+                        None => Decision::Defer,
+                    }
+                }
+            })
+            .collect()
     }
 }
 
@@ -157,8 +254,16 @@ impl PlacementPolicy for EnergyAware {
     }
 
     /// Single-request fast path: same gather → predict → argmin as
-    /// the batch, without materializing a decision vector.
+    /// the batch, without materializing a decision vector. On a
+    /// sharded context this routes through the fan-out as a burst of
+    /// one, so live re-decisions (stale-placement retries, deferred
+    /// drains) stay bounded by the top-K shards and agree with what
+    /// `decide_batch` would have chosen — not an O(fleet) sweep.
     fn decide(&mut self, req: &PlacementRequest, ctx: &ScheduleContext<'_>) -> Decision {
+        if let Some(sh) = ctx.shards {
+            let mut out = self.decide_batch_sharded(std::slice::from_ref(req), ctx, sh);
+            return out.pop().expect("one decision per request");
+        }
         let cluster = ctx.cluster;
         self.feats.clear();
         self.cands.clear();
@@ -172,7 +277,7 @@ impl PlacementPolicy for EnergyAware {
             self.predictor.predict_into(&self.feats, &mut self.preds);
         }
         match self.argmin_energy(req, start, end) {
-            Some(host) => Decision::Place(host),
+            Some((host, _)) => Decision::Place(host),
             // No SLA-safe powered-on host: boot one rather than
             // violate Eq. 7 (capacity beats consolidation when they
             // conflict).
@@ -185,12 +290,18 @@ impl PlacementPolicy for EnergyAware {
 
     /// Native batched path: one predictor invocation scores the full
     /// (pending requests × feasible hosts) feature matrix. The pruned
-    /// host views are built once for the whole batch.
+    /// host views are built once for the whole batch. With a shard
+    /// layer on the context the burst instead fans out across the
+    /// top-K shards by digest headroom — one predictor call per shard,
+    /// winners merged globally.
     fn decide_batch(
         &mut self,
         reqs: &[PlacementRequest],
         ctx: &ScheduleContext<'_>,
     ) -> Vec<Decision> {
+        if let Some(sh) = ctx.shards {
+            return self.decide_batch_sharded(reqs, ctx, sh);
+        }
         let cluster = ctx.cluster;
         self.feats.clear();
         self.cands.clear();
@@ -216,7 +327,7 @@ impl PlacementPolicy for EnergyAware {
         let mut out = Vec::with_capacity(reqs.len());
         for (req, &(start, end)) in reqs.iter().zip(&self.spans) {
             out.push(match self.argmin_energy(req, start, end) {
-                Some(host) => Decision::Place(host),
+                Some((host, _)) => Decision::Place(host),
                 // No SLA-safe powered-on host: boot one rather than
                 // violate Eq. 7 (capacity beats consolidation when
                 // they conflict).
@@ -427,5 +538,73 @@ mod tests {
         let mut p = policy();
         let handle = p.scoring_handle().expect("energy-aware has a predictor");
         assert_eq!(handle.name(), "oracle");
+    }
+
+    fn mixed_cluster() -> Cluster {
+        let mut c = Cluster::homogeneous(4);
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 10.0,
+            mem_gb: 20.0,
+            disk_mbps: 300.0,
+            net_mbps: 50.0,
+        };
+        c.host_mut(HostId(1)).demand = Demand {
+            cpu: 24.0,
+            mem_gb: 8.0,
+            disk_mbps: 50.0,
+            net_mbps: 10.0,
+        };
+        c.host_mut(HostId(3)).demand = Demand {
+            cpu: 4.0,
+            mem_gb: 30.0,
+            disk_mbps: 500.0,
+            net_mbps: 20.0,
+        };
+        c
+    }
+
+    fn mixed_burst() -> Vec<PlacementRequest> {
+        (0..6)
+            .map(|i| {
+                let mut r = if i % 2 == 0 { io_req() } else { cpu_req() };
+                r.job = JobId(i as u64);
+                r.remaining_solo = 120.0 + 97.0 * i as f64;
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_shard_fanout_matches_flat_batch() {
+        use crate::cluster::ShardedCluster;
+        let c = mixed_cluster();
+        let reqs = mixed_burst();
+        let flat_ctx = ScheduleContext::new(0.0, &c);
+        let flat = policy().decide_batch(&reqs, &flat_ctx);
+        let sc = ShardedCluster::new(c.clone(), 1);
+        let shard_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        let sharded = policy().decide_batch(&reqs, &shard_ctx);
+        assert_eq!(flat, sharded);
+    }
+
+    #[test]
+    fn full_coverage_fanout_matches_flat_batch() {
+        use crate::cluster::ShardedCluster;
+        // K >= shard_count: the fan-out covers every shard, so the
+        // merged argmin must equal the flat sweep exactly.
+        let c = mixed_cluster();
+        let reqs = mixed_burst();
+        let flat_ctx = ScheduleContext::new(0.0, &c);
+        let flat = policy().decide_batch(&reqs, &flat_ctx);
+        let sc = ShardedCluster::new(c.clone(), 4);
+        let shard_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        let mut p = EnergyAware::new(
+            Box::new(OraclePredictor),
+            EnergyAwareParams {
+                top_k_shards: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(flat, p.decide_batch(&reqs, &shard_ctx));
     }
 }

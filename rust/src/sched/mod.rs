@@ -1,15 +1,21 @@
 //! Scheduling layer (§III-C): the batch-first placement API and the
-//! unified periodic control loops.
+//! unified periodic control loops, both shard-addressable.
 //!
 //! * [`ScheduleContext`] — one read-only view (cluster + telemetry
-//!   window + history + sim clock) every decision consults.
+//!   window + history + sim clock, plus the optional shard layer)
+//!   every decision consults; `context.shard(s)` yields a per-shard
+//!   lens with the same read API.
 //! * [`PlacementPolicy`] — batch-first placement: `decide_batch`
 //!   scores a whole submit burst against one frozen context; the
 //!   energy-aware policy runs it as a single predictor call over the
-//!   full (request × host) feature matrix.
+//!   full (request × host) feature matrix — or, on a sharded
+//!   context, fans the burst out to the top-K shards by digest
+//!   headroom with one predictor call per shard.
 //! * [`ControlLoop`] — the periodic scans (adaptive consolidation,
-//!   DVFS governor) behind one trait, borrowing the policy's
-//!   predictor through an explicit [`ScoringHandle`].
+//!   DVFS governor, power capping) behind one trait, borrowing the
+//!   policy's predictor through an explicit [`ScoringHandle`]; scans
+//!   run as per-shard passes with digest-driven cross-shard
+//!   fallbacks.
 //! * Policies: the energy-aware predictive scheduler (Eqs. 6–9), the
 //!   round-robin baseline (§IV-E), and classic bin-packing baselines.
 
@@ -21,14 +27,16 @@ pub mod dvfs;
 pub mod energy_aware;
 pub mod first_fit;
 pub mod policy;
+pub mod power_cap;
 pub mod round_robin;
 
 pub use best_fit::BestFit;
 pub use consolidation::{ConsolidationParams, Consolidator, VmContext};
-pub use context::ScheduleContext;
+pub use context::{ScheduleContext, ShardContext, ShardHosts};
 pub use control::{ControlAction, ControlLoop, ScoringHandle};
 pub use dvfs::{DvfsGovernor, DvfsParams};
 pub use energy_aware::{EnergyAware, EnergyAwareParams};
 pub use first_fit::FirstFit;
 pub use policy::{Decision, PlacementPolicy, PlacementRequest};
+pub use power_cap::{PowerCapLoop, PowerCapParams};
 pub use round_robin::RoundRobin;

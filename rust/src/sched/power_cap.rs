@@ -1,0 +1,477 @@
+//! Cluster power capping — the §VI-E research extension promoted from
+//! the `carbon_aware` example sketch into a real [`ControlLoop`]: when
+//! the grid is dirty (or a rack breaker, battery, or contract bounds
+//! draw), the operator sets a watt budget and the loop holds the
+//! fleet's estimated draw under it by stepping hosts down the DVFS
+//! ladder, least-harmful first.
+//!
+//! The loop plans under two invariants, unit-tested below:
+//!
+//! * **Cap-budget invariant** — a scan never plans actions that raise
+//!   the estimated draw above the budget: over budget it only plans
+//!   reductions; restorations happen only when the fleet is
+//!   comfortably under budget (`restore_margin`) and only while the
+//!   projected draw stays at or below the budget.
+//! * **Ceiling persistence** — every throttle is recorded as a
+//!   per-host frequency ceiling and *re-asserted* each scan. The DVFS
+//!   governor restores clocks whenever it sees CPU pressure, so
+//!   without a remembered ceiling the closed loop would flap one
+//!   p-state below full clock forever and never converge to budgets
+//!   that need deeper throttles. Restoration releases ceilings one
+//!   p-state per host per scan (gentle ramps beat synchronized
+//!   cliffs) and only ever touches hosts this loop throttled — the
+//!   governor's own efficiency clock-downs are not undone.
+//!
+//! Throttle order is the DVFS governor's logic inverted: hosts whose
+//! effective CPU utilization is lowest (I/O-bound tenants, §III-C)
+//! lose frequency first, because frequency scaling is nearly free for
+//! them and costly for CPU-bound tenants (§V-C). Restoration runs the
+//! same list backwards — the most CPU-pressed capped host gets its
+//! clock back first. Scans walk hosts shard by shard through the
+//! context lens, so a sharded deployment caps without reading shard
+//! interiors beyond its own pass.
+//!
+//! The loop runs after consolidation and DVFS on the coordinator's
+//! scan cadence (each loop's actions actuate before the next scans),
+//! so the cap sees — and can override — what the governor just did.
+
+use crate::cluster::power::{snap_to_pstate, PSTATES};
+use crate::cluster::{Host, HostId};
+use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
+use crate::sched::ScheduleContext;
+use std::collections::BTreeMap;
+
+/// Power-cap tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCapParams {
+    /// Cluster-wide draw budget (W). The default is infinite — the
+    /// loop is inert until the operator (or a carbon-intensity
+    /// schedule) sets a real budget.
+    pub budget_w: f64,
+    /// Restore frequencies only when the estimated draw is below
+    /// `restore_margin × budget_w` — the hysteresis band that stops
+    /// throttle/restore flapping at the cap boundary.
+    pub restore_margin: f64,
+    /// Maximum NEW p-state steps (down or up) per scan, at most one
+    /// per host per scan. Re-assertions of already-recorded ceilings
+    /// are always emitted — they restore the loop's own prior state,
+    /// not new movement.
+    pub max_actions: usize,
+}
+
+impl Default for PowerCapParams {
+    fn default() -> Self {
+        PowerCapParams {
+            budget_w: f64::INFINITY,
+            restore_margin: 0.9,
+            max_actions: 8,
+        }
+    }
+}
+
+/// The capping loop. Scan-to-scan state is the set of frequency
+/// ceilings it has imposed (see the module docs on why ceilings must
+/// persist); everything else is recomputed from the context.
+#[derive(Debug, Default)]
+pub struct PowerCapLoop {
+    pub params: PowerCapParams,
+    /// Per-host frequency ceilings this loop has imposed. Re-asserted
+    /// every scan; released stepwise on restoration.
+    ceilings: BTreeMap<HostId, f64>,
+}
+
+impl PowerCapLoop {
+    pub fn new(params: PowerCapParams) -> PowerCapLoop {
+        PowerCapLoop {
+            params,
+            ceilings: BTreeMap::new(),
+        }
+    }
+
+    /// Update the budget (e.g. from a time-varying carbon-intensity
+    /// or demand-response signal) between scans.
+    pub fn set_budget(&mut self, budget_w: f64) {
+        self.params.budget_w = budget_w;
+    }
+}
+
+/// Estimated draw of `host` at DVFS point `freq` (snapped to the
+/// p-state catalog like `Host::set_freq`), holding demand fixed — the
+/// planning model for one throttle/restore step. Mirrors
+/// `Host::power` exactly at the host's own frequency, without cloning
+/// the host.
+fn power_at(host: &Host, freq: f64) -> f64 {
+    if !host.state.is_on() {
+        return host.power(); // off/transition draw is frequency-independent
+    }
+    let f = snap_to_pstate(freq);
+    let u = host.utilization();
+    let u_cpu = (host.demand.cpu / (host.spec.capacity().cpu * f)).min(1.0);
+    host.spec.power.active_power(u_cpu, u.mem, u.io(), f)
+}
+
+/// Next p-state below `freq`, if any (PSTATES is descending).
+fn next_pstate_down(freq: f64) -> Option<f64> {
+    PSTATES.iter().copied().find(|&p| p < freq - 1e-9)
+}
+
+/// Next p-state above `freq`, if any.
+fn next_pstate_up(freq: f64) -> Option<f64> {
+    PSTATES.iter().rev().copied().find(|&p| p > freq + 1e-9)
+}
+
+/// This scan's planned frequency for a host: its live frequency
+/// unless the plan already holds a target for it.
+fn eff(host: &Host, target: &BTreeMap<HostId, f64>) -> f64 {
+    target.get(&host.id).copied().unwrap_or(host.freq)
+}
+
+impl ControlLoop for PowerCapLoop {
+    fn name(&self) -> &'static str {
+        "power_cap"
+    }
+
+    fn scan(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        _scoring: Option<ScoringHandle<'_>>,
+    ) -> Vec<ControlAction> {
+        let budget = self.params.budget_w;
+        let cluster = ctx.cluster;
+        if !budget.is_finite() {
+            self.ceilings.clear();
+            return Vec::new();
+        }
+        self.ceilings.retain(|h, _| cluster.hosts[h.0].state.is_on());
+        // Phase 1 — re-assert ceilings: any capped host running above
+        // its ceiling (another loop restored it) is planned back down
+        // before the budget comparison.
+        let mut target: BTreeMap<HostId, f64> = BTreeMap::new();
+        for (&h, &ceil) in &self.ceilings {
+            if cluster.hosts[h.0].freq > ceil + 1e-9 {
+                target.insert(h, ceil);
+            }
+        }
+        let mut est: f64 = cluster
+            .hosts
+            .iter()
+            .map(|host| power_at(host, eff(host, &target)))
+            .sum();
+        let mut steps = 0usize;
+        if est > budget {
+            // Over budget: step hosts down the DVFS ladder, lowest
+            // effective CPU utilization first (I/O-bound tenants lose
+            // the least), one p-state per host per scan, until the
+            // estimate is back under the cap or the step bound hits.
+            let mut cands: Vec<(f64, HostId)> = Vec::new();
+            for shard in 0..ctx.shard_count() {
+                for host_id in ctx.shard(shard).hosts() {
+                    let host = &cluster.hosts[host_id.0];
+                    if !host.state.is_on() {
+                        continue;
+                    }
+                    if next_pstate_down(eff(host, &target)).is_none() {
+                        continue;
+                    }
+                    cands.push((cluster.effective_util(host_id).cpu, host_id));
+                }
+            }
+            cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            for (_, host_id) in cands {
+                if est <= budget || steps >= self.params.max_actions {
+                    break;
+                }
+                let host = &cluster.hosts[host_id.0];
+                let cur = eff(host, &target);
+                let Some(next) = next_pstate_down(cur) else {
+                    continue;
+                };
+                let saved = power_at(host, cur) - power_at(host, next);
+                if saved <= 1e-9 {
+                    continue; // no CPU term to shed on this host
+                }
+                est -= saved;
+                target.insert(host_id, next);
+                self.ceilings.insert(host_id, next);
+                steps += 1;
+            }
+        } else if est < self.params.restore_margin * budget {
+            // Comfortably under: release OUR ceilings one p-state per
+            // host per scan, most CPU-pressed capped host first, never
+            // planning past the budget. Hosts the DVFS governor
+            // clocked down for efficiency carry no ceiling and are
+            // left alone.
+            let mut cands: Vec<(f64, HostId)> = Vec::new();
+            for shard in 0..ctx.shard_count() {
+                for host_id in ctx.shard(shard).hosts() {
+                    if !self.ceilings.contains_key(&host_id) {
+                        continue;
+                    }
+                    cands.push((cluster.effective_util(host_id).cpu, host_id));
+                }
+            }
+            cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            for (_, host_id) in cands {
+                if steps >= self.params.max_actions {
+                    break;
+                }
+                let host = &cluster.hosts[host_id.0];
+                let cur = eff(host, &target);
+                let Some(up) = next_pstate_up(cur) else {
+                    // Already at full clock: the ceiling is spent.
+                    self.ceilings.remove(&host_id);
+                    continue;
+                };
+                let delta = power_at(host, up) - power_at(host, cur);
+                if est + delta > budget {
+                    continue; // restoring this host would breach the cap
+                }
+                est += delta;
+                if up >= 1.0 - 1e-9 {
+                    self.ceilings.remove(&host_id);
+                } else {
+                    self.ceilings.insert(host_id, up);
+                }
+                target.insert(host_id, up);
+                steps += 1;
+            }
+        }
+        // One SetFreq per host whose planned point differs from its
+        // live frequency (BTreeMap order: deterministic, ascending).
+        target
+            .into_iter()
+            .filter(|&(h, f)| (cluster.hosts[h.0].freq - f).abs() > 1e-9)
+            .map(|(host, freq)| ControlAction::SetFreq { host, freq })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Demand};
+
+    fn loaded(n: usize, cpu: f64) -> Cluster {
+        let mut c = Cluster::homogeneous(n);
+        for i in 0..n {
+            c.host_mut(HostId(i)).demand = Demand {
+                cpu,
+                mem_gb: 8.0,
+                disk_mbps: 200.0,
+                net_mbps: 20.0,
+            };
+        }
+        c
+    }
+
+    /// Apply planned SetFreq actions to a scratch cluster and return
+    /// the resulting total draw — the test-side check of the loop's
+    /// internal estimate.
+    fn projected_power(c: &Cluster, actions: &[ControlAction]) -> f64 {
+        let mut scratch = c.clone();
+        for a in actions {
+            if let ControlAction::SetFreq { host, freq } = a {
+                scratch.host_mut(*host).set_freq(*freq);
+            }
+        }
+        scratch.total_power()
+    }
+
+    #[test]
+    fn default_budget_is_inert() {
+        let c = loaded(3, 20.0);
+        let mut cap = PowerCapLoop::default();
+        let ctx = ScheduleContext::new(0.0, &c);
+        assert!(cap.scan(&ctx, None).is_empty());
+        assert_eq!(cap.name(), "power_cap");
+    }
+
+    #[test]
+    fn planning_model_matches_host_power_at_live_frequency() {
+        let mut c = loaded(2, 18.0);
+        c.host_mut(HostId(1)).set_freq(0.7);
+        for h in &c.hosts {
+            assert!((power_at(h, h.freq) - h.power()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn over_budget_plans_only_reductions() {
+        let c = loaded(4, 24.0);
+        let before = c.total_power();
+        let mut cap = PowerCapLoop::new(PowerCapParams {
+            budget_w: before - 100.0,
+            ..Default::default()
+        });
+        let ctx = ScheduleContext::new(0.0, &c);
+        let actions = cap.scan(&ctx, None);
+        assert!(!actions.is_empty());
+        for a in &actions {
+            match a {
+                ControlAction::SetFreq { host, freq } => {
+                    assert!(*freq < c.host(*host).freq, "cap must only throttle: {a:?}");
+                }
+                other => panic!("power cap must only emit SetFreq: {other:?}"),
+            }
+        }
+        // Cap-budget invariant: the plan strictly reduces draw.
+        assert!(projected_power(&c, &actions) < before);
+        assert!(actions.len() <= PowerCapParams::default().max_actions);
+    }
+
+    #[test]
+    fn throttles_io_bound_hosts_before_cpu_bound() {
+        let mut c = loaded(2, 4.0); // host 0: I/O-ish (low CPU)
+        c.host_mut(HostId(1)).demand.cpu = 28.0; // host 1: CPU-bound
+        let before = c.total_power();
+        let mut cap = PowerCapLoop::new(PowerCapParams {
+            budget_w: before - 5.0,
+            max_actions: 1,
+            ..Default::default()
+        });
+        let ctx = ScheduleContext::new(0.0, &c);
+        let actions = cap.scan(&ctx, None);
+        assert_eq!(actions.len(), 1);
+        assert!(
+            matches!(actions[0], ControlAction::SetFreq { host, .. } if host == HostId(0)),
+            "the I/O-bound host must be throttled first: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn reasserts_ceilings_after_external_restore_and_converges() {
+        // One CPU-loaded host; a budget that needs 0.7. The DVFS
+        // governor restores clocks under CPU pressure between scans;
+        // the cap must re-assert its remembered ceiling AND keep
+        // stepping down — not flap at one step below full clock.
+        let mut c = loaded(1, 24.0);
+        let p_full = c.total_power();
+        let budget = {
+            let mut s = c.clone();
+            s.host_mut(HostId(0)).set_freq(0.7);
+            s.total_power() + 1.0
+        };
+        assert!(budget < p_full);
+        let mut cap = PowerCapLoop::new(PowerCapParams {
+            budget_w: budget,
+            ..Default::default()
+        });
+        // Scan 1: one step, 1.0 → 0.85, ceiling recorded.
+        let a1 = {
+            let ctx = ScheduleContext::new(0.0, &c);
+            cap.scan(&ctx, None)
+        };
+        assert_eq!(
+            a1,
+            vec![ControlAction::SetFreq {
+                host: HostId(0),
+                freq: 0.85
+            }]
+        );
+        c.host_mut(HostId(0)).set_freq(0.85);
+        // Adversarial restore (what the governor does to a contended
+        // clocked-down host).
+        c.host_mut(HostId(0)).set_freq(1.0);
+        // Scan 2: ceiling re-asserted and stepped DEEPER in one plan.
+        let a2 = {
+            let ctx = ScheduleContext::new(30.0, &c);
+            cap.scan(&ctx, None)
+        };
+        assert_eq!(
+            a2,
+            vec![ControlAction::SetFreq {
+                host: HostId(0),
+                freq: 0.7
+            }]
+        );
+    }
+
+    #[test]
+    fn restore_is_stepwise_bounded_by_budget_and_releases_ceilings() {
+        let mut c = loaded(2, 14.0);
+        let full = c.total_power();
+        let mut cap = PowerCapLoop::new(PowerCapParams {
+            budget_w: full - 5.0,
+            restore_margin: 0.99,
+            ..Default::default()
+        });
+        // Scan 1: over budget → both hosts throttle one step and
+        // acquire ceilings.
+        let a1 = {
+            let ctx = ScheduleContext::new(0.0, &c);
+            cap.scan(&ctx, None)
+        };
+        assert_eq!(a1.len(), 2, "{a1:?}");
+        for a in &a1 {
+            if let ControlAction::SetFreq { host, freq } = a {
+                assert_eq!(*freq, 0.85);
+                c.host_mut(*host).set_freq(*freq);
+            }
+        }
+        // Budget with room to restore exactly ONE host by one step.
+        let delta = {
+            let mut s = c.clone();
+            s.host_mut(HostId(0)).set_freq(1.0);
+            s.total_power() - c.total_power()
+        };
+        let budget = c.total_power() + 1.5 * delta;
+        cap.set_budget(budget);
+        let a2 = {
+            let ctx = ScheduleContext::new(30.0, &c);
+            cap.scan(&ctx, None)
+        };
+        assert_eq!(a2.len(), 1, "room for exactly one restore: {a2:?}");
+        assert!(matches!(
+            a2[0],
+            ControlAction::SetFreq { freq, .. } if freq == 1.0
+        ));
+        assert!(projected_power(&c, &a2) <= budget + 1e-9);
+        // The restored host's ceiling is released: with ample budget
+        // only the still-capped host moves.
+        for a in &a2 {
+            if let ControlAction::SetFreq { host, freq } = a {
+                c.host_mut(*host).set_freq(*freq);
+            }
+        }
+        cap.set_budget(full + 100.0);
+        let a3 = {
+            let ctx = ScheduleContext::new(60.0, &c);
+            cap.scan(&ctx, None)
+        };
+        assert_eq!(a3.len(), 1, "{a3:?}");
+        for a in &a3 {
+            if let ControlAction::SetFreq { host, freq } = a {
+                c.host_mut(*host).set_freq(*freq);
+            }
+        }
+        // Everything restored, all ceilings spent: steady state.
+        let a4 = {
+            let ctx = ScheduleContext::new(90.0, &c);
+            cap.scan(&ctx, None)
+        };
+        assert!(a4.is_empty(), "{a4:?}");
+    }
+
+    #[test]
+    fn dead_band_plans_nothing_and_leaves_foreign_clockdowns_alone() {
+        // Host 0 was clocked down by the DVFS governor (no ceiling
+        // recorded here): inside the hysteresis band the cap must not
+        // touch it, and even comfortably under budget it must not
+        // restore a clock-down it does not own.
+        let mut c = loaded(2, 14.0);
+        c.host_mut(HostId(0)).set_freq(0.7);
+        let now = c.total_power();
+        let mut cap = PowerCapLoop::new(PowerCapParams {
+            budget_w: now * 1.02, // within 2 %: above the 0.9 margin
+            ..Default::default()
+        });
+        let ctx = ScheduleContext::new(0.0, &c);
+        assert!(cap.scan(&ctx, None).is_empty());
+        // Far under budget: still no restore — the ceiling set is empty.
+        cap.set_budget(now * 3.0);
+        assert!(cap.scan(&ctx, None).is_empty());
+        // Over budget: throttling remains available.
+        cap.set_budget(now - 50.0);
+        assert!(!cap.scan(&ctx, None).is_empty());
+    }
+}

@@ -1,0 +1,385 @@
+//! Sharded cluster state: property tests.
+//!
+//! * shard_count = 1 `decide_batch` is ACTION-IDENTICAL to the
+//!   pre-shard (flat) path over randomized clusters and bursts — the
+//!   refactor's central equivalence guarantee.
+//! * top-K sufficiency: K = shard_count fan-out equals the flat
+//!   sweep at any shard count; K < shard_count only ever places into
+//!   the top-K shards by digest headroom.
+//! * every `ShardDigest` matches recomputation from the VM inventory
+//!   across randomized mutation sequences (the `check_invariants`
+//!   extension).
+//! * sharded campaigns complete, stay deterministic, and account
+//!   per-shard actuations.
+
+use ecosched::cluster::flavor::CATALOG;
+use ecosched::cluster::{Cluster, Demand, HostId, ShardedCluster, VmState};
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::predict::{MlpWeights, NativeMlp};
+use ecosched::profile::ResourceVector;
+use ecosched::sched::{
+    Decision, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, PowerCapParams,
+    ScheduleContext,
+};
+use ecosched::util::rng::Xoshiro256;
+use ecosched::workload::{flavor_for, Arrivals, JobId, Mix, TraceSpec};
+
+fn for_all_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 1..=n {
+        f(seed);
+    }
+}
+
+/// Randomized cluster: placed VMs with profiled demands, random host
+/// load, occasionally a powered-off host.
+fn random_cluster(rng: &mut Xoshiro256, n_hosts: usize) -> Cluster {
+    let mut c = Cluster::homogeneous(n_hosts);
+    for j in 0..(2 * n_hosts) {
+        let flavor = CATALOG[rng.range(0, 3)];
+        let feas = c.feasible_hosts(&flavor);
+        if feas.is_empty() {
+            continue;
+        }
+        let host = feas[rng.range(0, feas.len())];
+        let vm = c.create_vm(flavor, JobId(j as u64), 0.0);
+        c.place_vm(vm, host).unwrap();
+        if rng.chance(0.7) {
+            c.set_expected_demand(
+                vm,
+                Demand {
+                    cpu: rng.uniform(0.0, 6.0),
+                    mem_gb: rng.uniform(0.0, 12.0),
+                    disk_mbps: rng.uniform(0.0, 150.0),
+                    net_mbps: rng.uniform(0.0, 40.0),
+                },
+            );
+        }
+    }
+    for h in 0..n_hosts {
+        c.host_mut(HostId(h)).demand = Demand {
+            cpu: rng.uniform(0.0, 24.0),
+            mem_gb: rng.uniform(0.0, 40.0),
+            disk_mbps: rng.uniform(0.0, 500.0),
+            net_mbps: rng.uniform(0.0, 80.0),
+        };
+    }
+    if rng.chance(0.4) {
+        let empty: Vec<HostId> = c
+            .hosts
+            .iter()
+            .filter(|h| h.vms.is_empty() && h.state.is_on())
+            .map(|h| h.id)
+            .collect();
+        if !empty.is_empty() {
+            let h = empty[rng.range(0, empty.len())];
+            c.host_mut(h).power_off(0.0);
+            c.advance_power_states(1000.0);
+        }
+    }
+    c
+}
+
+/// Placement requests from a fixed-seed trace.
+fn requests(n: usize, seed: u64) -> Vec<PlacementRequest> {
+    TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: n,
+        arrivals: Arrivals::Poisson { mean_gap: 30.0 },
+        horizon: 7200.0,
+    }
+    .generate(seed)
+    .iter()
+    .map(|job| {
+        let flavor = flavor_for(job.kind);
+        PlacementRequest {
+            job: job.id,
+            flavor,
+            vector: ResourceVector::from_phases(&job.phases, &flavor),
+            remaining_solo: job.solo_duration(),
+        }
+    })
+    .collect()
+}
+
+fn mlp_policy(seed: u64, params: EnergyAwareParams) -> EnergyAware {
+    EnergyAware::new(Box::new(NativeMlp::new(MlpWeights::init(seed))), params)
+}
+
+#[test]
+fn prop_shard1_decide_batch_matches_preshard_path() {
+    // The acceptance gate: at shard_count = 1 the fan-out path must
+    // produce bit-identical placement actions to the flat sweep,
+    // whatever the cluster looks like.
+    for_all_seeds(15, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5AAD);
+        let n_hosts = 3 + rng.range(0, 6);
+        let cluster = random_cluster(&mut rng, n_hosts);
+        let reqs = requests(10, seed);
+        let flat_ctx = ScheduleContext::new(0.0, &cluster);
+        let mut flat = mlp_policy(seed, EnergyAwareParams::default());
+        let a = flat.decide_batch(&reqs, &flat_ctx);
+        let sc = ShardedCluster::new(cluster.clone(), 1);
+        sc.check_invariants().unwrap();
+        let shard_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        let mut sharded = mlp_policy(seed, EnergyAwareParams::default());
+        let b = sharded.decide_batch(&reqs, &shard_ctx);
+        assert_eq!(a, b, "seed {seed}: sharded {b:?} != flat {a:?}");
+    });
+}
+
+#[test]
+fn prop_full_coverage_topk_matches_preshard_path() {
+    // K >= shard_count: every shard is scored, so the merged argmin
+    // must equal the flat sweep at ANY shard count (the merge is
+    // lexicographic (energy, host id) — shard order cannot matter).
+    for_all_seeds(10, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x70FF);
+        let n_hosts = 4 + rng.range(0, 9);
+        let cluster = random_cluster(&mut rng, n_hosts);
+        let reqs = requests(8, seed);
+        let flat_ctx = ScheduleContext::new(0.0, &cluster);
+        let mut flat = mlp_policy(seed, EnergyAwareParams::default());
+        let a = flat.decide_batch(&reqs, &flat_ctx);
+        for shards in [2usize, 4] {
+            let sc = ShardedCluster::new(cluster.clone(), shards);
+            let shard_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+            let mut sharded = mlp_policy(
+                seed,
+                EnergyAwareParams {
+                    top_k_shards: shards,
+                    ..Default::default()
+                },
+            );
+            let b = sharded.decide_batch(&reqs, &shard_ctx);
+            assert_eq!(a, b, "seed {seed} shards {shards}");
+        }
+    });
+}
+
+#[test]
+fn topk_routing_places_only_into_ranked_shards() {
+    // K < shard_count: placements must land inside the top-K shards
+    // by digest headroom — the sufficiency property that makes the
+    // sub-linear bench meaningful.
+    for_all_seeds(10, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xBEEF);
+        let cluster = random_cluster(&mut rng, 12);
+        let reqs = requests(8, seed);
+        let sc = ShardedCluster::new(cluster, 4);
+        // Mirror the routing order: headroom score descending, lowest
+        // shard id on ties.
+        let mut order: Vec<usize> = (0..4).collect();
+        order.sort_by(|&a, &b| {
+            sc.digest(b)
+                .headroom_score()
+                .partial_cmp(&sc.digest(a).headroom_score())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let allowed: Vec<HostId> = order[..2]
+            .iter()
+            .flat_map(|&s| sc.members(s).iter().copied())
+            .collect();
+        let shard_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        let mut policy = mlp_policy(
+            seed,
+            EnergyAwareParams {
+                top_k_shards: 2,
+                ..Default::default()
+            },
+        );
+        for d in policy.decide_batch(&reqs, &shard_ctx) {
+            if let Decision::Place(h) = d {
+                assert!(
+                    allowed.contains(&h),
+                    "seed {seed}: {h} outside the top-2 shards {allowed:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_shard_digests_survive_random_mutation_sequences() {
+    // The check_invariants extension: every incrementally-maintained
+    // ShardDigest matches recomputation from the VM inventory after
+    // arbitrary mutation sequences through the shard handles.
+    for_all_seeds(12, |seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xD16E);
+        for shard_count in [1usize, 2, 4] {
+            let mut sc = ShardedCluster::new(Cluster::homogeneous(5), shard_count);
+            let mut live: Vec<ecosched::cluster::VmId> = Vec::new();
+            let mut t = 0.0;
+            for step in 0..100 {
+                t += rng.uniform(0.1, 5.0);
+                sc.advance_power_states(t);
+                match rng.range(0, 6) {
+                    0 => {
+                        let flavor = CATALOG[rng.range(0, 3)];
+                        let feas = sc.feasible_hosts(&flavor);
+                        if !feas.is_empty() {
+                            let host = feas[rng.range(0, feas.len())];
+                            let vm = sc.create_vm(flavor, JobId(step as u64), t);
+                            sc.place_vm(vm, host).unwrap();
+                            sc.set_expected_demand(
+                                vm,
+                                Demand {
+                                    cpu: rng.uniform(0.0, 8.0),
+                                    mem_gb: rng.uniform(0.0, 16.0),
+                                    disk_mbps: rng.uniform(0.0, 200.0),
+                                    net_mbps: rng.uniform(0.0, 60.0),
+                                },
+                            );
+                            live.push(vm);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let vm = live[rng.range(0, live.len())];
+                            if matches!(sc.vms[&vm].state, VmState::Running) {
+                                let flavor = sc.vms[&vm].flavor;
+                                let from = sc.vms[&vm].host.unwrap();
+                                let targets: Vec<HostId> = sc
+                                    .feasible_hosts(&flavor)
+                                    .into_iter()
+                                    .filter(|&h| h != from)
+                                    .collect();
+                                if !targets.is_empty() {
+                                    let to = targets[rng.range(0, targets.len())];
+                                    let _ = sc.start_migration(vm, to, t, 50.0);
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        let migrating: Vec<_> = live
+                            .iter()
+                            .copied()
+                            .filter(|vm| {
+                                matches!(sc.vms[vm].state, VmState::Migrating { .. })
+                            })
+                            .collect();
+                        for vm in migrating {
+                            sc.finish_migration(vm);
+                        }
+                    }
+                    3 => {
+                        // Re-profile a running VM (class may change).
+                        if !live.is_empty() {
+                            let vm = live[rng.range(0, live.len())];
+                            if sc.vms[&vm].is_active() {
+                                sc.set_expected_demand(
+                                    vm,
+                                    Demand {
+                                        cpu: rng.uniform(0.0, 10.0),
+                                        mem_gb: rng.uniform(0.0, 14.0),
+                                        disk_mbps: rng.uniform(0.0, 300.0),
+                                        net_mbps: rng.uniform(0.0, 50.0),
+                                    },
+                                );
+                            }
+                        }
+                    }
+                    4 => {
+                        // Power transitions through the shard handles.
+                        let empty_on: Vec<HostId> = sc
+                            .hosts
+                            .iter()
+                            .filter(|h| h.vms.is_empty() && h.state.is_on())
+                            .map(|h| h.id)
+                            .collect();
+                        if sc.hosts_on() > 1 && !empty_on.is_empty() {
+                            sc.power_off(empty_on[rng.range(0, empty_on.len())], t);
+                        }
+                        let off: Vec<HostId> = sc
+                            .hosts
+                            .iter()
+                            .filter(|h| h.state.is_off())
+                            .map(|h| h.id)
+                            .collect();
+                        if !off.is_empty() && rng.chance(0.5) {
+                            sc.power_on(off[rng.range(0, off.len())], t);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = rng.range(0, live.len());
+                            let vm = live[idx];
+                            if matches!(sc.vms[&vm].state, VmState::Running) {
+                                sc.terminate_vm(vm);
+                                live.swap_remove(idx);
+                            }
+                        }
+                    }
+                }
+                sc.check_invariants().unwrap_or_else(|e| {
+                    panic!("seed {seed} shards {shard_count} step {step}: {e}")
+                });
+            }
+        }
+    });
+}
+
+#[test]
+fn sharded_campaign_completes_and_accounts_per_shard() {
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: 12,
+        arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+        horizon: 3600.0,
+    }
+    .generate(9);
+    let run = || {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed: 9,
+                shard_count: 4,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        coord.run(trace.clone())
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.jobs.len(), 12, "all jobs complete under sharding");
+    assert_eq!(a.sla_violations, 0);
+    // Per-shard accounting: every job placed exactly once, somewhere.
+    assert_eq!(a.per_shard.len(), 4);
+    let placements: u64 = a.per_shard.iter().map(|s| s.placements).sum();
+    assert_eq!(placements, 12);
+    let (migrations_in, migrations_out) = a
+        .per_shard
+        .iter()
+        .fold((0u64, 0u64), |(i, o), s| (i + s.migrations_in, o + s.migrations_out));
+    assert_eq!(migrations_in, a.migrations);
+    assert_eq!(migrations_out, a.migrations);
+    // Sharded campaigns stay deterministic.
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.migrations, b.migrations);
+}
+
+#[test]
+fn sharded_campaign_with_power_cap_completes() {
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: 12,
+        arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+        horizon: 3600.0,
+    }
+    .generate(11);
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            seed: 11,
+            shard_count: 2,
+            power_cap: Some(PowerCapParams {
+                budget_w: 700.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+        make_policy("energy_aware").unwrap(),
+    );
+    let r = coord.run(trace);
+    assert_eq!(r.jobs.len(), 12, "capped campaign must still finish");
+}
