@@ -1,36 +1,44 @@
 //! Bench: scheduler scale-out. Two parts:
 //!
 //! 1. `decide_batch` over the sharded cluster state: host counts
-//!    {256, 1k, 4k, 10k} × shard counts {1, 4, 16}, measuring burst
-//!    decision latency and — via a counting predictor — the feature
-//!    rows scored per decision. With top-K routing the per-decision
-//!    work is bounded by the K largest shards, so rows/decision must
-//!    drop well below the fleet size as shards grow (asserted at 10k
-//!    hosts: the acceptance gate for the sharding refactor).
+//!    {256, 1k, 4k, 10k} × shard counts {1, 4, 16} × worker counts
+//!    {1, 4, 8}, measuring burst decision latency and — via a
+//!    counting predictor — the feature rows scored per decision. With
+//!    top-K routing the per-decision work is bounded by the K largest
+//!    shards, so rows/decision must drop well below the fleet size as
+//!    shards grow (asserted at 10k hosts: the acceptance gate for the
+//!    sharding refactor), and rows/decision must be IDENTICAL across
+//!    worker counts (asserted per config: the pool parallelizes, it
+//!    never changes the work).
 //! 2. (full mode only) end-to-end campaign wall time vs cluster size
 //!    — the §VI-C scale experiment's engine cost.
 //!
 //! Results go to `BENCH_scale.json` (`util::bench::JsonReport`);
 //! `BENCH_SHORT` shrinks sample counts but keeps the full sweep so CI
-//! records the scaling curve every run.
+//! records the scaling curve every run. CI's bench gate
+//! (`rust/benches/compare.py`) fails the smoke job when rows/decision
+//! grows or wall time regresses >25 % against the committed baseline.
 
 use ecosched::cluster::{Cluster, Demand, HostId, ShardedCluster};
 use ecosched::coordinator::make_policy;
 use ecosched::exp::common::run_campaign;
 use ecosched::predict::{oracle_eval, EnergyPredictor, Prediction};
 use ecosched::profile::{ResourceVector, FEAT_DIM};
+use ecosched::runtime::ShardPool;
 use ecosched::sched::{
     EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, ScheduleContext,
 };
 use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
 use ecosched::workload::{Arrivals, JobId, Mix, TraceSpec};
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Oracle-equivalent predictor that counts scored rows — the
-/// per-decision work measure the sub-linearity gate reads.
+/// per-decision work measure the sub-linearity gate reads. The
+/// counter is shared across `try_clone`d copies so pooled workers
+/// account to the same total.
 struct CountingOracle {
-    rows: Rc<Cell<u64>>,
+    rows: Arc<AtomicU64>,
 }
 
 impl EnergyPredictor for CountingOracle {
@@ -39,14 +47,20 @@ impl EnergyPredictor for CountingOracle {
     }
 
     fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
-        self.rows.set(self.rows.get() + feats.len() as u64);
+        self.rows.fetch_add(feats.len() as u64, Ordering::Relaxed);
         feats.iter().map(oracle_eval).collect()
     }
 
     fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
-        self.rows.set(self.rows.get() + feats.len() as u64);
+        self.rows.fetch_add(feats.len() as u64, Ordering::Relaxed);
         out.clear();
         out.extend(feats.iter().map(oracle_eval));
+    }
+
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        Some(Box::new(CountingOracle {
+            rows: Arc::clone(&self.rows),
+        }))
     }
 }
 
@@ -103,44 +117,64 @@ fn main() {
         let base = loaded_cluster(n_hosts);
         for &shards in &[1usize, 4, 16] {
             let sc = ShardedCluster::new(base.clone(), shards);
-            let rows = Rc::new(Cell::new(0u64));
-            let mut policy = EnergyAware::new(
-                Box::new(CountingOracle {
-                    rows: Rc::clone(&rows),
-                }),
-                EnergyAwareParams::default(),
-            );
-            let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
-            let mut iters = 0u64;
-            let r = Bench::new(&format!(
-                "decide_batch/{n_hosts}-hosts/{shards}-shards/burst={BURST}"
-            ))
-            .warmup(1)
-            .samples(samples)
-            .run(|| {
-                std::hint::black_box(policy.decide_batch(&reqs, &ctx));
-                iters += 1;
-            });
-            // Rows include the warmup iteration; average over all runs.
-            let rows_per_decision =
-                rows.get() as f64 / ((iters.max(1) as f64) * BURST as f64);
-            r.print_throughput("decisions", BURST as f64);
-            println!("      rows/decision: {rows_per_decision:.0} (fleet {n_hosts})");
-            report.record_with(
-                &r,
-                &[
-                    ("hosts", n_hosts as f64),
-                    ("shards", shards as f64),
-                    ("burst", BURST as f64),
-                    ("top_k", top_k as f64),
-                    ("rows_per_decision", rows_per_decision),
-                ],
-            );
-            if n_hosts == 10240 && shards == 1 {
-                rows_flat_10k = rows_per_decision;
-            }
-            if n_hosts == 10240 && shards == 16 {
-                rows_sharded_10k = rows_per_decision;
+            let mut rows_at_one_worker = 0.0f64;
+            for &workers in &[1usize, 4, 8] {
+                let pool = ShardPool::new(workers);
+                let rows = Arc::new(AtomicU64::new(0));
+                let mut policy = EnergyAware::new(
+                    Box::new(CountingOracle {
+                        rows: Arc::clone(&rows),
+                    }),
+                    EnergyAwareParams::default(),
+                );
+                let ctx = ScheduleContext::new(0.0, &sc)
+                    .with_shards(&sc)
+                    .with_pool(&pool);
+                let mut iters = 0u64;
+                let r = Bench::new(&format!(
+                    "decide_batch/{n_hosts}-hosts/{shards}-shards/{workers}-workers/burst={BURST}"
+                ))
+                .warmup(1)
+                .samples(samples)
+                .run(|| {
+                    std::hint::black_box(policy.decide_batch(&reqs, &ctx));
+                    iters += 1;
+                });
+                // Rows include the warmup iteration; average over all
+                // runs.
+                let rows_per_decision =
+                    rows.load(Ordering::Relaxed) as f64 / ((iters.max(1) as f64) * BURST as f64);
+                r.print_throughput("decisions", BURST as f64);
+                println!("      rows/decision: {rows_per_decision:.0} (fleet {n_hosts})");
+                report.record_with(
+                    &r,
+                    &[
+                        ("hosts", n_hosts as f64),
+                        ("shards", shards as f64),
+                        ("workers", workers as f64),
+                        ("burst", BURST as f64),
+                        ("top_k", top_k as f64),
+                        ("rows_per_decision", rows_per_decision),
+                    ],
+                );
+                // The pool parallelizes the sweep; it must not change
+                // how much work the sweep does.
+                if workers == 1 {
+                    rows_at_one_worker = rows_per_decision;
+                } else {
+                    assert!(
+                        (rows_per_decision - rows_at_one_worker).abs() < 1e-9,
+                        "worker count changed scored rows: {rows_per_decision} \
+                         vs {rows_at_one_worker} ({n_hosts} hosts, {shards} shards, \
+                         {workers} workers)"
+                    );
+                }
+                if n_hosts == 10240 && shards == 1 && workers == 1 {
+                    rows_flat_10k = rows_per_decision;
+                }
+                if n_hosts == 10240 && shards == 16 && workers == 1 {
+                    rows_sharded_10k = rows_per_decision;
+                }
             }
         }
     }

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Bench regression gate for CI's bench-smoke job.
+
+Compares the freshly generated BENCH_*.json reports (written by the
+`cargo bench` targets under BENCH_SHORT=1) against the committed
+baselines in rust/benches/baseline/ and fails when:
+
+  * a current report is missing entirely,
+  * a baseline config tag (result `name`) is missing from the current
+    report,
+  * `rows_per_decision` grew for any config tag (scored work is
+    deterministic — any growth is a real regression, no tolerance), or
+  * mean wall time regressed more than 25 % for any config tag.
+
+Baselines marked `"bootstrap": true` are placeholders committed before
+any CI machine ever ran the benches; the gate then only checks that
+the current reports exist and are non-empty, and prints a loud warning
+asking for a refresh.
+
+Refreshing baselines (run on the reference machine — CI's runner class
+— so wall times are comparable):
+
+    cd rust
+    BENCH_SHORT=1 cargo bench --bench bench_predict
+    BENCH_SHORT=1 cargo bench --bench bench_consolidation
+    BENCH_SHORT=1 cargo bench --bench bench_placement_path
+    BENCH_SHORT=1 cargo bench --bench bench_scale
+    python3 benches/compare.py --update
+    git add benches/baseline && git commit
+
+Stdlib only; no third-party imports.
+"""
+
+import json
+import os
+import shutil
+import sys
+
+GROUPS = ["predict", "consolidation", "placement_path", "scale"]
+WALL_TOLERANCE = 1.25  # fail when mean_s exceeds baseline by >25 %
+ROWS_EPS = 1e-6  # float slack on the exact rows/decision comparison
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def results_by_name(doc):
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def main():
+    update = "--update" in sys.argv
+    here = os.path.dirname(os.path.abspath(__file__))
+    base_dir = os.path.join(here, "baseline")
+    cur_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    failures = []
+    warnings = []
+
+    for group in GROUPS:
+        fname = f"BENCH_{group}.json"
+        cur_path = os.path.join(cur_dir, fname)
+        if not os.path.exists(cur_path):
+            failures.append(f"{group}: missing current report {fname}")
+            continue
+        cur = load(cur_path)
+        if not cur.get("results"):
+            failures.append(f"{group}: current report {fname} has no results")
+            continue
+
+        if update:
+            os.makedirs(base_dir, exist_ok=True)
+            shutil.copyfile(cur_path, os.path.join(base_dir, fname))
+            print(f"{group}: baseline refreshed from {cur_path}")
+            continue
+
+        base_path = os.path.join(base_dir, fname)
+        if not os.path.exists(base_path):
+            failures.append(f"{group}: missing committed baseline benches/baseline/{fname}")
+            continue
+        base = load(base_path)
+        if base.get("bootstrap"):
+            warnings.append(
+                f"{group}: baseline is a bootstrap placeholder — wall-time and "
+                "rows/decision are NOT being gated; refresh it (see compare.py header)"
+            )
+            continue
+        if base.get("short_mode") != cur.get("short_mode"):
+            warnings.append(
+                f"{group}: short_mode differs between baseline and current report; "
+                "wall-time comparison may be meaningless"
+            )
+
+        cur_rows = results_by_name(cur)
+        for name, b in results_by_name(base).items():
+            c = cur_rows.get(name)
+            if c is None:
+                failures.append(f"{group}: config '{name}' missing from current report")
+                continue
+            if "rows_per_decision" in b and "rows_per_decision" in c:
+                if c["rows_per_decision"] > b["rows_per_decision"] + ROWS_EPS:
+                    failures.append(
+                        f"{group}: '{name}' rows/decision grew "
+                        f"{b['rows_per_decision']:.1f} -> {c['rows_per_decision']:.1f}"
+                    )
+            if "mean_s" in b and "mean_s" in c and b["mean_s"] > 0:
+                if c["mean_s"] > WALL_TOLERANCE * b["mean_s"]:
+                    failures.append(
+                        f"{group}: '{name}' wall time regressed "
+                        f"{b['mean_s']:.6f}s -> {c['mean_s']:.6f}s "
+                        f"(>{(WALL_TOLERANCE - 1) * 100:.0f}%)"
+                    )
+
+    for w in warnings:
+        print(f"::warning::{w}")
+    if failures:
+        for f in failures:
+            print(f"::error::{f}")
+        return 1
+    if not update:
+        print("bench gate: all reports present and within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,11 +22,20 @@
 //! loops scan per shard), and tracks per-shard actuation counters in
 //! [`CampaignState`]. `shard_count = 1` (the default) reproduces the
 //! unsharded scheduler bit for bit.
+//!
+//! Per-shard work runs on a [`crate::runtime::ShardPool`] owned by
+//! the campaign state (`CampaignConfig::worker_threads`, default 1 =
+//! serial): placement sweeps and scan passes fan out to the workers
+//! and merge deterministically, and shard digests flow back to the
+//! coordinator over the pool's result channel at report time. The
+//! coordinator thread remains the only writer of cluster state —
+//! workers see `&` shard interiors plus their own scoring arenas.
 
 use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState};
 use crate::coordinator::report::CampaignReport;
 use crate::coordinator::state::CampaignState;
 use crate::profile::{ExecutionRecord, HistoryStore, ResourceVector};
+use crate::runtime::shard_pool;
 use crate::sched::{
     Consolidator, ControlAction, ControlLoop, Decision, DvfsGovernor, PlacementPolicy,
     PlacementRequest, ScheduleContext,
@@ -45,6 +54,13 @@ pub struct CampaignConfig {
     /// shard_count=1 property test pins this down); larger counts
     /// bound per-decision work by the top-K shards.
     pub shard_count: usize,
+    /// Shard worker threads. 1 (the default) is the serial path —
+    /// the behavioral oracle; larger widths fan per-shard placement
+    /// sweeps and control-loop scan passes out across a
+    /// [`crate::runtime::ShardPool`], bit-identical to serial at any
+    /// width. The default honors `PALLAS_WORKER_THREADS` so CI's
+    /// worker-count matrix exercises the whole suite at both 1 and 8.
+    pub worker_threads: usize,
     pub seed: u64,
     pub sla: SlaSpec,
     /// Consolidation scan settings (None disables the loop even for
@@ -69,6 +85,7 @@ impl Default for CampaignConfig {
         CampaignConfig {
             n_hosts: 5,
             shard_count: 1,
+            worker_threads: shard_pool::env_workers(),
             seed: 42,
             sla: SlaSpec::default(),
             consolidation: Some(crate::sched::ConsolidationParams::default()),
@@ -382,7 +399,8 @@ impl Coordinator {
                     .with_telemetry(&st.telemetry)
                     .with_history(&self.history)
                     .with_vm_ctx(&vm_ctx)
-                    .with_shards(&st.cluster);
+                    .with_shards(&st.cluster)
+                    .with_pool(&st.pool);
                 control.scan(&ctx, self.policy.scoring_handle())
             };
             for action in actions {
@@ -458,7 +476,8 @@ impl Coordinator {
             let ctx = ScheduleContext::new(now, &st.cluster)
                 .with_telemetry(&st.telemetry)
                 .with_history(&self.history)
-                .with_shards(&st.cluster);
+                .with_shards(&st.cluster)
+                .with_pool(&st.pool);
             self.policy.decide_batch(&reqs, &ctx)
         };
         assert_eq!(
@@ -520,7 +539,8 @@ impl Coordinator {
                 let ctx = ScheduleContext::new(now, &st.cluster)
                     .with_telemetry(&st.telemetry)
                     .with_history(&self.history)
-                    .with_shards(&st.cluster);
+                    .with_shards(&st.cluster)
+                    .with_pool(&st.pool);
                 self.policy.decide(req, &ctx)
             };
             st.overhead.n_decisions += 1;

@@ -1,6 +1,7 @@
 //! Campaign outcome: everything the experiment harness needs to
 //! regenerate the paper's tables and figures from one run.
 
+use crate::cluster::ShardDigest;
 use crate::util::stats::Histogram;
 use crate::util::timeline::Timeline;
 use crate::workload::{JobId, WorkloadKind};
@@ -111,6 +112,10 @@ pub struct CampaignReport {
     pub deferrals: u64,
     /// Per-shard actuation counters (length = configured shard count).
     pub per_shard: Vec<ShardCounters>,
+    /// End-of-campaign per-shard digests, gathered from the shards
+    /// over the worker pool's result channel (the coordinator never
+    /// walks shard interiors to report).
+    pub final_digests: Vec<ShardDigest>,
 }
 
 impl CampaignReport {

@@ -6,6 +6,7 @@ use crate::cluster::{Cluster, HostId, ShardedCluster, VmId};
 use crate::coordinator::leader::{remaining_solo, CampaignConfig};
 use crate::coordinator::report::{CampaignReport, JobRecord, Overhead, ShardCounters};
 use crate::profile::ResourceVector;
+use crate::runtime::ShardPool;
 use crate::sched::VmContext;
 use crate::sim::{EnergyMeter, Telemetry};
 use crate::sla::SlaTracker;
@@ -34,6 +35,10 @@ pub struct CampaignState {
     /// Per-shard actuation counters (placements, boots, migrations,
     /// power-offs), indexed by shard.
     pub shard_counters: Vec<ShardCounters>,
+    /// Shard worker pool (`CampaignConfig::worker_threads` wide) the
+    /// leader attaches to every context it freezes; width 1 is the
+    /// serial oracle path.
+    pub pool: ShardPool,
     pub meter: EnergyMeter,
     pub telemetry: Telemetry,
     pub sla: SlaTracker,
@@ -72,6 +77,7 @@ impl CampaignState {
         CampaignState {
             cluster: ShardedCluster::new(Cluster::homogeneous(cfg.n_hosts), shard_count),
             shard_counters: vec![ShardCounters::default(); shard_count],
+            pool: ShardPool::new(cfg.worker_threads),
             meter: EnergyMeter::new(cfg.n_hosts, cfg.seed, cfg.meter_noise),
             telemetry: Telemetry::new(cfg.n_hosts, cfg.seed, cfg.telemetry_noise),
             sla: SlaTracker::new(cfg.sla),
@@ -169,6 +175,13 @@ impl CampaignState {
             overhead: self.overhead.clone(),
             deferrals: self.counters.deferrals,
             per_shard: self.shard_counters.clone(),
+            // Digests flow back over the pool's result channel (the
+            // distributed read path) rather than being walked in
+            // place; a poisoned gather fails the report loudly.
+            final_digests: self
+                .pool
+                .gather_digests(&self.cluster)
+                .unwrap_or_else(|e| panic!("report digest gather: {e}")),
         }
     }
 }
@@ -190,6 +203,8 @@ mod tests {
         assert_eq!(r.seed, cfg.seed);
         // Default config is a single shard covering the fleet.
         assert_eq!(r.per_shard.len(), 1);
+        assert_eq!(r.final_digests.len(), 1);
+        assert_eq!(r.final_digests[0].hosts, cfg.n_hosts);
         st.cluster.check_invariants().unwrap();
     }
 

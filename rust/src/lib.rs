@@ -63,6 +63,26 @@
 //!    [`sched::PowerCapLoop`] holds fleet draw under a watt budget by
 //!    walking shards down the DVFS ladder, I/O-bound hosts first.
 //!
+//! ## Concurrency
+//!
+//! Per-shard work executes on a [`runtime::ShardPool`]
+//! (`CampaignConfig::worker_threads`, default 1 = serial; std-only —
+//! scoped threads + an `mpsc` result channel). The ownership rule:
+//! **workers get `&` shard interiors plus their own scoring arenas
+//! (cloned predictor, feature/prediction buffers —
+//! [`predict::EnergyPredictor::try_clone`]); the coordinator thread
+//! is the only writer.** Scans and sweeps are pure planning over a
+//! frozen context, so sharing it immutably is safe by construction,
+//! and per-shard results merge deterministically — placement winners
+//! by lexicographic `(energy, host id)` (a total order), control
+//! actions in ascending shard order — so worker count can never
+//! change a decision: `worker_threads = 1` is the behavioral oracle
+//! and the property tests in `rust/tests/pool.rs` (run in CI at both
+//! 1 and 8 workers) pin parallel against it. Shard digests flow back
+//! to the coordinator over the pool's channel at report time. A
+//! panicking worker poisons its scan with a clear error instead of
+//! deadlocking the channel.
+//!
 //! Python never runs at decision time: [`runtime`] loads
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).
 //! The offline build links an API-compatible stub instead; the

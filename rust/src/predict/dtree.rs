@@ -204,6 +204,12 @@ impl EnergyPredictor for TreePredictor {
             })
             .collect()
     }
+
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        Some(Box::new(TreePredictor {
+            tree: self.tree.clone(),
+        }))
+    }
 }
 
 #[cfg(test)]

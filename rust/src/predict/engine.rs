@@ -41,6 +41,17 @@ pub trait EnergyPredictor {
         out.clear();
         out.extend(self.predict(feats));
     }
+
+    /// Duplicate this engine for a parallel shard worker. The clone
+    /// must score identically to the original (same rows → bitwise
+    /// same predictions) — the parallel/serial equivalence property
+    /// tests depend on it. Returns `None` when the engine cannot be
+    /// duplicated (e.g. it wraps a device-backed runtime); the
+    /// parallel paths then fall back to the serial sweep rather than
+    /// sharing one arena across threads.
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        None
+    }
 }
 
 /// Output normalization shared by training and inference:

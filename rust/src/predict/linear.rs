@@ -123,6 +123,12 @@ impl EnergyPredictor for LinearPredictor {
             })
             .collect()
     }
+
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        Some(Box::new(LinearPredictor {
+            model: self.model.clone(),
+        }))
+    }
 }
 
 #[cfg(test)]

@@ -217,6 +217,13 @@ impl EnergyPredictor for NativeMlp {
             out.push(decode_output(y0, y1));
         }
     }
+
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        // The clone carries the same weights and its own arena; the
+        // kernels are deterministic, so clone scoring is bit-identical
+        // to the original (asserted in the tests below).
+        Some(Box::new(self.clone()))
+    }
 }
 
 #[cfg(test)]
@@ -335,6 +342,16 @@ mod tests {
         let mut buf = vec![Prediction { power_w: -1.0, slowdown: -1.0 }; 3];
         m.predict_into(&feats, &mut buf);
         assert_eq!(buf, fresh);
+    }
+
+    #[test]
+    fn try_clone_scores_bit_identical() {
+        let mut m = NativeMlp::new(MlpWeights::init(11));
+        let feats = vec![[0.3f32; FEAT_DIM]; 7];
+        let mine = m.predict(&feats);
+        let mut clone = m.try_clone().expect("native mlp is cloneable");
+        assert_eq!(clone.predict(&feats), mine);
+        assert_eq!(clone.name(), "native-mlp");
     }
 
     #[test]

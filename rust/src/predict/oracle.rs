@@ -120,6 +120,11 @@ impl EnergyPredictor for OraclePredictor {
         out.clear();
         out.extend(feats.iter().map(oracle_eval));
     }
+
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        // Stateless closed form: every clone is the oracle itself.
+        Some(Box::new(OraclePredictor))
+    }
 }
 
 #[cfg(test)]

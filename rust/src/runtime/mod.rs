@@ -5,7 +5,12 @@
 //! Interchange is **HLO text**, not serialized `HloModuleProto`:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
 //! XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids.
+//!
+//! Also home to [`shard_pool`], the std-only worker pool the sharded
+//! scheduling pipeline fans per-shard work out on.
 
 mod exec;
+pub mod shard_pool;
 
 pub use exec::{ModelMeta, Runtime, RuntimeError};
+pub use shard_pool::{PoolError, ShardPool};

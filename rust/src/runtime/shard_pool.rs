@@ -1,0 +1,299 @@
+//! Shard worker pool — the execution engine of the parallel
+//! scheduling pipeline. One worker serves one shard job at a time;
+//! per-shard work (candidate sweeps, donor gathers, digest reads)
+//! fans out across the workers and the results flow back to the
+//! coordinator thread over an `mpsc` channel.
+//!
+//! Std-only by design: the offline build vendors no crates, so the
+//! pool is `std::thread::scope` + `std::sync::mpsc`. Workers are
+//! spawned inside a scope per fan-out call — shard jobs borrow shard
+//! interiors (`&` only; the coordinator thread remains the sole
+//! writer), and scoped threads are what let those borrows cross the
+//! spawn without `'static` gymnastics. Within one call each worker is
+//! long-lived: it pulls shard jobs off a shared queue until the queue
+//! drains, so a K-shard sweep costs at most `min(workers, K)` thread
+//! spawns, not K.
+//!
+//! # Determinism contract
+//!
+//! `scatter`/`scatter_state` return results indexed by job, not by
+//! completion order, and callers merge per-shard results by a
+//! commutative rule (lexicographic `(energy, host id)` for placement
+//! winners, ascending shard order for control actions). Worker count
+//! therefore never changes observable output — `workers = 1` is the
+//! serial oracle path, run inline with no threads at all, and the
+//! equivalence property tests in `rust/tests/pool.rs` pin parallel
+//! against it.
+//!
+//! # Panic poisoning
+//!
+//! A job that panics must not deadlock the channel: every job sends
+//! exactly one message (its result or its panic payload, caught with
+//! `catch_unwind`), so the receive loop always terminates and a
+//! panicking worker surfaces as [`PoolError::WorkerPanicked`] with
+//! the payload's message instead of a hang.
+
+use crate::cluster::{ShardDigest, ShardedCluster};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// Environment variable consulted for the default worker count — the
+/// CI test matrix runs the suite under both `1` and `8`.
+pub const WORKER_THREADS_ENV: &str = "PALLAS_WORKER_THREADS";
+
+/// Worker-pool failure: the scan that scheduled the failing job is
+/// poisoned and must not actuate partial results.
+#[derive(Debug)]
+pub enum PoolError {
+    /// A worker panicked while running a shard job; the string is the
+    /// panic payload's message.
+    WorkerPanicked(String),
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::WorkerPanicked(msg) => {
+                write!(f, "shard worker panicked: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Worker count from `PALLAS_WORKER_THREADS` (default 1 = serial).
+pub fn env_workers() -> usize {
+    std::env::var(WORKER_THREADS_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// The shard worker pool. Construction is cheap (the pool holds only
+/// its configured width; threads live per fan-out call), so the
+/// coordinator owns one for the campaign and attaches it to every
+/// context it freezes.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPool {
+    workers: usize,
+}
+
+impl Default for ShardPool {
+    /// Serial pool (one worker) — the oracle path.
+    fn default() -> ShardPool {
+        ShardPool::new(1)
+    }
+}
+
+impl ShardPool {
+    pub fn new(workers: usize) -> ShardPool {
+        ShardPool {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Pool width from `PALLAS_WORKER_THREADS` (default 1).
+    pub fn from_env() -> ShardPool {
+        ShardPool::new(env_workers())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Workers a fan-out of `jobs` shard jobs would actually spawn:
+    /// one per job up to the configured width, never zero.
+    pub fn plan_workers(&self, jobs: usize) -> usize {
+        self.workers.min(jobs).max(1)
+    }
+
+    /// Run stateless shard jobs, returning their results in job order.
+    /// With one planned worker the jobs run inline on the calling
+    /// thread in order (the serial oracle); otherwise workers pull
+    /// jobs off a shared queue and results come back over the channel.
+    pub fn scatter<T, F>(&self, jobs: Vec<F>) -> Result<Vec<T>, PoolError>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let states = vec![(); self.plan_workers(jobs.len())];
+        let jobs: Vec<_> = jobs.into_iter().map(|job| move |_: &mut ()| job()).collect();
+        self.scatter_state(states, jobs)
+    }
+
+    /// Run shard jobs with per-worker state, returning results in job
+    /// order. `states` carries one scoring arena (predictor clone,
+    /// feature/prediction buffers) per worker — the shared single
+    /// arena the serial paths reuse is inherently serial, so each
+    /// worker must own its own. `states.len()` is the worker count;
+    /// size it with [`ShardPool::plan_workers`]. One state means the
+    /// jobs run inline, in order, threading that single state through
+    /// all of them — exactly the serial sweep.
+    pub fn scatter_state<S, T, F>(&self, states: Vec<S>, jobs: Vec<F>) -> Result<Vec<T>, PoolError>
+    where
+        S: Send,
+        T: Send,
+        F: FnOnce(&mut S) -> T + Send,
+    {
+        assert!(!states.is_empty(), "scatter_state needs at least one worker state");
+        if states.len() == 1 || jobs.len() <= 1 {
+            let mut state = states.into_iter().next().expect("checked non-empty");
+            return Ok(jobs.into_iter().map(|job| job(&mut state)).collect());
+        }
+        let n = jobs.len();
+        let next = AtomicUsize::new(0);
+        // Job handoff: each slot is taken exactly once, by whichever
+        // worker claims its index off the shared counter.
+        let slots: Vec<Mutex<Option<F>>> =
+            jobs.into_iter().map(|job| Mutex::new(Some(job))).collect();
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let first_panic = std::thread::scope(|scope| {
+            for mut state in states {
+                let tx = tx.clone();
+                let next = &next;
+                let slots = &slots;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = slots[i]
+                        .lock()
+                        .expect("job slot lock")
+                        .take()
+                        .expect("each job index is claimed once");
+                    // Exactly one message per job, success or panic —
+                    // the receive loop below can never starve.
+                    let outcome = catch_unwind(AssertUnwindSafe(|| job(&mut state)));
+                    if tx.send((i, outcome)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut first_panic: Option<String> = None;
+            for (i, outcome) in rx {
+                match outcome {
+                    Ok(v) => results[i] = Some(v),
+                    Err(payload) => {
+                        first_panic.get_or_insert_with(|| panic_message(payload.as_ref()));
+                    }
+                }
+            }
+            first_panic
+        });
+        match first_panic {
+            Some(msg) => Err(PoolError::WorkerPanicked(msg)),
+            None => Ok(results
+                .into_iter()
+                .map(|r| r.expect("every job sent exactly one result"))
+                .collect()),
+        }
+    }
+
+    /// Read every shard's digest through the pool: digests flow back
+    /// to the coordinator thread over the result channel instead of
+    /// the coordinator walking shard state in place — the read path a
+    /// distributed deployment (one process per shard) would use.
+    pub fn gather_digests(&self, sc: &ShardedCluster) -> Result<Vec<ShardDigest>, PoolError> {
+        let jobs: Vec<_> = (0..sc.shard_count()).map(|s| move || *sc.digest(s)).collect();
+        self.scatter(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn scatter_preserves_job_order_at_any_width() {
+        for workers in [1usize, 2, 3, 8] {
+            let pool = ShardPool::new(workers);
+            let jobs: Vec<_> = (0..17u64).map(|i| move || i * i).collect();
+            let out = pool.scatter(jobs).unwrap();
+            assert_eq!(out, (0..17u64).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn serial_pool_threads_one_state_through_jobs_in_order() {
+        let pool = ShardPool::new(1);
+        let jobs: Vec<_> = (0..5u64).map(|i| move |acc: &mut u64| {
+            *acc += i;
+            *acc
+        })
+        .collect();
+        // Running totals prove in-order, single-state execution.
+        let out = pool.scatter_state(vec![0u64], jobs).unwrap();
+        assert_eq!(out, vec![0, 1, 3, 6, 10]);
+    }
+
+    #[test]
+    fn parallel_workers_each_own_their_state() {
+        let pool = ShardPool::new(4);
+        let jobs: Vec<_> = (0..32u64).map(|i| move |calls: &mut u64| {
+            *calls += 1;
+            i
+        })
+        .collect();
+        let out = pool.scatter_state(vec![0u64; 4], jobs).unwrap();
+        assert_eq!(out, (0..32u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_worker_poisons_the_scatter_instead_of_deadlocking() {
+        let pool = ShardPool::new(4);
+        let jobs: Vec<_> = (0..8usize)
+            .map(|i| {
+                move || {
+                    if i == 3 {
+                        panic!("boom in shard job {i}");
+                    }
+                    i
+                }
+            })
+            .collect();
+        let err = pool.scatter(jobs).expect_err("a panicking job must poison the scatter");
+        let msg = err.to_string();
+        assert!(msg.contains("boom in shard job 3"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn plan_workers_caps_at_jobs_and_width() {
+        let pool = ShardPool::new(8);
+        assert_eq!(pool.plan_workers(3), 3);
+        assert_eq!(pool.plan_workers(100), 8);
+        assert_eq!(pool.plan_workers(0), 1);
+        assert_eq!(ShardPool::new(0).workers(), 1, "width clamps to 1");
+        assert_eq!(ShardPool::default().workers(), 1);
+    }
+
+    #[test]
+    fn digests_over_the_channel_match_in_place_reads() {
+        let sc = ShardedCluster::new(Cluster::homogeneous(13), 4);
+        for workers in [1usize, 4] {
+            let pool = ShardPool::new(workers);
+            let gathered = pool.gather_digests(&sc).unwrap();
+            assert_eq!(gathered.len(), 4);
+            for (g, d) in gathered.iter().zip(sc.digests()) {
+                assert_eq!(g.hosts, d.hosts);
+                assert_eq!(g.on, d.on);
+            }
+        }
+    }
+}

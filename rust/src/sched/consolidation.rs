@@ -39,10 +39,23 @@
 //! `cross_shard_budget` caps how many such migrations one scan may
 //! plan. Without shards the context is one shard covering the fleet,
 //! which reproduces the original single-donor scan exactly.
+//!
+//! # Parallel scans
+//!
+//! With a [`ShardPool`] on the context (and a cloneable predictor)
+//! the per-donor gather + score passes run on the pool — each worker
+//! owns a cloned predictor and its own feature arena, and the gather
+//! body reads only frozen scan state (prelude + cluster), never the
+//! planned loads. Selection, which *does* depend on targets chosen
+//! for earlier donors, stays serial: donors merge in ascending shard
+//! order through the same [`Consolidator::merge_donor`] body the
+//! serial path uses, so the emitted actions are bit-identical at any
+//! worker count (property-tested in `rust/tests/pool.rs`).
 
 use crate::cluster::{Cluster, Flavor, Host, HostId, Utilization, VmId, VmState};
 use crate::predict::{EnergyPredictor, Prediction};
 use crate::profile::{build_features, ResourceVector, FEAT_DIM};
+use crate::runtime::ShardPool;
 use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
 use crate::sched::{ScheduleContext, ShardHosts};
 use std::collections::BTreeMap;
@@ -120,8 +133,32 @@ pub struct Consolidator {
     /// path.
     feats: Vec<[f32; FEAT_DIM]>,
     cands: Vec<HostId>,
-    spans: Vec<(VmId, usize, usize)>,
+    spans: Vec<(VmId, usize, usize, bool)>,
     preds: Vec<Prediction>,
+}
+
+/// One donor's gathered + scored evacuation candidates — the output
+/// of the (parallelizable) first half of a donor pass, consumed by
+/// the serial selection merge. `spans` maps each donor VM to its
+/// candidate range and whether the candidates came from the
+/// cross-shard fallback.
+#[derive(Default)]
+struct DonorGather {
+    spans: Vec<(VmId, usize, usize, bool)>,
+    cands: Vec<HostId>,
+    preds: Vec<Prediction>,
+    /// False when the donor must be abandoned wholesale: a VM with
+    /// missing context, shorter remaining work than its own copy, or
+    /// no viable target anywhere.
+    viable: bool,
+}
+
+/// Per-worker state for the pooled scan: a cloned predictor plus a
+/// feature arena (candidate ids and predictions travel back in the
+/// [`DonorGather`]).
+struct ScanWorker {
+    predictor: Box<dyn EnergyPredictor + Send>,
+    feats: Vec<[f32; FEAT_DIM]>,
 }
 
 /// Everything the evacuation planner needs from the first half of a
@@ -154,6 +191,181 @@ struct Evacuation {
     off_planned: Vec<bool>,
     /// Per-host effective utilization — max(instantaneous, profiled).
     utils: Vec<Utilization>,
+}
+
+/// Static target filters for migrating a donor VM (of `flavor`, with
+/// runtime context `vctx`) onto `host`: everything except the
+/// planned-load fit check, whose inputs depend on targets chosen for
+/// earlier VMs in the same scan and which is therefore applied at
+/// selection time. One predicate shared by every gather path (serial,
+/// pooled, and the sequential reference), so the candidate sets
+/// cannot drift. Reads only frozen scan state — safe to run on a
+/// worker thread.
+fn target_ok(
+    params: &ConsolidationParams,
+    cluster: &Cluster,
+    sustained: &[f64],
+    ev: &Evacuation,
+    host: &Host,
+    flavor: &Flavor,
+    vctx: &VmContext,
+) -> bool {
+    if ev.donor_flag[host.id.0] || !host.state.is_on() {
+        return false;
+    }
+    // Never migrate onto a host we just planned to power off, and
+    // never onto an *empty* host — moving load to an empty machine
+    // swaps hosts instead of shrinking the active set.
+    if ev.off_planned[host.id.0] || host.vms.is_empty() {
+        return false;
+    }
+    // Eq. 9 restriction on sustained utilization.
+    if sustained[host.id.0] > params.delta_high {
+        return false;
+    }
+    // Base admission fit (the planned-load variant, which only
+    // shrinks this set, is re-checked at selection time).
+    if !host.fits(flavor, cluster.reserved(host.id)) {
+        return false;
+    }
+    // Same effective-load headroom the placement path uses.
+    let u = &ev.utils[host.id.0];
+    let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&vctx.vector, u);
+    if (vctx.vector.cpu > 0.1 && pc > 0.90)
+        || (vctx.vector.mem > 0.1 && pm > 0.90)
+        || (vctx.vector.disk > 0.1 && pd > 0.90)
+        || (vctx.vector.net > 0.1 && pn > 0.90)
+    {
+        return false;
+    }
+    // The migration copy itself occupies ~0.34 of a 1 GbE NIC on
+    // the receiving end; co-located network-heavy phases must
+    // still fit beside it.
+    if pn + MIGRATION_NET_UTIL > 0.95 {
+        return false;
+    }
+    true
+}
+
+/// Gather one donor VM's viable targets from `hosts` into the given
+/// arena — the ONE gather body shared by the in-shard pass and the
+/// cross-shard fallback on every scan path.
+#[allow(clippy::too_many_arguments)]
+fn gather_targets_into(
+    params: &ConsolidationParams,
+    cluster: &Cluster,
+    sustained: &[f64],
+    ev: &Evacuation,
+    hosts: ShardHosts<'_>,
+    flavor: &Flavor,
+    vctx: &VmContext,
+    cands: &mut Vec<HostId>,
+    feats: &mut Vec<[f32; FEAT_DIM]>,
+) {
+    for host_id in hosts {
+        let host = &cluster.hosts[host_id.0];
+        if !target_ok(params, cluster, sustained, ev, host, flavor, vctx) {
+            continue;
+        }
+        cands.push(host.id);
+        feats.push(build_features(&vctx.vector, vctx.remaining_solo, host));
+    }
+}
+
+/// Pre-copy duration at the 40 MB/s throttle: migrating a VM whose
+/// remaining work is shorter than the copy itself cannot free the
+/// donor early enough to pay for the copy's network pressure.
+fn copy_secs(flavor: &Flavor) -> f64 {
+    flavor.mem_gb * 1024.0 * 1.3 / 40.0
+}
+
+/// The best remote shard (by digest headroom) to overflow into when a
+/// donor VM has no in-shard target — the cross-shard pass reads only
+/// the digests, never a remote shard's interior state.
+fn best_remote_shard(ctx: &ScheduleContext<'_>, exclude: usize) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for s in 0..ctx.shard_count() {
+        if s == exclude {
+            continue;
+        }
+        let score = ctx.shard_digest(s).headroom_score();
+        if score <= 0.0 {
+            continue;
+        }
+        if best.map(|(_, b)| score > b).unwrap_or(true) {
+            best = Some((s, score));
+        }
+    }
+    best.map(|(s, _)| s)
+}
+
+/// Gather every VM of one donor into the given arena: in-shard
+/// targets first, then the digest-driven cross-shard fallback
+/// (flagged in the span so the budget gate can count it at merge
+/// time). Returns false when the donor must be abandoned wholesale —
+/// a VM with missing context, remaining work shorter than its own
+/// copy, or no viable target anywhere. Reads only frozen scan state;
+/// in particular it never consults the planned loads, which is what
+/// makes donors gatherable in parallel.
+#[allow(clippy::too_many_arguments)]
+fn gather_donor(
+    params: &ConsolidationParams,
+    ctx: &ScheduleContext<'_>,
+    sustained: &[f64],
+    ev: &Evacuation,
+    shard: usize,
+    donor: HostId,
+    spans: &mut Vec<(VmId, usize, usize, bool)>,
+    cands: &mut Vec<HostId>,
+    feats: &mut Vec<[f32; FEAT_DIM]>,
+) -> bool {
+    let cluster = ctx.cluster;
+    for &vm_id in &cluster.hosts[donor.0].vms {
+        let vm = &cluster.vms[&vm_id];
+        let Some(vctx) = ctx.vm_context(vm_id) else {
+            return false; // missing context: be conservative
+        };
+        if vctx.remaining_solo < copy_secs(&vm.flavor) {
+            return false; // let it drain instead
+        }
+        let start = cands.len();
+        gather_targets_into(
+            params,
+            cluster,
+            sustained,
+            ev,
+            ctx.shard(shard).hosts(),
+            &vm.flavor,
+            vctx,
+            cands,
+            feats,
+        );
+        let mut crossed = false;
+        if cands.len() == start {
+            // No in-shard target: cross-shard fallback into the
+            // single best remote shard by digest headroom.
+            let Some(remote) = best_remote_shard(ctx, shard) else {
+                return false; // cannot fully evacuate
+            };
+            gather_targets_into(
+                params,
+                cluster,
+                sustained,
+                ev,
+                ctx.shard(remote).hosts(),
+                &vm.flavor,
+                vctx,
+                cands,
+                feats,
+            );
+            if cands.len() == start {
+                return false; // cannot fully evacuate: give up this donor
+            }
+            crossed = true;
+        }
+        spans.push((vm_id, start, cands.len(), crossed));
+    }
+    true
 }
 
 impl Consolidator {
@@ -294,65 +506,14 @@ impl Consolidator {
         }
     }
 
-    /// Static target filters for migrating a donor VM (of `flavor`,
-    /// with runtime context `vctx`) onto `host`: everything except the
-    /// planned-load fit check, whose inputs depend on targets chosen
-    /// for earlier VMs in the same scan and which is therefore applied
-    /// at selection time. One predicate shared by the batched scan's
-    /// gather phase and the sequential reference, so the two candidate
-    /// sets cannot drift. Per-host scan state (sustained utilization,
-    /// effective utilization, power-off plan) comes precomputed from
-    /// the prelude's [`Evacuation`].
-    #[allow(clippy::too_many_arguments)]
-    fn target_ok(
-        &self,
-        cluster: &Cluster,
-        sustained: &[f64],
-        ev: &Evacuation,
-        host: &Host,
-        flavor: &Flavor,
-        vctx: &VmContext,
-    ) -> bool {
-        if ev.donor_flag[host.id.0] || !host.state.is_on() {
-            return false;
-        }
-        // Never migrate onto a host we just planned to power off, and
-        // never onto an *empty* host — moving load to an empty machine
-        // swaps hosts instead of shrinking the active set.
-        if ev.off_planned[host.id.0] || host.vms.is_empty() {
-            return false;
-        }
-        // Eq. 9 restriction on sustained utilization.
-        if sustained[host.id.0] > self.params.delta_high {
-            return false;
-        }
-        // Base admission fit (the planned-load variant, which only
-        // shrinks this set, is re-checked at selection time).
-        if !host.fits(flavor, cluster.reserved(host.id)) {
-            return false;
-        }
-        // Same effective-load headroom the placement path uses.
-        let u = &ev.utils[host.id.0];
-        let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&vctx.vector, u);
-        if (vctx.vector.cpu > 0.1 && pc > 0.90)
-            || (vctx.vector.mem > 0.1 && pm > 0.90)
-            || (vctx.vector.disk > 0.1 && pd > 0.90)
-            || (vctx.vector.net > 0.1 && pn > 0.90)
-        {
-            return false;
-        }
-        // The migration copy itself occupies ~0.34 of a 1 GbE NIC on
-        // the receiving end; co-located network-heavy phases must
-        // still fit beside it.
-        if pn + MIGRATION_NET_UTIL > 0.95 {
-            return false;
-        }
-        true
-    }
+    // `target_ok`, `gather_targets_into`, `gather_donor`,
+    // `best_remote_shard`, and `copy_secs` are module-level functions
+    // above: they read only frozen scan state, which is what lets the
+    // pooled scan run them on worker threads.
 
     /// Selection step shared by the batched scan and the sequential
     /// reference: among one VM's candidates (already filtered by
-    /// [`Consolidator::target_ok`]), re-check admission against the
+    /// [`target_ok`]), re-check admission against the
     /// load planned onto each target earlier in this scan, apply the
     /// SLA slowdown gate, and argmin the amortized-idle-floor cost.
     /// One function so a tweak to the cost formula or the planned-load
@@ -393,66 +554,135 @@ impl Consolidator {
         best.map(|(host, _)| host)
     }
 
-    /// Pre-copy duration at the 40 MB/s throttle: migrating a VM whose
-    /// remaining work is shorter than the copy itself cannot free the
-    /// donor early enough to pay for the copy's network pressure.
-    fn copy_secs(flavor: &Flavor) -> f64 {
-        flavor.mem_gb * 1024.0 * 1.3 / 40.0
+    /// Selection + commit for one donor's scored gather — the ONE
+    /// merge body shared by the serial and pooled scan paths, run in
+    /// ascending shard order either way. Applies the donor-level
+    /// cross-shard budget gate (identical in outcome to gating each
+    /// fallback as it is gathered: a donor is abandoned exactly when
+    /// its cross-shard fallbacks exceed the remaining budget), then
+    /// plans a target for every VM in order with planned-load
+    /// accounting, committing to the cross-donor maps — and the
+    /// budget — only when the whole donor evacuates (partial
+    /// evacuation strands the host at even lower utilization).
+    #[allow(clippy::too_many_arguments)]
+    fn merge_donor(
+        &self,
+        ctx: &ScheduleContext<'_>,
+        spans: &[(VmId, usize, usize, bool)],
+        cands: &[HostId],
+        preds: &[Prediction],
+        viable: bool,
+        cross_budget: &mut usize,
+        extra_mem: &mut BTreeMap<HostId, f64>,
+        extra_cpu: &mut BTreeMap<HostId, f64>,
+        actions: &mut Vec<ControlAction>,
+    ) {
+        if !viable || spans.is_empty() {
+            return;
+        }
+        let cross_needed = spans.iter().filter(|s| s.3).count();
+        if cross_needed > *cross_budget {
+            return;
+        }
+        let cluster = ctx.cluster;
+        let mut local_mem = extra_mem.clone();
+        let mut local_cpu = extra_cpu.clone();
+        let mut planned: Vec<(VmId, HostId)> = Vec::new();
+        for &(vm_id, start, end, _) in spans {
+            let vm = &cluster.vms[&vm_id];
+            let vctx = ctx.vm_context(vm_id).expect("gathered above");
+            let target = self.select_target(
+                cluster,
+                &vm.flavor,
+                vctx,
+                &cands[start..end],
+                &preds[start..end],
+                &local_mem,
+                &local_cpu,
+            );
+            let Some(target) = target else {
+                return; // SLA-unsafe: abandon this donor wholesale
+            };
+            *local_mem.entry(target).or_default() += vm.flavor.mem_gb;
+            *local_cpu.entry(target).or_default() += vm.flavor.vcpus;
+            planned.push((vm_id, target));
+        }
+        *cross_budget -= cross_needed;
+        *extra_mem = local_mem;
+        *extra_cpu = local_cpu;
+        for (vm, to) in planned {
+            actions.push(ControlAction::Migrate { vm, to });
+        }
     }
 
-    /// Gather one donor VM's viable targets from `hosts` into the
-    /// scoring arena — the ONE gather body shared by the in-shard
-    /// pass and the cross-shard fallback, so their candidate sets
-    /// cannot drift (same rationale as the shared
-    /// [`Consolidator::target_ok`] predicate).
-    #[allow(clippy::too_many_arguments)]
-    fn gather_targets(
-        &mut self,
-        cluster: &Cluster,
+    /// Gather + score every donor on the worker pool: one job per
+    /// donor, each worker owning a cloned predictor and its own
+    /// feature arena. Returns `None` (caller gathers inline) when the
+    /// pool is serial for this donor count or the predictor cannot be
+    /// cloned.
+    fn gather_donors_parallel(
+        &self,
+        ctx: &ScheduleContext<'_>,
         sustained: &[f64],
         ev: &Evacuation,
-        hosts: ShardHosts<'_>,
-        flavor: &Flavor,
-        vctx: &VmContext,
-    ) {
-        for host_id in hosts {
-            let host = &cluster.hosts[host_id.0];
-            if !self.target_ok(cluster, sustained, ev, host, flavor, vctx) {
-                continue;
-            }
-            self.cands.push(host.id);
-            self.feats
-                .push(build_features(&vctx.vector, vctx.remaining_solo, host));
+        predictor: &dyn EnergyPredictor,
+        pool: &ShardPool,
+    ) -> Option<Vec<DonorGather>> {
+        let n_workers = pool.plan_workers(ev.donors.len());
+        if n_workers <= 1 {
+            return None;
         }
-    }
-
-    /// The best remote shard (by digest headroom) to overflow into
-    /// when a donor VM has no in-shard target — the cross-shard pass
-    /// reads only the digests, never a remote shard's interior state.
-    fn best_remote_shard(ctx: &ScheduleContext<'_>, exclude: usize) -> Option<usize> {
-        let mut best: Option<(usize, f64)> = None;
-        for s in 0..ctx.shard_count() {
-            if s == exclude {
-                continue;
-            }
-            let score = ctx.shard_digest(s).headroom_score();
-            if score <= 0.0 {
-                continue;
-            }
-            if best.map(|(_, b)| score > b).unwrap_or(true) {
-                best = Some((s, score));
-            }
+        let mut states = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            states.push(ScanWorker {
+                predictor: predictor.try_clone()?,
+                feats: Vec::new(),
+            });
         }
-        best.map(|(s, _)| s)
+        let params = self.params;
+        let jobs: Vec<_> = ev
+            .donors
+            .iter()
+            .map(|&(shard, donor)| {
+                move |w: &mut ScanWorker| {
+                    let mut g = DonorGather::default();
+                    w.feats.clear();
+                    g.viable = gather_donor(
+                        &params,
+                        ctx,
+                        sustained,
+                        ev,
+                        shard,
+                        donor,
+                        &mut g.spans,
+                        &mut g.cands,
+                        &mut w.feats,
+                    );
+                    if g.viable && !g.spans.is_empty() {
+                        // ONE predictor call per donor, same matrix as
+                        // the serial pass.
+                        w.predictor.predict_into(&w.feats, &mut g.preds);
+                    }
+                    g
+                }
+            })
+            .collect();
+        let gathers = pool
+            .scatter_state(states, jobs)
+            .unwrap_or_else(|e| panic!("parallel consolidation scan poisoned: {e}"));
+        Some(gathers)
     }
 
     /// One scan pass, batched and shard-aware: for each donor (one
     /// per shard at most), score its full (donor VM × candidate
-    /// target) matrix with ONE predictor call, then run the
-    /// sequential selection with planned-load accounting. Targets
-    /// come from the donor's own shard, with a digest-driven,
-    /// budget-bounded fallback to the best remote shard. Without a
-    /// shard layer this emits the same actions as
+    /// target) matrix with ONE predictor call, then run the serial
+    /// selection with planned-load accounting in ascending shard
+    /// order. Targets come from the donor's own shard, with a
+    /// digest-driven, budget-bounded fallback to the best remote
+    /// shard. Donor gathers run on the context's worker pool when one
+    /// is attached — bit-identical to the inline pass because gather
+    /// reads only frozen scan state and the merge is shared. Without
+    /// a shard layer this emits the same actions as
     /// [`Consolidator::scan_sequential`]. Pure planning: no cluster
     /// mutation here.
     fn plan(
@@ -465,104 +695,63 @@ impl Consolidator {
         let Some(ref ev) = prelude.evacuation else {
             return actions;
         };
-        let cluster = ctx.cluster;
         // Planned-load accounting shared across donors: a target
         // filled by one shard's evacuation is seen by the next.
         let mut extra_mem: BTreeMap<HostId, f64> = BTreeMap::new();
         let mut extra_cpu: BTreeMap<HostId, f64> = BTreeMap::new();
         let mut cross_budget = self.params.cross_shard_budget;
-        'donors: for &(shard, donor) in &ev.donors {
-            // Gather phase (per-shard pass): one feature row per
-            // (donor VM, viable target) pair, every filter except the
-            // planned-load fit.
-            self.feats.clear();
-            self.cands.clear();
-            self.spans.clear();
-            let mut cross_planned = 0usize;
-            for &vm_id in &cluster.hosts[donor.0].vms {
-                let vm = &cluster.vms[&vm_id];
-                let Some(vctx) = ctx.vm_context(vm_id) else {
-                    continue 'donors; // missing context: be conservative
-                };
-                if vctx.remaining_solo < Self::copy_secs(&vm.flavor) {
-                    continue 'donors; // let it drain instead
+        let pooled = ctx.pool.and_then(|pool| {
+            self.gather_donors_parallel(ctx, &prelude.sustained, ev, &*predictor, pool)
+        });
+        match pooled {
+            Some(gathers) => {
+                for g in &gathers {
+                    self.merge_donor(
+                        ctx,
+                        &g.spans,
+                        &g.cands,
+                        &g.preds,
+                        g.viable,
+                        &mut cross_budget,
+                        &mut extra_mem,
+                        &mut extra_cpu,
+                        &mut actions,
+                    );
                 }
-                let start = self.cands.len();
-                self.gather_targets(
-                    cluster,
-                    &prelude.sustained,
-                    ev,
-                    ctx.shard(shard).hosts(),
-                    &vm.flavor,
-                    vctx,
-                );
-                if self.cands.len() == start {
-                    // No in-shard target: bounded cross-shard fallback
-                    // into the single best remote shard by digest
-                    // headroom.
-                    if cross_planned >= cross_budget {
-                        continue 'donors;
-                    }
-                    let Some(remote) = Self::best_remote_shard(ctx, shard) else {
-                        continue 'donors; // cannot fully evacuate
-                    };
-                    self.gather_targets(
-                        cluster,
+            }
+            None => {
+                for &(shard, donor) in &ev.donors {
+                    self.feats.clear();
+                    self.cands.clear();
+                    self.spans.clear();
+                    self.preds.clear();
+                    let viable = gather_donor(
+                        &self.params,
+                        ctx,
                         &prelude.sustained,
                         ev,
-                        ctx.shard(remote).hosts(),
-                        &vm.flavor,
-                        vctx,
+                        shard,
+                        donor,
+                        &mut self.spans,
+                        &mut self.cands,
+                        &mut self.feats,
                     );
-                    if self.cands.len() == start {
-                        continue 'donors; // cannot fully evacuate: give up this donor
+                    if viable && !self.spans.is_empty() {
+                        // Scoring phase: ONE predictor call per donor.
+                        predictor.predict_into(&self.feats, &mut self.preds);
                     }
-                    cross_planned += 1;
+                    self.merge_donor(
+                        ctx,
+                        &self.spans,
+                        &self.cands,
+                        &self.preds,
+                        viable,
+                        &mut cross_budget,
+                        &mut extra_mem,
+                        &mut extra_cpu,
+                        &mut actions,
+                    );
                 }
-                self.spans.push((vm_id, start, self.cands.len()));
-            }
-            if self.spans.is_empty() {
-                continue;
-            }
-
-            // Scoring phase: ONE predictor call per donor shard.
-            predictor.predict_into(&self.feats, &mut self.preds);
-
-            // Selection phase: plan a target for every VM on the donor
-            // in order, tracking the load earlier selections planned
-            // onto each target; abandon the donor wholesale if any VM
-            // has no SLA-safe target (partial evacuation strands the
-            // host at even lower utilization). Local copies commit to
-            // the cross-donor accounting only on success.
-            let mut local_mem = extra_mem.clone();
-            let mut local_cpu = extra_cpu.clone();
-            let mut planned: Vec<(VmId, HostId)> = Vec::new();
-            for &(vm_id, start, end) in &self.spans {
-                let vm = &cluster.vms[&vm_id];
-                let vctx = ctx.vm_context(vm_id).expect("gathered above");
-                let target = self.select_target(
-                    cluster,
-                    &vm.flavor,
-                    vctx,
-                    &self.cands[start..end],
-                    &self.preds[start..end],
-                    &local_mem,
-                    &local_cpu,
-                );
-                match target {
-                    Some(target) => {
-                        *local_mem.entry(target).or_default() += vm.flavor.mem_gb;
-                        *local_cpu.entry(target).or_default() += vm.flavor.vcpus;
-                        planned.push((vm_id, target));
-                    }
-                    None => continue 'donors, // SLA-unsafe: skip this donor
-                }
-            }
-            cross_budget -= cross_planned.min(cross_budget);
-            extra_mem = local_mem;
-            extra_cpu = local_cpu;
-            for (vm, to) in planned {
-                actions.push(ControlAction::Migrate { vm, to });
             }
         }
         actions
@@ -599,13 +788,14 @@ impl Consolidator {
                 Some(c) => c,
                 None => return actions,
             };
-            if vctx.remaining_solo < Self::copy_secs(&vm.flavor) {
+            if vctx.remaining_solo < copy_secs(&vm.flavor) {
                 return actions;
             }
             let mut cands: Vec<HostId> = Vec::new();
             let mut feats = Vec::new();
             for host in &cluster.hosts {
-                if !self.target_ok(cluster, &prelude.sustained, ev, host, &vm.flavor, vctx) {
+                if !target_ok(&self.params, cluster, &prelude.sustained, ev, host, &vm.flavor, vctx)
+                {
                     continue;
                 }
                 cands.push(host.id);

@@ -11,6 +11,7 @@
 
 use crate::cluster::{Cluster, HostId, ShardDigest, ShardedCluster, VmId};
 use crate::profile::HistoryStore;
+use crate::runtime::ShardPool;
 use crate::sched::consolidation::VmContext;
 use crate::sim::telemetry::HostSample;
 use crate::sim::Telemetry;
@@ -38,6 +39,13 @@ pub struct ScheduleContext<'a> {
     /// out across shards and control loops scan shard by shard when
     /// this is present.
     pub shards: Option<&'a ShardedCluster>,
+    /// Shard worker pool: when present (and wider than one worker),
+    /// per-shard work — placement sweeps, control-loop scan passes —
+    /// runs on the pool's workers instead of inline. Absent (or at
+    /// width 1) every consumer takes its serial path, which is the
+    /// behavioral oracle the parallel paths are property-tested
+    /// against.
+    pub pool: Option<&'a ShardPool>,
 }
 
 impl<'a> ScheduleContext<'a> {
@@ -49,6 +57,7 @@ impl<'a> ScheduleContext<'a> {
             history: None,
             vm_ctx: None,
             shards: None,
+            pool: None,
         }
     }
 
@@ -78,6 +87,38 @@ impl<'a> ScheduleContext<'a> {
         );
         self.shards = Some(shards);
         self
+    }
+
+    /// Attach a shard worker pool. Per-shard work then fans out
+    /// across the pool's workers; results merge deterministically
+    /// (see [`ShardPool`]'s determinism contract), so attaching a
+    /// pool never changes decisions — only latency.
+    pub fn with_pool(mut self, pool: &'a ShardPool) -> ScheduleContext<'a> {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Run a read-only computation for every shard, on the worker
+    /// pool when one is attached (and wider than one worker), inline
+    /// otherwise. Results come back in ascending shard order either
+    /// way — the merge rule control loops rely on — and a panicking
+    /// worker poisons the whole pass with a clear error instead of
+    /// deadlocking (see [`crate::runtime::PoolError`]).
+    pub fn for_each_shard<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let n = self.shard_count();
+        match self.pool {
+            Some(pool) if pool.plan_workers(n) > 1 => {
+                let f = &f;
+                let jobs: Vec<_> = (0..n).map(|s| move || f(s)).collect();
+                pool.scatter(jobs)
+                    .unwrap_or_else(|e| panic!("per-shard fan-out poisoned: {e}"))
+            }
+            _ => (0..n).map(f).collect(),
+        }
     }
 
     /// Number of shards this context is split into (1 when no shard
@@ -250,6 +291,21 @@ mod tests {
             assert_eq!(d.on, fresh.on);
             assert_eq!(d.hosts, fresh.hosts);
         }
+    }
+
+    #[test]
+    fn for_each_shard_orders_results_with_and_without_pool() {
+        use crate::cluster::ShardedCluster;
+        use crate::runtime::ShardPool;
+        let sc = ShardedCluster::new(Cluster::homogeneous(8), 4);
+        let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        let serial = ctx.for_each_shard(|s| (s, ctx.shard(s).digest().hosts));
+        let pool = ShardPool::new(3);
+        let pctx = ScheduleContext::new(0.0, &sc).with_shards(&sc).with_pool(&pool);
+        let pooled = pctx.for_each_shard(|s| (s, pctx.shard(s).digest().hosts));
+        assert_eq!(serial, pooled);
+        let order: Vec<usize> = serial.iter().map(|x| x.0).collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "ascending shard order");
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //! Runs as a [`ControlLoop`] on the coordinator's scan cadence; it
 //! needs no predictor, so it ignores the scoring handle. The scan is
 //! a per-shard pass (per-host decisions shard trivially): each shard's
-//! hosts are walked through the context's shard lens, so a sharded
-//! deployment can hand shards to separate workers without changing
-//! the governor. Without a shard layer the single implicit shard
-//! reproduces the flat host sweep exactly.
+//! hosts are walked through the context's shard lens, and when the
+//! context carries a worker pool the shard passes run on its workers
+//! ([`ScheduleContext::for_each_shard`]) with per-shard action
+//! buffers merged in ascending shard order — identical output to the
+//! inline walk at any worker count. Without a shard layer the single
+//! implicit shard reproduces the flat host sweep exactly.
 
 use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
 use crate::sched::ScheduleContext;
@@ -59,66 +61,81 @@ impl ControlLoop for DvfsGovernor {
         ctx: &ScheduleContext<'_>,
         _scoring: Option<ScoringHandle<'_>>,
     ) -> Vec<ControlAction> {
-        let cluster = ctx.cluster;
-        let mut out = Vec::new();
-        for shard in 0..ctx.shard_count() {
-            for host_id in ctx.shard(shard).hosts() {
-                let host = &cluster.hosts[host_id.0];
-                if !host.state.is_on() {
-                    continue;
-                }
-                let last = ctx.host_window(host.id, self.params.window_samples);
-                if last.is_empty() {
-                    continue;
-                }
-                let n = last.len() as f64;
-                let cpu = last.iter().map(|s| s.util.cpu).sum::<f64>() / n;
-                let io = last.iter().map(|s| s.util.io()).sum::<f64>() / n;
-                // Account for the fact that utilization is measured
-                // against the *scaled* capacity: convert back to
-                // full-clock terms.
-                let cpu_full_clock = cpu * host.freq;
-                // Profiled mean CPU of resident jobs: a Spark tenant
-                // in a brief I/O phase must NOT get its host clocked
-                // down — that is exactly the §V-C failure mode (CPU
-                // jobs hurt by frequency scaling) the paper restricts
-                // DVFS to I/O-bound workloads to avoid.
-                let expected_cpu = cluster.expected_util(host.id).cpu;
-                // Restore fast on *instantaneous* pressure: a
-                // clocked-down host whose CPU phase returned contends
-                // until restored.
-                let inst_cpu = host.utilization().cpu;
-                if host.freq < 1.0
-                    && (inst_cpu > 0.7
-                        || cpu_full_clock > self.params.cpu_restore * host.freq
-                        || expected_cpu > self.params.cpu_low)
-                {
-                    out.push(ControlAction::SetFreq {
-                        host: host.id,
-                        freq: 1.0,
-                    });
-                } else if host.freq >= 1.0
-                    && cpu_full_clock < self.params.cpu_low
-                    && expected_cpu < self.params.cpu_low
-                    && io > self.params.io_high
-                {
-                    // I/O-dominated host: clock down. Choose the
-                    // p-state that keeps CPU below ~70 % at the lower
-                    // clock.
-                    let target = if cpu_full_clock.max(expected_cpu) < 0.15 {
-                        0.6
-                    } else {
-                        0.7
-                    };
-                    out.push(ControlAction::SetFreq {
-                        host: host.id,
-                        freq: target,
-                    });
-                }
-            }
-        }
-        out
+        let params = self.params;
+        // Per-shard passes on the pool (inline when serial); flatten
+        // in ascending shard order — the deterministic merge.
+        ctx.for_each_shard(|shard| scan_shard(&params, ctx, shard))
+            .into_iter()
+            .flatten()
+            .collect()
     }
+}
+
+/// One shard's governor pass. Reads only the frozen context — safe on
+/// a worker thread; per-host decisions are independent, so the pass
+/// produces the same actions whether run inline or pooled.
+fn scan_shard(
+    params: &DvfsParams,
+    ctx: &ScheduleContext<'_>,
+    shard: usize,
+) -> Vec<ControlAction> {
+    let cluster = ctx.cluster;
+    let mut out = Vec::new();
+    for host_id in ctx.shard(shard).hosts() {
+        let host = &cluster.hosts[host_id.0];
+        if !host.state.is_on() {
+            continue;
+        }
+        let last = ctx.host_window(host.id, params.window_samples);
+        if last.is_empty() {
+            continue;
+        }
+        let n = last.len() as f64;
+        let cpu = last.iter().map(|s| s.util.cpu).sum::<f64>() / n;
+        let io = last.iter().map(|s| s.util.io()).sum::<f64>() / n;
+        // Account for the fact that utilization is measured
+        // against the *scaled* capacity: convert back to
+        // full-clock terms.
+        let cpu_full_clock = cpu * host.freq;
+        // Profiled mean CPU of resident jobs: a Spark tenant
+        // in a brief I/O phase must NOT get its host clocked
+        // down — that is exactly the §V-C failure mode (CPU
+        // jobs hurt by frequency scaling) the paper restricts
+        // DVFS to I/O-bound workloads to avoid.
+        let expected_cpu = cluster.expected_util(host.id).cpu;
+        // Restore fast on *instantaneous* pressure: a
+        // clocked-down host whose CPU phase returned contends
+        // until restored.
+        let inst_cpu = host.utilization().cpu;
+        if host.freq < 1.0
+            && (inst_cpu > 0.7
+                || cpu_full_clock > params.cpu_restore * host.freq
+                || expected_cpu > params.cpu_low)
+        {
+            out.push(ControlAction::SetFreq {
+                host: host.id,
+                freq: 1.0,
+            });
+        } else if host.freq >= 1.0
+            && cpu_full_clock < params.cpu_low
+            && expected_cpu < params.cpu_low
+            && io > params.io_high
+        {
+            // I/O-dominated host: clock down. Choose the
+            // p-state that keeps CPU below ~70 % at the lower
+            // clock.
+            let target = if cpu_full_clock.max(expected_cpu) < 0.15 {
+                0.6
+            } else {
+                0.7
+            };
+            out.push(ControlAction::SetFreq {
+                host: host.id,
+                freq: target,
+            });
+        }
+    }
+    out
 }
 
 #[cfg(test)]

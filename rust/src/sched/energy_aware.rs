@@ -30,9 +30,21 @@
 //! at shard_count = 1 (or K = shard_count) the fan-out is
 //! action-identical to the unsharded path. Per-decision work is then
 //! bounded by the K largest shards instead of the whole fleet.
+//!
+//! Parallel fan-out: when the context additionally carries a
+//! [`ShardPool`] with more than one worker and the predictor can be
+//! cloned ([`EnergyPredictor::try_clone`]), the top-K shard sweeps
+//! run on the pool — each worker owns a cloned predictor and its own
+//! scoring arena (the policy's single in-struct arena is inherently
+//! serial), and per-shard winners are merged by the same
+//! `(energy, host id)` rule, which is a total order: merge order, and
+//! therefore worker count, cannot change any decision. The serial
+//! sweep stays the oracle path (`worker_threads = 1`), pinned by the
+//! equivalence property tests in `rust/tests/pool.rs`.
 
 use crate::cluster::{HostId, HostView, ShardedCluster};
 use crate::predict::{EnergyPredictor, Prediction};
+use crate::runtime::ShardPool;
 use crate::sched::policy::{powered_off, Decision, PlacementPolicy, PlacementRequest};
 use crate::sched::{ScheduleContext, ScoringHandle};
 
@@ -76,6 +88,104 @@ impl Default for EnergyAwareParams {
     }
 }
 
+/// Per-worker scoring state for the pooled shard fan-out: a cloned
+/// predictor plus this worker's own arena. Sized once per burst by
+/// [`ShardPool::plan_workers`]; buffers are refilled in place across
+/// the shard jobs the worker serves.
+struct ShardSweepWorker {
+    predictor: Box<dyn EnergyPredictor + Send>,
+    feats: Vec<[f32; crate::profile::FEAT_DIM]>,
+    cands: Vec<(HostId, f64)>,
+    spans: Vec<(usize, usize)>,
+    views: Vec<HostView>,
+    preds: Vec<Prediction>,
+}
+
+/// Append one request's SLA-safe candidates (and feature rows) from
+/// the pruned views to the given arena; returns the `[start, end)`
+/// span. The ONE gather body behind both the serial sweep (policy
+/// arena) and the pooled sweep (worker arenas), so the two candidate
+/// sets cannot drift.
+fn gather_candidates_into(
+    params: &EnergyAwareParams,
+    req: &PlacementRequest,
+    views: &[HostView],
+    cands: &mut Vec<(HostId, f64)>,
+    feats: &mut Vec<[f32; crate::profile::FEAT_DIM]>,
+) -> (usize, usize) {
+    let start = cands.len();
+    for v in views {
+        if !v.fits(&req.flavor) {
+            continue;
+        }
+        // Headroom filter on the dimensions the workload uses.
+        let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&req.vector, &v.util);
+        let hr = params.headroom;
+        if (req.vector.cpu > 0.1 && pc > hr)
+            || (req.vector.mem > 0.1 && pm > hr)
+            || (req.vector.disk > 0.1 && pd > hr)
+            || (req.vector.net > 0.1 && pn > hr)
+        {
+            continue;
+        }
+        cands.push((v.id, v.idle_share));
+        feats.push(crate::profile::features::build_features_from(
+            &req.vector,
+            req.remaining_solo,
+            &v.util,
+            v.n_vms,
+            v.freq,
+        ));
+    }
+    (start, cands.len())
+}
+
+/// Argmin of predicted energy-to-completion over one request's scored
+/// candidates, honoring the Eq. 7 guard. Candidates are visited
+/// ascending by host id and ties keep the first (lowest-id) host.
+fn argmin_energy_span(
+    params: &EnergyAwareParams,
+    req: &PlacementRequest,
+    cands: &[(HostId, f64)],
+    preds: &[Prediction],
+) -> Option<(HostId, f64)> {
+    let mut best: Option<(HostId, f64)> = None;
+    for (&(host, idle_share), p) in cands.iter().zip(preds) {
+        if p.slowdown > params.max_slowdown {
+            continue; // Eq. 7 predictive guard
+        }
+        // Eq. 6 minimizes *total* cluster energy, not marginal
+        // power: under the linear Eq. 5 model the marginal draw
+        // of a placement is nearly host-independent, and the real
+        // lever is the idle floor of hosts kept on. Charge each
+        // candidate an amortized share of its host's idle power —
+        // an empty host carries the full P_idle for this job's
+        // duration, a busy host's floor is already paid for.
+        let energy = (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown);
+        if best.map(|(_, e)| energy < e).unwrap_or(true) {
+            best = Some((host, energy));
+        }
+    }
+    best
+}
+
+/// Merge one shard's per-request winner into the running best by
+/// lexicographic `(energy, host id)` — a total order over candidates
+/// (host ids are unique), so neither shard iteration order nor the
+/// pool's merge order can change the outcome. Shared by the serial
+/// and pooled fan-outs.
+fn merge_winner(best: &mut Option<(HostId, f64)>, winner: Option<(HostId, f64)>) {
+    if let Some((host, energy)) = winner {
+        let better = match *best {
+            None => true,
+            Some((bh, be)) => energy < be || (energy == be && host < bh),
+        };
+        if better {
+            *best = Some((host, energy));
+        }
+    }
+}
+
 pub struct EnergyAware {
     pub predictor: Box<dyn EnergyPredictor>,
     pub params: EnergyAwareParams,
@@ -114,65 +224,86 @@ impl EnergyAware {
     /// cached effective utilization — per-request work no longer
     /// touches every host or recomputes expected load.
     fn gather_candidates(&mut self, req: &PlacementRequest, views: &[HostView]) -> (usize, usize) {
-        let start = self.cands.len();
-        for v in views {
-            if !v.fits(&req.flavor) {
-                continue;
-            }
-            // Headroom filter on the dimensions the workload uses.
-            let (pc, pm, pd, pn) = crate::predict::oracle::post_utilization(&req.vector, &v.util);
-            let hr = self.params.headroom;
-            if (req.vector.cpu > 0.1 && pc > hr)
-                || (req.vector.mem > 0.1 && pm > hr)
-                || (req.vector.disk > 0.1 && pd > hr)
-                || (req.vector.net > 0.1 && pn > hr)
-            {
-                continue;
-            }
-            self.cands.push((v.id, v.idle_share));
-            self.feats.push(crate::profile::features::build_features_from(
-                &req.vector,
-                req.remaining_solo,
-                &v.util,
-                v.n_vms,
-                v.freq,
-            ));
-        }
-        (start, self.cands.len())
+        gather_candidates_into(&self.params, req, views, &mut self.cands, &mut self.feats)
     }
 
     /// Argmin of predicted energy-to-completion over one request's
-    /// candidate span `[start, end)`, honoring the Eq. 7 guard.
-    /// Candidates are visited ascending by host id, and ties keep the
-    /// first (lowest-id) host — returning the energy alongside the
-    /// winner lets the sharded fan-out merge per-shard argmins into
-    /// exactly this global argmin.
+    /// candidate span `[start, end)` of the policy arena — returning
+    /// the energy alongside the winner lets the sharded fan-out merge
+    /// per-shard argmins into exactly this global argmin.
     fn argmin_energy(
         &self,
         req: &PlacementRequest,
         start: usize,
         end: usize,
     ) -> Option<(HostId, f64)> {
-        let mut best: Option<(HostId, f64)> = None;
-        let cands = &self.cands[start..end];
-        let preds = &self.preds[start..end];
-        for (&(host, idle_share), p) in cands.iter().zip(preds) {
-            if p.slowdown > self.params.max_slowdown {
-                continue; // Eq. 7 predictive guard
-            }
-            // Eq. 6 minimizes *total* cluster energy, not marginal
-            // power: under the linear Eq. 5 model the marginal draw
-            // of a placement is nearly host-independent, and the real
-            // lever is the idle floor of hosts kept on. Charge each
-            // candidate an amortized share of its host's idle power —
-            // an empty host carries the full P_idle for this job's
-            // duration, a busy host's floor is already paid for.
-            let energy = (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown);
-            if best.map(|(_, e)| energy < e).unwrap_or(true) {
-                best = Some((host, energy));
-            }
+        argmin_energy_span(&self.params, req, &self.cands[start..end], &self.preds[start..end])
+    }
+
+    /// Fan the selected shard sweeps out to the worker pool: each
+    /// worker owns a cloned predictor and its own arena, runs the
+    /// same gather → predict → argmin body as the serial sweep, and
+    /// returns one `(host, energy)` winner per request. Returns
+    /// `None` (caller runs the serial sweep) when the pool is serial
+    /// or the predictor cannot be cloned.
+    fn sweep_shards_parallel(
+        &self,
+        reqs: &[PlacementRequest],
+        sh: &ShardedCluster,
+        shards: &[usize],
+        pool: &ShardPool,
+    ) -> Option<Vec<Vec<Option<(HostId, f64)>>>> {
+        let n_workers = pool.plan_workers(shards.len());
+        if n_workers <= 1 {
+            return None;
         }
-        best
+        let mut states = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            states.push(ShardSweepWorker {
+                predictor: self.predictor.try_clone()?,
+                feats: Vec::new(),
+                cands: Vec::new(),
+                spans: Vec::new(),
+                views: Vec::new(),
+                preds: Vec::new(),
+            });
+        }
+        let params = self.params;
+        let jobs: Vec<_> = shards
+            .iter()
+            .map(|&s| {
+                move |w: &mut ShardSweepWorker| {
+                    sh.shard_scoring_views(s, params.delta_high, &mut w.views);
+                    w.feats.clear();
+                    w.cands.clear();
+                    w.spans.clear();
+                    for req in reqs {
+                        let span = gather_candidates_into(
+                            &params,
+                            req,
+                            &w.views,
+                            &mut w.cands,
+                            &mut w.feats,
+                        );
+                        w.spans.push(span);
+                    }
+                    w.preds.clear();
+                    if !w.feats.is_empty() {
+                        w.predictor.predict_into(&w.feats, &mut w.preds);
+                    }
+                    reqs.iter()
+                        .zip(&w.spans)
+                        .map(|(req, &(a, b))| {
+                            argmin_energy_span(&params, req, &w.cands[a..b], &w.preds[a..b])
+                        })
+                        .collect::<Vec<_>>()
+                }
+            })
+            .collect();
+        let winners = pool
+            .scatter_state(states, jobs)
+            .unwrap_or_else(|e| panic!("parallel decide_batch fan-out poisoned: {e}"));
+        Some(winners)
     }
 
     /// Sharded fan-out: route the burst to the top-K shards by digest
@@ -180,7 +311,10 @@ impl EnergyAware {
     /// `predict_into` each), merge winners globally by
     /// `(energy, host id)`. At K = shard_count the candidate set is
     /// the whole fleet and the result is action-identical to the flat
-    /// sweep — the shard_count = 1 property test pins this down.
+    /// sweep — the shard_count = 1 property test pins this down. With
+    /// a worker pool on the context the K sweeps run in parallel,
+    /// bit-identical to this serial loop at any worker count (the
+    /// merge rule is a total order).
     fn decide_batch_sharded(
         &mut self,
         reqs: &[PlacementRequest],
@@ -199,32 +333,33 @@ impl EnergyAware {
                 .then(a.cmp(&b))
         });
         let mut best: Vec<Option<(HostId, f64)>> = vec![None; reqs.len()];
-        for &s in &order[..k] {
-            self.feats.clear();
-            self.cands.clear();
-            self.spans.clear();
-            sh.shard_scoring_views(s, self.params.delta_high, &mut self.views);
-            let views = std::mem::take(&mut self.views);
-            for req in reqs {
-                let span = self.gather_candidates(req, &views);
-                self.spans.push(span);
+        let pooled = ctx
+            .pool
+            .and_then(|pool| self.sweep_shards_parallel(reqs, sh, &order[..k], pool));
+        if let Some(per_shard) = pooled {
+            for shard_winners in per_shard {
+                for (b, w) in best.iter_mut().zip(shard_winners) {
+                    merge_winner(b, w);
+                }
             }
-            self.views = views;
-            self.preds.clear();
-            if !self.feats.is_empty() {
-                self.predictor.predict_into(&self.feats, &mut self.preds);
-            }
-            for (i, (req, &(start, end))) in reqs.iter().zip(&self.spans).enumerate() {
-                if let Some((host, energy)) = self.argmin_energy(req, start, end) {
-                    let better = match best[i] {
-                        None => true,
-                        // Lexicographic (energy, host id): shard
-                        // iteration order cannot change the winner.
-                        Some((bh, be)) => energy < be || (energy == be && host < bh),
-                    };
-                    if better {
-                        best[i] = Some((host, energy));
-                    }
+        } else {
+            for &s in &order[..k] {
+                self.feats.clear();
+                self.cands.clear();
+                self.spans.clear();
+                sh.shard_scoring_views(s, self.params.delta_high, &mut self.views);
+                let views = std::mem::take(&mut self.views);
+                for req in reqs {
+                    let span = self.gather_candidates(req, &views);
+                    self.spans.push(span);
+                }
+                self.views = views;
+                self.preds.clear();
+                if !self.feats.is_empty() {
+                    self.predictor.predict_into(&self.feats, &mut self.preds);
+                }
+                for (i, (req, &(start, end))) in reqs.iter().zip(&self.spans).enumerate() {
+                    merge_winner(&mut best[i], self.argmin_energy(req, start, end));
                 }
             }
         }

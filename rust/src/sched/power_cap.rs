@@ -28,8 +28,13 @@
 //! them and costly for CPU-bound tenants (§V-C). Restoration runs the
 //! same list backwards — the most CPU-pressed capped host gets its
 //! clock back first. Scans walk hosts shard by shard through the
-//! context lens, so a sharded deployment caps without reading shard
-//! interiors beyond its own pass.
+//! context lens — on the worker pool when the context carries one,
+//! with per-shard candidate buffers merged in ascending shard order —
+//! so a sharded deployment caps without reading shard interiors
+//! beyond its own pass. The budget walk itself is inherently global
+//! (each step updates the fleet estimate) and stays serial; the
+//! candidate sort's `(utilization, host id)` key is a total order, so
+//! pooled and inline scans emit identical actions.
 //!
 //! The loop runs after consolidation and DVFS on the coordinator's
 //! scan cadence (each loop's actions actuate before the next scans),
@@ -163,19 +168,27 @@ impl ControlLoop for PowerCapLoop {
             // effective CPU utilization first (I/O-bound tenants lose
             // the least), one p-state per host per scan, until the
             // estimate is back under the cap or the step bound hits.
-            let mut cands: Vec<(f64, HostId)> = Vec::new();
-            for shard in 0..ctx.shard_count() {
-                for host_id in ctx.shard(shard).hosts() {
-                    let host = &cluster.hosts[host_id.0];
-                    if !host.state.is_on() {
-                        continue;
+            // Candidate collection is the per-shard pass (pooled when
+            // a worker pool is attached); the sort key is a total
+            // order, so collection order cannot change the plan.
+            let mut cands: Vec<(f64, HostId)> = ctx
+                .for_each_shard(|shard| {
+                    let mut c: Vec<(f64, HostId)> = Vec::new();
+                    for host_id in ctx.shard(shard).hosts() {
+                        let host = &cluster.hosts[host_id.0];
+                        if !host.state.is_on() {
+                            continue;
+                        }
+                        if next_pstate_down(eff(host, &target)).is_none() {
+                            continue;
+                        }
+                        c.push((cluster.effective_util(host_id).cpu, host_id));
                     }
-                    if next_pstate_down(eff(host, &target)).is_none() {
-                        continue;
-                    }
-                    cands.push((cluster.effective_util(host_id).cpu, host_id));
-                }
-            }
+                    c
+                })
+                .into_iter()
+                .flatten()
+                .collect();
             cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
             for (_, host_id) in cands {
                 if est <= budget || steps >= self.params.max_actions {
@@ -201,15 +214,21 @@ impl ControlLoop for PowerCapLoop {
             // planning past the budget. Hosts the DVFS governor
             // clocked down for efficiency carry no ceiling and are
             // left alone.
-            let mut cands: Vec<(f64, HostId)> = Vec::new();
-            for shard in 0..ctx.shard_count() {
-                for host_id in ctx.shard(shard).hosts() {
-                    if !self.ceilings.contains_key(&host_id) {
-                        continue;
+            let ceilings = &self.ceilings;
+            let mut cands: Vec<(f64, HostId)> = ctx
+                .for_each_shard(|shard| {
+                    let mut c: Vec<(f64, HostId)> = Vec::new();
+                    for host_id in ctx.shard(shard).hosts() {
+                        if !ceilings.contains_key(&host_id) {
+                            continue;
+                        }
+                        c.push((cluster.effective_util(host_id).cpu, host_id));
                     }
-                    cands.push((cluster.effective_util(host_id).cpu, host_id));
-                }
-            }
+                    c
+                })
+                .into_iter()
+                .flatten()
+                .collect();
             cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
             for (_, host_id) in cands {
                 if steps >= self.params.max_actions {
