@@ -1,0 +1,196 @@
+//! Bench: per-fan-out dispatch overhead — the spawn-per-call
+//! `ShardPool` (PR 4, rebuilds worker states and respawns scoped
+//! threads every call) vs the persistent `WorkerPool` (PR 5,
+//! long-lived threads + epoch-cached worker state), plus the inline
+//! serial path the small-burst fast path falls back to.
+//!
+//! The measured job is a fixed 8-shard scoring fan-out shaped like a
+//! `decide_batch` sweep: each shard job scores `burst × 8` feature
+//! rows through a NativeMlp. The per-job row count is kept small on
+//! purpose — this bench isolates *dispatch overhead*, so compute must
+//! not drown the spawn/rebuild delta even at the largest burst
+//! (`bench_scale` covers compute-bound scaling). Burst sizes
+//! {1, 8, 64, 512} × worker counts {1, 4, 8}:
+//!
+//! * `pool/spawn/...`      — ShardPool::scatter_state, building every
+//!   worker's state (predictor clone + arenas) per call: the per-call
+//!   overhead PR 5 removes.
+//! * `pool/persistent/...` — WorkerPool::dispatch against slot-cached
+//!   state (clone + arenas built once, first call only).
+//! * `pool/inline/...`     — the serial sweep, one predictor, no
+//!   dispatch: what `EnergyAwareParams::inline_burst_rows` selects
+//!   for small bursts.
+//!
+//! Acceptance (asserted below): the persistent pool beats
+//! spawn-per-call at EVERY burst size for workers > 1, and at burst
+//! size 1 the inline path beats dispatch — the measurement the
+//! `inline_burst_rows` default is derived from. Results go to
+//! `BENCH_pool.json` for CI's bench gate (`benches/compare.py`).
+
+use ecosched::predict::{EnergyPredictor, MlpWeights, NativeMlp, Prediction};
+use ecosched::profile::FEAT_DIM;
+use ecosched::runtime::{ShardPool, WorkerPool, WorkerSlot};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
+
+/// Shard jobs per fan-out (a top-K = 8 sweep).
+const SHARDS: usize = 8;
+/// Feature rows per request per shard job (small: see module docs).
+const ROWS_PER_REQ: usize = 8;
+
+/// Deterministic feature rows for one shard job.
+fn shard_feats(shard: usize, burst: usize) -> Vec<[f32; FEAT_DIM]> {
+    (0..burst * ROWS_PER_REQ)
+        .map(|i| {
+            let mut f = [0f32; FEAT_DIM];
+            for (j, v) in f.iter_mut().enumerate() {
+                *v = ((shard * 31 + i * 7 + j) % 97) as f32 / 97.0;
+            }
+            f
+        })
+        .collect()
+}
+
+/// Per-worker state for the spawn-per-call variant — rebuilt every
+/// fan-out, exactly like PR 4's sweep workers.
+struct SpawnWorker {
+    predictor: Box<dyn EnergyPredictor + Send>,
+    preds: Vec<Prediction>,
+}
+
+/// Per-worker state the persistent variant caches in its slot.
+struct CachedWorker {
+    predictor: Box<dyn EnergyPredictor + Send>,
+    preds: Vec<Prediction>,
+}
+
+fn checksum(preds: &[Prediction]) -> f64 {
+    preds.iter().map(|p| p.power_w + p.slowdown).sum()
+}
+
+fn main() {
+    bench_header("pool");
+    let mut report = JsonReport::new("pool");
+    // Enough samples for a stable minimum — the acceptance asserts
+    // below compare min-of-samples, the robust estimator for a
+    // mandatory-overhead comparison (runner noise only ever ADDS
+    // time, and both variants run the identical scoring work, so the
+    // minima isolate the dispatch/rebuild overhead delta).
+    let samples = if short_mode() { 9 } else { 21 };
+    let mlp = NativeMlp::new(MlpWeights::init(42));
+
+    for &burst in &[1usize, 8, 64, 512] {
+        let feats: Vec<Vec<[f32; FEAT_DIM]>> =
+            (0..SHARDS).map(|s| shard_feats(s, burst)).collect();
+
+        // Inline serial reference: one predictor, no dispatch — the
+        // small-burst fast path.
+        let mut inline_mlp = mlp.clone();
+        let mut inline_preds: Vec<Prediction> = Vec::new();
+        let r_inline = Bench::new(&format!("pool/inline/burst={burst}"))
+            .samples(samples)
+            .run(|| {
+                let mut acc = 0.0;
+                for f in &feats {
+                    inline_mlp.predict_into(f, &mut inline_preds);
+                    acc += checksum(&inline_preds);
+                }
+                std::hint::black_box(acc);
+            });
+        r_inline.print();
+        report.record_with(&r_inline, &[("burst", burst as f64), ("workers", 1.0)]);
+
+        for &workers in &[1usize, 4, 8] {
+            // Spawn-per-call: per fan-out, build min(workers, jobs)
+            // worker states (predictor clone + fresh arena) and run a
+            // scoped-thread scatter.
+            let spawn_pool = ShardPool::new(workers);
+            let r_spawn = Bench::new(&format!("pool/spawn/burst={burst}/workers={workers}"))
+                .samples(samples)
+                .run(|| {
+                    let n = spawn_pool.plan_workers(SHARDS);
+                    let states: Vec<SpawnWorker> = (0..n)
+                        .map(|_| SpawnWorker {
+                            predictor: mlp.try_clone().expect("native mlp clones"),
+                            preds: Vec::new(),
+                        })
+                        .collect();
+                    let jobs: Vec<_> = feats
+                        .iter()
+                        .map(|f| {
+                            move |w: &mut SpawnWorker| {
+                                w.predictor.predict_into(f, &mut w.preds);
+                                checksum(&w.preds)
+                            }
+                        })
+                        .collect();
+                    let out = spawn_pool.scatter_state(states, jobs).expect("scatter");
+                    std::hint::black_box(out.iter().sum::<f64>());
+                });
+            r_spawn.print();
+            report.record_with(&r_spawn, &[("burst", burst as f64), ("workers", workers as f64)]);
+
+            // Persistent: long-lived threads, slot-cached clone +
+            // arena (built on each worker's first-ever job only).
+            let persist_pool = WorkerPool::new(workers);
+            let r_persist =
+                Bench::new(&format!("pool/persistent/burst={burst}/workers={workers}"))
+                    .samples(samples)
+                    .run(|| {
+                        let jobs: Vec<_> = feats
+                            .iter()
+                            .enumerate()
+                            .map(|(s, f)| {
+                                let mlp = &mlp;
+                                (s, move |slot: &mut WorkerSlot| {
+                                    let w = slot.state_or_insert_with(|| CachedWorker {
+                                        predictor: mlp
+                                            .try_clone()
+                                            .expect("native mlp clones"),
+                                        preds: Vec::new(),
+                                    });
+                                    w.predictor.predict_into(f, &mut w.preds);
+                                    checksum(&w.preds)
+                                })
+                            })
+                            .collect();
+                        let out = persist_pool.dispatch(jobs).expect("dispatch");
+                        std::hint::black_box(out.iter().sum::<f64>());
+                    });
+            r_persist.print();
+            report.record_with(
+                &r_persist,
+                &[("burst", burst as f64), ("workers", workers as f64)],
+            );
+
+            // Acceptance: removing the per-call rebuild + spawn must
+            // actually pay at every burst size once the pool is
+            // parallel. Min-of-samples, not mean/p50 — noise on a
+            // shared CI runner is one-sided, and both variants run
+            // identical scoring work, so the minima expose the
+            // structural overhead difference without flaking.
+            if workers > 1 {
+                assert!(
+                    r_persist.per_iter.min < r_spawn.per_iter.min,
+                    "persistent pool slower than spawn-per-call at burst {burst}, \
+                     workers {workers}: {:.2e}s vs {:.2e}s",
+                    r_persist.per_iter.min,
+                    r_spawn.per_iter.min
+                );
+            }
+            // Acceptance: at burst 1 the inline path must beat
+            // dispatch — the measurement behind the
+            // `inline_burst_rows` small-burst fast path.
+            if burst == 1 && workers > 1 {
+                assert!(
+                    r_inline.per_iter.min < r_persist.per_iter.min,
+                    "inline path slower than dispatch at burst 1, workers {workers}: \
+                     {:.2e}s vs {:.2e}s",
+                    r_inline.per_iter.min,
+                    r_persist.per_iter.min
+                );
+            }
+        }
+    }
+
+    report.write().expect("write BENCH_pool.json");
+}

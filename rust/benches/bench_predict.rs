@@ -83,16 +83,14 @@ fn main() {
     report.record_with(&r, &[("batch", 256.0)]);
 
     let tree = DecisionTree::fit(&ds.xs, &ds.ys, TreeParams::default());
-    let mut tp = TreePredictor { tree };
+    let mut tp = TreePredictor::new(tree);
     let r = Bench::new("dtree/batch-256").samples(samples).run(|| {
         std::hint::black_box(tp.predict(&feats));
     });
     r.print_throughput("scores", 256.0);
     report.record_with(&r, &[("batch", 256.0)]);
 
-    let mut lp = LinearPredictor {
-        model: LinearModel::fit(&ds.xs, &ds.ys, 1e-4),
-    };
+    let mut lp = LinearPredictor::new(LinearModel::fit(&ds.xs, &ds.ys, 1e-4));
     let r = Bench::new("linear/batch-256").samples(samples).run(|| {
         std::hint::black_box(lp.predict(&feats));
     });

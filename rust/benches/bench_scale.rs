@@ -24,7 +24,7 @@ use ecosched::coordinator::make_policy;
 use ecosched::exp::common::run_campaign;
 use ecosched::predict::{oracle_eval, EnergyPredictor, Prediction};
 use ecosched::profile::{ResourceVector, FEAT_DIM};
-use ecosched::runtime::ShardPool;
+use ecosched::runtime::WorkerPool;
 use ecosched::sched::{
     EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, ScheduleContext,
 };
@@ -119,7 +119,9 @@ fn main() {
             let sc = ShardedCluster::new(base.clone(), shards);
             let mut rows_at_one_worker = 0.0f64;
             for &workers in &[1usize, 4, 8] {
-                let pool = ShardPool::new(workers);
+                // Persistent pool: spawned once per config, reused by
+                // every iteration — the production shape.
+                let pool = WorkerPool::new(workers);
                 let rows = Arc::new(AtomicU64::new(0));
                 let mut policy = EnergyAware::new(
                     Box::new(CountingOracle {

@@ -25,6 +25,7 @@ Refreshing baselines (run on the reference machine — CI's runner class
     BENCH_SHORT=1 cargo bench --bench bench_consolidation
     BENCH_SHORT=1 cargo bench --bench bench_placement_path
     BENCH_SHORT=1 cargo bench --bench bench_scale
+    BENCH_SHORT=1 cargo bench --bench bench_pool
     python3 benches/compare.py --update
     git add benches/baseline && git commit
 
@@ -36,7 +37,7 @@ import os
 import shutil
 import sys
 
-GROUPS = ["predict", "consolidation", "placement_path", "scale"]
+GROUPS = ["predict", "consolidation", "placement_path", "scale", "pool"]
 WALL_TOLERANCE = 1.25  # fail when mean_s exceeds baseline by >25 %
 ROWS_EPS = 1e-6  # float slack on the exact rows/decision comparison
 

@@ -23,13 +23,17 @@
 //! [`CampaignState`]. `shard_count = 1` (the default) reproduces the
 //! unsharded scheduler bit for bit.
 //!
-//! Per-shard work runs on a [`crate::runtime::ShardPool`] owned by
-//! the campaign state (`CampaignConfig::worker_threads`, default 1 =
-//! serial): placement sweeps and scan passes fan out to the workers
-//! and merge deterministically, and shard digests flow back to the
-//! coordinator over the pool's result channel at report time. The
-//! coordinator thread remains the only writer of cluster state —
-//! workers see `&` shard interiors plus their own scoring arenas.
+//! Per-shard work runs on a persistent [`crate::runtime::WorkerPool`]
+//! owned by the campaign state (`CampaignConfig::worker_threads`,
+//! default 1 = serial): worker threads spawn once per campaign,
+//! placement sweeps and scan passes dispatch to their stable affinity
+//! workers and merge deterministically, and shard digests flow back
+//! to the coordinator over the pool's result channel at report time.
+//! The coordinator thread remains the only writer of cluster state —
+//! and the only epoch-bumper: workers see `&` shard interiors plus
+//! their own cached scoring state (predictor clone + arenas,
+//! invalidated by [`crate::predict::EnergyPredictor::weight_epoch`]
+//! when retraining swaps weights).
 
 use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState};
 use crate::coordinator::report::CampaignReport;
@@ -55,11 +59,12 @@ pub struct CampaignConfig {
     /// bound per-decision work by the top-K shards.
     pub shard_count: usize,
     /// Shard worker threads. 1 (the default) is the serial path —
-    /// the behavioral oracle; larger widths fan per-shard placement
-    /// sweeps and control-loop scan passes out across a
-    /// [`crate::runtime::ShardPool`], bit-identical to serial at any
-    /// width. The default honors `PALLAS_WORKER_THREADS` so CI's
-    /// worker-count matrix exercises the whole suite at both 1 and 8.
+    /// the behavioral oracle; larger widths dispatch per-shard
+    /// placement sweeps and control-loop scan passes to a persistent
+    /// [`crate::runtime::WorkerPool`] (spawned once per campaign),
+    /// bit-identical to serial at any width. The default honors
+    /// `PALLAS_WORKER_THREADS` so CI's worker-count matrix exercises
+    /// the whole suite at both 1 and 8.
     pub worker_threads: usize,
     pub seed: u64,
     pub sla: SlaSpec,

@@ -6,7 +6,7 @@ use crate::cluster::{Cluster, HostId, ShardedCluster, VmId};
 use crate::coordinator::leader::{remaining_solo, CampaignConfig};
 use crate::coordinator::report::{CampaignReport, JobRecord, Overhead, ShardCounters};
 use crate::profile::ResourceVector;
-use crate::runtime::ShardPool;
+use crate::runtime::WorkerPool;
 use crate::sched::VmContext;
 use crate::sim::{EnergyMeter, Telemetry};
 use crate::sla::SlaTracker;
@@ -35,10 +35,13 @@ pub struct CampaignState {
     /// Per-shard actuation counters (placements, boots, migrations,
     /// power-offs), indexed by shard.
     pub shard_counters: Vec<ShardCounters>,
-    /// Shard worker pool (`CampaignConfig::worker_threads` wide) the
-    /// leader attaches to every context it freezes; width 1 is the
-    /// serial oracle path.
-    pub pool: ShardPool,
+    /// Persistent shard worker pool (`CampaignConfig::worker_threads`
+    /// wide): threads spawn once here, serve every fan-out of the
+    /// campaign through the contexts the leader freezes, and join
+    /// when this state drops. Width 1 spawns nothing — the serial
+    /// oracle path. Worker-cached predictor clones invalidate by
+    /// weight epoch, so the pool never needs telling about retrains.
+    pub pool: WorkerPool,
     pub meter: EnergyMeter,
     pub telemetry: Telemetry,
     pub sla: SlaTracker,
@@ -77,7 +80,7 @@ impl CampaignState {
         CampaignState {
             cluster: ShardedCluster::new(Cluster::homogeneous(cfg.n_hosts), shard_count),
             shard_counters: vec![ShardCounters::default(); shard_count],
-            pool: ShardPool::new(cfg.worker_threads),
+            pool: WorkerPool::new(cfg.worker_threads),
             meter: EnergyMeter::new(cfg.n_hosts, cfg.seed, cfg.meter_noise),
             telemetry: Telemetry::new(cfg.n_hosts, cfg.seed, cfg.telemetry_noise),
             sla: SlaTracker::new(cfg.sla),

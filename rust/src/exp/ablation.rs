@@ -113,16 +113,12 @@ pub fn run_abl2(ctx: &ExpContext) -> TableBuilder {
         (
             "dtree",
             tree_mse,
-            Box::new(move || {
-                Box::new(TreePredictor { tree: tree.clone() })
-            }),
+            Box::new(move || Box::new(TreePredictor::new(tree.clone()))),
         ),
         (
             "linear",
             lin_mse,
-            Box::new(move || {
-                Box::new(LinearPredictor { model: lin.clone() })
-            }),
+            Box::new(move || Box::new(LinearPredictor::new(lin.clone()))),
         ),
     ];
     if ctx.has_artifacts() {

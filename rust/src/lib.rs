@@ -65,23 +65,49 @@
 //!
 //! ## Concurrency
 //!
-//! Per-shard work executes on a [`runtime::ShardPool`]
+//! Per-shard work executes on a **persistent** [`runtime::WorkerPool`]
 //! (`CampaignConfig::worker_threads`, default 1 = serial; std-only —
-//! scoped threads + an `mpsc` result channel). The ownership rule:
-//! **workers get `&` shard interiors plus their own scoring arenas
-//! (cloned predictor, feature/prediction buffers —
-//! [`predict::EnergyPredictor::try_clone`]); the coordinator thread
-//! is the only writer.** Scans and sweeps are pure planning over a
-//! frozen context, so sharing it immutably is safe by construction,
-//! and per-shard results merge deterministically — placement winners
-//! by lexicographic `(energy, host id)` (a total order), control
-//! actions in ascending shard order — so worker count can never
-//! change a decision: `worker_threads = 1` is the behavioral oracle
-//! and the property tests in `rust/tests/pool.rs` (run in CI at both
-//! 1 and 8 workers) pin parallel against it. Shard digests flow back
-//! to the coordinator over the pool's channel at report time. A
-//! panicking worker poisons its scan with a clear error instead of
-//! deadlocking the channel.
+//! long-lived threads + `mpsc` channels). Worker threads spawn once
+//! per campaign (owned by `CampaignState`, joined on drop); fan-outs
+//! dispatch jobs to stable affinity workers
+//! ([`runtime::WorkerPool::worker_for`]: a SplitMix64 mix of the
+//! shard id modulo the width, so strided shard selections don't
+//! alias onto one worker), so a worker's caches keep seeing the same
+//! shards'
+//! views scan after scan and a fan-out costs channel hops, not thread
+//! spawns.
+//!
+//! The ownership rule: **workers own their cached scoring state — a
+//! predictor clone ([`predict::EnergyPredictor::try_clone`]) plus the
+//! feature/candidate/view/prediction arenas — persisted in their
+//! [`runtime::WorkerSlot`] across `decide_batch`, consolidation,
+//! DVFS, and power-cap fan-outs; the coordinator thread is the only
+//! writer of cluster state and the only epoch-bumper.** Cached clones
+//! invalidate by weight epoch
+//! ([`predict::EnergyPredictor::weight_epoch`], advanced by
+//! `set_weights`/retraining): the coordinator stages a fresh clone
+//! only for workers whose cached epoch is stale, so steady-state
+//! fan-outs re-clone zero times and a retrain re-clones exactly once
+//! per worker — a stale clone can never score against new weights
+//! (asserted at fetch time). Small bursts skip dispatch entirely
+//! (`EnergyAwareParams::inline_burst_rows`) because the channel
+//! round-trip would cost more than the scoring it parallelizes.
+//!
+//! Scans and sweeps are pure planning over a frozen context, so
+//! sharing it immutably is safe by construction, and per-shard
+//! results merge deterministically — placement winners by
+//! lexicographic `(energy, host id)` (a total order), control actions
+//! in ascending shard order — so worker count can never change a
+//! decision: `worker_threads = 1` is the behavioral oracle and the
+//! property tests in `rust/tests/pool.rs` (run in CI at both 1 and 8
+//! workers) pin parallel against it, including across mid-campaign
+//! `set_weights` calls. Shard digests flow back to the coordinator
+//! over the pool's channel at report time. A panicking worker poisons
+//! the pool: the failing fan-out reports the panic and every later
+//! fan-out errors loudly (`PoolError::Poisoned`) instead of
+//! deadlocking or planning from half-poisoned state. The
+//! spawn-per-call [`runtime::ShardPool`] survives as the bench
+//! baseline (`benches/bench_pool.rs` measures what persistence buys).
 //!
 //! Python never runs at decision time: [`runtime`] loads
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).

@@ -7,7 +7,7 @@
 //! summed over outputs), which keeps power and slowdown predictions
 //! consistent at the leaves.
 
-use crate::predict::engine::{decode_output, EnergyPredictor, Prediction};
+use crate::predict::engine::{decode_output, next_weight_epoch, EnergyPredictor, Prediction};
 use crate::profile::FEAT_DIM;
 
 /// A fitted tree node.
@@ -187,7 +187,20 @@ fn sse_of(ys: &[[f32; 2]], idx: &[usize], mean: &[f32; 2]) -> f64 {
 
 /// The tree as a scheduler-facing predictor.
 pub struct TreePredictor {
-    pub tree: DecisionTree,
+    tree: DecisionTree,
+    /// Instance-unique weight epoch — the tree is fixed at
+    /// construction, but two instances may carry different fits, so
+    /// cached worker clones must never be shared across them.
+    epoch: u64,
+}
+
+impl TreePredictor {
+    pub fn new(tree: DecisionTree) -> TreePredictor {
+        TreePredictor {
+            tree,
+            epoch: next_weight_epoch(),
+        }
+    }
 }
 
 impl EnergyPredictor for TreePredictor {
@@ -208,7 +221,12 @@ impl EnergyPredictor for TreePredictor {
     fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
         Some(Box::new(TreePredictor {
             tree: self.tree.clone(),
+            epoch: self.epoch,
         }))
+    }
+
+    fn weight_epoch(&self) -> u64 {
+        self.epoch
     }
 }
 
@@ -305,7 +323,7 @@ mod tests {
     fn predictor_interface() {
         let (xs, ys) = toy_dataset(200, 5);
         let tree = DecisionTree::fit(&xs, &ys, TreeParams::default());
-        let mut p = TreePredictor { tree };
+        let mut p = TreePredictor::new(tree);
         let out = p.predict(&xs[..5]);
         assert_eq!(out.len(), 5);
         assert!(out.iter().all(|p| p.power_w >= 0.0 && p.slowdown >= 0.0));

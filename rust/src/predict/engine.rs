@@ -52,6 +52,31 @@ pub trait EnergyPredictor {
     fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
         None
     }
+
+    /// Weight epoch: identifies the parameter set this engine scores
+    /// with. The persistent worker pool caches `try_clone`d copies
+    /// per worker and re-clones **only** when the cached clone's
+    /// epoch is stale, so implementations must return a new value
+    /// (drawn from [`next_weight_epoch`]) whenever their weights
+    /// change (`set_weights`, retraining) — and clones must report
+    /// the epoch of the weights they carry. Instances whose outputs
+    /// can differ from other instances of the same type must use
+    /// instance-unique epochs (assign one at construction); the
+    /// default `0` is reserved for stateless engines where every
+    /// instance scores identically (the analytic oracle).
+    fn weight_epoch(&self) -> u64 {
+        0
+    }
+}
+
+/// Draw a fresh, process-unique weight epoch (see
+/// [`EnergyPredictor::weight_epoch`]). Monotonic and never 0, so
+/// epochs from this counter can neither collide across predictor
+/// instances nor be mistaken for the stateless default.
+pub fn next_weight_epoch() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    COUNTER.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Output normalization shared by training and inference:

@@ -3,7 +3,7 @@
 //! (XᵀX + λI)·w = Xᵀy with Gaussian elimination (from scratch: no
 //! linear-algebra crates in the offline set).
 
-use crate::predict::engine::{decode_output, EnergyPredictor, Prediction};
+use crate::predict::engine::{decode_output, next_weight_epoch, EnergyPredictor, Prediction};
 use crate::profile::FEAT_DIM;
 
 /// One ridge model per output, plus intercepts.
@@ -106,7 +106,20 @@ fn solve(a: &[[f64; FEAT_DIM + 1]; FEAT_DIM + 1], b: &[f64; FEAT_DIM + 1]) -> [f
 }
 
 pub struct LinearPredictor {
-    pub model: LinearModel,
+    model: LinearModel,
+    /// Instance-unique weight epoch — the model is fixed at
+    /// construction, but two instances may carry different fits, so
+    /// cached worker clones must never be shared across them.
+    epoch: u64,
+}
+
+impl LinearPredictor {
+    pub fn new(model: LinearModel) -> LinearPredictor {
+        LinearPredictor {
+            model,
+            epoch: next_weight_epoch(),
+        }
+    }
 }
 
 impl EnergyPredictor for LinearPredictor {
@@ -127,7 +140,12 @@ impl EnergyPredictor for LinearPredictor {
     fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
         Some(Box::new(LinearPredictor {
             model: self.model.clone(),
+            epoch: self.epoch,
         }))
+    }
+
+    fn weight_epoch(&self) -> u64 {
+        self.epoch
     }
 }
 
@@ -195,9 +213,7 @@ mod tests {
     fn predictor_interface() {
         let xs = vec![[0.1f32; FEAT_DIM]; 10];
         let ys = vec![[0.4f32, 0.2]; 10];
-        let mut p = LinearPredictor {
-            model: LinearModel::fit(&xs, &ys, 1e-3),
-        };
+        let mut p = LinearPredictor::new(LinearModel::fit(&xs, &ys, 1e-3));
         let out = p.predict(&xs[..3]);
         assert_eq!(out.len(), 3);
         assert_eq!(p.name(), "linear");

@@ -12,7 +12,7 @@ pub mod xla_mlp;
 
 pub use dataset::{synthesize, Dataset};
 pub use dtree::{DecisionTree, TreeParams, TreePredictor};
-pub use engine::{EnergyPredictor, MlpWeights, Prediction, POWER_SCALE};
+pub use engine::{next_weight_epoch, EnergyPredictor, MlpWeights, Prediction, POWER_SCALE};
 pub use linear::{LinearModel, LinearPredictor};
 pub use native_mlp::NativeMlp;
 pub use oracle::{oracle_eval, OraclePredictor};

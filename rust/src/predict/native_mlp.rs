@@ -40,7 +40,8 @@
 //! 1024} so the tradeoff stays measured rather than assumed.
 
 use crate::predict::engine::{
-    decode_output, EnergyPredictor, MlpWeights, Prediction, HIDDEN1, HIDDEN2, OUT_DIM,
+    decode_output, next_weight_epoch, EnergyPredictor, MlpWeights, Prediction, HIDDEN1, HIDDEN2,
+    OUT_DIM,
 };
 use crate::profile::FEAT_DIM;
 
@@ -99,6 +100,10 @@ fn dense_batch(
 #[derive(Debug, Clone)]
 pub struct NativeMlp {
     weights: MlpWeights,
+    /// Identifies the current parameter set (instance-unique, bumped
+    /// by [`NativeMlp::set_weights`]); `Clone` keeps it, because a
+    /// clone carries the same weights and scores bit-identically.
+    epoch: u64,
     // Single-row scratch (forward).
     h1: Vec<f32>,
     h2: Vec<f32>,
@@ -118,6 +123,7 @@ impl NativeMlp {
         assert!(weights.shapes_ok());
         NativeMlp {
             weights,
+            epoch: next_weight_epoch(),
             h1: vec![0.0; HIDDEN1],
             h2: vec![0.0; HIDDEN2],
             y: vec![0.0; OUT_DIM],
@@ -132,10 +138,13 @@ impl NativeMlp {
         &self.weights
     }
 
-    /// Swap in new parameters.
+    /// Swap in new parameters and advance the weight epoch — cached
+    /// worker clones of the old weights become stale and are
+    /// re-cloned lazily on the next pooled fan-out.
     pub fn set_weights(&mut self, weights: MlpWeights) {
         assert!(weights.shapes_ok());
         self.weights = weights;
+        self.epoch = next_weight_epoch();
     }
 
     /// Forward one feature vector; returns the raw (y0, y1) pair.
@@ -223,6 +232,10 @@ impl EnergyPredictor for NativeMlp {
         // kernels are deterministic, so clone scoring is bit-identical
         // to the original (asserted in the tests below).
         Some(Box::new(self.clone()))
+    }
+
+    fn weight_epoch(&self) -> u64 {
+        self.epoch
     }
 }
 
@@ -364,6 +377,22 @@ mod tests {
         assert_ne!(before, after);
         // Batched path still agrees with the single-row path.
         assert_eq!(after, m.forward(&f));
+    }
+
+    #[test]
+    fn weight_epoch_tracks_set_weights_and_survives_clone() {
+        let mut m = NativeMlp::new(MlpWeights::init(1));
+        let other = NativeMlp::new(MlpWeights::init(1));
+        let e0 = m.weight_epoch();
+        assert_ne!(e0, 0, "instance epochs never collide with the stateless default");
+        assert_ne!(e0, other.weight_epoch(), "epochs are instance-unique");
+        // A clone carries the same weights → the same epoch.
+        let clone = m.try_clone().unwrap();
+        assert_eq!(clone.weight_epoch(), e0);
+        // New weights → new epoch; the old clone is now stale.
+        m.set_weights(MlpWeights::init(2));
+        assert_ne!(m.weight_epoch(), e0);
+        assert_eq!(clone.weight_epoch(), e0);
     }
 
     #[test]

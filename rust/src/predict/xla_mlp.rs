@@ -6,13 +6,19 @@
 //! calls with fewer rows are padded (scores for padding rows are
 //! discarded), larger batches run in chunks.
 
-use crate::predict::engine::{decode_output, EnergyPredictor, MlpWeights, Prediction};
+use crate::predict::engine::{
+    decode_output, next_weight_epoch, EnergyPredictor, MlpWeights, Prediction,
+};
 use crate::profile::FEAT_DIM;
 use crate::runtime::{Runtime, RuntimeError};
 
 pub struct XlaMlp {
     runtime: Runtime,
     weights: MlpWeights,
+    /// Weight epoch, advanced by `set_weights` (the engine is not
+    /// cloneable — `try_clone` is `None` — so nothing caches by it
+    /// today, but the epoch contract holds across every predictor).
+    epoch: u64,
     batch: usize,
     /// Reused padded input buffer.
     buf: Vec<f32>,
@@ -33,6 +39,7 @@ impl XlaMlp {
         let mut this = XlaMlp {
             runtime,
             weights,
+            epoch: next_weight_epoch(),
             batch,
             buf: vec![0.0; 0],
             weight_bufs: Vec::new(),
@@ -70,6 +77,7 @@ impl XlaMlp {
     pub fn set_weights(&mut self, w: MlpWeights) {
         assert!(w.shapes_ok());
         self.weights = w;
+        self.epoch = next_weight_epoch();
         self.stage_weights().expect("re-staging weights failed");
     }
 
@@ -156,6 +164,10 @@ impl EnergyPredictor for XlaMlp {
     fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
         self.try_predict_into(feats, out)
             .expect("predict.hlo execution failed")
+    }
+
+    fn weight_epoch(&self) -> u64 {
+        self.epoch
     }
 }
 

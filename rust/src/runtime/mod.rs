@@ -6,11 +6,16 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
 //! XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids.
 //!
-//! Also home to [`shard_pool`], the std-only worker pool the sharded
-//! scheduling pipeline fans per-shard work out on.
+//! Also home to [`worker_pool`] — the persistent, std-only worker
+//! runtime the sharded scheduling pipeline fans per-shard work out on
+//! (long-lived threads, epoch-cached per-worker state, shard
+//! affinity) — and [`shard_pool`], the spawn-per-call reference
+//! implementation it superseded (kept as the bench baseline).
 
 mod exec;
 pub mod shard_pool;
+pub mod worker_pool;
 
 pub use exec::{ModelMeta, Runtime, RuntimeError};
 pub use shard_pool::{PoolError, ShardPool};
+pub use worker_pool::{WorkerPool, WorkerSlot};

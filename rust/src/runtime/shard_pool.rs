@@ -1,8 +1,10 @@
-//! Shard worker pool — the execution engine of the parallel
-//! scheduling pipeline. One worker serves one shard job at a time;
-//! per-shard work (candidate sweeps, donor gathers, digest reads)
-//! fans out across the workers and the results flow back to the
-//! coordinator thread over an `mpsc` channel.
+//! Spawn-per-call shard worker pool — the **reference** fan-out
+//! implementation, superseded on every hot path by the persistent
+//! [`crate::runtime::WorkerPool`]. Retained for two jobs: it is the
+//! spawn-per-call baseline `benches/bench_pool.rs` measures the
+//! persistent pool against (the per-call overhead PR 5 removed), and
+//! its scatter semantics are the simplest statement of the dispatch
+//! contract the persistent pool must preserve.
 //!
 //! Std-only by design: the offline build vendors no crates, so the
 //! pool is `std::thread::scope` + `std::sync::mpsc`. Workers are
@@ -12,7 +14,9 @@
 //! spawn without `'static` gymnastics. Within one call each worker is
 //! long-lived: it pulls shard jobs off a shared queue until the queue
 //! drains, so a K-shard sweep costs at most `min(workers, K)` thread
-//! spawns, not K.
+//! spawns, not K — but every call still pays those spawns plus a full
+//! rebuild of per-worker state, which is exactly what the persistent
+//! pool's cached [`crate::runtime::WorkerSlot`]s amortize away.
 //!
 //! # Determinism contract
 //!
@@ -49,6 +53,11 @@ pub enum PoolError {
     /// A worker panicked while running a shard job; the string is the
     /// panic payload's message.
     WorkerPanicked(String),
+    /// The pool was poisoned by an earlier panic (persistent
+    /// [`crate::runtime::WorkerPool`] only): this fan-out was refused
+    /// outright rather than run against state a half-finished scan
+    /// may have left behind.
+    Poisoned,
 }
 
 impl std::fmt::Display for PoolError {
@@ -57,13 +66,16 @@ impl std::fmt::Display for PoolError {
             PoolError::WorkerPanicked(msg) => {
                 write!(f, "shard worker panicked: {msg}")
             }
+            PoolError::Poisoned => {
+                write!(f, "worker pool poisoned by an earlier panic; fan-out refused")
+            }
         }
     }
 }
 
 impl std::error::Error for PoolError {}
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&'static str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

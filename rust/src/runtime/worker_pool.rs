@@ -1,0 +1,524 @@
+//! Persistent shard worker runtime — long-lived worker threads
+//! spawned **once per campaign** (owned by `CampaignState`, joined on
+//! drop), with job dispatch over per-worker channels and per-worker
+//! state that **survives across fan-outs**. This replaces the
+//! spawn-per-call [`crate::runtime::ShardPool`] design on every hot
+//! path: a fan-out costs two channel hops per job instead of
+//! `min(workers, jobs)` thread spawns plus a full rebuild of every
+//! worker's predictor clone and scoring arenas.
+//!
+//! # Worker-owned state
+//!
+//! Each worker thread owns a [`WorkerSlot`]: a typed bag of state that
+//! persists across dispatches (keyed by `TypeId`, so independent
+//! subsystems — the placement sweep, the consolidation scan — keep
+//! separate entries without knowing about each other). The scheduling
+//! layer caches a predictor clone plus its feature/candidate/span/
+//! view/prediction arenas there (`sched::worker_score`), invalidated
+//! by **weight epoch** ([`crate::predict::EnergyPredictor::weight_epoch`]):
+//! the coordinator stages a fresh clone for a worker only when that
+//! worker's cached epoch is stale, so steady-state fan-outs re-clone
+//! **zero** times and a retrain re-clones exactly once per worker.
+//! The pool keeps the coordinator-side mirror of each worker's cached
+//! epoch ([`WorkerPool::cached_state`]); only dispatching code updates
+//! it, which is what keeps mirror and worker state consistent — the
+//! coordinator thread is the only writer and the only epoch-bumper.
+//!
+//! # Shard affinity
+//!
+//! Jobs are dispatched with an affinity key (the shard index); key `k`
+//! always runs on the same worker ([`WorkerPool::worker_for`] — a
+//! SplitMix64 mix of the key modulo the width, so strided shard
+//! selections don't alias onto one worker).
+//! Shard→worker assignment is therefore stable across fan-outs: a
+//! worker's arenas and cache lines keep seeing the same shards' views
+//! scan after scan, instead of whichever shard it happened to pull
+//! off a shared queue. Jobs for one worker run FIFO in dispatch
+//! order.
+//!
+//! # Determinism contract
+//!
+//! Unchanged from the spawn-per-call pool: results come back indexed
+//! by job, callers merge by total orders (lexicographic
+//! `(energy, host id)` for placement winners, ascending shard order
+//! for control actions), so worker count and affinity layout are
+//! latency-only. `width = 1` builds no threads at all — every
+//! consumer takes its inline serial path, the behavioral oracle the
+//! property tests in `rust/tests/pool.rs` pin the pooled paths
+//! against.
+//!
+//! # Panic poisoning
+//!
+//! A job that panics is caught on the worker (`catch_unwind`; every
+//! dispatched job sends exactly one message, so the collect loop
+//! always terminates), the dispatch returns
+//! [`PoolError::WorkerPanicked`], and the pool is **poisoned**: every
+//! subsequent dispatch fails fast with [`PoolError::Poisoned`]
+//! instead of computing against state a half-finished scan may have
+//! left behind — or deadlocking on a dead channel.
+
+use crate::cluster::shard::splitmix64;
+use crate::cluster::{ShardDigest, ShardedCluster};
+use std::any::{Any, TypeId};
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+
+pub use crate::runtime::shard_pool::PoolError;
+use crate::runtime::shard_pool::{env_workers, panic_message};
+
+/// Per-worker persistent state: lives on the worker thread for the
+/// pool's whole lifetime, keyed by type so unrelated subsystems can
+/// each cache their own entry. The scheduling layer stores its cached
+/// predictor clone and scoring arenas here.
+pub struct WorkerSlot {
+    index: usize,
+    state: BTreeMap<TypeId, Box<dyn Any + Send>>,
+}
+
+impl WorkerSlot {
+    fn new(index: usize) -> WorkerSlot {
+        WorkerSlot {
+            index,
+            state: BTreeMap::new(),
+        }
+    }
+
+    /// This worker's index in the pool (stable for the pool's
+    /// lifetime — the stable target of every key [`WorkerPool::worker_for`]
+    /// maps here).
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// The slot's cached `T`, if one was installed earlier.
+    pub fn get_mut<T: Any + Send>(&mut self) -> Option<&mut T> {
+        self.state
+            .get_mut(&TypeId::of::<T>())
+            .and_then(|b| b.downcast_mut::<T>())
+    }
+
+    /// Install (or replace) the slot's cached `T`.
+    pub fn insert<T: Any + Send>(&mut self, value: T) {
+        self.state.insert(TypeId::of::<T>(), Box::new(value));
+    }
+
+    /// The slot's cached `T`, created via `init` on first use.
+    pub fn state_or_insert_with<T: Any + Send>(&mut self, init: impl FnOnce() -> T) -> &mut T {
+        self.state
+            .entry(TypeId::of::<T>())
+            .or_insert_with(|| Box::new(init()))
+            .downcast_mut::<T>()
+            .expect("slot entry keyed by its own TypeId")
+    }
+}
+
+/// A job with its lifetime erased for the trip through a worker
+/// channel. Safety rests on the dispatch protocol: see
+/// [`WorkerPool::dispatch`].
+type ErasedJob = Box<dyn FnOnce(&mut WorkerSlot) + Send + 'static>;
+
+struct Inner {
+    job_txs: Vec<mpsc::Sender<ErasedJob>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    poisoned: AtomicBool,
+}
+
+/// The persistent worker pool. Threads spawn in [`WorkerPool::new`]
+/// (none at `width = 1`) and join when the pool drops.
+pub struct WorkerPool {
+    width: usize,
+    inner: Option<Inner>,
+    /// Coordinator-side mirror of each worker's cached scoring-state
+    /// epoch, stored as `epoch + 1` (0 = nothing cached). Written
+    /// only by dispatching code on the coordinator thread; atomics
+    /// only so the pool stays `Sync` (contexts holding `&WorkerPool`
+    /// cross into worker jobs).
+    cached: Vec<AtomicU64>,
+    /// Identity tag of the engine behind each worker's cached state
+    /// (see [`WorkerPool::cached_state`]); meaningful only where
+    /// `cached` is non-zero.
+    cached_tag: Vec<AtomicU64>,
+}
+
+impl Default for WorkerPool {
+    /// Serial pool (width 1, no threads) — the oracle path.
+    fn default() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+}
+
+impl WorkerPool {
+    /// Spawn the pool. `width = 1` (or 0, clamped) spawns no threads:
+    /// consumers detect a serial pool via [`WorkerPool::parallel`]
+    /// and take their inline paths.
+    pub fn new(width: usize) -> WorkerPool {
+        let width = width.max(1);
+        let inner = (width > 1).then(|| {
+            let mut job_txs = Vec::with_capacity(width);
+            let mut handles = Vec::with_capacity(width);
+            for index in 0..width {
+                let (tx, rx) = mpsc::channel::<ErasedJob>();
+                job_txs.push(tx);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("pallas-worker-{index}"))
+                        .spawn(move || {
+                            let mut slot = WorkerSlot::new(index);
+                            // The loop body is panic-free: user panics
+                            // are caught inside the job wrapper, so a
+                            // worker thread only exits when the pool
+                            // drops its sender.
+                            while let Ok(job) = rx.recv() {
+                                job(&mut slot);
+                            }
+                        })
+                        .expect("spawn shard worker thread"),
+                );
+            }
+            Inner {
+                job_txs,
+                handles,
+                poisoned: AtomicBool::new(false),
+            }
+        });
+        WorkerPool {
+            width,
+            inner,
+            cached: (0..width).map(|_| AtomicU64::new(0)).collect(),
+            cached_tag: (0..width).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Pool width from `PALLAS_WORKER_THREADS` (default 1).
+    pub fn from_env() -> WorkerPool {
+        WorkerPool::new(env_workers())
+    }
+
+    /// Configured width (threads spawned when > 1).
+    pub fn workers(&self) -> usize {
+        self.width
+    }
+
+    /// Whether dispatches actually cross threads. False at width 1 —
+    /// consumers then run their inline serial paths.
+    pub fn parallel(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Stable affinity map: the worker that serves affinity key `key`
+    /// (a shard index) on every dispatch. The key is SplitMix64-mixed
+    /// before the modulo: a raw `key % width` would let the
+    /// power-of-two stride patterns shard selection produces (e.g. a
+    /// top-K pick landing on every second shard with an even width)
+    /// alias onto one worker and silently serialize the fan-out;
+    /// mixing spreads any fixed selection pattern while keeping the
+    /// map perfectly stable across dispatches. The inherent tradeoff
+    /// of ANY stable map remains — some selections use fewer than
+    /// `min(width, jobs)` workers — which is the price of arenas and
+    /// cache lines that keep seeing the same shards.
+    pub fn worker_for(&self, key: usize) -> usize {
+        (splitmix64(key as u64) % self.width as u64) as usize
+    }
+
+    /// The `(epoch, tag)` of worker `w`'s cached scoring state, if
+    /// the coordinator has installed one (see the module docs on the
+    /// mirror invariant). The tag identifies the *engine* the cache
+    /// was cut from — epochs alone cannot, because the stateless
+    /// default epoch 0 is shared by every oracle-like engine type.
+    /// Always `None` on a serial pool — inline paths use the caller's
+    /// own arenas, nothing is cached.
+    pub fn cached_state(&self, worker: usize) -> Option<(u64, u64)> {
+        if !self.parallel() {
+            return None;
+        }
+        match self.cached[worker].load(Ordering::Relaxed) {
+            0 => None,
+            e => Some((e - 1, self.cached_tag[worker].load(Ordering::Relaxed))),
+        }
+    }
+
+    /// Record that worker `w` now caches scoring state at `epoch` for
+    /// the engine identified by `tag`. Call only from dispatching
+    /// code that actually stages the matching install in the same
+    /// dispatch.
+    pub fn note_cached(&self, worker: usize, epoch: u64, tag: u64) {
+        if self.parallel() {
+            self.cached_tag[worker].store(tag, Ordering::Relaxed);
+            self.cached[worker].store(epoch + 1, Ordering::Relaxed);
+        }
+    }
+
+    /// Run jobs on their affinity workers and return the results in
+    /// job order. On a serial pool the jobs run inline, in order, on
+    /// a transient slot (nothing persists — the serial paths own
+    /// their state).
+    ///
+    /// A panicking job poisons the pool: this dispatch returns
+    /// [`PoolError::WorkerPanicked`] and every later dispatch fails
+    /// fast with [`PoolError::Poisoned`].
+    ///
+    /// # Safety of the lifetime erasure
+    ///
+    /// Jobs may borrow from the caller's scope (`'env`): the closure
+    /// is transmuted to `'static` for the channel trip. This is sound
+    /// because dispatch does not return until every successfully sent
+    /// job has run and reported back — each wrapped job sends exactly
+    /// one message (its result or its caught panic), and the collect
+    /// loop below receives exactly that many — so no job, nor
+    /// anything it borrows, outlives this call.
+    pub fn dispatch<'env, T, F>(&self, jobs: Vec<(usize, F)>) -> Result<Vec<T>, PoolError>
+    where
+        T: Send + 'env,
+        F: FnOnce(&mut WorkerSlot) -> T + Send + 'env,
+    {
+        let Some(inner) = &self.inner else {
+            let mut slot = WorkerSlot::new(0);
+            return Ok(jobs.into_iter().map(|(_, job)| job(&mut slot)).collect());
+        };
+        if inner.poisoned.load(Ordering::Acquire) {
+            return Err(PoolError::Poisoned);
+        }
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, String>)>();
+        let mut sent = 0usize;
+        let mut lost_worker = false;
+        for (i, (key, job)) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let wrapped: Box<dyn FnOnce(&mut WorkerSlot) + Send + 'env> =
+                Box::new(move |slot: &mut WorkerSlot| {
+                    let out = catch_unwind(AssertUnwindSafe(|| job(slot)));
+                    // Exactly one message per job, success or panic.
+                    let _ = tx.send((i, out.map_err(|p| panic_message(p.as_ref()))));
+                });
+            // SAFETY: see the method docs — every sent job completes
+            // (and is dropped) before this call returns, so the
+            // erased borrows never dangle. Unsent jobs on the error
+            // path below are dropped here, inside `'env`.
+            let wrapped = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce(&mut WorkerSlot) + Send + 'env>, ErasedJob>(
+                    wrapped,
+                )
+            };
+            if inner.job_txs[self.worker_for(key)].send(wrapped).is_err() {
+                // A worker thread is gone — only possible if the
+                // process is tearing down. Stop sending; the jobs
+                // already in flight are still drained below.
+                lost_worker = true;
+                break;
+            }
+            sent += 1;
+        }
+        drop(tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<String> = None;
+        for _ in 0..sent {
+            match rx.recv() {
+                Ok((i, Ok(v))) => results[i] = Some(v),
+                Ok((_, Err(msg))) => {
+                    first_panic.get_or_insert(msg);
+                }
+                // Unreachable (every sent job sends exactly once and
+                // we hold the receiver), but never hang on it.
+                Err(_) => {
+                    lost_worker = true;
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = first_panic {
+            inner.poisoned.store(true, Ordering::Release);
+            return Err(PoolError::WorkerPanicked(msg));
+        }
+        if lost_worker {
+            inner.poisoned.store(true, Ordering::Release);
+            return Err(PoolError::Poisoned);
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every job sent exactly one result"))
+            .collect())
+    }
+
+    /// Read every shard's digest through the pool: digests flow back
+    /// to the coordinator thread over the result channel instead of
+    /// the coordinator walking shard state in place — the read path a
+    /// distributed deployment (one process per shard) would use.
+    /// Inline on a serial pool.
+    pub fn gather_digests(&self, sc: &ShardedCluster) -> Result<Vec<ShardDigest>, PoolError> {
+        if !self.parallel() || sc.shard_count() <= 1 {
+            return Ok((0..sc.shard_count()).map(|s| *sc.digest(s)).collect());
+        }
+        let jobs: Vec<_> = (0..sc.shard_count())
+            .map(|s| (s, move |_: &mut WorkerSlot| *sc.digest(s)))
+            .collect();
+        self.dispatch(jobs)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            // Closing the job channels ends each worker's recv loop.
+            drop(inner.job_txs);
+            for h in inner.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn dispatch_preserves_job_order_at_any_width() {
+        for width in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(width);
+            let jobs: Vec<_> = (0..17u64)
+                .map(|i| (i as usize, move |_: &mut WorkerSlot| i * i))
+                .collect();
+            let out = pool.dispatch(jobs).unwrap();
+            assert_eq!(out, (0..17u64).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn affinity_is_stable_across_dispatches() {
+        let pool = WorkerPool::new(4);
+        let observe = |pool: &WorkerPool| -> Vec<usize> {
+            let jobs: Vec<_> = (0..16usize)
+                .map(|k| (k, move |slot: &mut WorkerSlot| slot.index()))
+                .collect();
+            pool.dispatch(jobs).unwrap()
+        };
+        let first = observe(&pool);
+        for (k, &w) in first.iter().enumerate() {
+            assert_eq!(w, pool.worker_for(k), "key {k} must run on its affinity worker");
+            assert!(w < 4);
+        }
+        // The mixed map must spread a dense key range across workers,
+        // not collapse it (the failure mode of a raw modulo under
+        // strided selections).
+        let distinct: std::collections::BTreeSet<usize> = first.iter().copied().collect();
+        assert!(distinct.len() > 1, "16 keys all landed on one of 4 workers");
+        assert_eq!(first, observe(&pool), "assignment must not drift");
+    }
+
+    #[test]
+    fn worker_state_persists_across_dispatches_without_respawn() {
+        let pool = WorkerPool::new(3);
+        // Each job bumps a per-worker counter kept in the slot. If
+        // workers (or their state) were rebuilt per fan-out, the
+        // second dispatch would observe counters starting from zero.
+        let count_up = |pool: &WorkerPool| -> Vec<u64> {
+            let jobs: Vec<_> = (0..3usize)
+                .map(|k| {
+                    (k, move |slot: &mut WorkerSlot| {
+                        let c = slot.state_or_insert_with(|| 0u64);
+                        *c += 1;
+                        *c
+                    })
+                })
+                .collect();
+            pool.dispatch(jobs).unwrap()
+        };
+        assert_eq!(count_up(&pool), vec![1, 1, 1]);
+        assert_eq!(count_up(&pool), vec![2, 2, 2], "state must persist");
+        assert_eq!(count_up(&pool), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn serial_dispatch_runs_inline_in_order() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = WorkerPool::new(1);
+        assert!(!pool.parallel());
+        // Jobs borrow the caller's scope via a shared sequence
+        // counter — running totals prove in-order execution.
+        let seq = AtomicUsize::new(0);
+        let seq_ref = &seq;
+        let jobs: Vec<_> = (0..5usize)
+            .map(|k| {
+                (k, move |_: &mut WorkerSlot| {
+                    seq_ref.fetch_add(1, Ordering::Relaxed) + 1
+                })
+            })
+            .collect();
+        let out = pool.dispatch(jobs).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn panicking_job_poisons_the_pool() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..8usize)
+            .map(|i| {
+                (i, move |_: &mut WorkerSlot| {
+                    if i == 3 {
+                        panic!("boom in shard job {i}");
+                    }
+                    i
+                })
+            })
+            .collect();
+        let err = pool.dispatch(jobs).expect_err("panicking job must fail the dispatch");
+        assert!(
+            err.to_string().contains("boom in shard job 3"),
+            "unhelpful error: {err}"
+        );
+        // Subsequent fan-outs must error loudly, not deadlock or
+        // silently compute on half-poisoned state.
+        let retry: Vec<(usize, fn(&mut WorkerSlot) -> usize)> =
+            vec![(0, |_| 7usize)];
+        match pool.dispatch(retry) {
+            Err(PoolError::Poisoned) => {}
+            other => panic!("expected Poisoned, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cached_state_mirror_round_trips() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.cached_state(0), None);
+        pool.note_cached(0, 0, 7);
+        assert_eq!(
+            pool.cached_state(0),
+            Some((0, 7)),
+            "epoch 0 is distinguishable from empty"
+        );
+        pool.note_cached(1, 41, 9);
+        assert_eq!(pool.cached_state(1), Some((41, 9)));
+        assert_eq!(pool.cached_state(0), Some((0, 7)));
+        // Same epoch, different engine tag: NOT a cache hit.
+        assert_ne!(pool.cached_state(0), Some((0, 8)));
+        // Serial pools cache nothing.
+        let serial = WorkerPool::new(1);
+        serial.note_cached(0, 5, 1);
+        assert_eq!(serial.cached_state(0), None);
+    }
+
+    #[test]
+    fn width_clamps_and_default_is_serial() {
+        assert_eq!(WorkerPool::new(0).workers(), 1);
+        assert!(!WorkerPool::new(0).parallel());
+        assert_eq!(WorkerPool::default().workers(), 1);
+        assert!(WorkerPool::new(2).parallel());
+    }
+
+    #[test]
+    fn digests_over_the_channel_match_in_place_reads() {
+        let sc = ShardedCluster::new(Cluster::homogeneous(13), 4);
+        for width in [1usize, 4] {
+            let pool = WorkerPool::new(width);
+            let gathered = pool.gather_digests(&sc).unwrap();
+            assert_eq!(gathered.len(), 4);
+            for (g, d) in gathered.iter().zip(sc.digests()) {
+                assert_eq!(g.hosts, d.hosts);
+                assert_eq!(g.on, d.on);
+            }
+        }
+    }
+}

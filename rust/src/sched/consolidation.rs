@@ -42,21 +42,27 @@
 //!
 //! # Parallel scans
 //!
-//! With a [`ShardPool`] on the context (and a cloneable predictor)
-//! the per-donor gather + score passes run on the pool — each worker
-//! owns a cloned predictor and its own feature arena, and the gather
-//! body reads only frozen scan state (prelude + cluster), never the
-//! planned loads. Selection, which *does* depend on targets chosen
-//! for earlier donors, stays serial: donors merge in ascending shard
-//! order through the same [`Consolidator::merge_donor`] body the
-//! serial path uses, so the emitted actions are bit-identical at any
-//! worker count (property-tested in `rust/tests/pool.rs`).
+//! With a persistent [`WorkerPool`] on the context (and a cloneable
+//! predictor) the per-donor gather + score passes are dispatched to
+//! the donors' affinity workers (`WorkerPool::worker_for` of the
+//! donor's shard, stable across scans). Each worker scores through the
+//! **epoch-cached** predictor clone and feature arena in its slot
+//! (`sched::worker_score`) — the same cache entry the
+//! placement sweep uses, so a retrain invalidates both with one
+//! epoch bump — and the gather body reads only frozen scan state
+//! (prelude + cluster), never the planned loads. Selection, which
+//! *does* depend on targets chosen for earlier donors, stays serial:
+//! donors merge in ascending shard order through the same
+//! [`Consolidator::merge_donor`] body the serial path uses, so the
+//! emitted actions are bit-identical at any worker count
+//! (property-tested in `rust/tests/pool.rs`).
 
 use crate::cluster::{Cluster, Flavor, Host, HostId, Utilization, VmId, VmState};
 use crate::predict::{EnergyPredictor, Prediction};
 use crate::profile::{build_features, ResourceVector, FEAT_DIM};
-use crate::runtime::ShardPool;
+use crate::runtime::{WorkerPool, WorkerSlot};
 use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
+use crate::sched::worker_score::{stage_installs, WorkerScore};
 use crate::sched::{ScheduleContext, ShardHosts};
 use std::collections::BTreeMap;
 
@@ -151,14 +157,6 @@ struct DonorGather {
     /// missing context, shorter remaining work than its own copy, or
     /// no viable target anywhere.
     viable: bool,
-}
-
-/// Per-worker state for the pooled scan: a cloned predictor plus a
-/// feature arena (candidate ids and predictions travel back in the
-/// [`DonorGather`]).
-struct ScanWorker {
-    predictor: Box<dyn EnergyPredictor + Send>,
-    feats: Vec<[f32; FEAT_DIM]>,
 }
 
 /// Everything the evacuation planner needs from the first half of a
@@ -615,38 +613,36 @@ impl Consolidator {
         }
     }
 
-    /// Gather + score every donor on the worker pool: one job per
-    /// donor, each worker owning a cloned predictor and its own
-    /// feature arena. Returns `None` (caller gathers inline) when the
-    /// pool is serial for this donor count or the predictor cannot be
-    /// cloned.
+    /// Gather + score every donor on the persistent worker pool: one
+    /// job per donor, dispatched to the donor shard's affinity
+    /// worker, scoring through the epoch-cached predictor clone and
+    /// feature arena in that worker's slot ([`WorkerScore`] — shared
+    /// with the placement sweep). Returns `None` (caller gathers
+    /// inline) when the pool is serial, there is at most one donor,
+    /// or the predictor cannot be cloned.
     fn gather_donors_parallel(
         &self,
         ctx: &ScheduleContext<'_>,
         sustained: &[f64],
         ev: &Evacuation,
         predictor: &dyn EnergyPredictor,
-        pool: &ShardPool,
+        pool: &WorkerPool,
     ) -> Option<Vec<DonorGather>> {
-        let n_workers = pool.plan_workers(ev.donors.len());
-        if n_workers <= 1 {
+        if !pool.parallel() || ev.donors.len() <= 1 {
             return None;
         }
-        let mut states = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            states.push(ScanWorker {
-                predictor: predictor.try_clone()?,
-                feats: Vec::new(),
-            });
-        }
+        let mut staged = stage_installs(pool, ev.donors.iter().map(|&(s, _)| s), predictor)?;
+        let epoch = staged.epoch;
         let params = self.params;
         let jobs: Vec<_> = ev
             .donors
             .iter()
             .map(|&(shard, donor)| {
-                move |w: &mut ScanWorker| {
+                let install = staged.take(pool.worker_for(shard));
+                (shard, move |w: &mut WorkerSlot| {
+                    let st = WorkerScore::fetch(w, epoch, install);
                     let mut g = DonorGather::default();
-                    w.feats.clear();
+                    st.feats.clear();
                     g.viable = gather_donor(
                         &params,
                         ctx,
@@ -656,19 +652,19 @@ impl Consolidator {
                         donor,
                         &mut g.spans,
                         &mut g.cands,
-                        &mut w.feats,
+                        &mut st.feats,
                     );
                     if g.viable && !g.spans.is_empty() {
                         // ONE predictor call per donor, same matrix as
                         // the serial pass.
-                        w.predictor.predict_into(&w.feats, &mut g.preds);
+                        st.predictor.predict_into(&st.feats, &mut g.preds);
                     }
                     g
-                }
+                })
             })
             .collect();
         let gathers = pool
-            .scatter_state(states, jobs)
+            .dispatch(jobs)
             .unwrap_or_else(|e| panic!("parallel consolidation scan poisoned: {e}"));
         Some(gathers)
     }

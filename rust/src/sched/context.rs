@@ -11,7 +11,7 @@
 
 use crate::cluster::{Cluster, HostId, ShardDigest, ShardedCluster, VmId};
 use crate::profile::HistoryStore;
-use crate::runtime::ShardPool;
+use crate::runtime::{WorkerPool, WorkerSlot};
 use crate::sched::consolidation::VmContext;
 use crate::sim::telemetry::HostSample;
 use crate::sim::Telemetry;
@@ -39,13 +39,14 @@ pub struct ScheduleContext<'a> {
     /// out across shards and control loops scan shard by shard when
     /// this is present.
     pub shards: Option<&'a ShardedCluster>,
-    /// Shard worker pool: when present (and wider than one worker),
-    /// per-shard work — placement sweeps, control-loop scan passes —
-    /// runs on the pool's workers instead of inline. Absent (or at
-    /// width 1) every consumer takes its serial path, which is the
-    /// behavioral oracle the parallel paths are property-tested
-    /// against.
-    pub pool: Option<&'a ShardPool>,
+    /// Persistent shard worker pool: when present (and wider than one
+    /// worker), per-shard work — placement sweeps, control-loop scan
+    /// passes — is dispatched to the pool's long-lived workers
+    /// (`WorkerPool::worker_for`, stable across fan-outs)
+    /// instead of running inline. Absent (or at width 1) every
+    /// consumer takes its serial path, which is the behavioral oracle
+    /// the parallel paths are property-tested against.
+    pub pool: Option<&'a WorkerPool>,
 }
 
 impl<'a> ScheduleContext<'a> {
@@ -89,21 +90,29 @@ impl<'a> ScheduleContext<'a> {
         self
     }
 
-    /// Attach a shard worker pool. Per-shard work then fans out
-    /// across the pool's workers; results merge deterministically
-    /// (see [`ShardPool`]'s determinism contract), so attaching a
-    /// pool never changes decisions — only latency.
-    pub fn with_pool(mut self, pool: &'a ShardPool) -> ScheduleContext<'a> {
+    /// Attach a persistent shard worker pool. Per-shard work is then
+    /// dispatched to the pool's affinity workers; results merge
+    /// deterministically (see [`WorkerPool`]'s determinism contract),
+    /// so attaching a pool never changes decisions — only latency.
+    pub fn with_pool(mut self, pool: &'a WorkerPool) -> ScheduleContext<'a> {
         self.pool = Some(pool);
         self
     }
 
-    /// Run a read-only computation for every shard, on the worker
-    /// pool when one is attached (and wider than one worker), inline
-    /// otherwise. Results come back in ascending shard order either
-    /// way — the merge rule control loops rely on — and a panicking
-    /// worker poisons the whole pass with a clear error instead of
-    /// deadlocking (see [`crate::runtime::PoolError`]).
+    /// Run a read-only computation for every shard, dispatched to the
+    /// worker pool when one is attached (and wider than one worker),
+    /// inline otherwise. Results come back in ascending shard order
+    /// either way — the merge rule control loops rely on — and a
+    /// panicking worker poisons the whole pass with a clear error
+    /// instead of deadlocking (see [`crate::runtime::PoolError`]).
+    ///
+    /// Dispatch is unconditional at width > 1: cheap passes (a DVFS
+    /// walk over a small fleet) pay the channel round-trip where an
+    /// inline walk might win. That is still strictly less overhead
+    /// than the spawn-per-call design this pool replaced, but an
+    /// inline-below-threshold guard like the placement path's
+    /// `inline_burst_rows` is pending a measured crossover for these
+    /// non-scoring passes (see ROADMAP).
     pub fn for_each_shard<T, F>(&self, f: F) -> Vec<T>
     where
         T: Send,
@@ -111,10 +120,12 @@ impl<'a> ScheduleContext<'a> {
     {
         let n = self.shard_count();
         match self.pool {
-            Some(pool) if pool.plan_workers(n) > 1 => {
+            Some(pool) if pool.parallel() && n > 1 => {
                 let f = &f;
-                let jobs: Vec<_> = (0..n).map(|s| move || f(s)).collect();
-                pool.scatter(jobs)
+                let jobs: Vec<_> = (0..n)
+                    .map(|s| (s, move |_: &mut WorkerSlot| f(s)))
+                    .collect();
+                pool.dispatch(jobs)
                     .unwrap_or_else(|e| panic!("per-shard fan-out poisoned: {e}"))
             }
             _ => (0..n).map(f).collect(),
@@ -296,11 +307,11 @@ mod tests {
     #[test]
     fn for_each_shard_orders_results_with_and_without_pool() {
         use crate::cluster::ShardedCluster;
-        use crate::runtime::ShardPool;
+        use crate::runtime::WorkerPool;
         let sc = ShardedCluster::new(Cluster::homogeneous(8), 4);
         let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
         let serial = ctx.for_each_shard(|s| (s, ctx.shard(s).digest().hosts));
-        let pool = ShardPool::new(3);
+        let pool = WorkerPool::new(3);
         let pctx = ScheduleContext::new(0.0, &sc).with_shards(&sc).with_pool(&pool);
         let pooled = pctx.for_each_shard(|s| (s, pctx.shard(s).digest().hosts));
         assert_eq!(serial, pooled);

@@ -32,20 +32,30 @@
 //! bounded by the K largest shards instead of the whole fleet.
 //!
 //! Parallel fan-out: when the context additionally carries a
-//! [`ShardPool`] with more than one worker and the predictor can be
-//! cloned ([`EnergyPredictor::try_clone`]), the top-K shard sweeps
-//! run on the pool — each worker owns a cloned predictor and its own
-//! scoring arena (the policy's single in-struct arena is inherently
-//! serial), and per-shard winners are merged by the same
-//! `(energy, host id)` rule, which is a total order: merge order, and
-//! therefore worker count, cannot change any decision. The serial
-//! sweep stays the oracle path (`worker_threads = 1`), pinned by the
-//! equivalence property tests in `rust/tests/pool.rs`.
+//! persistent [`WorkerPool`] with more than one worker and the
+//! predictor can be cloned ([`EnergyPredictor::try_clone`]), the
+//! top-K shard sweeps are dispatched to their affinity workers
+//! (shard `s` always runs on the same worker — `WorkerPool::worker_for`
+//! — so a worker's arenas keep seeing the same shards' views). Each worker scores
+//! through an **epoch-cached** predictor clone held in its
+//! [`crate::runtime::WorkerSlot`] (see `sched::worker_score`):
+//! re-cloned only when [`EnergyPredictor::weight_epoch`] says the
+//! cached copy is stale, never per fan-out. Per-shard winners are
+//! merged by the same `(energy, host id)` rule, which is a total
+//! order: merge order, and therefore worker count, cannot change any
+//! decision. The serial sweep stays the oracle path
+//! (`worker_threads = 1`), pinned by the equivalence property tests
+//! in `rust/tests/pool.rs` — including across mid-campaign
+//! `set_weights` calls. Small bursts skip dispatch entirely
+//! ([`EnergyAwareParams::inline_burst_rows`]): below the threshold
+//! the channel round-trip costs more than the scoring it would
+//! parallelize.
 
 use crate::cluster::{HostId, HostView, ShardedCluster};
 use crate::predict::{EnergyPredictor, Prediction};
-use crate::runtime::ShardPool;
+use crate::runtime::{WorkerPool, WorkerSlot};
 use crate::sched::policy::{powered_off, Decision, PlacementPolicy, PlacementRequest};
+use crate::sched::worker_score::{stage_installs, WorkerScore};
 use crate::sched::{ScheduleContext, ScoringHandle};
 
 /// Tunables (defaults follow §III-C and the SLA slack of §V-B).
@@ -74,6 +84,16 @@ pub struct EnergyAwareParams {
     /// per-decision work by the K largest shards instead of the
     /// fleet; K = shard_count recovers the exhaustive sweep.
     pub top_k_shards: usize,
+    /// Small-burst fast path: when the burst's estimated candidate
+    /// rows (requests × hosts in the selected shards, an upper bound
+    /// on the feature matrix) fall below this, `decide_batch` skips
+    /// pool dispatch and runs the inline serial sweep — below the
+    /// threshold the per-fan-out channel round-trip costs more than
+    /// the scoring it would parallelize. The default comes from the
+    /// burst sweep in `benches/bench_pool.rs` (`BENCH_pool.json`);
+    /// re-derive it there when dispatch costs change. `0` disables
+    /// the fast path (benches/tests use it to force dispatch).
+    pub inline_burst_rows: usize,
 }
 
 impl Default for EnergyAwareParams {
@@ -84,21 +104,9 @@ impl Default for EnergyAwareParams {
             boot_penalty_j: 150.0 * 90.0, // p_transition × boot_secs
             headroom: 0.93,
             top_k_shards: 4,
+            inline_burst_rows: 128,
         }
     }
-}
-
-/// Per-worker scoring state for the pooled shard fan-out: a cloned
-/// predictor plus this worker's own arena. Sized once per burst by
-/// [`ShardPool::plan_workers`]; buffers are refilled in place across
-/// the shard jobs the worker serves.
-struct ShardSweepWorker {
-    predictor: Box<dyn EnergyPredictor + Send>,
-    feats: Vec<[f32; crate::profile::FEAT_DIM]>,
-    cands: Vec<(HostId, f64)>,
-    spans: Vec<(usize, usize)>,
-    views: Vec<HostView>,
-    preds: Vec<Prediction>,
 }
 
 /// Append one request's SLA-safe candidates (and feature rows) from
@@ -240,68 +248,60 @@ impl EnergyAware {
         argmin_energy_span(&self.params, req, &self.cands[start..end], &self.preds[start..end])
     }
 
-    /// Fan the selected shard sweeps out to the worker pool: each
-    /// worker owns a cloned predictor and its own arena, runs the
-    /// same gather → predict → argmin body as the serial sweep, and
-    /// returns one `(host, energy)` winner per request. Returns
-    /// `None` (caller runs the serial sweep) when the pool is serial
-    /// or the predictor cannot be cloned.
-    fn sweep_shards_parallel(
+    /// Fan the selected shard sweeps out to their affinity workers on
+    /// the persistent pool: each worker scores through the
+    /// epoch-cached predictor clone and arenas in its slot
+    /// ([`WorkerScore`]), running the same gather → predict → argmin
+    /// body as the serial sweep, and returns one `(host, energy)`
+    /// winner per request. Returns `None` (caller runs the serial
+    /// sweep) when the predictor cannot be cloned.
+    fn sweep_shards_pooled(
         &self,
         reqs: &[PlacementRequest],
         sh: &ShardedCluster,
         shards: &[usize],
-        pool: &ShardPool,
+        pool: &WorkerPool,
     ) -> Option<Vec<Vec<Option<(HostId, f64)>>>> {
-        let n_workers = pool.plan_workers(shards.len());
-        if n_workers <= 1 {
-            return None;
-        }
-        let mut states = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            states.push(ShardSweepWorker {
-                predictor: self.predictor.try_clone()?,
-                feats: Vec::new(),
-                cands: Vec::new(),
-                spans: Vec::new(),
-                views: Vec::new(),
-                preds: Vec::new(),
-            });
-        }
+        let mut staged = stage_installs(pool, shards.iter().copied(), self.predictor.as_ref())?;
+        let epoch = staged.epoch;
         let params = self.params;
         let jobs: Vec<_> = shards
             .iter()
             .map(|&s| {
-                move |w: &mut ShardSweepWorker| {
-                    sh.shard_scoring_views(s, params.delta_high, &mut w.views);
-                    w.feats.clear();
-                    w.cands.clear();
-                    w.spans.clear();
+                // The first job per worker carries that worker's fresh
+                // clone (if its cache was stale); later jobs reuse.
+                let install = staged.take(pool.worker_for(s));
+                (s, move |w: &mut WorkerSlot| {
+                    let st = WorkerScore::fetch(w, epoch, install);
+                    sh.shard_scoring_views(s, params.delta_high, &mut st.views);
+                    st.feats.clear();
+                    st.cands.clear();
+                    st.spans.clear();
                     for req in reqs {
                         let span = gather_candidates_into(
                             &params,
                             req,
-                            &w.views,
-                            &mut w.cands,
-                            &mut w.feats,
+                            &st.views,
+                            &mut st.cands,
+                            &mut st.feats,
                         );
-                        w.spans.push(span);
+                        st.spans.push(span);
                     }
-                    w.preds.clear();
-                    if !w.feats.is_empty() {
-                        w.predictor.predict_into(&w.feats, &mut w.preds);
+                    st.preds.clear();
+                    if !st.feats.is_empty() {
+                        st.predictor.predict_into(&st.feats, &mut st.preds);
                     }
                     reqs.iter()
-                        .zip(&w.spans)
+                        .zip(&st.spans)
                         .map(|(req, &(a, b))| {
-                            argmin_energy_span(&params, req, &w.cands[a..b], &w.preds[a..b])
+                            argmin_energy_span(&params, req, &st.cands[a..b], &st.preds[a..b])
                         })
                         .collect::<Vec<_>>()
-                }
+                })
             })
             .collect();
         let winners = pool
-            .scatter_state(states, jobs)
+            .dispatch(jobs)
             .unwrap_or_else(|e| panic!("parallel decide_batch fan-out poisoned: {e}"));
         Some(winners)
     }
@@ -333,9 +333,20 @@ impl EnergyAware {
                 .then(a.cmp(&b))
         });
         let mut best: Vec<Option<(HostId, f64)>> = vec![None; reqs.len()];
-        let pooled = ctx
-            .pool
-            .and_then(|pool| self.sweep_shards_parallel(reqs, sh, &order[..k], pool));
+        let pooled = ctx.pool.and_then(|pool| {
+            if !pool.parallel() || k <= 1 {
+                return None; // width 1 / one shard: the inline oracle
+            }
+            // Small-burst fast path: upper-bound the feature matrix by
+            // requests × member hosts of the selected shards; below
+            // the threshold dispatch overhead dominates, run inline.
+            let est_rows: usize =
+                reqs.len() * order[..k].iter().map(|&s| sh.members(s).len()).sum::<usize>();
+            if est_rows < self.params.inline_burst_rows {
+                return None;
+            }
+            self.sweep_shards_pooled(reqs, sh, &order[..k], pool)
+        });
         if let Some(per_shard) = pooled {
             for shard_winners in per_shard {
                 for (b, w) in best.iter_mut().zip(shard_winners) {

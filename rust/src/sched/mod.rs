@@ -29,6 +29,7 @@ pub mod first_fit;
 pub mod policy;
 pub mod power_cap;
 pub mod round_robin;
+pub(crate) mod worker_score;
 
 pub use best_fit::BestFit;
 pub use consolidation::{ConsolidationParams, Consolidator, VmContext};

@@ -1,0 +1,266 @@
+//! Per-worker cached scoring state for the persistent
+//! [`WorkerPool`]: one predictor clone plus the scoring arenas
+//! (feature rows, candidates, spans, host views, predictions), kept
+//! in the worker's [`WorkerSlot`] so they survive across
+//! `decide_batch`, consolidation, DVFS, and power-cap fan-outs
+//! instead of being rebuilt per call.
+//!
+//! # Epoch protocol
+//!
+//! The coordinator is the only writer and the only epoch-bumper:
+//!
+//! 1. Before a fan-out, [`stage_installs`] compares each
+//!    participating worker's mirrored `(epoch, tag)`
+//!    ([`WorkerPool::cached_state`]) against the live predictor's
+//!    [`EnergyPredictor::weight_epoch`] and identity tag, and
+//!    `try_clone`s a fresh copy **only** for stale workers — zero
+//!    clones at steady state, one clone per worker after a
+//!    `set_weights`/retrain. The tag (a hash of the engine name)
+//!    exists because epochs alone cannot distinguish engines: the
+//!    stateless default epoch 0 is shared by every oracle-like type,
+//!    and a cache cut from one must never score for another.
+//!    `weight_epoch` is read exactly once, here — the staged epoch is
+//!    returned to the caller so the jobs and the mirror can never
+//!    disagree about which epoch was staged.
+//! 2. The first job dispatched to each such worker carries the fresh
+//!    clone; [`WorkerScore::fetch`] installs it (jobs for one worker
+//!    run FIFO, so the install always lands before any reuse).
+//! 3. `fetch` asserts the cached epoch matches the fan-out's staged
+//!    epoch — a stale clone can never score; a protocol violation
+//!    fails the job loudly (poisoning the pool) instead of silently
+//!    producing decisions from old parameters. Engine identity is
+//!    enforced coordinator-side only (the mirror tag): clones are
+//!    not required to preserve `name()` — a delegating wrapper may
+//!    legitimately clone its inner engine.
+//!
+//! Both scoring fan-outs (the placement sweep and the consolidation
+//! scan) share this one cache entry — they score through the same
+//! policy predictor, so a retrain invalidates both with one epoch
+//! bump and re-clones once per worker, not once per subsystem.
+
+use crate::cluster::{HostId, HostView};
+use crate::predict::{EnergyPredictor, Prediction};
+use crate::profile::FEAT_DIM;
+use crate::runtime::{WorkerPool, WorkerSlot};
+use std::collections::BTreeMap;
+
+/// A worker's persistent scoring state (see the module docs).
+pub(crate) struct WorkerScore {
+    epoch: u64,
+    pub predictor: Box<dyn EnergyPredictor + Send>,
+    /// Feature-row arena, shared by every scoring fan-out.
+    pub feats: Vec<[f32; FEAT_DIM]>,
+    /// Placement-sweep candidates with their amortized idle share.
+    pub cands: Vec<(HostId, f64)>,
+    /// Per-request `[start, end)` spans into `cands`/`feats`.
+    pub spans: Vec<(usize, usize)>,
+    /// Pruned host-view snapshots of this worker's shards.
+    pub views: Vec<HostView>,
+    /// Predictor output arena.
+    pub preds: Vec<Prediction>,
+}
+
+impl WorkerScore {
+    fn new(epoch: u64, predictor: Box<dyn EnergyPredictor + Send>) -> WorkerScore {
+        WorkerScore {
+            epoch,
+            predictor,
+            feats: Vec::new(),
+            cands: Vec::new(),
+            spans: Vec::new(),
+            views: Vec::new(),
+            preds: Vec::new(),
+        }
+    }
+
+    /// Fetch this worker's cached scoring state, installing the
+    /// staged predictor clone when the coordinator sent one (step 2
+    /// of the epoch protocol). Panics — loudly poisoning the fan-out
+    /// — if the cache would be stale, which the staging step makes
+    /// unreachable.
+    pub(crate) fn fetch(
+        slot: &mut WorkerSlot,
+        epoch: u64,
+        install: Option<Box<dyn EnergyPredictor + Send>>,
+    ) -> &mut WorkerScore {
+        if let Some(fresh) = install {
+            match slot.get_mut::<WorkerScore>() {
+                Some(state) => {
+                    state.predictor = fresh;
+                    state.epoch = epoch;
+                }
+                None => slot.insert(WorkerScore::new(epoch, fresh)),
+            }
+        }
+        let state = slot
+            .get_mut::<WorkerScore>()
+            .expect("coordinator stages a predictor clone before first use");
+        assert_eq!(
+            state.epoch, epoch,
+            "stale predictor clone must never score against new weights"
+        );
+        state
+    }
+}
+
+/// Identity tag of an engine for the pool's cache mirror: FNV-1a of
+/// the engine name. Epochs disambiguate *weights over time* within
+/// one engine; the tag disambiguates *engines* (the stateless default
+/// epoch 0 is shared across types).
+fn engine_tag(predictor: &dyn EnergyPredictor) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in predictor.name().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The output of [`stage_installs`]: the epoch everything in this
+/// fan-out was staged at (the single `weight_epoch` read), plus one
+/// fresh clone per stale worker, to be attached to the first job
+/// dispatched to that worker.
+pub(crate) struct StagedInstalls {
+    pub epoch: u64,
+    installs: BTreeMap<usize, Box<dyn EnergyPredictor + Send>>,
+}
+
+impl StagedInstalls {
+    /// Take `worker`'s install, if one was staged (call when building
+    /// that worker's first job of the dispatch).
+    pub(crate) fn take(&mut self, worker: usize) -> Option<Box<dyn EnergyPredictor + Send>> {
+        self.installs.remove(&worker)
+    }
+
+    /// Workers that were staged a fresh clone.
+    #[cfg(test)]
+    fn staged_workers(&self) -> Vec<usize> {
+        self.installs.keys().copied().collect()
+    }
+}
+
+/// Coordinator-side step 1 of the epoch protocol: for the affinity
+/// workers of `keys` (shard indices), clone the predictor for every
+/// worker whose mirrored `(epoch, tag)` is stale and record the new
+/// state in the pool's mirror. Returns `None` when the predictor
+/// cannot be cloned (callers fall back to their serial sweep; the
+/// mirror is left untouched).
+pub(crate) fn stage_installs(
+    pool: &WorkerPool,
+    keys: impl Iterator<Item = usize>,
+    predictor: &dyn EnergyPredictor,
+) -> Option<StagedInstalls> {
+    let epoch = predictor.weight_epoch();
+    let tag = engine_tag(predictor);
+    let mut installs: BTreeMap<usize, Box<dyn EnergyPredictor + Send>> = BTreeMap::new();
+    for key in keys {
+        let worker = pool.worker_for(key);
+        if pool.cached_state(worker) != Some((epoch, tag)) && !installs.contains_key(&worker) {
+            installs.insert(worker, predictor.try_clone()?);
+        }
+    }
+    // All clones succeeded — commit the mirror (the matching installs
+    // ride along with this very dispatch, keeping mirror and worker
+    // state consistent).
+    for &worker in installs.keys() {
+        pool.note_cached(worker, epoch, tag);
+    }
+    Some(StagedInstalls { epoch, installs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::{MlpWeights, NativeMlp, OraclePredictor};
+    use std::collections::BTreeSet;
+
+    fn affinity_workers(pool: &WorkerPool, keys: std::ops::Range<usize>) -> Vec<usize> {
+        keys.map(|k| pool.worker_for(k))
+            .collect::<BTreeSet<_>>()
+            .into_iter()
+            .collect()
+    }
+
+    #[test]
+    fn stage_installs_clones_only_stale_workers() {
+        let pool = WorkerPool::new(2);
+        let mlp = NativeMlp::new(MlpWeights::init(3));
+        let expected = affinity_workers(&pool, 0..4);
+        let first = stage_installs(&pool, 0..4, &mlp).unwrap();
+        assert_eq!(first.staged_workers(), expected);
+        assert_eq!(first.epoch, mlp.weight_epoch());
+        let second = stage_installs(&pool, 0..4, &mlp).unwrap();
+        assert!(
+            second.staged_workers().is_empty(),
+            "cached workers must not re-clone"
+        );
+        // A weight change staleness-invalidates every worker.
+        let mut mlp = mlp;
+        mlp.set_weights(MlpWeights::init(4));
+        let third = stage_installs(&pool, 0..4, &mlp).unwrap();
+        assert_eq!(
+            third.staged_workers(),
+            expected,
+            "one re-clone per worker per set_weights"
+        );
+    }
+
+    #[test]
+    fn equal_epochs_from_different_engines_do_not_share_caches() {
+        // NativeMlp and the oracle can never collide (instance-unique
+        // vs 0 epochs), but two stateless engine TYPES both report
+        // epoch 0 — the identity tag must force a restage.
+        let pool = WorkerPool::new(2);
+        let oracle = OraclePredictor;
+        assert_eq!(oracle.weight_epoch(), 0);
+        let first = stage_installs(&pool, 0..4, &oracle).unwrap();
+        assert!(!first.staged_workers().is_empty());
+        // Same engine again: cache hit.
+        assert!(stage_installs(&pool, 0..4, &oracle)
+            .unwrap()
+            .staged_workers()
+            .is_empty());
+        // A different engine type at the same epoch: NOT a hit.
+        struct OtherOracle;
+        impl EnergyPredictor for OtherOracle {
+            fn name(&self) -> &'static str {
+                "other-oracle"
+            }
+            fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+                OraclePredictor.predict(feats)
+            }
+            fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+                Some(Box::new(OtherOracle))
+            }
+        }
+        let other = OtherOracle;
+        assert_eq!(other.weight_epoch(), 0, "same epoch as the oracle");
+        let restaged = stage_installs(&pool, 0..4, &other).unwrap();
+        assert_eq!(
+            restaged.staged_workers(),
+            affinity_workers(&pool, 0..4),
+            "equal epoch but different engine must restage every worker"
+        );
+    }
+
+    #[test]
+    fn fetch_installs_then_reuses() {
+        let pool = WorkerPool::new(2);
+        let mlp = NativeMlp::new(MlpWeights::init(7));
+        let mut staged = stage_installs(&pool, std::iter::once(0), &mlp).unwrap();
+        let epoch = staged.epoch;
+        let worker = pool.worker_for(0);
+        // Two jobs on the same worker: the first carries the install,
+        // the second reuses the cached state.
+        let jobs: Vec<_> = (0..2)
+            .map(|j| {
+                let install = if j == 0 { staged.take(worker) } else { None };
+                (0usize, move |slot: &mut WorkerSlot| {
+                    WorkerScore::fetch(slot, epoch, install).predictor.name()
+                })
+            })
+            .collect();
+        let out = pool.dispatch(jobs).unwrap();
+        assert_eq!(out, vec!["native-mlp", "native-mlp"]);
+    }
+}

@@ -1,10 +1,18 @@
-//! Parallel shard workers: serial/parallel equivalence properties.
+//! Parallel shard workers: serial/parallel equivalence properties,
+//! against the **persistent** `runtime::WorkerPool` (long-lived
+//! threads, epoch-cached per-worker predictor clones, shard
+//! affinity).
 //!
 //! The worker pool may only change *latency*, never decisions:
 //!
 //! * `decide_batch` is bit-identical between `worker_threads = 1`
 //!   (the serial oracle) and widths {2, 3, 8}, over randomized
-//!   sharded clusters at shard counts {1, 4, 16}.
+//!   sharded clusters at shard counts {1, 4, 16} — including when a
+//!   mid-campaign `set_weights` lands between fan-outs on the same
+//!   long-lived pool (the weight-epoch invalidation property).
+//! * A worker re-clones the predictor exactly once per `set_weights`,
+//!   not once per fan-out, and a stale clone is never scored against
+//!   new weights.
 //! * Consolidation plans (migrations + power-offs) are bit-identical
 //!   across the same widths — the gather/score phases parallelize,
 //!   the planned-load selection merge stays serial in shard order.
@@ -16,9 +24,9 @@
 use ecosched::cluster::flavor::CATALOG;
 use ecosched::cluster::{Cluster, Demand, HostId, ShardedCluster, VmId};
 use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
-use ecosched::predict::{MlpWeights, NativeMlp, OraclePredictor};
-use ecosched::profile::ResourceVector;
-use ecosched::runtime::ShardPool;
+use ecosched::predict::{EnergyPredictor, MlpWeights, NativeMlp, OraclePredictor, Prediction};
+use ecosched::profile::{ResourceVector, FEAT_DIM};
+use ecosched::runtime::WorkerPool;
 use ecosched::sched::{
     ConsolidationParams, Consolidator, ControlAction, ControlLoop, EnergyAware,
     EnergyAwareParams, PlacementPolicy, PlacementRequest, PowerCapLoop, PowerCapParams,
@@ -28,6 +36,8 @@ use ecosched::sim::Telemetry;
 use ecosched::util::rng::Xoshiro256;
 use ecosched::workload::{flavor_for, Arrivals, JobId, Mix, TraceSpec};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 fn for_all_seeds(n: u64, f: impl Fn(u64)) {
     for seed in 1..=n {
@@ -100,10 +110,25 @@ fn requests(n: usize, seed: u64) -> Vec<PlacementRequest> {
     .collect()
 }
 
+/// Params for the pool properties: dispatch is forced (the
+/// small-burst inline fast path is serial by construction, so it
+/// would bypass what these tests exercise) and the Eq. 7 slowdown
+/// gate is effectively disabled — untrained random MLPs predict
+/// large slowdowns, and with the default gate every decision would
+/// collapse to the weight-INsensitive boot fallback, making the
+/// weight-epoch properties vacuous.
+fn pool_test_params() -> EnergyAwareParams {
+    EnergyAwareParams {
+        inline_burst_rows: 0,
+        max_slowdown: 1e9,
+        ..Default::default()
+    }
+}
+
 fn mlp_policy(seed: u64) -> EnergyAware {
     EnergyAware::new(
         Box::new(NativeMlp::new(MlpWeights::init(seed))),
-        EnergyAwareParams::default(),
+        pool_test_params(),
     )
 }
 
@@ -119,7 +144,7 @@ fn prop_parallel_decide_batch_is_bit_identical_to_serial() {
             let serial_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
             let serial = mlp_policy(seed).decide_batch(&reqs, &serial_ctx);
             for &workers in &[2usize, 3, 8] {
-                let pool = ShardPool::new(workers);
+                let pool = WorkerPool::new(workers);
                 let ctx = ScheduleContext::new(0.0, &sc)
                     .with_shards(&sc)
                     .with_pool(&pool);
@@ -173,7 +198,7 @@ fn prop_parallel_consolidation_plan_is_bit_identical_to_serial() {
             let sc = ShardedCluster::new(cluster, shards);
             let (t, ctxs) = scan_inputs(&sc);
             let scan_with = |workers: usize| -> Vec<ControlAction> {
-                let pool = ShardPool::new(workers);
+                let pool = WorkerPool::new(workers);
                 let mut cons = Consolidator::new(ConsolidationParams::default());
                 // Oracle: deterministic, cloneable, and SLA-safe on
                 // quiet targets, so the migration path is actually
@@ -215,7 +240,7 @@ fn prop_parallel_power_cap_actions_are_bit_identical_to_serial() {
         // Three rounds with actuation between scans exercises
         // throttle, ceiling re-assert, and restore paths.
         let rounds_with = |workers: usize| -> Vec<Vec<ControlAction>> {
-            let pool = ShardPool::new(workers);
+            let pool = WorkerPool::new(workers);
             let mut sc = ShardedCluster::new(base.clone(), 16);
             let mut cap = PowerCapLoop::new(PowerCapParams {
                 budget_w: budget,
@@ -277,4 +302,152 @@ fn campaign_is_bit_identical_across_worker_counts() {
     assert_eq!(serial.migrations, wide.migrations);
     assert_eq!(serial.sla_violations, wide.sla_violations);
     assert_eq!(serial.final_digests.len(), wide.final_digests.len());
+}
+
+/// A predictor whose weights can be swapped mid-test through a shared
+/// handle (the policy owns one end, the test keeps the other) and
+/// whose `try_clone` calls are counted — the instrumentation for the
+/// weight-epoch invalidation properties. Clones are weight snapshots
+/// (plain `NativeMlp`s), so they carry the epoch of the weights they
+/// were cut from, exactly like a production clone.
+struct SharedMlp {
+    inner: Arc<Mutex<NativeMlp>>,
+    clones: Arc<AtomicU64>,
+}
+
+impl EnergyPredictor for SharedMlp {
+    fn name(&self) -> &'static str {
+        "shared-mlp"
+    }
+
+    fn predict(&mut self, feats: &[[f32; FEAT_DIM]]) -> Vec<Prediction> {
+        self.inner.lock().unwrap().predict(feats)
+    }
+
+    fn predict_into(&mut self, feats: &[[f32; FEAT_DIM]], out: &mut Vec<Prediction>) {
+        self.inner.lock().unwrap().predict_into(feats, out)
+    }
+
+    fn try_clone(&self) -> Option<Box<dyn EnergyPredictor + Send>> {
+        self.clones.fetch_add(1, Ordering::Relaxed);
+        Some(Box::new(self.inner.lock().unwrap().clone()))
+    }
+
+    fn weight_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().weight_epoch()
+    }
+}
+
+fn shared_policy(
+    handle: &Arc<Mutex<NativeMlp>>,
+    clones: &Arc<AtomicU64>,
+) -> EnergyAware {
+    EnergyAware::new(
+        Box::new(SharedMlp {
+            inner: Arc::clone(handle),
+            clones: Arc::clone(clones),
+        }),
+        pool_test_params(),
+    )
+}
+
+#[test]
+fn prop_set_weights_between_fanouts_is_bit_identical_at_any_width() {
+    use ecosched::sched::Decision;
+    let mut saw_weight_sensitivity = false;
+    for &shards in &[1usize, 4] {
+        for seed in 1..=4u64 {
+            let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xE90C ^ shards as u64);
+            let n_hosts = 16 + rng.range(0, 17);
+            let sc = ShardedCluster::new(random_cluster(&mut rng, n_hosts), shards);
+            let burst_a = requests(10, seed);
+            let burst_b = requests(10, seed ^ 0x55);
+            let (w1, w2) = (seed * 2 + 1, seed * 2 + 1000);
+            // One run = two fan-outs with a set_weights between them,
+            // all against the SAME long-lived pool, so widths > 1
+            // must invalidate their cached clones to agree with the
+            // serial oracle.
+            let run = |workers: usize| -> (Vec<Decision>, Vec<Decision>) {
+                let pool = WorkerPool::new(workers);
+                let handle = Arc::new(Mutex::new(NativeMlp::new(MlpWeights::init(w1))));
+                let clones = Arc::new(AtomicU64::new(0));
+                let mut policy = shared_policy(&handle, &clones);
+                let ctx = ScheduleContext::new(0.0, &sc)
+                    .with_shards(&sc)
+                    .with_pool(&pool);
+                let a = policy.decide_batch(&burst_a, &ctx);
+                handle.lock().unwrap().set_weights(MlpWeights::init(w2));
+                let b = policy.decide_batch(&burst_b, &ctx);
+                (a, b)
+            };
+            let serial = run(1);
+            for &workers in &[2usize, 3, 8] {
+                assert_eq!(
+                    serial,
+                    run(workers),
+                    "seed {seed} shards {shards} workers {workers}"
+                );
+            }
+            // Non-vacuity: scoring burst B with the STALE weights
+            // must change some decision on some scenario, otherwise
+            // the invalidation property proves nothing.
+            let stale_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+            let stale = mlp_policy(w1).decide_batch(&burst_b, &stale_ctx);
+            saw_weight_sensitivity |= stale != serial.1;
+        }
+    }
+    assert!(
+        saw_weight_sensitivity,
+        "no scenario was weight-sensitive — the set_weights property is vacuous"
+    );
+}
+
+#[test]
+fn worker_reclones_once_per_set_weights_not_per_fanout() {
+    // 4 shards, K = shard_count: every fan-out dispatches all four
+    // shards, whose stable affinity workers on a width-2 pool are the
+    // expected clone targets.
+    let mut rng = Xoshiro256::seed_from_u64(0xC10E5);
+    let sc = ShardedCluster::new(random_cluster(&mut rng, 24), 4);
+    let reqs = requests(8, 3);
+    let pool = WorkerPool::new(2);
+    let affinity_workers = (0..4)
+        .map(|s| pool.worker_for(s))
+        .collect::<std::collections::BTreeSet<_>>()
+        .len() as u64;
+    assert!(affinity_workers >= 1);
+    let handle = Arc::new(Mutex::new(NativeMlp::new(MlpWeights::init(9))));
+    let clones = Arc::new(AtomicU64::new(0));
+    let mut policy = shared_policy(&handle, &clones);
+    let ctx = ScheduleContext::new(0.0, &sc)
+        .with_shards(&sc)
+        .with_pool(&pool);
+    for _ in 0..3 {
+        policy.decide_batch(&reqs, &ctx);
+    }
+    assert_eq!(
+        clones.load(Ordering::Relaxed),
+        affinity_workers,
+        "one clone per participating worker on first use, then cache hits"
+    );
+    handle.lock().unwrap().set_weights(MlpWeights::init(10));
+    for _ in 0..2 {
+        policy.decide_batch(&reqs, &ctx);
+    }
+    assert_eq!(
+        clones.load(Ordering::Relaxed),
+        2 * affinity_workers,
+        "exactly one re-clone per worker per set_weights, not per fan-out"
+    );
+    // And the re-cloned workers score the NEW weights: pooled
+    // decisions equal a fresh serial policy built directly on them.
+    let pooled = policy.decide_batch(&reqs, &ctx);
+    let serial_ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+    let fresh = mlp_policy(10).decide_batch(&reqs, &serial_ctx);
+    assert_eq!(pooled, fresh, "a stale clone must never score against new weights");
+    assert_eq!(
+        clones.load(Ordering::Relaxed),
+        2 * affinity_workers,
+        "the extra fan-out hit the cache"
+    );
 }
