@@ -1,34 +1,40 @@
 //! Bench: end-to-end campaign throughput (simulated-hours per wall
 //! second) for both schedulers — the engine behind Tables 1/2/Fig 3.
+//! Emits `BENCH_e2e_campaign.json` for CI's bench gate
+//! (`benches/compare.py`).
 
 use ecosched::coordinator::make_policy;
 use ecosched::exp::common::{run_campaign, standard_trace};
-use ecosched::util::bench::{bench_header, Bench};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
 use ecosched::workload::Mix;
 
 fn main() {
     bench_header("e2e_campaign");
+    let mut report = JsonReport::new("e2e_campaign");
+    let (n_jobs, samples) = if short_mode() { (10, 3) } else { (24, 8) };
     for policy in ["round_robin", "best_fit", "energy_aware"] {
-        let r = Bench::new(&format!("campaign/{policy}/24-jobs/5-hosts"))
+        let r = Bench::new(&format!("campaign/{policy}/5-hosts"))
             .warmup(1)
-            .samples(8)
+            .samples(samples)
             .iters(1)
             .run(|| {
-                let trace = standard_trace(Mix::paper(), 24, 1);
+                let trace = standard_trace(Mix::paper(), n_jobs, 1);
                 let report = run_campaign(make_policy(policy).unwrap(), trace, 1, 5);
                 std::hint::black_box(report.energy_j);
             });
         r.print();
+        report.record_with(&r, &[("jobs", n_jobs as f64), ("hosts", 5.0)]);
     }
     // Simulated-time speedup factor for the default campaign.
-    let trace = standard_trace(Mix::paper(), 24, 1);
+    let trace = standard_trace(Mix::paper(), n_jobs, 1);
     let t0 = std::time::Instant::now();
-    let report = run_campaign(make_policy("energy_aware").unwrap(), trace, 1, 5);
+    let run = run_campaign(make_policy("energy_aware").unwrap(), trace, 1, 5);
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "sim speedup: {:.0}× realtime ({} simulated in {:.2} s wall)",
-        report.makespan / wall,
-        ecosched::util::table::fmt_dur(report.makespan),
+        run.makespan / wall,
+        ecosched::util::table::fmt_dur(run.makespan),
         wall
     );
+    report.write().expect("write BENCH_e2e_campaign.json");
 }

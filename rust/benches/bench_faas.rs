@@ -1,0 +1,60 @@
+//! Bench: serverless front-end throughput — invocations per wall
+//! second for a full campaign replay of a Burr-sampled
+//! Azure-2021-shaped trace through the FaaS path (cold starts, warm
+//! pool claims, keep-alive expiry scans) at fleet sizes {1k, 10k}.
+//! Emits `BENCH_faas.json` for CI's bench gate (`benches/compare.py`).
+
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
+use ecosched::workload::faas::FaasConfig;
+use ecosched::workload::FaasTraceSpec;
+
+fn main() {
+    bench_header("faas");
+    let mut report = JsonReport::new("faas");
+    let (n_invocations, samples) = if short_mode() { (2_000, 3) } else { (20_000, 5) };
+
+    for &n_hosts in &[1_000usize, 10_000] {
+        let spec = FaasTraceSpec {
+            n_functions: 200,
+            n_invocations,
+            ..Default::default()
+        };
+        let trace = spec.generate(1);
+        let shard_count = if n_hosts >= 10_000 { 64 } else { 16 };
+        let r = Bench::new(&format!("faas/replay/{n_hosts}-hosts"))
+            .warmup(1)
+            .samples(samples)
+            .iters(1)
+            .run(|| {
+                let mut coord = Coordinator::new(
+                    CampaignConfig {
+                        n_hosts,
+                        shard_count,
+                        seed: 1,
+                        faas: Some(FaasConfig::default()),
+                        ..Default::default()
+                    },
+                    make_policy("round_robin").unwrap(),
+                );
+                let rep = coord.run(trace.clone());
+                assert_eq!(
+                    rep.cold_starts + rep.warm_starts,
+                    n_invocations as u64,
+                    "every invocation must resolve cold or warm"
+                );
+                std::hint::black_box(rep.cold_start_rate());
+            });
+        r.print_throughput("invocations", n_invocations as f64);
+        report.record_with(
+            &r,
+            &[
+                ("hosts", n_hosts as f64),
+                ("invocations", n_invocations as f64),
+                ("inv_per_s", n_invocations as f64 / r.per_iter.mean),
+            ],
+        );
+    }
+
+    report.write().expect("write BENCH_faas.json");
+}

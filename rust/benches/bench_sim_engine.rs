@@ -1,15 +1,19 @@
 //! Bench: simulation substrate — event queue, power model, energy
-//! meter, telemetry (Fig. 1's engine and everything above it).
+//! meter, telemetry (Fig. 1's engine and everything above it). Emits
+//! `BENCH_sim_engine.json` for CI's bench gate (`benches/compare.py`).
 
 use ecosched::cluster::{Cluster, Demand, HostId};
 use ecosched::sim::{EnergyMeter, EventQueue, Telemetry};
-use ecosched::util::bench::{bench_header, Bench};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
 use std::collections::BTreeMap;
 
 fn main() {
     bench_header("sim_engine");
+    let mut report = JsonReport::new("sim_engine");
+    let samples = if short_mode() { 6 } else { 20 };
 
-    Bench::new("event-queue push+pop (1k events)")
+    let r = Bench::new("event-queue push+pop (1k events)")
+        .samples(samples)
         .run(|| {
             let mut q = EventQueue::new();
             for i in 0..1000u32 {
@@ -18,8 +22,9 @@ fn main() {
             while let Some(e) = q.pop() {
                 std::hint::black_box(e);
             }
-        })
-        .print();
+        });
+    r.print();
+    report.record_with(&r, &[("events", 1000.0)]);
 
     let mut cluster = Cluster::homogeneous(5);
     for i in 0..5 {
@@ -30,20 +35,24 @@ fn main() {
             net_mbps: 30.0,
         };
     }
-    Bench::new("cluster total_power (5 hosts)")
+    let r = Bench::new("cluster total_power (5 hosts)")
+        .samples(samples)
         .run(|| {
             std::hint::black_box(cluster.total_power());
-        })
-        .print();
+        });
+    r.print();
+    report.record_with(&r, &[("hosts", 5.0)]);
 
     let mut meter = EnergyMeter::new(5, 1, 0.01);
     let mut t = 0.0;
-    Bench::new("energy meter sample (5 hosts, noisy)")
+    let r = Bench::new("energy meter sample (5 hosts, noisy)")
+        .samples(samples)
         .run(|| {
             t += 1.0;
             meter.sample(t, &cluster);
-        })
-        .print();
+        });
+    r.print();
+    report.record_with(&r, &[("hosts", 5.0)]);
 
     let mut telemetry = Telemetry::new(5, 1, 0.02);
     let demands: BTreeMap<_, _> = cluster
@@ -52,24 +61,30 @@ fn main() {
         .map(|&vm| (vm, Demand::ZERO))
         .collect();
     let mut ts = 0.0;
-    Bench::new("telemetry sample (5 hosts)")
+    let r = Bench::new("telemetry sample (5 hosts)")
+        .samples(samples)
         .run(|| {
             ts += 5.0;
             telemetry.sample(ts, &cluster, &demands);
-        })
-        .print();
+        });
+    r.print();
+    report.record_with(&r, &[("hosts", 5.0)]);
 
     // One full simulated tick equivalent (power states + demands +
     // meter): the per-second cost of the coordinator loop.
     let mut meter2 = EnergyMeter::new(5, 2, 0.01);
     let mut tk = 0.0;
-    Bench::new("full tick equivalent (5 hosts)")
+    let r = Bench::new("full tick equivalent (5 hosts)")
+        .samples(samples)
         .run(|| {
             tk += 1.0;
             cluster.advance_power_states(tk);
             let d = BTreeMap::new();
             cluster.apply_demands(&d);
             meter2.sample(tk, &cluster);
-        })
-        .print();
+        });
+    r.print();
+    report.record_with(&r, &[("hosts", 5.0)]);
+
+    report.write().expect("write BENCH_sim_engine.json");
 }

@@ -26,6 +26,9 @@ Refreshing baselines (run on the reference machine — CI's runner class
     BENCH_SHORT=1 cargo bench --bench bench_placement_path
     BENCH_SHORT=1 cargo bench --bench bench_scale
     BENCH_SHORT=1 cargo bench --bench bench_pool
+    BENCH_SHORT=1 cargo bench --bench bench_e2e_campaign
+    BENCH_SHORT=1 cargo bench --bench bench_sim_engine
+    BENCH_SHORT=1 cargo bench --bench bench_faas
     python3 benches/compare.py --update
     git add benches/baseline && git commit
 
@@ -37,7 +40,16 @@ import os
 import shutil
 import sys
 
-GROUPS = ["predict", "consolidation", "placement_path", "scale", "pool"]
+GROUPS = [
+    "predict",
+    "consolidation",
+    "placement_path",
+    "scale",
+    "pool",
+    "e2e_campaign",
+    "sim_engine",
+    "faas",
+]
 WALL_TOLERANCE = 1.25  # fail when mean_s exceeds baseline by >25 %
 ROWS_EPS = 1e-6  # float slack on the exact rows/decision comparison
 

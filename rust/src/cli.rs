@@ -143,7 +143,7 @@ COMMANDS:
                           --seed <n>         RNG seed (default 42)
                           --hours <h>        simulated campaign length (default 2)
     experiment <id>     Reproduce a paper table/figure:
-                          fig1 fig2 fig3 table1 table2 table3 table4 table5
+                          fig1 fig2 fig3 fig4 table1 table2 table3 table4 table5
                           abl1 abl2 abl3 scale all
                           --seeds 1,2,3      seeds to average (default 3 seeds)
                           --out <dir>        CSV output dir (default results/)

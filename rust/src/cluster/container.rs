@@ -1,0 +1,75 @@
+//! Per-host container slots for the serverless workload family.
+//!
+//! A function invocation runs inside a sandbox (container) on its
+//! host. If no warm sandbox for the function exists, the invocation
+//! pays a *cold start*: the sandbox boots for a latency window during
+//! which the host draws extra power but the invocation makes no
+//! progress — the container-scale analogue of the host-level
+//! `BOOT_SECS` boot in [`crate::cluster::power`]. When an invocation
+//! completes, its sandbox is parked *warm* for a keep-alive window
+//! (set per function by a [`crate::workload::faas::KeepAlivePolicy`])
+//! and the next invocation of the same function can claim it and skip
+//! the cold start. Warm sandboxes hold their memory footprint, which
+//! feeds the host's memory utilization and hence the β term of the
+//! power model — keeping containers warm is not free.
+
+use crate::workload::faas::FunctionId;
+
+/// Extra draw (W) a host pays per in-flight container cold start —
+/// the sandbox image pull + runtime boot powering through its window
+/// before useful work, mirroring `p_transition` during host boots but
+/// at container scale.
+pub const CONTAINER_BOOT_W: f64 = 20.0;
+
+/// Sandbox lifecycle. There is no `Busy` state: a warm sandbox is
+/// *claimed* (removed from the pool) when an invocation reuses it —
+/// the running VM then accounts for all of its resources — and parked
+/// back warm when the invocation completes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ContainerState {
+    /// Cold start in progress until the given simulation time; the
+    /// host draws [`CONTAINER_BOOT_W`] extra watts meanwhile.
+    Booting { until: f64 },
+    /// Idle warm sandbox, reusable until its keep-alive expiry.
+    Warm { expires_at: f64 },
+}
+
+/// One sandbox slot on a host.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Container {
+    pub function: FunctionId,
+    /// Resident memory the sandbox holds (GB) — charged to the host's
+    /// memory utilization while booting or warm.
+    pub mem_gb: f64,
+    pub state: ContainerState,
+}
+
+impl Container {
+    pub fn is_warm(&self) -> bool {
+        matches!(self.state, ContainerState::Warm { .. })
+    }
+
+    pub fn is_booting(&self) -> bool {
+        matches!(self.state, ContainerState::Booting { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_predicates() {
+        let c = Container {
+            function: FunctionId(3),
+            mem_gb: 0.5,
+            state: ContainerState::Warm { expires_at: 10.0 },
+        };
+        assert!(c.is_warm() && !c.is_booting());
+        let b = Container {
+            state: ContainerState::Booting { until: 2.0 },
+            ..c
+        };
+        assert!(b.is_booting() && !b.is_warm());
+    }
+}

@@ -43,10 +43,25 @@ pub const LARGE: Flavor = Flavor {
     net_mbps: 90.0,
 };
 
+/// Serverless function sandbox size — one vCPU, Lambda-style memory
+/// cap. Deliberately *not* in [`CATALOG`]: the catalog is the VM
+/// bin-packing menu for the batch families; FaaS invocations always
+/// use exactly this slot via `workload::flavor_for`.
+pub const FAAS: Flavor = Flavor {
+    name: "faas",
+    vcpus: 1.0,
+    mem_gb: 1.0,
+    disk_mbps: 20.0,
+    net_mbps: 10.0,
+};
+
 pub const CATALOG: [Flavor; 3] = [SMALL, MEDIUM, LARGE];
 
 impl Flavor {
     pub fn by_name(name: &str) -> Option<Flavor> {
+        if name == FAAS.name {
+            return Some(FAAS);
+        }
         CATALOG.iter().copied().find(|f| f.name == name)
     }
 }
@@ -58,7 +73,17 @@ mod tests {
     #[test]
     fn catalog_lookup() {
         assert_eq!(Flavor::by_name("medium").unwrap().vcpus, 8.0);
+        assert_eq!(Flavor::by_name("faas").unwrap().vcpus, 1.0);
         assert!(Flavor::by_name("xxl").is_none());
+    }
+
+    #[test]
+    fn faas_slot_packs_densely() {
+        // A 32-core/64 GB host should fit dozens of function slots —
+        // the point of the serverless family is high invocation rates.
+        assert!(32.0 / FAAS.vcpus >= 32.0);
+        assert!(64.0 / FAAS.mem_gb >= 64.0);
+        assert!(!CATALOG.iter().any(|f| f.name == FAAS.name));
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! power-state machine. Host state `R_h = (U_cpu, U_mem, U_io)` (Eq. 3)
 //! is derived here from the demands of resident VMs.
 
+use crate::cluster::container::{Container, ContainerState, CONTAINER_BOOT_W};
 use crate::cluster::power::{snap_to_pstate, PowerModel, PowerState, BOOT_SECS, SHUTDOWN_SECS};
 use crate::cluster::vm::VmId;
 use crate::cluster::Demand;
+use crate::workload::faas::FunctionId;
 
 /// Stable host identifier (dense index into the cluster).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -85,6 +87,9 @@ pub struct Host {
     pub migration_net: f64,
     /// Cumulative count of power cycles (for reports).
     pub power_cycles: u32,
+    /// Serverless sandbox slots (booting cold starts + warm pool).
+    /// Empty unless the campaign runs the FaaS workload family.
+    pub containers: Vec<Container>,
 }
 
 impl Host {
@@ -98,6 +103,7 @@ impl Host {
             demand: Demand::ZERO,
             migration_net: 0.0,
             power_cycles: 0,
+            containers: Vec::new(),
         }
     }
 
@@ -113,7 +119,9 @@ impl Host {
         let cpu_cap = cap.cpu * self.freq;
         Utilization {
             cpu: (self.demand.cpu / cpu_cap).min(1.0),
-            mem: (self.demand.mem_gb / cap.mem_gb).min(1.0),
+            // Parked/booting sandboxes hold memory even with no VM
+            // demanding it — the energy cost of a warm pool.
+            mem: ((self.demand.mem_gb + self.container_mem_gb()) / cap.mem_gb).min(1.0),
             disk: (self.demand.disk_mbps / cap.disk_mbps).min(1.0),
             net: ((self.demand.net_mbps + self.migration_net) / cap.net_mbps).min(1.0),
         }
@@ -139,15 +147,20 @@ impl Host {
         )
     }
 
-    /// Instantaneous power draw (W) — Eq. 5 through the state machine.
+    /// Instantaneous power draw (W) — Eq. 5 through the state machine,
+    /// plus the boot draw of any container cold starts in flight.
     pub fn power(&self) -> f64 {
         let u = self.utilization();
-        self.state
-            .power(&self.spec.power, || {
-                self.spec
-                    .power
-                    .active_power(u.cpu, u.mem, u.io(), self.freq)
-            })
+        let base = self.state.power(&self.spec.power, || {
+            self.spec
+                .power
+                .active_power(u.cpu, u.mem, u.io(), self.freq)
+        });
+        if self.state.is_on() {
+            base + CONTAINER_BOOT_W * self.booting_count() as f64
+        } else {
+            base
+        }
     }
 
     /// Amortized share of the idle power floor a new tenant on this
@@ -190,6 +203,8 @@ impl Host {
     }
 
     /// Begin shutting down at `now`; only legal with no resident VMs.
+    /// Any parked sandboxes die with the host (caller keeps the shard
+    /// digest in sync via [`Host::warm_count`] taken beforehand).
     pub fn power_off(&mut self, now: f64) {
         assert!(
             self.vms.is_empty(),
@@ -200,12 +215,85 @@ impl Host {
             self.state = PowerState::ShuttingDown {
                 until: now + SHUTDOWN_SECS,
             };
+            self.containers.clear();
         }
     }
 
     /// Set the DVFS point to the nearest catalog p-state.
     pub fn set_freq(&mut self, target: f64) {
         self.freq = snap_to_pstate(target);
+    }
+
+    // --- serverless sandbox slots -------------------------------------
+
+    /// Claim (remove) a warm sandbox for `function`, if one exists.
+    pub fn claim_warm(&mut self, function: FunctionId) -> bool {
+        let hit = self
+            .containers
+            .iter()
+            .position(|c| c.is_warm() && c.function == function);
+        match hit {
+            Some(i) => {
+                self.containers.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Install a sandbox cold-starting until `until`.
+    pub fn install_booting(&mut self, function: FunctionId, mem_gb: f64, until: f64) {
+        self.containers.push(Container {
+            function,
+            mem_gb,
+            state: ContainerState::Booting { until },
+        });
+    }
+
+    /// Park a sandbox warm until its keep-alive window `expires_at`.
+    pub fn park_warm(&mut self, function: FunctionId, mem_gb: f64, expires_at: f64) {
+        self.containers.push(Container {
+            function,
+            mem_gb,
+            state: ContainerState::Warm { expires_at },
+        });
+    }
+
+    /// Drop warm sandboxes whose keep-alive window has passed; returns
+    /// how many were removed. Idempotent — safe to re-run on a stale
+    /// scan result.
+    pub fn expire_warm(&mut self, now: f64) -> usize {
+        let before = self.containers.len();
+        self.containers
+            .retain(|c| !matches!(c.state, ContainerState::Warm { expires_at } if expires_at <= now));
+        before - self.containers.len()
+    }
+
+    /// Retire cold starts whose boot window has completed — the
+    /// invocation's VM accounts for the sandbox from here on.
+    pub fn advance_containers(&mut self, now: f64) {
+        self.containers
+            .retain(|c| !matches!(c.state, ContainerState::Booting { until } if now >= until));
+    }
+
+    /// Any warm sandbox past its keep-alive expiry?
+    pub fn has_expired_warm(&self, now: f64) -> bool {
+        self.containers
+            .iter()
+            .any(|c| matches!(c.state, ContainerState::Warm { expires_at } if expires_at <= now))
+    }
+
+    pub fn warm_count(&self) -> usize {
+        self.containers.iter().filter(|c| c.is_warm()).count()
+    }
+
+    pub fn booting_count(&self) -> usize {
+        self.containers.iter().filter(|c| c.is_booting()).count()
+    }
+
+    /// Memory held by sandboxes (GB), warm and booting alike.
+    pub fn container_mem_gb(&self) -> f64 {
+        self.containers.iter().map(|c| c.mem_gb).sum()
     }
 }
 
@@ -366,5 +454,49 @@ mod tests {
         let mut h = host();
         h.migration_net = 58.5;
         assert!((h.utilization().net - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_claim_hits_only_matching_function() {
+        let mut h = host();
+        h.park_warm(FunctionId(1), 0.5, 100.0);
+        assert!(!h.claim_warm(FunctionId(2)));
+        assert!(h.claim_warm(FunctionId(1)));
+        assert!(!h.claim_warm(FunctionId(1))); // pool drained
+        assert_eq!(h.warm_count(), 0);
+    }
+
+    #[test]
+    fn booting_container_draws_extra_power_and_holds_memory() {
+        let mut h = host();
+        let idle = h.power();
+        h.install_booting(FunctionId(0), 1.0, 2.0);
+        assert!((h.power() - idle - CONTAINER_BOOT_W) > 0.0);
+        assert!(h.utilization().mem > 0.0);
+        // Boot completes: sandbox handed to the VM, draw stops.
+        h.advance_containers(2.0);
+        assert_eq!(h.booting_count(), 0);
+        assert!((h.power() - idle).abs() < CONTAINER_BOOT_W);
+    }
+
+    #[test]
+    fn expire_warm_is_idempotent_and_time_gated() {
+        let mut h = host();
+        h.park_warm(FunctionId(1), 0.25, 50.0);
+        h.park_warm(FunctionId(2), 0.25, 80.0);
+        assert!(!h.has_expired_warm(40.0));
+        assert_eq!(h.expire_warm(40.0), 0);
+        assert!(h.has_expired_warm(60.0));
+        assert_eq!(h.expire_warm(60.0), 1);
+        assert_eq!(h.expire_warm(60.0), 0);
+        assert_eq!(h.warm_count(), 1);
+    }
+
+    #[test]
+    fn power_off_drops_the_warm_pool() {
+        let mut h = host();
+        h.park_warm(FunctionId(9), 0.5, 1e9);
+        h.power_off(0.0);
+        assert!(h.containers.is_empty());
     }
 }

@@ -2,6 +2,7 @@
 //! placement/migration state machine — the simulated stand-in for the
 //! paper's five-node KVM/OpenStack testbed.
 
+pub mod container;
 pub mod flavor;
 pub mod host;
 pub mod index;
@@ -9,6 +10,7 @@ pub mod power;
 pub mod shard;
 pub mod vm;
 
+pub use container::{Container, ContainerState, CONTAINER_BOOT_W};
 pub use flavor::Flavor;
 pub use host::{Host, HostId, HostSpec, Utilization};
 pub use index::HostView;
@@ -297,10 +299,12 @@ impl Cluster {
         }
     }
 
-    /// Advance power-state machines to `now`.
+    /// Advance power-state machines to `now`, retiring completed
+    /// container cold starts along the way (same clock, same sweep).
     pub fn advance_power_states(&mut self, now: f64) {
         for h in &mut self.hosts {
             h.state = h.state.advance(now);
+            h.advance_containers(now);
         }
     }
 

@@ -117,6 +117,9 @@ pub struct ShardDigest {
     /// Expected load split by Eq. 2 workload class
     /// (see [`class_index`]).
     pub per_class: [Demand; N_LOAD_CLASSES],
+    /// Warm serverless sandboxes parked on member hosts — the shard's
+    /// reuse potential (and idle-memory cost) for FaaS load.
+    pub warm_containers: usize,
 }
 
 impl ShardDigest {
@@ -141,6 +144,7 @@ impl ShardDigest {
             }
             d.reserved.add(cluster.reserved(h));
             d.expected.add(&cluster.expected_load(h));
+            d.warm_containers += host.warm_count();
         }
         for vm in cluster.vms.values() {
             let (resident, incoming) = match vm.state {
@@ -428,11 +432,14 @@ impl ShardedCluster {
     pub fn power_off(&mut self, host: HostId, now: f64) {
         let was_accepting = self.cluster.hosts[host.0].state.accepts_vms();
         let cap = self.cluster.hosts[host.0].spec.capacity();
+        let warm = self.cluster.hosts[host.0].warm_count();
         self.cluster.host_mut(host).power_off(now);
         if was_accepting && !self.cluster.hosts[host.0].state.accepts_vms() {
             let d = &mut self.digests[self.map.shard_of(host)];
             d.on -= 1;
             d.capacity_on.sub(&cap);
+            // The host's sandbox pool died with it.
+            d.warm_containers -= warm;
         }
     }
 
@@ -440,6 +447,59 @@ impl ShardedCluster {
     /// capacity aggregates are nominal).
     pub fn set_freq(&mut self, host: HostId, freq: f64) {
         self.cluster.host_mut(host).set_freq(freq);
+    }
+
+    // ---- serverless sandbox handles ----------------------------------
+
+    /// Claim a warm sandbox for `function` on `host`; true on a warm
+    /// hit (the sandbox leaves the pool and the digest's warm count).
+    pub fn claim_warm_container(
+        &mut self,
+        host: HostId,
+        function: crate::workload::faas::FunctionId,
+    ) -> bool {
+        if self.cluster.host_mut(host).claim_warm(function) {
+            self.digests[self.map.shard_of(host)].warm_containers -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Install a cold-starting sandbox (not warm: no digest change
+    /// until it completes an invocation and parks).
+    pub fn install_booting_container(
+        &mut self,
+        host: HostId,
+        function: crate::workload::faas::FunctionId,
+        mem_gb: f64,
+        until: f64,
+    ) {
+        self.cluster
+            .host_mut(host)
+            .install_booting(function, mem_gb, until);
+    }
+
+    /// Park a sandbox warm until `expires_at`.
+    pub fn park_warm_container(
+        &mut self,
+        host: HostId,
+        function: crate::workload::faas::FunctionId,
+        mem_gb: f64,
+        expires_at: f64,
+    ) {
+        self.cluster
+            .host_mut(host)
+            .park_warm(function, mem_gb, expires_at);
+        self.digests[self.map.shard_of(host)].warm_containers += 1;
+    }
+
+    /// Evict expired warm sandboxes on `host`; returns how many died.
+    /// Idempotent, so actuating a stale scan result is harmless.
+    pub fn expire_containers(&mut self, host: HostId, now: f64) -> usize {
+        let n = self.cluster.host_mut(host).expire_warm(now);
+        self.digests[self.map.shard_of(host)].warm_containers -= n;
+        n
     }
 
     /// Cluster invariants plus the shard layer's own: the member
@@ -472,6 +532,12 @@ impl ShardedCluster {
                 return Err(format!(
                     "shard {s}: digest counts {}/{} != recomputed {}/{}",
                     d.hosts, d.on, fresh.hosts, fresh.on
+                ));
+            }
+            if d.warm_containers != fresh.warm_containers {
+                return Err(format!(
+                    "shard {s}: warm containers {} != recomputed {}",
+                    d.warm_containers, fresh.warm_containers
                 ));
             }
             if !demand_close(&d.capacity_on, &fresh.capacity_on) {
@@ -588,6 +654,38 @@ mod tests {
         sc.check_invariants().unwrap();
         sc.advance_power_states(300.0); // Booting → On
         assert_eq!(sc.digest(shard).on, on0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn warm_container_digest_tracks_sandbox_lifecycle() {
+        use crate::workload::faas::FunctionId;
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(4), 2);
+        let host = HostId(0);
+        let shard = sc.shard_of(host);
+        // Cold start: booting sandboxes are not warm.
+        sc.install_booting_container(host, FunctionId(1), 0.5, 2.0);
+        assert_eq!(sc.digest(shard).warm_containers, 0);
+        sc.check_invariants().unwrap();
+        sc.advance_power_states(5.0); // boot completes, no warmth yet
+        sc.check_invariants().unwrap();
+        // Park warm → counted; claim → released.
+        sc.park_warm_container(host, FunctionId(1), 0.5, 100.0);
+        assert_eq!(sc.digest(shard).warm_containers, 1);
+        sc.check_invariants().unwrap();
+        assert!(sc.claim_warm_container(host, FunctionId(1)));
+        assert_eq!(sc.digest(shard).warm_containers, 0);
+        assert!(!sc.claim_warm_container(host, FunctionId(1)));
+        sc.check_invariants().unwrap();
+        // Expiry path.
+        sc.park_warm_container(host, FunctionId(2), 0.25, 50.0);
+        assert_eq!(sc.expire_containers(host, 60.0), 1);
+        assert_eq!(sc.digest(shard).warm_containers, 0);
+        sc.check_invariants().unwrap();
+        // Power-off drops the pool and the digest together.
+        sc.park_warm_container(host, FunctionId(3), 0.25, 1e9);
+        sc.power_off(host, 0.0);
+        assert_eq!(sc.digest(shard).warm_containers, 0);
         sc.check_invariants().unwrap();
     }
 

@@ -35,7 +35,7 @@
 //! invalidated by [`crate::predict::EnergyPredictor::weight_epoch`]
 //! when retraining swaps weights).
 
-use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState};
+use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState, CONTAINER_BOOT_W};
 use crate::coordinator::report::CampaignReport;
 use crate::coordinator::state::CampaignState;
 use crate::profile::{ExecutionRecord, HistoryStore, ResourceVector};
@@ -46,7 +46,8 @@ use crate::sched::{
 };
 use crate::sim::{EventQueue, SAMPLE_INTERVAL};
 use crate::sla::SlaSpec;
-use crate::workload::{flavor_for, Job, JobId, JobState};
+use crate::workload::faas::{KeepAliveLoop, KeepAlivePolicy};
+use crate::workload::{flavor_for, FaasConfig, Job, JobId, JobState};
 use std::time::Instant;
 
 /// Campaign configuration.
@@ -75,6 +76,11 @@ pub struct CampaignConfig {
     /// Cluster power capping (None = uncapped). Runs after
     /// consolidation and DVFS so the cap can override the governor.
     pub power_cap: Option<crate::sched::PowerCapParams>,
+    /// Serverless sandbox semantics (cold starts, warm pools, the
+    /// keep-alive expiry loop) for function-tagged jobs. `None` (the
+    /// default) means such jobs run like plain VMs and nothing in the
+    /// batch families changes.
+    pub faas: Option<FaasConfig>,
     /// Seconds between control-loop scans.
     pub scan_interval: f64,
     /// Watts-Up-Pro relative noise (0 disables).
@@ -96,6 +102,7 @@ impl Default for CampaignConfig {
             consolidation: Some(crate::sched::ConsolidationParams::default()),
             dvfs: Some(crate::sched::DvfsParams::default()),
             power_cap: None,
+            faas: None,
             scan_interval: 30.0,
             meter_noise: 0.01,
             telemetry_noise: 0.02,
@@ -133,19 +140,31 @@ impl Coordinator {
     pub fn run(&mut self, trace: Vec<Job>) -> CampaignReport {
         let cfg = self.config.clone();
         let mut st = CampaignState::new(&cfg);
+        // The serverless keep-alive policy lives outside the loop list:
+        // it is observed on every arrival (IAT histograms), not just on
+        // the scan cadence.
+        let mut keep_alive: Option<Box<dyn KeepAlivePolicy>> =
+            cfg.faas.as_ref().map(|f| f.keep_alive.build());
         // The periodic control loops, unified behind one trait. Order
-        // matters: consolidation actuates before DVFS observes.
+        // matters: keep-alive expiry frees sandbox memory before
+        // consolidation plans against it, and consolidation actuates
+        // before DVFS observes.
         let mut loops: Vec<Box<dyn ControlLoop>> = Vec::new();
-        if let Some(params) = cfg.consolidation {
-            loops.push(Box::new(Consolidator::new(params)));
+        if cfg.faas.is_some() {
+            loops.push(Box::new(KeepAliveLoop));
         }
-        if let Some(params) = cfg.dvfs {
-            loops.push(Box::new(DvfsGovernor::new(params)));
-        }
-        if let Some(params) = cfg.power_cap {
-            // Last: the cap observes (and may override) what the
-            // governor just actuated.
-            loops.push(Box::new(crate::sched::PowerCapLoop::new(params)));
+        if self.policy.wants_consolidation() {
+            if let Some(params) = cfg.consolidation {
+                loops.push(Box::new(Consolidator::new(params)));
+            }
+            if let Some(params) = cfg.dvfs {
+                loops.push(Box::new(DvfsGovernor::new(params)));
+            }
+            if let Some(params) = cfg.power_cap {
+                // Last: the cap observes (and may override) what the
+                // governor just actuated.
+                loops.push(Box::new(crate::sched::PowerCapLoop::new(params)));
+            }
         }
         let mut queue: EventQueue<Event> = EventQueue::new();
         st.n_jobs = trace.len();
@@ -182,6 +201,16 @@ impl Coordinator {
                         };
                         burst.push(next);
                         queue.pop();
+                    }
+                    // Feed the keep-alive policy every function arrival
+                    // exactly once (here, not in place_batch — retries
+                    // would double-count the inter-arrival histograms).
+                    if let Some(ka) = keep_alive.as_deref_mut() {
+                        for id in &burst {
+                            if let Some(f) = st.jobs[id].function {
+                                ka.observe_arrival(f, now);
+                            }
+                        }
                     }
                     self.place_batch(now, &burst, &mut st, &mut queue);
                 }
@@ -229,7 +258,15 @@ impl Coordinator {
                     }
                 }
                 Event::Tick => {
-                    self.tick(now, &mut st, &mut queue, &mut loops, &mut last_scan, &cfg);
+                    self.tick(
+                        now,
+                        &mut st,
+                        &mut queue,
+                        &mut loops,
+                        &mut last_scan,
+                        &cfg,
+                        keep_alive.as_deref(),
+                    );
                     if st.counters.completed < st.n_jobs {
                         queue.push_in(1.0, Event::Tick);
                     }
@@ -242,6 +279,7 @@ impl Coordinator {
 
     /// One simulated second: demand propagation, job progress, energy
     /// accounting, telemetry, control-loop scans, and completions.
+    #[allow(clippy::too_many_arguments)]
     fn tick(
         &mut self,
         now: f64,
@@ -250,6 +288,7 @@ impl Coordinator {
         loops: &mut [Box<dyn ControlLoop>],
         last_scan: &mut f64,
         cfg: &CampaignConfig,
+        keep_alive: Option<&dyn KeepAlivePolicy>,
     ) {
         let dt = 1.0;
         st.cluster.advance_power_states(now);
@@ -339,16 +378,23 @@ impl Coordinator {
                     st.per_host_cpu[h.id.0].push(u);
                 }
             }
+            if cfg.faas.is_some() {
+                let warm: usize = st.cluster.digests().iter().map(|d| d.warm_containers).sum();
+                st.warm_pool.push(warm as f64);
+            }
         }
 
-        // Control-loop scans on the configured cadence.
+        // Control-loop scans on the configured cadence. The loop list
+        // already encodes what this campaign wants (keep-alive expiry
+        // when FaaS is on, the consolidation/DVFS/cap trio only for
+        // policies that opted in), so an empty list skips the pass.
         if now - *last_scan >= cfg.scan_interval - 1e-9 {
             *last_scan = now;
-            let t0 = Instant::now();
-            if self.policy.wants_consolidation() {
+            if !loops.is_empty() {
+                let t0 = Instant::now();
                 self.run_control_loops(now, st, queue, loops);
+                st.overhead.scan_wall_s += t0.elapsed().as_secs_f64();
             }
-            st.overhead.scan_wall_s += t0.elapsed().as_secs_f64();
         }
 
         // Completions: release resources, record outcomes.
@@ -359,8 +405,27 @@ impl Coordinator {
             if matches!(st.cluster.vms[&vm_id].state, VmState::Migrating { .. }) {
                 st.cluster.finish_migration(vm_id);
             }
+            // Capture the final host before the VM record disappears:
+            // a completing function invocation parks its sandbox warm
+            // there for the keep-alive window.
+            let final_host = st.cluster.vms[&vm_id].host;
             st.cluster.terminate_vm(vm_id);
+            // The VM is gone; drop the reverse mapping so per-tick
+            // demand/progress walks stay proportional to *active* VMs
+            // (vm_of_job keeps the forward record for reporting).
+            st.job_of_vm.remove(&vm_id);
             st.telemetry.forget_vm(vm_id);
+            if let (Some(ka), Some(host)) = (keep_alive, final_host) {
+                let job = &st.jobs[&job_id];
+                if let Some(function) = job.function {
+                    st.cluster.park_warm_container(
+                        host,
+                        function,
+                        job.gb.min(crate::cluster::flavor::FAAS.mem_gb),
+                        now + ka.window(function),
+                    );
+                }
+            }
             let job = &st.jobs[&job_id];
             let jct = job.jct().expect("finished job has jct");
             st.sla.complete(job_id, jct);
@@ -436,6 +501,12 @@ impl Coordinator {
                     }
                     ControlAction::SetFreq { host, freq } => {
                         st.cluster.set_freq(host, freq);
+                    }
+                    ControlAction::ExpireContainers(h) => {
+                        // Revalidates against the live clock inside
+                        // expire_containers, so a stale plan is a no-op.
+                        let n = st.cluster.expire_containers(h, now);
+                        st.counters.containers_expired += n as u64;
                     }
                 }
             }
@@ -572,6 +643,32 @@ impl Coordinator {
                 st.vm_of_job.insert(req.job, vm);
                 st.job_of_vm.insert(vm, req.job);
                 st.jobs.get_mut(&req.job).unwrap().start(now);
+                // Serverless sandbox semantics: a warm container on the
+                // chosen host absorbs the invocation instantly; a miss
+                // pays the cold-start latency (execution stalls) and the
+                // boot-draw energy window.
+                if let Some(faas) = self.config.faas {
+                    if let Some(function) = st.jobs[&req.job].function {
+                        if st.cluster.claim_warm_container(host, function) {
+                            st.counters.warm_starts += 1;
+                        } else {
+                            let mem = st.jobs[&req.job].gb.min(req.flavor.mem_gb);
+                            st.cluster.install_booting_container(
+                                host,
+                                function,
+                                mem,
+                                now + faas.cold_start_secs,
+                            );
+                            st.jobs
+                                .get_mut(&req.job)
+                                .unwrap()
+                                .stall(now + faas.cold_start_secs);
+                            st.counters.cold_starts += 1;
+                            st.counters.cold_start_energy_j +=
+                                CONTAINER_BOOT_W * faas.cold_start_secs;
+                        }
+                    }
+                }
                 st.shard_counters[st.cluster.shard_of(host)].placements += 1;
                 if !placed_hosts.contains(&host) {
                     placed_hosts.push(host);

@@ -112,6 +112,19 @@ pub struct CampaignReport {
     pub deferrals: u64,
     /// Per-shard actuation counters (length = configured shard count).
     pub per_shard: Vec<ShardCounters>,
+    /// Function invocations that paid the sandbox cold-start penalty
+    /// (0 unless the campaign configured `faas`).
+    pub cold_starts: u64,
+    /// Function invocations absorbed by a warm container.
+    pub warm_starts: u64,
+    /// Warm containers evicted by the keep-alive expiry loop.
+    pub containers_expired: u64,
+    /// Energy charged to container boot windows (J) — the serverless
+    /// analog of host boot draw, additive to metered host energy.
+    pub cold_start_energy_j: f64,
+    /// Mean fleet-wide warm-pool occupancy over the telemetry samples
+    /// (0 unless the campaign configured `faas`).
+    pub warm_pool_mean: f64,
     /// End-of-campaign per-shard digests, gathered from the shards
     /// over the worker pool's result channel (the coordinator never
     /// walks shard interiors to report).
@@ -137,6 +150,17 @@ impl CampaignReport {
             0.0
         } else {
             self.energy_j / work
+        }
+    }
+
+    /// Fraction of function invocations that paid a cold start
+    /// (0 when no invocation ran — e.g. batch-only campaigns).
+    pub fn cold_start_rate(&self) -> f64 {
+        let total = self.cold_starts + self.warm_starts;
+        if total == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / total as f64
         }
     }
 

@@ -24,6 +24,14 @@ pub struct Counters {
     /// booting).
     pub host_off_s: f64,
     pub completed: usize,
+    /// Function invocations that missed the warm pool.
+    pub cold_starts: u64,
+    /// Function invocations that hit a warm container.
+    pub warm_starts: u64,
+    /// Warm containers evicted by the keep-alive loop.
+    pub containers_expired: u64,
+    /// Energy charged to container boot windows (J).
+    pub cold_start_energy_j: f64,
 }
 
 /// The mutable state of one campaign run.
@@ -66,6 +74,9 @@ pub struct CampaignState {
     /// CPU-utilization distribution over (host, sample) pairs.
     pub util_hist: Histogram,
     pub per_host_cpu: Vec<Online>,
+    /// Fleet-wide warm-container occupancy, sampled on the telemetry
+    /// cadence (only fed when the campaign configured `faas`).
+    pub warm_pool: Online,
     /// At most ONE RetryQueue event may be pending at a time —
     /// otherwise k deferred jobs re-deferring from one retry spawn
     /// k new retries (exponential event growth).
@@ -97,6 +108,7 @@ impl CampaignState {
             counters: Counters::default(),
             util_hist: Histogram::new(0.0, 1.0, 10),
             per_host_cpu: (0..cfg.n_hosts).map(|_| Online::new()).collect(),
+            warm_pool: Online::new(),
             next_retry: None,
             n_jobs: 0,
         }
@@ -178,6 +190,11 @@ impl CampaignState {
             overhead: self.overhead.clone(),
             deferrals: self.counters.deferrals,
             per_shard: self.shard_counters.clone(),
+            cold_starts: self.counters.cold_starts,
+            warm_starts: self.counters.warm_starts,
+            containers_expired: self.counters.containers_expired,
+            cold_start_energy_j: self.counters.cold_start_energy_j,
+            warm_pool_mean: self.warm_pool.mean(),
             // Digests flow back over the pool's result channel (the
             // distributed read path) rather than being walked in
             // place; a poisoned gather fails the report loudly.

@@ -1,0 +1,112 @@
+//! `fig4` — serverless keep-alive ablation: cold-start rate × energy
+//! across keep-alive policies on one Azure-shaped invocation trace.
+//!
+//! The comparison the figure makes: a fixed window (OpenWhisk-style)
+//! either wastes warm memory on rare functions or misses the
+//! inter-arrival of mid-frequency ones; the hybrid histogram sizes
+//! each function's window from its observed inter-arrival quantile
+//! and should reach a lower cold-start rate at equal-or-lower energy
+//! (the acceptance bar the integration tests pin down).
+
+use crate::coordinator::{CampaignConfig, Coordinator};
+use crate::exp::common::ExpContext;
+use crate::util::table::TableBuilder;
+use crate::workload::faas::{FaasConfig, HybridParams, KeepAliveConfig};
+use crate::workload::FaasTraceSpec;
+
+/// Keep-alive variants the figure sweeps.
+fn policies() -> Vec<(&'static str, KeepAliveConfig)> {
+    vec![
+        ("fixed_120s", KeepAliveConfig::Fixed { window: 120.0 }),
+        ("fixed_30s", KeepAliveConfig::Fixed { window: 30.0 }),
+        ("hybrid_hist", KeepAliveConfig::Hybrid(HybridParams::default())),
+    ]
+}
+
+/// Trace sizing: small enough for smoke runs, big enough that the
+/// histograms converge in full mode.
+fn trace_spec(ctx: &ExpContext) -> FaasTraceSpec {
+    if ctx.fast {
+        FaasTraceSpec {
+            n_functions: 30,
+            n_invocations: 1200,
+            ..Default::default()
+        }
+    } else {
+        FaasTraceSpec::default()
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Fig. 4 — keep-alive policy vs cold-start rate and energy",
+        &[
+            "keep-alive",
+            "cold %",
+            "cold starts",
+            "warm starts",
+            "boot J",
+            "energy J/solo-s",
+            "warm pool",
+            "expired",
+        ],
+    );
+    let spec = trace_spec(ctx);
+    for (name, keep_alive) in policies() {
+        let mut cold_rate = Vec::new();
+        let mut cold = 0u64;
+        let mut warm = 0u64;
+        let mut boot_j = Vec::new();
+        let mut jps = Vec::new();
+        let mut pool = Vec::new();
+        let mut expired = 0u64;
+        for &seed in &ctx.seeds {
+            let trace = spec.generate(seed);
+            let mut coord = Coordinator::new(
+                CampaignConfig {
+                    n_hosts: 8,
+                    seed,
+                    faas: Some(FaasConfig {
+                        keep_alive,
+                        ..Default::default()
+                    }),
+                    ..Default::default()
+                },
+                crate::coordinator::make_policy("round_robin").unwrap(),
+            );
+            let r = coord.run(trace);
+            cold_rate.push(r.cold_start_rate());
+            cold += r.cold_starts;
+            warm += r.warm_starts;
+            boot_j.push(r.cold_start_energy_j);
+            jps.push(r.j_per_solo_second());
+            pool.push(r.warm_pool_mean);
+            expired += r.containers_expired;
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", crate::util::stats::mean(&cold_rate) * 100.0),
+            cold.to_string(),
+            warm.to_string(),
+            format!("{:.0}", crate::util::stats::mean(&boot_j)),
+            format!("{:.1}", crate::util::stats::mean(&jps)),
+            format!("{:.1}", crate::util::stats::mean(&pool)),
+            expired.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_sweeps_every_keep_alive_policy() {
+        let t = run(&ExpContext::fast());
+        assert_eq!(t.n_rows(), 3);
+        let csv = t.render_csv();
+        assert!(csv.contains("fixed_120s"));
+        assert!(csv.contains("hybrid_hist"));
+    }
+}

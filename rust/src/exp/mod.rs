@@ -5,6 +5,7 @@ pub mod ablation;
 pub mod classes;
 pub mod common;
 pub mod energy;
+pub mod faas;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -16,9 +17,9 @@ pub mod utilization;
 pub use common::ExpContext;
 
 /// All experiment ids, in presentation order.
-pub const ALL: [&str; 11] = [
-    "fig1", "fig2", "table1", "table2", "fig3", "table3", "table4", "table5", "abl1",
-    "abl2", "abl3",
+pub const ALL: [&str; 12] = [
+    "fig1", "fig2", "table1", "table2", "fig3", "fig4", "table3", "table4", "table5",
+    "abl1", "abl2", "abl3",
 ];
 
 /// Run one experiment by id; returns false for unknown ids.
@@ -29,6 +30,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> bool {
         "table1" => energy::run(ctx),
         "table2" => sla::run(ctx),
         "fig3" => fig3::run(ctx),
+        "fig4" => faas::run(ctx),
         "table3" => classes::run(ctx),
         "table4" => utilization::run(ctx),
         "table5" => overhead::run(ctx),

@@ -17,6 +17,16 @@ use crate::sim::telemetry::HostSample;
 use crate::sim::Telemetry;
 use std::collections::BTreeMap;
 
+/// Fleet size below which [`ScheduleContext::for_each_shard`] runs
+/// inline even when a parallel pool is attached. A per-shard pass over
+/// a small fleet is a few hundred nanoseconds of host walking; the
+/// pool's per-job channel round-trip is comfortably larger, so
+/// dispatching it loses on every shard. 128 hosts ≈ the crossover
+/// region observed for the scan-heavy benches; results are identical
+/// either way (only latency differs), so the exact value is a
+/// performance knob, not a correctness one.
+pub const INLINE_FLEET_HOSTS: usize = 128;
+
 /// Read-only decision context. Optional layers (telemetry, history,
 /// per-VM context, shards) degrade gracefully: helpers fall back to
 /// instantaneous cluster state when a layer is absent, so unit tests
@@ -106,13 +116,13 @@ impl<'a> ScheduleContext<'a> {
     /// panicking worker poisons the whole pass with a clear error
     /// instead of deadlocking (see [`crate::runtime::PoolError`]).
     ///
-    /// Dispatch is unconditional at width > 1: cheap passes (a DVFS
-    /// walk over a small fleet) pay the channel round-trip where an
-    /// inline walk might win. That is still strictly less overhead
-    /// than the spawn-per-call design this pool replaced, but an
-    /// inline-below-threshold guard like the placement path's
-    /// `inline_burst_rows` is pending a measured crossover for these
-    /// non-scoring passes (see ROADMAP).
+    /// Small fleets stay inline even with a pool attached: below
+    /// [`INLINE_FLEET_HOSTS`] hosts a shard pass is a short host walk,
+    /// and the channel round-trip per shard costs more than the walk
+    /// itself — the non-scoring analogue of the placement path's
+    /// `inline_burst_rows` guard. Inline and pooled paths compute the
+    /// same thing in the same order, so the guard never changes
+    /// results, only latency.
     pub fn for_each_shard<T, F>(&self, f: F) -> Vec<T>
     where
         T: Send,
@@ -120,7 +130,9 @@ impl<'a> ScheduleContext<'a> {
     {
         let n = self.shard_count();
         match self.pool {
-            Some(pool) if pool.parallel() && n > 1 => {
+            Some(pool)
+                if pool.parallel() && n > 1 && self.cluster.n_hosts() > INLINE_FLEET_HOSTS =>
+            {
                 let f = &f;
                 let jobs: Vec<_> = (0..n)
                     .map(|s| (s, move |_: &mut WorkerSlot| f(s)))
@@ -317,6 +329,38 @@ mod tests {
         assert_eq!(serial, pooled);
         let order: Vec<usize> = serial.iter().map(|x| x.0).collect();
         assert_eq!(order, vec![0, 1, 2, 3], "ascending shard order");
+    }
+
+    #[test]
+    fn small_fleets_never_pay_a_channel_hop() {
+        use crate::cluster::ShardedCluster;
+        use crate::runtime::WorkerPool;
+        // Worker threads are named "pallas-worker-N"; a closure that
+        // runs on one would see that name. On a fleet at or under the
+        // inline threshold it must run on the calling thread even
+        // with a parallel pool attached.
+        let sc = ShardedCluster::new(Cluster::homogeneous(INLINE_FLEET_HOSTS), 4);
+        let pool = WorkerPool::new(3);
+        let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc).with_pool(&pool);
+        let caller = std::thread::current().id();
+        let ran_on = ctx.for_each_shard(|s| (s, std::thread::current().id()));
+        assert_eq!(ran_on.len(), 4);
+        for (s, tid) in ran_on {
+            assert_eq!(tid, caller, "shard {s} pass left the calling thread");
+        }
+        // One host past the threshold, the same context dispatches.
+        let big = ShardedCluster::new(Cluster::homogeneous(INLINE_FLEET_HOSTS + 1), 4);
+        let bctx = ScheduleContext::new(0.0, &big).with_shards(&big).with_pool(&pool);
+        let dispatched = bctx.for_each_shard(|_| {
+            std::thread::current()
+                .name()
+                .map(|n| n.starts_with("pallas-worker"))
+                .unwrap_or(false)
+        });
+        assert!(
+            dispatched.iter().all(|&on_worker| on_worker),
+            "large fleet should fan out to the pool"
+        );
     }
 
     #[test]

@@ -21,6 +21,10 @@ pub enum ControlAction {
     PowerOff(HostId),
     /// Set a host's DVFS point.
     SetFreq { host: HostId, freq: f64 },
+    /// Evict this host's expired warm serverless sandboxes (the
+    /// keep-alive expiry loop). Actuation revalidates against the
+    /// live clock, so the action is idempotent.
+    ExpireContainers(HostId),
 }
 
 /// Borrowed access to the placement policy's prediction engine, lent

@@ -1,0 +1,444 @@
+//! Serverless function-invocation workload family.
+//!
+//! Each invocation is an ordinary [`crate::workload::Job`] — one
+//! short execution phase sized by the function's footprint — tagged
+//! with a [`FunctionId`] and placed through the existing policy path
+//! in a one-vCPU [`crate::cluster::flavor::FAAS`] slot. What makes
+//! the family distinct is the sandbox lifecycle around each job (see
+//! [`crate::cluster::container`]): a cold start stalls the invocation
+//! through a boot-draw window (latency *and* energy), a warm hit
+//! skips it, and completed invocations park their sandbox warm for a
+//! keep-alive window chosen by a [`KeepAlivePolicy`].
+//!
+//! # The keep-alive control loop
+//!
+//! Warm sandboxes must eventually be evicted or the fleet pays their
+//! memory (β-term) power forever. Expiry runs as [`KeepAliveLoop`],
+//! a standard [`ControlLoop`] on the coordinator's scan cadence and
+//! registered whenever the campaign has a
+//! [`FaasConfig`] — under *every* placement policy, unlike the
+//! consolidation/DVFS loops which only run for policies that opt in.
+//! The scan is a per-shard pass through
+//! [`ScheduleContext::for_each_shard`] (pooled at width > 1, inline
+//! otherwise) that emits one `ExpireContainers` action per host
+//! holding an expired warm sandbox; actuation revalidates against the
+//! live clock, so a stale scan is harmless. It is deliberately
+//! ordered before consolidation and DVFS in the loop list so those
+//! observe the post-expiry warm footprint.
+//!
+//! Keep-alive policies:
+//! - [`FixedKeepAlive`] — one global window (OpenWhisk-style).
+//! - [`HybridHistogram`] — per-function inter-arrival histograms in
+//!   the manner of the hybrid policy of the Azure "Serverless in the
+//!   Wild" line of work (and dslab-faas): frequent, predictable
+//!   functions get a window just past their observed inter-arrival
+//!   quantile; rare or erratic ones get a minimal window instead of
+//!   wasting warm memory.
+
+use crate::cluster::Demand;
+use crate::sched::control::{ControlAction, ControlLoop, ScoringHandle};
+use crate::sched::ScheduleContext;
+use crate::util::rng::Xoshiro256;
+use crate::workload::model::Phase;
+use std::collections::BTreeMap;
+
+/// Stable identifier of a serverless function (dense index into the
+/// trace's function population).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FunctionId(pub u32);
+
+impl std::fmt::Display for FunctionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fn-{}", self.0)
+    }
+}
+
+/// Phase list for one invocation: a single short execution burst at
+/// the function's footprint. Demands stay within the FAAS flavor
+/// (1 vCPU / 1 GB) so the slot never oversubscribes its own sandbox.
+pub fn invocation_phases(cpu: f64, mem_gb: f64, exec_s: f64) -> Vec<Phase> {
+    vec![Phase {
+        name: "invoke",
+        duration: exec_s.max(0.05),
+        demand: Demand {
+            cpu: cpu.clamp(0.05, 1.0),
+            mem_gb: mem_gb.clamp(0.05, 1.0),
+            // Small flows: below the progress-rate thresholds, so
+            // invocations are gated by CPU/mem contention only.
+            disk_mbps: 2.0,
+            net_mbps: 1.0,
+        },
+    }]
+}
+
+/// Generic dispatch entry (`phases_for(WorkloadKind::Faas, ..)`):
+/// footprint jittered per job, `gb` read as the function's working
+/// set. Trace fronts with real per-function specs call
+/// [`invocation_phases`] directly instead.
+pub fn default_invocation(gb: f64, rng: &mut Xoshiro256) -> Vec<Phase> {
+    let cpu = rng.uniform(0.2, 1.0);
+    let exec = rng.lognormal(0.8, 0.6).clamp(0.2, 60.0);
+    invocation_phases(cpu, gb.clamp(0.125, 1.0), exec)
+}
+
+/// Per-function keep-alive decisions: how long a sandbox parked at
+/// invocation completion stays warm. `observe_arrival` is fed every
+/// invocation arrival (once, at submit time); `window` is read when a
+/// sandbox is parked.
+pub trait KeepAlivePolicy {
+    fn name(&self) -> &'static str;
+    fn observe_arrival(&mut self, function: FunctionId, now: f64);
+    fn window(&self, function: FunctionId) -> f64;
+}
+
+/// One global keep-alive window for every function — the fixed
+/// OpenWhisk-style baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedKeepAlive {
+    pub window: f64,
+}
+
+impl Default for FixedKeepAlive {
+    fn default() -> Self {
+        FixedKeepAlive { window: 120.0 }
+    }
+}
+
+impl KeepAlivePolicy for FixedKeepAlive {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn observe_arrival(&mut self, _function: FunctionId, _now: f64) {}
+
+    fn window(&self, _function: FunctionId) -> f64 {
+        self.window
+    }
+}
+
+/// Tuning knobs of [`HybridHistogram`]. `Copy` so it can ride inside
+/// [`KeepAliveConfig`] in a `CampaignConfig`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridParams {
+    /// Histogram bin width (s).
+    pub bin_secs: f64,
+    /// Number of bins; inter-arrivals past `bin_secs · n_bins` land
+    /// in the out-of-bounds bucket.
+    pub n_bins: usize,
+    /// Inter-arrival quantile the window must cover.
+    pub quantile: f64,
+    /// Safety margin multiplied onto the quantile bin's upper edge.
+    pub margin: f64,
+    /// Window for functions not worth keeping warm (rare/erratic).
+    pub min_window: f64,
+    /// Window before enough observations accrue — matches the fixed
+    /// baseline so the comparison is cold-start-honest at the head.
+    pub default_window: f64,
+    /// Out-of-bounds fraction above which the function is declared
+    /// unpredictable and parked with `min_window`.
+    pub oob_threshold: f64,
+}
+
+impl Default for HybridParams {
+    fn default() -> Self {
+        HybridParams {
+            bin_secs: 10.0,
+            n_bins: 60, // 600 s of range, one order past the fixed window
+            quantile: 0.97,
+            margin: 1.15,
+            min_window: 5.0,
+            default_window: 120.0,
+            oob_threshold: 0.5,
+        }
+    }
+}
+
+/// Per-function inter-arrival histogram.
+#[derive(Debug, Clone)]
+struct FnHist {
+    bins: Vec<u32>,
+    oob: u32,
+    total: u32,
+    last_arrival: Option<f64>,
+}
+
+/// Hybrid-histogram keep-alive: tracks each function's inter-arrival
+/// distribution and grants a per-function window that covers its
+/// `quantile` inter-arrival (plus margin), falling back to
+/// `default_window` while data is scarce and to `min_window` when the
+/// function's arrivals are too spread out for warmth to pay off.
+#[derive(Debug, Clone)]
+pub struct HybridHistogram {
+    pub params: HybridParams,
+    hists: BTreeMap<FunctionId, FnHist>,
+}
+
+impl HybridHistogram {
+    pub fn new(params: HybridParams) -> HybridHistogram {
+        HybridHistogram {
+            params,
+            hists: BTreeMap::new(),
+        }
+    }
+}
+
+impl KeepAlivePolicy for HybridHistogram {
+    fn name(&self) -> &'static str {
+        "hybrid_histogram"
+    }
+
+    fn observe_arrival(&mut self, function: FunctionId, now: f64) {
+        let p = self.params;
+        let h = self.hists.entry(function).or_insert_with(|| FnHist {
+            bins: vec![0; p.n_bins],
+            oob: 0,
+            total: 0,
+            last_arrival: None,
+        });
+        if let Some(last) = h.last_arrival {
+            let iat = (now - last).max(0.0);
+            let bin = (iat / p.bin_secs) as usize;
+            if bin < p.n_bins {
+                h.bins[bin] += 1;
+            } else {
+                h.oob += 1;
+            }
+            h.total += 1;
+        }
+        h.last_arrival = Some(now);
+    }
+
+    fn window(&self, function: FunctionId) -> f64 {
+        let p = self.params;
+        let Some(h) = self.hists.get(&function) else {
+            return p.default_window;
+        };
+        if h.total < 4 {
+            return p.default_window;
+        }
+        if f64::from(h.oob) > p.oob_threshold * f64::from(h.total) {
+            return p.min_window;
+        }
+        let target = (p.quantile * f64::from(h.total)).ceil() as u32;
+        let mut acc = 0u32;
+        for (i, &count) in h.bins.iter().enumerate() {
+            acc += count;
+            if acc >= target {
+                // Upper edge of the quantile bin, with margin.
+                return (p.margin * (i as f64 + 1.0) * p.bin_secs).max(p.min_window);
+            }
+        }
+        // The quantile sits in the out-of-bounds tail: covering it
+        // would need a window past the histogram range — not worth
+        // the warm memory.
+        p.min_window
+    }
+}
+
+/// Serializable keep-alive choice for `CampaignConfig`; built into a
+/// live policy object by the coordinator at campaign start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeepAliveConfig {
+    Fixed { window: f64 },
+    Hybrid(HybridParams),
+}
+
+impl Default for KeepAliveConfig {
+    fn default() -> Self {
+        KeepAliveConfig::Fixed { window: 120.0 }
+    }
+}
+
+impl KeepAliveConfig {
+    pub fn build(self) -> Box<dyn KeepAlivePolicy> {
+        match self {
+            KeepAliveConfig::Fixed { window } => Box::new(FixedKeepAlive { window }),
+            KeepAliveConfig::Hybrid(params) => Box::new(HybridHistogram::new(params)),
+        }
+    }
+}
+
+/// Campaign-level switch for the serverless subsystem. `None` in
+/// `CampaignConfig.faas` (the default) means function-tagged jobs run
+/// as plain VMs — no sandboxes, no cold starts — and nothing in the
+/// batch families changes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaasConfig {
+    /// Sandbox cold-start latency (s) — the container-scale
+    /// `BOOT_SECS`; the invocation stalls and the host draws
+    /// [`crate::cluster::container::CONTAINER_BOOT_W`] through it.
+    pub cold_start_secs: f64,
+    pub keep_alive: KeepAliveConfig,
+}
+
+impl Default for FaasConfig {
+    fn default() -> Self {
+        FaasConfig {
+            cold_start_secs: 2.0,
+            keep_alive: KeepAliveConfig::default(),
+        }
+    }
+}
+
+/// Keep-alive expiry as a [`ControlLoop`]: per-shard scans emitting
+/// one [`ControlAction::ExpireContainers`] per host with an expired
+/// warm sandbox (see module docs).
+#[derive(Debug, Default)]
+pub struct KeepAliveLoop;
+
+impl ControlLoop for KeepAliveLoop {
+    fn name(&self) -> &'static str {
+        "keep_alive"
+    }
+
+    fn scan(
+        &mut self,
+        ctx: &ScheduleContext<'_>,
+        _scoring: Option<ScoringHandle<'_>>,
+    ) -> Vec<ControlAction> {
+        // Per-shard passes on the pool (inline when serial); flatten
+        // in ascending shard order — the deterministic merge.
+        ctx.for_each_shard(|shard| scan_shard(ctx, shard))
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+/// One shard's expiry pass. Read-only — the actual eviction happens
+/// at actuation, revalidated against the then-current clock.
+fn scan_shard(ctx: &ScheduleContext<'_>, shard: usize) -> Vec<ControlAction> {
+    let mut out = Vec::new();
+    for host_id in ctx.shard(shard).hosts() {
+        if ctx.cluster.hosts[host_id.0].has_expired_warm(ctx.now) {
+            out.push(ControlAction::ExpireContainers(host_id));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::flavor::FAAS;
+    use crate::cluster::{Cluster, HostId};
+
+    #[test]
+    fn invocation_demands_fit_the_faas_flavor() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..200 {
+            let gb = rng.uniform(0.05, 2.0);
+            for p in default_invocation(gb, &mut rng) {
+                assert!(p.demand.cpu <= FAAS.vcpus * 1.05, "{}", p.demand.cpu);
+                assert!(p.demand.mem_gb <= FAAS.mem_gb * 1.05, "{}", p.demand.mem_gb);
+                assert!(p.duration > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_policy_is_flat() {
+        let mut p = FixedKeepAlive { window: 60.0 };
+        p.observe_arrival(FunctionId(0), 0.0);
+        p.observe_arrival(FunctionId(0), 1.0);
+        assert_eq!(p.window(FunctionId(0)), 60.0);
+        assert_eq!(p.window(FunctionId(99)), 60.0);
+        assert_eq!(p.name(), "fixed");
+    }
+
+    #[test]
+    fn hybrid_defaults_before_enough_observations() {
+        let params = HybridParams::default();
+        let mut p = HybridHistogram::new(params);
+        assert_eq!(p.window(FunctionId(0)), params.default_window);
+        // 3 arrivals = 2 inter-arrivals < 4 observations.
+        for k in 0..3 {
+            p.observe_arrival(FunctionId(0), k as f64 * 30.0);
+        }
+        assert_eq!(p.window(FunctionId(0)), params.default_window);
+    }
+
+    #[test]
+    fn hybrid_covers_a_regular_functions_interarrival() {
+        let params = HybridParams::default();
+        let mut p = HybridHistogram::new(params);
+        // Steady 45 s cadence: window must cover 45 s but stay well
+        // under the 600 s histogram range.
+        for k in 0..40 {
+            p.observe_arrival(FunctionId(1), k as f64 * 45.0);
+        }
+        let w = p.window(FunctionId(1));
+        assert!(w >= 45.0, "window {w} misses the 45 s cadence");
+        assert!(w <= 100.0, "window {w} wastes warmth");
+        assert_eq!(p.name(), "hybrid_histogram");
+    }
+
+    #[test]
+    fn hybrid_gives_up_on_sparse_functions() {
+        let params = HybridParams::default();
+        let mut p = HybridHistogram::new(params);
+        // Inter-arrivals way past the histogram range (> 600 s).
+        for k in 0..20 {
+            p.observe_arrival(FunctionId(2), k as f64 * 2000.0);
+        }
+        assert_eq!(p.window(FunctionId(2)), params.min_window);
+    }
+
+    #[test]
+    fn hybrid_window_shorter_than_fixed_for_hot_functions() {
+        // A 5 s cadence function needs only a ~12 s window under the
+        // hybrid policy versus the 120 s fixed default.
+        let mut p = HybridHistogram::new(HybridParams::default());
+        for k in 0..50 {
+            p.observe_arrival(FunctionId(3), k as f64 * 5.0);
+        }
+        let w = p.window(FunctionId(3));
+        assert!(w < 120.0, "hot function window {w} not tighter than fixed");
+        assert!(w >= 5.0);
+    }
+
+    #[test]
+    fn config_builds_matching_policy() {
+        assert_eq!(KeepAliveConfig::Fixed { window: 9.0 }.build().name(), "fixed");
+        assert_eq!(
+            KeepAliveConfig::Hybrid(HybridParams::default()).build().name(),
+            "hybrid_histogram"
+        );
+        assert!(matches!(
+            KeepAliveConfig::default(),
+            KeepAliveConfig::Fixed { window } if window == 120.0
+        ));
+    }
+
+    #[test]
+    fn keep_alive_loop_flags_only_hosts_with_expired_warmth() {
+        let mut c = Cluster::homogeneous(3);
+        c.host_mut(HostId(0)).park_warm(FunctionId(0), 0.5, 50.0);
+        c.host_mut(HostId(1)).park_warm(FunctionId(1), 0.5, 500.0);
+        let ctx = ScheduleContext::new(100.0, &c);
+        let mut l = KeepAliveLoop;
+        assert_eq!(
+            l.scan(&ctx, None),
+            vec![ControlAction::ExpireContainers(HostId(0))]
+        );
+        assert_eq!(l.name(), "keep_alive");
+    }
+
+    #[test]
+    fn keep_alive_loop_is_pool_invariant() {
+        use crate::cluster::ShardedCluster;
+        use crate::runtime::WorkerPool;
+        let mut c = Cluster::homogeneous(8);
+        for h in [0, 3, 5, 7] {
+            c.host_mut(HostId(h)).park_warm(FunctionId(h as u32), 0.25, 10.0);
+        }
+        let sc = ShardedCluster::new(c, 4);
+        let ctx = ScheduleContext::new(20.0, &sc).with_shards(&sc);
+        let serial = KeepAliveLoop.scan(&ctx, None);
+        let pool = WorkerPool::new(4);
+        let pctx = ScheduleContext::new(20.0, &sc).with_shards(&sc).with_pool(&pool);
+        let pooled = KeepAliveLoop.scan(&pctx, None);
+        assert_eq!(serial, pooled);
+        assert_eq!(serial.len(), 4);
+    }
+}

@@ -104,6 +104,18 @@ mod tests {
     }
 
     #[test]
+    fn faas_works_as_a_single_kind_mix() {
+        // Faas is outside the paper mix (and ALL) but a pure-FaaS
+        // tenant is a legal campaign composition.
+        let mix = Mix::only(WorkloadKind::Faas);
+        assert_eq!(mix.name, "faas");
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for _ in 0..50 {
+            assert_eq!(mix.sample(&mut rng), WorkloadKind::Faas);
+        }
+    }
+
+    #[test]
     fn weights_bias_sampling() {
         let mix = Mix::cpu_heavy();
         let mut rng = Xoshiro256::seed_from_u64(3);

@@ -1,19 +1,31 @@
-//! Big-data workload models — the simulated stand-ins for the paper's
-//! benchmark suite (Hadoop MapReduce, Spark MLlib, ETL pipelines) plus
-//! trace generation for multi-tenant campaigns.
+//! Workload models, organized as three families:
+//!
+//! 1. **Batch generators** (`hadoop`, `spark`, `etl` + [`tracegen`]) —
+//!    the paper's benchmark suite: multi-phase jobs in MEDIUM worker
+//!    VMs, arrival processes (Poisson/diurnal/batch) over a [`Mix`].
+//! 2. **FaaS** ([`faas`]) — serverless function invocations: short
+//!    single-phase jobs in one-vCPU sandboxes with cold starts, warm
+//!    pools, and keep-alive policies.
+//! 3. **Trace replay** ([`trace`]) — a seeded Azure-2021-shaped Burr
+//!    sampler and a generic CSV reader, emitting the same `Job`
+//!    stream the generators do.
 
 pub mod etl;
+pub mod faas;
 pub mod hadoop;
 pub mod mix;
 pub mod model;
 pub mod spark;
+pub mod trace;
 pub mod tracegen;
 
+pub use faas::{FaasConfig, FunctionId, KeepAliveConfig};
 pub use mix::Mix;
 pub use model::{Job, JobId, JobState, Phase, WorkloadKind};
+pub use trace::FaasTraceSpec;
 pub use tracegen::{Arrivals, TraceSpec};
 
-use crate::cluster::flavor::{Flavor, MEDIUM};
+use crate::cluster::flavor::{Flavor, FAAS, MEDIUM};
 use crate::util::rng::Xoshiro256;
 
 /// Generate the phase list for a job of the given kind and size.
@@ -25,13 +37,18 @@ pub fn phases_for(kind: WorkloadKind, gb: f64, rng: &mut Xoshiro256) -> Vec<Phas
         WorkloadKind::SparkLogReg => spark::logreg(gb, rng),
         WorkloadKind::SparkKMeans => spark::kmeans(gb, rng),
         WorkloadKind::EtlPipeline => etl::etl(gb, rng),
+        WorkloadKind::Faas => faas::default_invocation(gb, rng),
     }
 }
 
-/// Worker VM flavor per kind. All benchmarks use MEDIUM workers —
-/// matching the per-worker demand calibration in each model module.
-pub fn flavor_for(_kind: WorkloadKind) -> Flavor {
-    MEDIUM
+/// Worker VM flavor per kind. The batch benchmarks use MEDIUM workers
+/// (matching the per-worker demand calibration in each model module);
+/// FaaS invocations run in the one-vCPU FAAS sandbox slot.
+pub fn flavor_for(kind: WorkloadKind) -> Flavor {
+    match kind {
+        WorkloadKind::Faas => FAAS,
+        _ => MEDIUM,
+    }
 }
 
 #[cfg(test)]
@@ -48,6 +65,15 @@ mod tests {
             assert!(total > 10.0, "{kind:?} too short: {total}");
             assert!(total < 4000.0, "{kind:?} too long: {total}");
         }
+    }
+
+    #[test]
+    fn faas_dispatch_uses_the_sandbox_flavor() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        assert_eq!(flavor_for(WorkloadKind::Faas).name, "faas");
+        let phases = phases_for(WorkloadKind::Faas, 0.5, &mut rng);
+        assert_eq!(phases.len(), 1);
+        assert!(phases[0].duration < 100.0, "invocations are short");
     }
 
     #[test]

@@ -17,7 +17,8 @@ impl std::fmt::Display for JobId {
     }
 }
 
-/// The benchmark suite of the paper's evaluation (§IV-B).
+/// The benchmark suite of the paper's evaluation (§IV-B), plus the
+/// serverless function-invocation family added on top of it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum WorkloadKind {
     HadoopWordCount,
@@ -26,6 +27,11 @@ pub enum WorkloadKind {
     SparkLogReg,
     SparkKMeans,
     EtlPipeline,
+    /// A single serverless function invocation (workload::faas). Not
+    /// part of [`WorkloadKind::ALL`]: `ALL` is the paper's batch
+    /// suite, which mixes and per-benchmark campaigns iterate over —
+    /// FaaS jobs enter through `workload::trace` instead.
+    Faas,
 }
 
 impl WorkloadKind {
@@ -46,10 +52,14 @@ impl WorkloadKind {
             WorkloadKind::SparkLogReg => "logreg",
             WorkloadKind::SparkKMeans => "kmeans",
             WorkloadKind::EtlPipeline => "etl",
+            WorkloadKind::Faas => "faas",
         }
     }
 
     pub fn by_name(name: &str) -> Option<WorkloadKind> {
+        if name == "faas" {
+            return Some(WorkloadKind::Faas);
+        }
         Self::ALL.iter().copied().find(|k| k.name() == name)
     }
 
@@ -61,6 +71,7 @@ impl WorkloadKind {
             | WorkloadKind::HadoopGrep => "hadoop",
             WorkloadKind::SparkLogReg | WorkloadKind::SparkKMeans => "spark",
             WorkloadKind::EtlPipeline => "etl",
+            WorkloadKind::Faas => "faas",
         }
     }
 }
@@ -126,10 +137,14 @@ pub struct Job {
     pub phase_idx: usize,
     /// Accumulated progress-time within the current phase (s).
     pub phase_progress: f64,
-    /// Job paused until this time (migration stop-and-copy stall).
+    /// Job paused until this time (migration stop-and-copy stall, or
+    /// a serverless cold-start boot window).
     pub stalled_until: f64,
     /// Cumulative seconds lost to contention (JCT − solo gap source).
     pub slowdown_secs: f64,
+    /// For serverless invocations: the function this job invokes.
+    /// `None` for the batch families — set via [`Job::with_function`].
+    pub function: Option<crate::workload::faas::FunctionId>,
 }
 
 impl Job {
@@ -148,7 +163,14 @@ impl Job {
             phase_progress: 0.0,
             stalled_until: 0.0,
             slowdown_secs: 0.0,
+            function: None,
         }
+    }
+
+    /// Tag this job as an invocation of `function` (builder-style).
+    pub fn with_function(mut self, function: crate::workload::faas::FunctionId) -> Job {
+        self.function = Some(function);
+        self
     }
 
     /// Solo JCT: the sum of nominal phase durations — the SLA baseline.
@@ -336,7 +358,19 @@ mod tests {
         for k in WorkloadKind::ALL {
             assert_eq!(WorkloadKind::by_name(k.name()), Some(k));
         }
+        // Faas sits outside ALL (it is not part of the paper's batch
+        // suite) but still round-trips by name.
+        assert_eq!(WorkloadKind::by_name("faas"), Some(WorkloadKind::Faas));
+        assert!(!WorkloadKind::ALL.contains(&WorkloadKind::Faas));
         assert_eq!(WorkloadKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn with_function_tags_the_job() {
+        use crate::workload::faas::FunctionId;
+        assert_eq!(job().function, None);
+        let j = job().with_function(FunctionId(7));
+        assert_eq!(j.function, Some(FunctionId(7)));
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Trace replay front end: invocation streams that feed the existing
+//! `Job`/submit-event pipeline, so `decide_batch`, consolidation,
+//! DVFS, and power capping all run unchanged on serverless load.
+//!
+//! Two sources:
+//! - [`FaasTraceSpec`] — a seeded synthetic sampler shaped after the
+//!   Azure Functions 2021 trace analysis: a heavy-tailed population
+//!   of per-function rates (a few hot functions dominate), Burr
+//!   Type XII per-function inter-arrival times (the distribution the
+//!   Azure analysis fits; `c = 2, k = 1.5` gives mean = scale and
+//!   CV 1), and lognormal execution times.
+//! - [`read_csv_trace`] — a generic CSV reader replaying recorded
+//!   traces of either family.
+
+use crate::util::rng::Xoshiro256;
+use crate::workload::faas::{invocation_phases, FunctionId};
+use crate::workload::model::{Job, JobId, WorkloadKind};
+use crate::workload::phases_for;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One function of the synthetic population: footprint plus arrival
+/// and execution-time parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FunctionSpec {
+    pub id: FunctionId,
+    /// Working-set memory (GB) the sandbox holds.
+    pub mem_gb: f64,
+    /// CPU footprint while executing (cores, ≤ the FAAS slot's 1).
+    pub cpu: f64,
+    /// Mean inter-arrival time (s); per-invocation gaps are
+    /// Burr XII (`c = 2, k = 1.5`) with exactly this mean.
+    pub mean_iat: f64,
+    /// Lognormal execution-time parameters (underlying μ, σ).
+    pub exec_mu: f64,
+    pub exec_sigma: f64,
+}
+
+/// Seeded Azure-2021-shaped invocation stream generator.
+#[derive(Debug, Clone, Copy)]
+pub struct FaasTraceSpec {
+    /// Function population size.
+    pub n_functions: usize,
+    /// Total invocations to emit (across all functions).
+    pub n_invocations: usize,
+    /// Scale (s) of the heavy-tailed cross-function mean-IAT
+    /// distribution — smaller means a hotter population.
+    pub iat_scale: f64,
+}
+
+impl Default for FaasTraceSpec {
+    fn default() -> Self {
+        FaasTraceSpec {
+            n_functions: 200,
+            n_invocations: 20_000,
+            iat_scale: 20.0,
+        }
+    }
+}
+
+impl FaasTraceSpec {
+    /// Sample the function population, deterministically per seed.
+    pub fn functions(&self, seed: u64) -> Vec<FunctionSpec> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..self.n_functions)
+            .map(|i| {
+                let mut frng = rng.child(0xFA50 + i as u64);
+                // Cross-function rate population: Burr-tailed, so a
+                // few functions are invoked every few seconds while
+                // the long tail sees minutes between calls.
+                let mean_iat = frng.burr12(self.iat_scale, 1.5, 1.2).clamp(2.0, 3600.0);
+                let mem_gb = [0.125, 0.25, 0.5, 1.0][frng.categorical(&[3.0, 3.0, 2.0, 1.0])];
+                let cpu = frng.uniform(0.1, 1.0);
+                let exec_sigma = frng.uniform(0.3, 0.8);
+                // Mean execution in [0.5, 8] s; μ back-solved so the
+                // lognormal's mean (not median) hits it.
+                let exec_mean: f64 = frng.uniform(0.5, 8.0);
+                let exec_mu = exec_mean.ln() - exec_sigma * exec_sigma / 2.0;
+                FunctionSpec {
+                    id: FunctionId(i as u32),
+                    mem_gb,
+                    cpu,
+                    mean_iat,
+                    exec_mu,
+                    exec_sigma,
+                }
+            })
+            .collect()
+    }
+
+    /// Realize the invocation stream: per-function Burr renewal
+    /// processes merged through a min-heap into one submit-ordered
+    /// job list. Heap keys are `f64::to_bits` (order-preserving for
+    /// the positive arrival times) with the function index as
+    /// tie-break, so the merge is fully deterministic.
+    pub fn generate(&self, seed: u64) -> Vec<Job> {
+        let specs = self.functions(seed);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut streams: Vec<Xoshiro256> = (0..self.n_functions)
+            .map(|i| rng.child(0xBEA7 + i as u64))
+            .collect();
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::with_capacity(specs.len());
+        for (i, s) in specs.iter().enumerate() {
+            let t = streams[i].burr12(s.mean_iat, 2.0, 1.5);
+            heap.push(Reverse((t.to_bits(), i)));
+        }
+        let mut jobs = Vec::with_capacity(self.n_invocations);
+        while jobs.len() < self.n_invocations {
+            let Reverse((bits, i)) = heap.pop().expect("non-empty function population");
+            let t = f64::from_bits(bits);
+            let s = specs[i];
+            let exec = streams[i].lognormal(s.exec_mu, s.exec_sigma).clamp(0.1, 120.0);
+            let phases = invocation_phases(s.cpu, s.mem_gb, exec);
+            jobs.push(
+                Job::new(JobId(jobs.len() as u64), WorkloadKind::Faas, s.mem_gb, phases, t)
+                    .with_function(s.id),
+            );
+            let next = t + streams[i].burr12(s.mean_iat, 2.0, 1.5);
+            heap.push(Reverse((next.to_bits(), i)));
+        }
+        jobs
+    }
+}
+
+/// Read a recorded trace from CSV. Header-free; `#` comments and
+/// blank lines are skipped, and a leading `submit_at,...` header row
+/// is tolerated. Two row shapes, distinguished by the kind column:
+///
+/// - `submit_at,faas,function_id,mem_gb,cpu,exec_s` — one function
+///   invocation (exact phases, no sampling).
+/// - `submit_at,<kind>,gb` — one batch job of a paper benchmark
+///   (`wordcount`, `terasort`, ... per `WorkloadKind::by_name`);
+///   phases are synthesized per job from `seed`, exactly like the
+///   generator path.
+pub fn read_csv_trace(content: &str, seed: u64) -> Result<Vec<Job>, String> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut jobs = Vec::new();
+    for (lineno, raw) in content.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with("submit_at") {
+            continue;
+        }
+        let err = |what: &str| format!("line {}: {what}: {line:?}", lineno + 1);
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols.len() < 3 {
+            return Err(err("expected at least 3 columns"));
+        }
+        let submit_at: f64 = cols[0].parse().map_err(|_| err("bad submit_at"))?;
+        let kind = WorkloadKind::by_name(cols[1]).ok_or_else(|| err("unknown kind"))?;
+        let id = JobId(jobs.len() as u64);
+        let job = if kind == WorkloadKind::Faas {
+            if cols.len() != 6 {
+                return Err(err("faas rows take 6 columns"));
+            }
+            let function: u32 = cols[2].parse().map_err(|_| err("bad function_id"))?;
+            let mem_gb: f64 = cols[3].parse().map_err(|_| err("bad mem_gb"))?;
+            let cpu: f64 = cols[4].parse().map_err(|_| err("bad cpu"))?;
+            let exec_s: f64 = cols[5].parse().map_err(|_| err("bad exec_s"))?;
+            let phases = invocation_phases(cpu, mem_gb, exec_s);
+            Job::new(id, kind, mem_gb, phases, submit_at).with_function(FunctionId(function))
+        } else {
+            let gb: f64 = cols[2].parse().map_err(|_| err("bad gb"))?;
+            let phases = phases_for(kind, gb, &mut rng.child(0xC57 + id.0));
+            Job::new(id, kind, gb, phases, submit_at)
+        };
+        jobs.push(job);
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FaasTraceSpec {
+        FaasTraceSpec {
+            n_functions: 50,
+            n_invocations: 5000,
+            iat_scale: 15.0,
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_per_seed() {
+        let (a, b) = (spec().generate(9), spec().generate(9));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.submit_at, y.submit_at);
+            assert_eq!(x.function, y.function);
+            assert_eq!(x.gb, y.gb);
+            assert_eq!(x.solo_duration(), y.solo_duration());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, b) = (spec().generate(1), spec().generate(2));
+        let same = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| x.submit_at == y.submit_at)
+            .count();
+        assert!(same < a.len() / 10, "seeds nearly identical ({same})");
+    }
+
+    #[test]
+    fn stream_is_submit_ordered_with_sequential_ids() {
+        let jobs = spec().generate(3);
+        assert_eq!(jobs.len(), 5000);
+        for (i, w) in jobs.windows(2).enumerate() {
+            assert!(w[0].submit_at <= w[1].submit_at, "disorder at {i}");
+        }
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, JobId(i as u64));
+            assert_eq!(j.kind, WorkloadKind::Faas);
+            assert!(j.function.is_some());
+            assert!(j.submit_at > 0.0);
+        }
+    }
+
+    #[test]
+    fn hot_functions_dominate_invocations() {
+        // Azure shape: the busiest decile of functions carries well
+        // over half the invocations.
+        let jobs = spec().generate(7);
+        let mut per_fn = std::collections::BTreeMap::new();
+        for j in &jobs {
+            *per_fn.entry(j.function.unwrap()).or_insert(0usize) += 1;
+        }
+        let mut counts: Vec<usize> = per_fn.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top = counts.iter().take(counts.len().div_ceil(10)).sum::<usize>();
+        assert!(
+            top as f64 > 0.5 * jobs.len() as f64,
+            "top decile carries only {top}/{}",
+            jobs.len()
+        );
+    }
+
+    #[test]
+    fn per_function_mean_iat_matches_spec() {
+        // The Burr (c=2, k=1.5) renewal stream's empirical mean gap
+        // must track the spec's mean_iat for a busy function.
+        let s = FaasTraceSpec {
+            n_functions: 4,
+            n_invocations: 20_000,
+            iat_scale: 10.0,
+        };
+        let specs = s.functions(5);
+        let jobs = s.generate(5);
+        for f in specs {
+            let times: Vec<f64> = jobs
+                .iter()
+                .filter(|j| j.function == Some(f.id))
+                .map(|j| j.submit_at)
+                .collect();
+            if times.len() < 500 {
+                continue; // tail function: too few samples to test
+            }
+            let span = times.last().unwrap() - times.first().unwrap();
+            let mean_gap = span / (times.len() - 1) as f64;
+            assert!(
+                (mean_gap - f.mean_iat).abs() / f.mean_iat < 0.15,
+                "fn {} gap {mean_gap} vs spec {}",
+                f.id,
+                f.mean_iat
+            );
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_both_families() {
+        let csv = "\
+submit_at,kind,cols
+# a comment
+0.0,terasort,12
+
+1.5,faas,3,0.5,0.8,2.5
+2.0,faas,3,0.5,0.8,1.0
+";
+        let jobs = read_csv_trace(csv, 11).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].kind, WorkloadKind::HadoopTeraSort);
+        assert_eq!(jobs[0].gb, 12.0);
+        assert_eq!(jobs[0].function, None);
+        assert!(jobs[0].solo_duration() > 10.0);
+        assert_eq!(jobs[1].function, Some(FunctionId(3)));
+        assert_eq!(jobs[1].solo_duration(), 2.5);
+        assert_eq!(jobs[2].id, JobId(2));
+        // Batch phase synthesis is seed-stable.
+        let again = read_csv_trace(csv, 11).unwrap();
+        assert_eq!(jobs[0].solo_duration(), again[0].solo_duration());
+    }
+
+    #[test]
+    fn csv_rejects_malformed_rows() {
+        assert!(read_csv_trace("1.0,nope,5", 0).is_err());
+        assert!(read_csv_trace("x,terasort,5", 0).is_err());
+        assert!(read_csv_trace("1.0,faas,1,0.5", 0).is_err());
+        assert!(read_csv_trace("1.0,terasort", 0).is_err());
+    }
+}

@@ -102,6 +102,9 @@ pub fn gb_range(kind: WorkloadKind) -> (f64, f64) {
         | WorkloadKind::HadoopGrep => (5.0, 50.0),
         WorkloadKind::SparkLogReg | WorkloadKind::SparkKMeans => (5.0, 20.0),
         WorkloadKind::EtlPipeline => (5.0, 25.0),
+        // FaaS "gb" is the function working set, capped by its 1 GB
+        // sandbox; `sample_gb`'s round-up floor makes this always 1.
+        WorkloadKind::Faas => (1.0, 1.0),
     }
 }
 

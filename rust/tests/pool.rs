@@ -19,7 +19,9 @@
 //! * Power-cap action sequences are bit-identical across widths over
 //!   multi-round scans (ceiling re-assertion and restore included).
 //! * Whole campaigns are bit-identical between `worker_threads` 1
-//!   and 8.
+//!   and 8 — including two campaigns running **concurrently** on
+//!   independent pools, each matching its own serial oracle (nested
+//!   parallelism shares no hidden state).
 
 use ecosched::cluster::flavor::CATALOG;
 use ecosched::cluster::{Cluster, Demand, HostId, ShardedCluster, VmId};
@@ -302,6 +304,60 @@ fn campaign_is_bit_identical_across_worker_counts() {
     assert_eq!(serial.migrations, wide.migrations);
     assert_eq!(serial.sla_violations, wide.sla_violations);
     assert_eq!(serial.final_digests.len(), wide.final_digests.len());
+}
+
+/// Nested parallelism: two campaigns running **concurrently** (each
+/// with its own width-4 `WorkerPool`, so up to 8 pool workers plus 2
+/// driver threads are live at once) must each be bit-identical to the
+/// same campaign run serially at width 1. Pools share nothing —
+/// crossed state (a global pool, a shared RNG, a static counter)
+/// would show up here as divergence or a crash.
+#[test]
+fn concurrent_campaigns_match_their_serial_oracles() {
+    let specs = [(21u64, 10usize), (22u64, 14usize)];
+    let run = |seed: u64, n_jobs: usize, workers: usize| {
+        let trace = TraceSpec {
+            mix: Mix::paper(),
+            n_jobs,
+            arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+            horizon: 3600.0,
+        }
+        .generate(seed);
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed,
+                shard_count: 4,
+                worker_threads: workers,
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        coord.run(trace)
+    };
+    let serial: Vec<_> = specs.iter().map(|&(s, n)| run(s, n, 1)).collect();
+    let concurrent = std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|&(s, n)| scope.spawn(move || run(s, n, 4)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("campaign thread panicked"))
+            .collect::<Vec<_>>()
+    });
+    for ((oracle, nested), &(seed, n_jobs)) in serial.iter().zip(&concurrent).zip(&specs) {
+        assert_eq!(oracle.jobs.len(), n_jobs, "seed {seed}");
+        assert_eq!(oracle.energy_j, nested.energy_j, "seed {seed}");
+        assert_eq!(oracle.makespan, nested.makespan, "seed {seed}");
+        assert_eq!(oracle.migrations, nested.migrations, "seed {seed}");
+        assert_eq!(oracle.sla_violations, nested.sla_violations, "seed {seed}");
+        assert_eq!(oracle.deferrals, nested.deferrals, "seed {seed}");
+        assert_eq!(
+            oracle.final_digests.len(),
+            nested.final_digests.len(),
+            "seed {seed}"
+        );
+    }
 }
 
 /// A predictor whose weights can be swapped mid-test through a shared
