@@ -1,0 +1,82 @@
+//! Bench: fault-injection overhead — wall time of a faulted campaign
+//! (host crashes, evacuations, blackouts, migration-failure oracle)
+//! vs the identical fault-free campaign, at worker widths 1 and 4.
+//! Asserts the faulted runs actually crash hosts and stay
+//! deterministic (fingerprint-equal across samples). Emits
+//! `BENCH_chaos.json` for CI's bench gate (`benches/compare.py`).
+
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
+use ecosched::sim::FaultConfig;
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
+use ecosched::workload::{Arrivals, Mix, TraceSpec};
+
+fn main() {
+    bench_header("chaos");
+    let mut report = JsonReport::new("chaos");
+    let (n_jobs, samples) = if short_mode() { (16, 3) } else { (48, 5) };
+
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs,
+        arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+        horizon: 7200.0,
+    }
+    .generate(7);
+
+    for &(tag, faults) in &[
+        ("clean", None),
+        (
+            "faulted",
+            Some(FaultConfig {
+                host_crash_rate_per_hour: 2.0,
+                ..Default::default()
+            }),
+        ),
+    ] {
+        for &workers in &[1usize, 4] {
+            let mut fingerprints = Vec::new();
+            let r = Bench::new(&format!("chaos/campaign/{tag}/w{workers}"))
+                .warmup(1)
+                .samples(samples)
+                .iters(1)
+                .run(|| {
+                    let mut coord = Coordinator::new(
+                        CampaignConfig {
+                            n_hosts: 8,
+                            shard_count: 4,
+                            seed: 7,
+                            worker_threads: workers,
+                            faults,
+                            ..Default::default()
+                        },
+                        make_policy("round_robin").unwrap(),
+                    );
+                    let rep = coord.run(trace.clone());
+                    if faults.is_some() {
+                        assert!(rep.host_crashes > 0, "fault plan never crashed a host");
+                    }
+                    assert_eq!(
+                        rep.jobs.len() + rep.interrupted_jobs,
+                        n_jobs,
+                        "every job must finish or be interrupted"
+                    );
+                    fingerprints.push(rep.fingerprint());
+                    std::hint::black_box(rep.energy_j);
+                });
+            assert!(
+                fingerprints.windows(2).all(|w| w[0] == w[1]),
+                "faulted campaign not deterministic across samples"
+            );
+            report.record_with(
+                &r,
+                &[
+                    ("jobs", n_jobs as f64),
+                    ("workers", workers as f64),
+                    ("jobs_per_s", n_jobs as f64 / r.per_iter.mean),
+                ],
+            );
+        }
+    }
+
+    report.write().expect("write BENCH_chaos.json");
+}

@@ -144,7 +144,7 @@ COMMANDS:
                           --hours <h>        simulated campaign length (default 2)
     experiment <id>     Reproduce a paper table/figure:
                           fig1 fig2 fig3 fig4 table1 table2 table3 table4 table5
-                          abl1 abl2 abl3 scale all
+                          abl1 abl2 abl3 scale chaos all
                           --seeds 1,2,3      seeds to average (default 3 seeds)
                           --out <dir>        CSV output dir (default results/)
                           --artifacts <dir>  HLO artifacts dir (default artifacts/)

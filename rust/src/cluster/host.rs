@@ -219,6 +219,38 @@ impl Host {
         }
     }
 
+    /// Crash the host at `now`: resident VMs are gone (the caller —
+    /// [`crate::cluster::Cluster::fail_host`] — settles their records
+    /// and reservations first), the warm pool dies with the kernel,
+    /// and the host draws BMC power until an explicit [`Host::recover`].
+    /// Only an `On` host can crash; transitioning or off hosts are
+    /// already dark.
+    pub fn fail(&mut self, _now: f64) {
+        assert!(self.state.is_on(), "fail on a host that is not On");
+        assert!(
+            self.vms.is_empty(),
+            "fail with {} unsettled resident VMs",
+            self.vms.len()
+        );
+        self.state = PowerState::Failed;
+        self.containers.clear();
+        self.demand = Demand::ZERO;
+        self.migration_net = 0.0;
+    }
+
+    /// Recover a crashed host at `now`: it reboots through the normal
+    /// boot window (and pays the boot transient) before accepting
+    /// placements again. No-op unless the host is `Failed`.
+    pub fn recover(&mut self, now: f64) {
+        if self.state.is_failed() {
+            self.state = PowerState::Booting {
+                until: now + BOOT_SECS,
+            };
+            self.freq = 1.0;
+            self.power_cycles += 1;
+        }
+    }
+
     /// Set the DVFS point to the nearest catalog p-state.
     pub fn set_freq(&mut self, target: f64) {
         self.freq = snap_to_pstate(target);
@@ -447,6 +479,27 @@ mod tests {
         let mut h = host();
         h.vms.push(VmId(1));
         h.power_off(0.0);
+    }
+
+    #[test]
+    fn fail_then_recover_pays_a_full_boot() {
+        let mut h = host();
+        h.park_warm(FunctionId(3), 0.5, 1e9);
+        h.demand.cpu = 4.0;
+        h.fail(10.0);
+        assert!(h.state.is_failed());
+        assert!(h.containers.is_empty());
+        assert_eq!(h.demand, Demand::ZERO);
+        assert_eq!(h.power(), h.spec.power.p_off);
+        assert_eq!(h.utilization(), Utilization::default());
+        // power_on is for Off hosts only — a crashed host stays dark.
+        h.power_on(20.0);
+        assert!(h.state.is_failed());
+        h.recover(20.0);
+        assert_eq!(h.power_cycles, 1);
+        assert!(matches!(h.state, PowerState::Booting { .. }));
+        h.state = h.state.advance(20.0 + BOOT_SECS);
+        assert!(h.state.is_on());
     }
 
     #[test]

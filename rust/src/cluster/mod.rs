@@ -261,6 +261,90 @@ impl Cluster {
             (self.hosts[to.0].migration_net - charged).max(0.0);
     }
 
+    /// Cancel an in-flight migration: the copy is abandoned and the VM
+    /// keeps running on its source. Releases exactly the destination
+    /// bookkeeping that [`Cluster::start_migration`] charged
+    /// (reservation, expected-load share, migration traffic on both
+    /// ends). Used when the destination host crashes mid-copy.
+    pub fn cancel_migration(&mut self, vm_id: VmId) {
+        let (from, to, flavor) = match self.vms.get(&vm_id) {
+            Some(vm) => match vm.state {
+                VmState::Migrating { from, to, .. } => (from, to, vm.flavor),
+                _ => panic!("cancel_migration on non-migrating {vm_id}"),
+            },
+            None => panic!("cancel_migration on unknown {vm_id}"),
+        };
+        let charged = self.migration_net_of.remove(&vm_id).unwrap_or(0.0);
+        let vm = self.vms.get_mut(&vm_id).unwrap();
+        vm.state = VmState::Running;
+        vm.host = Some(from);
+        let expected = vm.expected;
+        self.expected_cache[to.0].sub(&expected);
+        self.reserved[to.0] = sub_reservation(&self.reserved[to.0], &flavor);
+        self.hosts[from.0].migration_net =
+            (self.hosts[from.0].migration_net - charged).max(0.0);
+        self.hosts[to.0].migration_net =
+            (self.hosts[to.0].migration_net - charged).max(0.0);
+    }
+
+    /// Crash a host at `now`. In-flight migrations *into* the host are
+    /// cancelled (the VM survives on its source); every VM resident on
+    /// the host — including sources of outgoing copies, whose
+    /// destination bookkeeping is released — is killed. Returns the
+    /// killed and cancelled VM ids in deterministic (residence /
+    /// ascending) order so the coordinator can requeue their jobs.
+    pub fn fail_host(&mut self, host_id: HostId, now: f64) -> CrashOutcome {
+        assert!(
+            self.hosts[host_id.0].state.is_on(),
+            "fail_host on {host_id} which is not On"
+        );
+        // Abandon copies targeting the crashed host first, so the
+        // resident sweep below only sees residents.
+        let cancelled_incoming: Vec<VmId> = self
+            .vms
+            .values()
+            .filter(|vm| matches!(vm.state, VmState::Migrating { to, .. } if to == host_id))
+            .map(|vm| vm.id)
+            .collect();
+        for &vm_id in &cancelled_incoming {
+            self.cancel_migration(vm_id);
+        }
+        let killed = self.hosts[host_id.0].vms.clone();
+        for &vm_id in &killed {
+            // An outgoing copy dies with its source: release the
+            // destination's share before settling the source side.
+            if matches!(self.vms[&vm_id].state, VmState::Migrating { .. }) {
+                let (from, to, flavor) = match self.vms[&vm_id].state {
+                    VmState::Migrating { from, to, .. } => (from, to, self.vms[&vm_id].flavor),
+                    _ => unreachable!(),
+                };
+                debug_assert_eq!(from, host_id);
+                let charged = self.migration_net_of.remove(&vm_id).unwrap_or(0.0);
+                let expected = self.vms[&vm_id].expected;
+                self.expected_cache[to.0].sub(&expected);
+                self.reserved[to.0] = sub_reservation(&self.reserved[to.0], &flavor);
+                self.hosts[to.0].migration_net =
+                    (self.hosts[to.0].migration_net - charged).max(0.0);
+                let vm = self.vms.get_mut(&vm_id).unwrap();
+                vm.state = VmState::Running;
+                vm.host = Some(from);
+            }
+            let vm = self.vms.get_mut(&vm_id).unwrap();
+            let flavor = vm.flavor;
+            let expected = vm.expected;
+            vm.state = VmState::Terminated;
+            vm.host = None;
+            self.reserved[host_id.0] = sub_reservation(&self.reserved[host_id.0], &flavor);
+            self.expected_cache[host_id.0].sub(&expected);
+        }
+        self.hosts[host_id.0].vms.clear();
+        self.hosts[host_id.0].fail(now);
+        CrashOutcome {
+            killed,
+            cancelled_incoming,
+        }
+    }
+
     /// Terminate a VM (job completed) and free its reservation.
     pub fn terminate_vm(&mut self, vm_id: VmId) {
         let vm = self.vms.get_mut(&vm_id).expect("terminate unknown VM");
@@ -379,6 +463,18 @@ impl Cluster {
     /// sum of resident flavors; VM/host cross-references agree.
     pub fn check_invariants(&self) -> Result<(), String> {
         for h in &self.hosts {
+            if h.state.is_failed() {
+                if !h.vms.is_empty() {
+                    return Err(format!("failed {} still lists {} VMs", h.id, h.vms.len()));
+                }
+                let r = &self.reserved[h.id.0];
+                if r.cpu.abs() > 1e-6 || r.mem_gb.abs() > 1e-6 {
+                    return Err(format!("failed {} holds reservation {:?}", h.id, r));
+                }
+                if !h.containers.is_empty() {
+                    return Err(format!("failed {} still holds sandboxes", h.id));
+                }
+            }
             let mut expect = Demand::ZERO;
             for vm_id in &h.vms {
                 let vm = self
@@ -435,6 +531,18 @@ fn sub_reservation(r: &Demand, f: &Flavor) -> Demand {
         disk_mbps: r.disk_mbps,
         net_mbps: r.net_mbps,
     }
+}
+
+/// What a host crash did to the VM inventory — the coordinator's
+/// work-list for evacuation.
+#[derive(Debug, Clone, Default)]
+pub struct CrashOutcome {
+    /// VMs that died with the host (residents, including sources of
+    /// abandoned outgoing copies), in residence order.
+    pub killed: Vec<VmId>,
+    /// In-flight migrations into the host that were cancelled; these
+    /// VMs survive on their sources.
+    pub cancelled_incoming: Vec<VmId>,
 }
 
 /// Placement errors surfaced to the scheduler.
@@ -636,6 +744,73 @@ mod tests {
         c.check_invariants().unwrap();
         c.terminate_vm(vm);
         assert_eq!(c.expected_load(HostId(1)).cpu, 0.0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_host_kills_residents_and_releases_reservations() {
+        let mut c = cluster();
+        let a = c.create_vm(MEDIUM, JobId(1), 0.0);
+        let b = c.create_vm(SMALL, JobId(2), 0.0);
+        c.place_vm(a, HostId(0)).unwrap();
+        c.place_vm(b, HostId(0)).unwrap();
+        c.set_expected_demand(
+            a,
+            Demand {
+                cpu: 3.0,
+                mem_gb: 6.0,
+                disk_mbps: 10.0,
+                net_mbps: 2.0,
+            },
+        );
+        let out = c.fail_host(HostId(0), 5.0);
+        assert_eq!(out.killed, vec![a, b]);
+        assert!(out.cancelled_incoming.is_empty());
+        assert!(c.host(HostId(0)).state.is_failed());
+        assert!(c.host(HostId(0)).vms.is_empty());
+        assert_eq!(c.reserved(HostId(0)).mem_gb, 0.0);
+        assert_eq!(c.expected_load(HostId(0)), Demand::ZERO);
+        assert_eq!(c.vms[&a].state, VmState::Terminated);
+        assert_eq!(c.vms[&a].host, None);
+        c.check_invariants().unwrap();
+        // Recovery reboots through the normal boot window.
+        c.host_mut(HostId(0)).recover(10.0);
+        c.advance_power_states(10.0 + crate::cluster::power::BOOT_SECS);
+        assert!(c.host(HostId(0)).state.is_on());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_host_source_crash_abandons_outgoing_copy() {
+        let mut c = cluster();
+        let vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        c.start_migration(vm, HostId(1), 0.0, 100.0).unwrap();
+        let out = c.fail_host(HostId(0), 1.0);
+        assert_eq!(out.killed, vec![vm]);
+        // Destination bookkeeping fully released.
+        assert_eq!(c.reserved(HostId(1)).mem_gb, 0.0);
+        assert_eq!(c.expected_load(HostId(1)), Demand::ZERO);
+        assert_eq!(c.host(HostId(1)).migration_net, 0.0);
+        assert_eq!(c.vms[&vm].state, VmState::Terminated);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_host_destination_crash_cancels_incoming_copy() {
+        let mut c = cluster();
+        let vm = c.create_vm(MEDIUM, JobId(1), 0.0);
+        c.place_vm(vm, HostId(0)).unwrap();
+        c.start_migration(vm, HostId(1), 0.0, 100.0).unwrap();
+        let out = c.fail_host(HostId(1), 1.0);
+        assert!(out.killed.is_empty());
+        assert_eq!(out.cancelled_incoming, vec![vm]);
+        // The VM survives on its source, copy abandoned.
+        assert_eq!(c.vms[&vm].state, VmState::Running);
+        assert_eq!(c.vms[&vm].host, Some(HostId(0)));
+        assert_eq!(c.host(HostId(0)).vms, vec![vm]);
+        assert_eq!(c.host(HostId(0)).migration_net, 0.0);
+        assert_eq!(c.reserved(HostId(0)).mem_gb, 16.0);
         c.check_invariants().unwrap();
     }
 

@@ -101,6 +101,11 @@ pub enum PowerState {
     Off,
     /// Shutting down until the contained simulation time.
     ShuttingDown { until: f64 },
+    /// Crashed. Resident VMs and warm containers are gone; the host
+    /// draws BMC power only and stays here until an explicit
+    /// recovery (`Host::recover`) reboots it — `advance` never
+    /// leaves this state on its own.
+    Failed,
 }
 
 /// Boot duration for the Xeon class (BIOS + kernel + services), seconds.
@@ -115,6 +120,11 @@ impl PowerState {
 
     pub fn is_off(&self) -> bool {
         matches!(self, PowerState::Off)
+    }
+
+    /// Crashed and not yet recovered?
+    pub fn is_failed(&self) -> bool {
+        matches!(self, PowerState::Failed)
     }
 
     /// Can the host accept placements right now?
@@ -136,7 +146,7 @@ impl PowerState {
     pub fn power(&self, model: &PowerModel, active: impl Fn() -> f64) -> f64 {
         match self {
             PowerState::On => active(),
-            PowerState::Off => model.p_off,
+            PowerState::Off | PowerState::Failed => model.p_off,
             PowerState::Booting { .. } | PowerState::ShuttingDown { .. } => model.p_transition,
         }
     }
@@ -197,6 +207,20 @@ mod tests {
         assert_eq!(s.advance(31.0), PowerState::Off);
         assert!(!s.accepts_vms());
         assert!(PowerState::On.accepts_vms());
+    }
+
+    #[test]
+    fn failed_state_is_terminal_and_draws_bmc_power() {
+        let m = XEON_64GB;
+        let s = PowerState::Failed;
+        assert!(!s.accepts_vms());
+        assert!(!s.is_on());
+        assert!(!s.is_off());
+        assert!(s.is_failed());
+        // advance never auto-recovers a crashed host.
+        assert_eq!(s.advance(1e12), PowerState::Failed);
+        let p = s.power(&m, || panic!("active must not be called"));
+        assert_eq!(p, m.p_off);
     }
 
     #[test]

@@ -120,6 +120,11 @@ pub struct ShardDigest {
     /// Warm serverless sandboxes parked on member hosts — the shard's
     /// reuse potential (and idle-memory cost) for FaaS load.
     pub warm_containers: usize,
+    /// Member hosts currently crashed (PowerState::Failed).
+    pub failed: usize,
+    /// Nominal capacity lost to crashed hosts — what recovery would
+    /// give back to the shard.
+    pub capacity_lost: Demand,
 }
 
 impl ShardDigest {
@@ -141,6 +146,10 @@ impl ShardDigest {
             }
             if host.state.accepts_vms() {
                 d.capacity_on.add(&host.spec.capacity());
+            }
+            if host.state.is_failed() {
+                d.failed += 1;
+                d.capacity_lost.add(&host.spec.capacity());
             }
             d.reserved.add(cluster.reserved(h));
             d.expected.add(&cluster.expected_load(h));
@@ -409,6 +418,8 @@ impl ShardedCluster {
         for d in &mut self.digests {
             d.on = 0;
             d.capacity_on = Demand::ZERO;
+            d.failed = 0;
+            d.capacity_lost = Demand::ZERO;
         }
         for host in &self.cluster.hosts {
             let d = &mut self.digests[self.map.shard_of(host.id)];
@@ -417,6 +428,10 @@ impl ShardedCluster {
             }
             if host.state.accepts_vms() {
                 d.capacity_on.add(&host.spec.capacity());
+            }
+            if host.state.is_failed() {
+                d.failed += 1;
+                d.capacity_lost.add(&host.spec.capacity());
             }
         }
     }
@@ -447,6 +462,72 @@ impl ShardedCluster {
     /// capacity aggregates are nominal).
     pub fn set_freq(&mut self, host: HostId, freq: f64) {
         self.cluster.host_mut(host).set_freq(freq);
+    }
+
+    /// Crash a host (see [`Cluster::fail_host`]), keeping every
+    /// affected shard digest consistent in one pass: the crashed
+    /// host's shard loses its On count, accepting capacity, and warm
+    /// pool and gains a failed count + lost capacity; every killed
+    /// VM's reservation/expected/class load leaves its shard, and
+    /// abandoned copies (outgoing *and* incoming) release the
+    /// destination's share wherever that destination lives.
+    pub fn fail_host(&mut self, host_id: HostId, now: f64) -> crate::cluster::CrashOutcome {
+        let shard = self.map.shard_of(host_id);
+        let cap = self.cluster.hosts[host_id.0].spec.capacity();
+        let warm = self.cluster.hosts[host_id.0].warm_count();
+        // Collect (shard, reservation, expected, class) releases before
+        // the crash rewrites VM state.
+        let mut releases: Vec<(usize, Demand, Demand, usize)> = Vec::new();
+        for &vm_id in &self.cluster.hosts[host_id.0].vms {
+            let vm = &self.cluster.vms[&vm_id];
+            let cls = demand_class(&vm.expected(), &vm.flavor);
+            // The killed resident's own share.
+            releases.push((shard, reservation_of(&vm.flavor), vm.expected(), cls));
+            // An outgoing copy's destination share dies with the source.
+            if let VmState::Migrating { to, .. } = vm.state {
+                releases.push((self.map.shard_of(to), reservation_of(&vm.flavor), vm.expected(), cls));
+            }
+        }
+        for vm in self.cluster.vms.values() {
+            if let VmState::Migrating { from, to, .. } = vm.state {
+                // Cancelled incoming copy: the crashed host held only
+                // the destination share; the VM survives on `from`.
+                if to == host_id && from != host_id {
+                    let cls = demand_class(&vm.expected(), &vm.flavor);
+                    releases.push((shard, reservation_of(&vm.flavor), vm.expected(), cls));
+                }
+            }
+        }
+        let out = self.cluster.fail_host(host_id, now);
+        let d = &mut self.digests[shard];
+        d.on -= 1;
+        d.capacity_on.sub(&cap);
+        d.warm_containers -= warm;
+        d.failed += 1;
+        d.capacity_lost.add(&cap);
+        for (s, res, exp, cls) in releases {
+            let d = &mut self.digests[s];
+            d.reserved.sub(&res);
+            d.expected.sub(&exp);
+            d.per_class[cls].sub(&exp);
+        }
+        out
+    }
+
+    /// Recover a crashed host: it reboots through the normal boot
+    /// window (the shard regains On count and capacity when the boot
+    /// completes in [`ShardedCluster::advance_power_states`]); the
+    /// failed count and lost capacity are given back immediately.
+    /// No-op unless the host is Failed.
+    pub fn recover_host(&mut self, host: HostId, now: f64) {
+        let was_failed = self.cluster.hosts[host.0].state.is_failed();
+        let cap = self.cluster.hosts[host.0].spec.capacity();
+        self.cluster.host_mut(host).recover(now);
+        if was_failed {
+            let d = &mut self.digests[self.map.shard_of(host)];
+            d.failed -= 1;
+            d.capacity_lost.sub(&cap);
+        }
     }
 
     // ---- serverless sandbox handles ----------------------------------
@@ -532,6 +613,18 @@ impl ShardedCluster {
                 return Err(format!(
                     "shard {s}: digest counts {}/{} != recomputed {}/{}",
                     d.hosts, d.on, fresh.hosts, fresh.on
+                ));
+            }
+            if d.failed != fresh.failed {
+                return Err(format!(
+                    "shard {s}: failed hosts {} != recomputed {}",
+                    d.failed, fresh.failed
+                ));
+            }
+            if !demand_close(&d.capacity_lost, &fresh.capacity_lost) {
+                return Err(format!(
+                    "shard {s}: capacity_lost {:?} != recomputed {:?}",
+                    d.capacity_lost, fresh.capacity_lost
                 ));
             }
             if d.warm_containers != fresh.warm_containers {
@@ -686,6 +779,73 @@ mod tests {
         sc.park_warm_container(host, FunctionId(3), 0.25, 1e9);
         sc.power_off(host, 0.0);
         assert_eq!(sc.digest(shard).warm_containers, 0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_host_keeps_digests_consistent_through_crash_and_recovery() {
+        use crate::workload::faas::FunctionId;
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(8), 2);
+        let host = HostId(0);
+        let shard = sc.shard_of(host);
+        let vm = sc.create_vm(MEDIUM, JobId(1), 0.0);
+        sc.place_vm(vm, host).unwrap();
+        sc.set_expected_demand(
+            vm,
+            Demand {
+                cpu: 2.0,
+                mem_gb: 4.0,
+                disk_mbps: 50.0,
+                net_mbps: 5.0,
+            },
+        );
+        sc.park_warm_container(host, FunctionId(1), 0.5, 1e9);
+        let on0 = sc.digest(shard).on;
+        let out = sc.fail_host(host, 10.0);
+        assert_eq!(out.killed, vec![vm]);
+        let d = *sc.digest(shard);
+        assert_eq!(d.failed, 1);
+        assert_eq!(d.on, on0 - 1);
+        assert!(d.capacity_lost.mem_gb > 0.0);
+        assert!(d.reserved.mem_gb.abs() < 1e-9);
+        assert!(d.expected.mem_gb.abs() < 1e-9);
+        sc.check_invariants().unwrap();
+        // A long advance never resurrects a crashed host.
+        sc.advance_power_states(1e7);
+        assert_eq!(sc.digest(shard).failed, 1);
+        sc.check_invariants().unwrap();
+        // Recovery reboots through the boot window.
+        sc.recover_host(host, 1e7);
+        assert_eq!(sc.digest(shard).failed, 0);
+        assert!(sc.digest(shard).capacity_lost.mem_gb.abs() < 1e-9);
+        assert_eq!(sc.digest(shard).on, on0 - 1); // still booting
+        sc.check_invariants().unwrap();
+        sc.advance_power_states(1e7 + crate::cluster::power::BOOT_SECS);
+        assert_eq!(sc.digest(shard).on, on0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_host_mid_migration_releases_both_ends_in_digests() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(8), 2);
+        let src = HostId(0);
+        let dst = (1..8)
+            .map(HostId)
+            .find(|&h| sc.shard_of(h) != sc.shard_of(src))
+            .expect("8 hosts hash into both of 2 shards");
+        let vm = sc.create_vm(MEDIUM, JobId(1), 0.0);
+        sc.place_vm(vm, src).unwrap();
+        sc.start_migration(vm, dst, 0.0, 100.0).unwrap();
+        // Destination crashes: copy cancelled, VM survives on source.
+        sc.fail_host(dst, 1.0);
+        assert_eq!(sc.cluster().vms[&vm].state, VmState::Running);
+        assert!((sc.digest(sc.shard_of(src)).reserved.mem_gb - MEDIUM.mem_gb).abs() < 1e-9);
+        assert!(sc.digest(sc.shard_of(dst)).reserved.mem_gb.abs() < 1e-9);
+        sc.check_invariants().unwrap();
+        // Now the source crashes too: the VM dies with it.
+        sc.fail_host(src, 2.0);
+        assert_eq!(sc.cluster().vms[&vm].state, VmState::Terminated);
+        assert!(sc.digest(sc.shard_of(src)).reserved.mem_gb.abs() < 1e-9);
         sc.check_invariants().unwrap();
     }
 

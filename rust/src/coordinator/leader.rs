@@ -34,17 +34,34 @@
 //! their own cached scoring state (predictor clone + arenas,
 //! invalidated by [`crate::predict::EnergyPredictor::weight_epoch`]
 //! when retraining swaps weights).
+//!
+//! # Fault handling
+//!
+//! With `CampaignConfig::faults` set, a [`crate::sim::FaultPlan`] —
+//! generated up front from `(seed, config, cluster shape)` — is
+//! pushed into the event queue before the first submit. Host crashes
+//! kill resident VMs ([`crate::cluster::ShardedCluster::fail_host`]);
+//! their jobs lose all progress and drain back through the ordinary
+//! `decide_batch` retry path under bounded exponential backoff
+//! (`retry_backoff_base`, capped attempts → the job is reported
+//! interrupted). Recoveries pay a full boot, and are deferred by a
+//! quarantine cooldown when the host is flapping (k crashes inside
+//! the flap window). Telemetry blackouts mask whole shards' samples;
+//! migration actuations can fail transiently per the plan's stateless
+//! oracle; worker panic probes exercise the pool's self-healing.
+//! Every resolution depends only on simulation state, so a faulted
+//! campaign is bit-identical at any worker width.
 
 use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState, CONTAINER_BOOT_W};
 use crate::coordinator::report::CampaignReport;
 use crate::coordinator::state::CampaignState;
 use crate::profile::{ExecutionRecord, HistoryStore, ResourceVector};
-use crate::runtime::shard_pool;
+use crate::runtime::{shard_pool, PoolError, WorkerSlot};
 use crate::sched::{
     Consolidator, ControlAction, ControlLoop, Decision, DvfsGovernor, PlacementPolicy,
     PlacementRequest, ScheduleContext,
 };
-use crate::sim::{EventQueue, SAMPLE_INTERVAL};
+use crate::sim::{EventQueue, FaultConfig, FaultKind, SAMPLE_INTERVAL};
 use crate::sla::SlaSpec;
 use crate::workload::faas::{KeepAliveLoop, KeepAlivePolicy};
 use crate::workload::{flavor_for, FaasConfig, Job, JobId, JobState};
@@ -81,6 +98,20 @@ pub struct CampaignConfig {
     /// default) means such jobs run like plain VMs and nothing in the
     /// batch families changes.
     pub faas: Option<FaasConfig>,
+    /// Base delay (s) for the bounded-exponential placement-retry
+    /// backoff — attempt *k* re-polls after
+    /// `base · 2^min(k−1, 7) · jitter`. Also the slack added to
+    /// boot-wait re-polls (previously a hard-coded 0.5 s).
+    pub retry_backoff_base: f64,
+    /// Placement attempts per job before the coordinator gives up and
+    /// reports the job as interrupted. The default is high enough
+    /// that healthy campaigns never hit it; chaos experiments lower
+    /// it to model real admission-control give-up.
+    pub retry_max_attempts: u32,
+    /// Deterministic fault injection (host crashes, telemetry
+    /// blackouts, migration failures, worker panics). `None` (the
+    /// default) replays the fault-free coordinator bit for bit.
+    pub faults: Option<FaultConfig>,
     /// Seconds between control-loop scans.
     pub scan_interval: f64,
     /// Watts-Up-Pro relative noise (0 disables).
@@ -103,6 +134,9 @@ impl Default for CampaignConfig {
             dvfs: Some(crate::sched::DvfsParams::default()),
             power_cap: None,
             faas: None,
+            retry_backoff_base: 0.5,
+            retry_max_attempts: 1000,
+            faults: None,
             scan_interval: 30.0,
             meter_noise: 0.01,
             telemetry_noise: 0.02,
@@ -117,6 +151,8 @@ enum Event {
     Tick,
     MigrationDone(VmId),
     RetryQueue,
+    /// A fault-plan entry (or a quarantine-deferred recovery).
+    Fault(FaultKind),
 }
 
 /// The campaign driver.
@@ -174,6 +210,15 @@ impl Coordinator {
             st.jobs.insert(job.id, job);
         }
         queue.push(1.0, Event::Tick);
+        // Seed the fault schedule: the whole plan is closed over
+        // before the first event pops, so the same faults fire at the
+        // same simulated times regardless of how the campaign
+        // unfolds (the chaos determinism contract).
+        for e in st.fault_plan.events() {
+            if e.t < cfg.max_sim_time {
+                queue.push(e.t.max(0.0), Event::Fault(e.kind));
+            }
+        }
 
         let mut last_scan = 0.0;
         let mut n_events: u64 = 0;
@@ -223,15 +268,20 @@ impl Coordinator {
                     // ignored the power_on — ask again once it is Off.
                     let mut still_waiting = Vec::new();
                     for (id, host) in std::mem::take(&mut st.waiting_boot) {
-                        if st.cluster.host(host).state.is_on() {
+                        let hstate = st.cluster.host(host).state;
+                        if hstate.is_on() {
+                            retry.push(id);
+                        } else if hstate.is_failed() {
+                            // The host crashed while we waited for its
+                            // boot: place the job somewhere else.
                             retry.push(id);
                         } else {
-                            if st.cluster.host(host).state.is_off() {
+                            if hstate.is_off() {
                                 st.cluster.power_on(host, now);
                                 request_retry(
                                     &mut queue,
                                     &mut st.next_retry,
-                                    now + BOOT_SECS + 0.5,
+                                    now + BOOT_SECS + cfg.retry_backoff_base,
                                 );
                             }
                             still_waiting.push((id, host));
@@ -242,9 +292,14 @@ impl Coordinator {
                     self.place_batch(now, &retry, &mut st, &mut queue);
                 }
                 Event::MigrationDone(vm_id) => {
+                    // The `done` guard drops events staled by a
+                    // crash-cancelled copy: if the VM has since begun
+                    // a *new* migration, its `done` lies in the
+                    // future and the stale event must not cut it
+                    // over early.
                     if matches!(
                         st.cluster.vms.get(&vm_id).map(|v| v.state),
-                        Some(VmState::Migrating { .. })
+                        Some(VmState::Migrating { done, .. }) if done <= now + 1e-9
                     ) {
                         st.cluster.finish_migration(vm_id);
                         // Stop-and-copy stall happens at cut-over, not
@@ -267,14 +322,144 @@ impl Coordinator {
                         &cfg,
                         keep_alive.as_deref(),
                     );
-                    if st.counters.completed < st.n_jobs {
+                    // Interrupted jobs will never complete; counting
+                    // them keeps the tick re-arm (and hence the
+                    // campaign) from idling forever on abandoned work.
+                    if st.counters.completed + st.interrupted.len() < st.n_jobs {
                         queue.push_in(1.0, Event::Tick);
                     }
+                }
+                Event::Fault(kind) => {
+                    self.handle_fault(now, kind, &mut st, &mut queue);
                 }
             }
         }
 
         st.report(self.policy.name(), self.config.seed, queue.now())
+    }
+
+    /// Apply one fault-plan event. Every resolution here depends only
+    /// on simulation state (never on wall clock or worker width), so
+    /// replays are bit-identical.
+    fn handle_fault(
+        &mut self,
+        now: f64,
+        kind: FaultKind,
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+    ) {
+        match kind {
+            FaultKind::HostCrash(h) => {
+                // The plan is generated blind to power state: a crash
+                // scheduled for a host that is off/booting/already
+                // failed is dropped.
+                if !st.cluster.host(h).state.is_on() {
+                    return;
+                }
+                st.crash_history.entry(h).or_default().push(now);
+                let shard = st.cluster.shard_of(h);
+                let outcome = st.cluster.fail_host(h, now);
+                st.counters.host_crashes += 1;
+                st.shard_counters[shard].crashes += 1;
+                // Copies that were inbound to the crashed host were
+                // cancelled (their VMs keep running on the source);
+                // the stall owed at their cut-over is void.
+                for vm in &outcome.cancelled_incoming {
+                    st.pending_stalls.remove(vm);
+                }
+                // Resident VMs are dead: their jobs lose all progress
+                // and enter the evacuation queue, drained through the
+                // ordinary decide_batch retry path.
+                let mut evacuate: Vec<JobId> = Vec::new();
+                for vm in &outcome.killed {
+                    st.telemetry.forget_vm(*vm);
+                    st.pending_stalls.remove(vm);
+                    if let Some(job_id) = st.job_of_vm.remove(vm) {
+                        let job = st.jobs.get_mut(&job_id).unwrap();
+                        if job.state == JobState::Running {
+                            job.requeue_after_crash(now);
+                            st.counters.evacuations += 1;
+                            st.shard_counters[shard].evacuated_vms += 1;
+                            st.counters.replacement_energy_j +=
+                                st.job_energy.get(&job_id).copied().unwrap_or(0.0);
+                            st.evacuated_at.insert(job_id, now);
+                            evacuate.push(job_id);
+                        }
+                    }
+                }
+                // Jobs parked on this host's boot queue will never
+                // see it come up; re-place them elsewhere.
+                let mut still = Vec::new();
+                for (id, host) in std::mem::take(&mut st.waiting_boot) {
+                    if host == h {
+                        evacuate.push(id);
+                    } else {
+                        still.push((id, host));
+                    }
+                }
+                st.waiting_boot = still;
+                if !evacuate.is_empty() {
+                    st.deferred.extend(evacuate);
+                    let delay = self.config.retry_backoff_base * st.retry_jitter();
+                    request_retry(queue, &mut st.next_retry, now + delay);
+                }
+            }
+            FaultKind::HostRecover(h) => {
+                // Stale if the crash itself was dropped (or the host
+                // somehow recovered already).
+                if !st.cluster.host(h).state.is_failed() {
+                    return;
+                }
+                let fcfg = self
+                    .config
+                    .faults
+                    .as_ref()
+                    .expect("recovery event without fault config");
+                let flapping = st
+                    .crash_history
+                    .get(&h)
+                    .map(|ts| {
+                        ts.iter().filter(|&&t| now - t <= fcfg.flap_window_s).count()
+                            >= fcfg.flap_threshold
+                    })
+                    .unwrap_or(false);
+                if flapping && !st.quarantine_deferred.contains(&h) {
+                    // Quarantine = delayed recovery: the host stays
+                    // Failed (excluded from every scoring view and
+                    // control loop for free) until the cooldown, when
+                    // this same event fires again and proceeds.
+                    st.quarantine_deferred.insert(h);
+                    st.counters.quarantines += 1;
+                    queue.push(now + fcfg.quarantine_s, Event::Fault(FaultKind::HostRecover(h)));
+                    return;
+                }
+                st.quarantine_deferred.remove(&h);
+                st.cluster.recover_host(h, now);
+                st.counters.host_recoveries += 1;
+            }
+            FaultKind::BlackoutStart { shard, until } => {
+                if let Some(u) = st.blackout_until.get_mut(shard) {
+                    *u = u.max(until);
+                }
+            }
+            FaultKind::WorkerPanic => {
+                // A panic probe through the scoring pool: the dispatch
+                // fails once with WorkerPanicked and the pool heals —
+                // the next fan-out (placement or scan) must succeed.
+                // The serial pool catches the panic identically, so
+                // state evolution matches at every width.
+                st.counters.worker_panics += 1;
+                let probe: Vec<(usize, fn(&mut WorkerSlot))> =
+                    vec![(0, |_| panic!("injected fault-plan worker panic"))];
+                match st.pool.dispatch(probe) {
+                    Err(PoolError::WorkerPanicked(_)) => {}
+                    Err(PoolError::Poisoned) => {
+                        panic!("worker pool failed to heal after injected panic")
+                    }
+                    Ok(_) => unreachable!("panic probe cannot succeed"),
+                }
+            }
+        }
     }
 
     /// One simulated second: demand propagation, job progress, energy
@@ -368,9 +553,23 @@ impl Coordinator {
             }
         }
 
-        // Telemetry at 5 s cadence.
+        // Telemetry at 5 s cadence. Shards inside a fault-plan
+        // blackout window go dark: no new samples land for their
+        // hosts (consumers see the stale ring tail) until the window
+        // passes.
         if (now / SAMPLE_INTERVAL).fract().abs() < 1e-9 {
-            st.telemetry.sample(now, &st.cluster, &demands);
+            if st.blackout_until.iter().any(|&u| u > now) {
+                let masked: Vec<bool> = st
+                    .cluster
+                    .hosts
+                    .iter()
+                    .map(|h| st.blackout_until[st.cluster.shard_of(h.id)] > now)
+                    .collect();
+                st.telemetry
+                    .sample_masked(now, &st.cluster, &demands, &masked);
+            } else {
+                st.telemetry.sample(now, &st.cluster, &demands);
+            }
             for h in &st.cluster.hosts {
                 if h.state.is_on() {
                     let u = h.utilization().cpu;
@@ -447,7 +646,7 @@ impl Coordinator {
         if !st.deferred.is_empty() || !st.waiting_boot.is_empty() {
             // Periodic retry while anything waits.
             if (now as u64) % 15 == 0 {
-                request_retry(queue, &mut st.next_retry, now + 0.5);
+                request_retry(queue, &mut st.next_retry, now + cfg.retry_backoff_base);
             }
         }
     }
@@ -483,9 +682,29 @@ impl Coordinator {
                         }
                     }
                     ControlAction::Migrate { vm, to } => {
+                        // Fault plan: the actuation itself can fail
+                        // transiently. The retry policy is the scan
+                        // cadence — the next consolidation pass
+                        // re-proposes the move — bounded per VM by
+                        // `retry_max_attempts`, after which the VM
+                        // stays put for the rest of the campaign.
+                        if st.has_faults {
+                            let tries = st.migration_retries.get(&vm).copied().unwrap_or(0);
+                            if tries >= self.config.retry_max_attempts {
+                                continue;
+                            }
+                            let attempt = st.migration_attempts;
+                            st.migration_attempts += 1;
+                            if st.fault_plan.migration_fails(attempt) {
+                                st.counters.migration_failures += 1;
+                                st.migration_retries.insert(vm, tries + 1);
+                                continue;
+                            }
+                        }
                         let link = link_headroom(&st.cluster, vm, to);
                         let from = st.cluster.vms.get(&vm).and_then(|v| v.host);
                         if let Ok(cost) = st.cluster.start_migration(vm, to, now, link) {
+                            st.migration_retries.remove(&vm);
                             if let Some(from) = from {
                                 st.shard_counters[st.cluster.shard_of(from)].migrations_out += 1;
                             }
@@ -643,6 +862,11 @@ impl Coordinator {
                 st.vm_of_job.insert(req.job, vm);
                 st.job_of_vm.insert(vm, req.job);
                 st.jobs.get_mut(&req.job).unwrap().start(now);
+                // An evacuated job landing again closes its recovery
+                // window.
+                if let Some(t0) = st.evacuated_at.remove(&req.job) {
+                    st.recovery_latency.push(now - t0);
+                }
                 // Serverless sandbox semantics: a warm container on the
                 // chosen host absorbs the invocation instantly; a miss
                 // pays the cold-start latency (execution stalls) and the
@@ -680,12 +904,31 @@ impl Coordinator {
                 st.cluster.power_on(host, now);
                 st.shard_counters[st.cluster.shard_of(host)].boots += 1;
                 st.waiting_boot.push((req.job, host));
-                request_retry(queue, &mut st.next_retry, now + BOOT_SECS + 0.5);
+                request_retry(
+                    queue,
+                    &mut st.next_retry,
+                    now + BOOT_SECS + self.config.retry_backoff_base,
+                );
             }
             Decision::Defer => {
                 st.counters.deferrals += 1;
-                st.deferred.push(req.job);
-                request_retry(queue, &mut st.next_retry, now + 5.0);
+                let attempts = {
+                    let a = st.retry_attempts.entry(req.job).or_insert(0);
+                    *a += 1;
+                    *a
+                };
+                if attempts >= self.config.retry_max_attempts {
+                    // Bounded retry gave up: the job is abandoned and
+                    // reported as interrupted (it counts toward
+                    // campaign termination, never toward SLA
+                    // compliance).
+                    st.interrupted.insert(req.job);
+                } else {
+                    st.deferred.push(req.job);
+                    let delay = retry_backoff(self.config.retry_backoff_base, attempts)
+                        * st.retry_jitter();
+                    request_retry(queue, &mut st.next_retry, now + delay);
+                }
             }
         }
     }
@@ -710,6 +953,14 @@ fn link_headroom(cluster: &Cluster, vm: VmId, to: HostId) -> f64 {
     let free_src = cap - cluster.host(from).demand.net_mbps - cluster.host(from).migration_net;
     let free_dst = cap - cluster.host(to).demand.net_mbps - cluster.host(to).migration_net;
     free_src.min(free_dst).clamp(10.0, 80.0)
+}
+
+/// Bounded exponential backoff: attempt `k` (1-based) waits
+/// `base · 2^min(k−1, 7)` — capped at 128× base (64 s at the default
+/// base) so a long-deferred job still re-polls on a humane cadence.
+/// The caller multiplies in jitter.
+pub fn retry_backoff(base: f64, attempts: u32) -> f64 {
+    base * f64::from(1u32 << attempts.saturating_sub(1).min(7))
 }
 
 /// Schedule a RetryQueue event unless one is already pending at or

@@ -165,6 +165,89 @@ mod tests {
     }
 
     #[test]
+    fn retry_backoff_doubles_then_caps() {
+        use leader::retry_backoff;
+        assert_eq!(retry_backoff(0.5, 1), 0.5);
+        assert_eq!(retry_backoff(0.5, 2), 1.0);
+        assert_eq!(retry_backoff(0.5, 3), 2.0);
+        assert_eq!(retry_backoff(0.5, 8), 64.0);
+        // Cap: 2^7 × base, no matter how many attempts pile up.
+        assert_eq!(retry_backoff(0.5, 9), 64.0);
+        assert_eq!(retry_backoff(0.5, 200), 64.0);
+    }
+
+    /// Permanent total failure: every host crashes early and never
+    /// recovers, so evacuated and late-arriving jobs exhaust the
+    /// bounded retry budget and land in `interrupted_jobs` — and the
+    /// campaign still terminates cleanly with every job accounted for.
+    #[test]
+    fn exhausted_retries_interrupt_jobs_and_campaign_ends() {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                n_hosts: 3,
+                seed: 11,
+                retry_max_attempts: 4,
+                faults: Some(crate::sim::FaultConfig {
+                    host_crash_rate_per_hour: 60.0,
+                    // Longer than any campaign: crashed hosts stay down.
+                    mean_downtime_s: 1e7,
+                    blackout_rate_per_hour: 0.0,
+                    migration_failure_prob: 0.0,
+                    worker_panics: 0,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            make_policy("round_robin").unwrap(),
+        );
+        let report = coord.run(small_trace(8, 11));
+        assert!(report.host_crashes > 0, "no host crashed — vacuous");
+        assert_eq!(report.host_recoveries, 0, "downtime outlives the campaign");
+        assert!(
+            report.interrupted_jobs > 0,
+            "retry budget was never exhausted — vacuous"
+        );
+        // Conservation: finished + interrupted covers the whole trace.
+        assert_eq!(report.jobs.len() + report.interrupted_jobs, 8);
+    }
+
+    /// A host that keeps crashing inside the flap window has its
+    /// recovery deferred by the quarantine cooldown (and eventually
+    /// rejoins — recoveries still happen).
+    #[test]
+    fn flapping_hosts_are_quarantined() {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                n_hosts: 4,
+                seed: 17,
+                faults: Some(crate::sim::FaultConfig {
+                    host_crash_rate_per_hour: 30.0,
+                    mean_downtime_s: 45.0,
+                    blackout_rate_per_hour: 0.0,
+                    migration_failure_prob: 0.0,
+                    worker_panics: 0,
+                    flap_threshold: 2,
+                    flap_window_s: 3600.0,
+                    quarantine_s: 600.0,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            make_policy("round_robin").unwrap(),
+        );
+        let report = coord.run(small_trace(8, 17));
+        assert!(
+            report.quarantines > 0,
+            "no recovery was deferred — flap detection never fired"
+        );
+        assert!(
+            report.host_recoveries > 0,
+            "quarantined hosts must still rejoin after the cooldown"
+        );
+        assert_eq!(report.jobs.len() + report.interrupted_jobs, 8);
+    }
+
+    #[test]
     fn overhead_is_recorded() {
         let mut coord = Coordinator::new(
             CampaignConfig::default(),

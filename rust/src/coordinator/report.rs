@@ -41,6 +41,10 @@ pub struct ShardCounters {
     pub migrations_out: u64,
     /// Hosts powered off in this shard.
     pub power_offs: u64,
+    /// Hosts of this shard crashed by the fault plan.
+    pub crashes: u64,
+    /// VMs evacuated off this shard's crashed hosts.
+    pub evacuated_vms: u64,
 }
 
 /// Decision-path overhead accounting (§V-E).
@@ -129,6 +133,27 @@ pub struct CampaignReport {
     /// over the worker pool's result channel (the coordinator never
     /// walks shard interiors to report).
     pub final_digests: Vec<ShardDigest>,
+    /// Jobs abandoned after the bounded placement-retry policy gave
+    /// up (`CampaignConfig::retry_max_attempts`). Not in `jobs`.
+    pub interrupted_jobs: usize,
+    /// Running VMs evacuated off crashed hosts into the retry queue.
+    pub evacuations: u64,
+    /// Mean seconds from a job's evacuation to its re-placement
+    /// (0 when nothing was evacuated).
+    pub mean_recovery_latency_s: f64,
+    /// Energy already attributed to jobs at the moment their host
+    /// crashed (J) — work the campaign had to pay for twice.
+    pub replacement_energy_j: f64,
+    /// Fault-plan host crashes that actually fired (host was On).
+    pub host_crashes: u64,
+    /// Crashed hosts that completed their scheduled recovery reboot.
+    pub host_recoveries: u64,
+    /// Transient migration-actuation failures injected by the plan.
+    pub migration_failures: u64,
+    /// Scoring-worker panic probes injected (each healed the pool).
+    pub worker_panics: u64,
+    /// Recoveries deferred because the host was flapping.
+    pub quarantines: u64,
 }
 
 impl CampaignReport {
@@ -162,6 +187,68 @@ impl CampaignReport {
         } else {
             self.cold_starts as f64 / total as f64
         }
+    }
+
+    /// Order-sensitive 64-bit digest of everything a campaign
+    /// computed that scheduling or fault handling can influence: per-
+    /// job outcomes (bit-level JCT and energy), energy totals, fault
+    /// and actuation counters, and the final shard digests. This is
+    /// the equality the chaos determinism tests assert — two runs
+    /// with the same `(seed, config, trace)` must produce the same
+    /// fingerprint at any worker width.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::cluster::shard::splitmix64;
+        let mut h: u64 = 0xEC0_5C4E_D0;
+        let mut mix = |x: u64| h = splitmix64(h ^ x);
+        mix(self.seed);
+        mix(self.makespan.to_bits());
+        mix(self.energy_j.to_bits());
+        mix(self.energy_true_j.to_bits());
+        mix(self.active_energy_j.to_bits());
+        mix(self.jobs.len() as u64);
+        for j in &self.jobs {
+            mix(j.id.0);
+            mix(j.jct.to_bits());
+            mix(j.energy_j.to_bits());
+            mix(j.migrations as u64);
+            mix(j.sla_met as u64);
+        }
+        mix(self.sla_violations as u64);
+        mix(self.migrations);
+        mix(self.migration_stall_s.to_bits());
+        mix(self.power_cycles as u64);
+        mix(self.host_off_s.to_bits());
+        mix(self.deferrals);
+        mix(self.cold_starts);
+        mix(self.warm_starts);
+        mix(self.interrupted_jobs as u64);
+        mix(self.evacuations);
+        mix(self.mean_recovery_latency_s.to_bits());
+        mix(self.replacement_energy_j.to_bits());
+        mix(self.host_crashes);
+        mix(self.host_recoveries);
+        mix(self.migration_failures);
+        mix(self.worker_panics);
+        mix(self.quarantines);
+        for s in &self.per_shard {
+            mix(s.placements);
+            mix(s.boots);
+            mix(s.migrations_in);
+            mix(s.migrations_out);
+            mix(s.power_offs);
+            mix(s.crashes);
+            mix(s.evacuated_vms);
+        }
+        for d in &self.final_digests {
+            mix(d.hosts as u64);
+            mix(d.on as u64);
+            mix(d.failed as u64);
+            mix(d.warm_containers as u64);
+            mix(d.reserved.cpu.to_bits());
+            mix(d.expected.cpu.to_bits());
+            mix(d.capacity_lost.cpu.to_bits());
+        }
+        h
     }
 
     pub fn energy_of_kind(&self, kind: WorkloadKind) -> f64 {

@@ -8,11 +8,12 @@ use crate::coordinator::report::{CampaignReport, JobRecord, Overhead, ShardCount
 use crate::profile::ResourceVector;
 use crate::runtime::WorkerPool;
 use crate::sched::VmContext;
-use crate::sim::{EnergyMeter, Telemetry};
+use crate::sim::{EnergyMeter, FaultPlan, Telemetry};
 use crate::sla::SlaTracker;
+use crate::util::rng::Xoshiro256;
 use crate::util::stats::{Histogram, Online};
 use crate::workload::{Job, JobId, JobState};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Monotonic campaign counters (reported at the end of the run).
 #[derive(Debug, Clone, Default)]
@@ -32,6 +33,20 @@ pub struct Counters {
     pub containers_expired: u64,
     /// Energy charged to container boot windows (J).
     pub cold_start_energy_j: f64,
+    /// Running VMs evacuated off crashed hosts.
+    pub evacuations: u64,
+    /// Fault-plan host crashes that fired (host was On).
+    pub host_crashes: u64,
+    /// Crashed hosts that completed their recovery reboot.
+    pub host_recoveries: u64,
+    /// Transient migration-actuation failures injected by the plan.
+    pub migration_failures: u64,
+    /// Worker panic probes injected (each healed the pool).
+    pub worker_panics: u64,
+    /// Recoveries deferred because the host was flapping.
+    pub quarantines: u64,
+    /// Energy attributed to jobs at the moment their host crashed (J).
+    pub replacement_energy_j: f64,
 }
 
 /// The mutable state of one campaign run.
@@ -83,6 +98,41 @@ pub struct CampaignState {
     pub next_retry: Option<f64>,
     /// Number of jobs in the trace.
     pub n_jobs: usize,
+    /// The campaign's fault schedule — empty ([`FaultPlan::none`])
+    /// when `CampaignConfig::faults` is off.
+    pub fault_plan: FaultPlan,
+    /// Whether faults are configured; gates every fault-only code
+    /// path (including jitter draws) so fault-free campaigns replay
+    /// the pre-fault coordinator bit for bit.
+    pub has_faults: bool,
+    /// Backoff-jitter stream. Consumed only when `has_faults`.
+    pub fault_rng: Xoshiro256,
+    /// Placement attempts per job (defers + evacuation retries) —
+    /// drives the bounded exponential backoff and the interruption
+    /// cap.
+    pub retry_attempts: BTreeMap<JobId, u32>,
+    /// Jobs abandoned once their attempts hit
+    /// `CampaignConfig::retry_max_attempts`. They count toward
+    /// campaign termination but never toward SLA compliance.
+    pub interrupted: BTreeSet<JobId>,
+    /// When each evacuated job lost its host — cleared (into
+    /// `recovery_latency`) at re-placement.
+    pub evacuated_at: BTreeMap<JobId, f64>,
+    /// Evacuation → re-placement latency samples (s).
+    pub recovery_latency: Online,
+    /// Crash timestamps per host, for flap detection.
+    pub crash_history: BTreeMap<HostId, Vec<f64>>,
+    /// Hosts whose scheduled recovery was already deferred once by
+    /// the quarantine (the second firing proceeds).
+    pub quarantine_deferred: BTreeSet<HostId>,
+    /// Per-shard telemetry blackout end times (0 = clear).
+    pub blackout_until: Vec<f64>,
+    /// Campaign-global migration actuation counter — the input to the
+    /// plan's stateless failure oracle.
+    pub migration_attempts: u64,
+    /// Transient failures per VM (bounded retry; at the cap the VM
+    /// stays put for the rest of the campaign).
+    pub migration_retries: BTreeMap<VmId, u32>,
 }
 
 impl CampaignState {
@@ -111,6 +161,33 @@ impl CampaignState {
             warm_pool: Online::new(),
             next_retry: None,
             n_jobs: 0,
+            fault_plan: cfg
+                .faults
+                .as_ref()
+                .map(|f| FaultPlan::generate(cfg.seed, f, cfg.n_hosts, shard_count))
+                .unwrap_or_else(FaultPlan::none),
+            has_faults: cfg.faults.is_some(),
+            fault_rng: Xoshiro256::seed_from_u64(cfg.seed ^ 0xBAC0FF),
+            retry_attempts: BTreeMap::new(),
+            interrupted: BTreeSet::new(),
+            evacuated_at: BTreeMap::new(),
+            recovery_latency: Online::new(),
+            crash_history: BTreeMap::new(),
+            quarantine_deferred: BTreeSet::new(),
+            blackout_until: vec![0.0; shard_count],
+            migration_attempts: 0,
+            migration_retries: BTreeMap::new(),
+        }
+    }
+
+    /// Backoff jitter in [0.5, 1.5). Draws from the fault RNG only
+    /// when faults are configured — fault-free campaigns keep the
+    /// exact random streams of the pre-fault coordinator.
+    pub fn retry_jitter(&mut self) -> f64 {
+        if self.has_faults {
+            self.fault_rng.uniform(0.5, 1.5)
+        } else {
+            1.0
         }
     }
 
@@ -202,6 +279,15 @@ impl CampaignState {
                 .pool
                 .gather_digests(&self.cluster)
                 .unwrap_or_else(|e| panic!("report digest gather: {e}")),
+            interrupted_jobs: self.interrupted.len(),
+            evacuations: self.counters.evacuations,
+            mean_recovery_latency_s: self.recovery_latency.mean(),
+            replacement_energy_j: self.counters.replacement_energy_j,
+            host_crashes: self.counters.host_crashes,
+            host_recoveries: self.counters.host_recoveries,
+            migration_failures: self.counters.migration_failures,
+            worker_panics: self.counters.worker_panics,
+            quarantines: self.counters.quarantines,
         }
     }
 }

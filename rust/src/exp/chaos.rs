@@ -1,0 +1,121 @@
+//! `chaos` — fault-injection sweep: host-crash rate × placement policy.
+//!
+//! The robustness question the table answers: as deterministic host
+//! crashes ramp up (with telemetry blackouts and transient migration
+//! failures riding along), how do energy-per-work, SLA compliance,
+//! and recovery behave under the baseline vs the energy-aware policy?
+//! Evacuated jobs drain through the ordinary `decide_batch` retry
+//! path with bounded backoff, so the sweep exercises the whole fault
+//! pipeline end to end — and every campaign is replayable from
+//! `(seed, config)` alone.
+
+use crate::coordinator::{CampaignConfig, Coordinator};
+use crate::exp::common::{standard_trace, ExpContext};
+use crate::sim::FaultConfig;
+use crate::util::table::TableBuilder;
+use crate::workload::Mix;
+
+/// Crash rates swept (crashes per host-hour). Zero is the control
+/// row: the fault machinery armed but silent, pinning the no-fault
+/// baseline in the same table.
+fn crash_rates(ctx: &ExpContext) -> Vec<f64> {
+    if ctx.fast {
+        vec![0.0, 2.0]
+    } else {
+        vec![0.0, 0.5, 2.0, 6.0]
+    }
+}
+
+fn fault_config(rate_per_hour: f64) -> FaultConfig {
+    FaultConfig {
+        host_crash_rate_per_hour: rate_per_hour,
+        // Blackouts and migration failures scale on when crashes do —
+        // the zero row is a genuinely fault-free control.
+        blackout_rate_per_hour: if rate_per_hour > 0.0 { 0.2 } else { 0.0 },
+        migration_failure_prob: if rate_per_hour > 0.0 { 0.05 } else { 0.0 },
+        worker_panics: if rate_per_hour > 0.0 { 1 } else { 0 },
+        ..Default::default()
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Chaos — crash rate × policy: energy, SLA, and recovery",
+        &[
+            "policy",
+            "crashes/h",
+            "energy J/solo-s",
+            "SLA %",
+            "crashes",
+            "evacuations",
+            "interrupted",
+            "recovery s",
+            "replace J",
+        ],
+    );
+    for &rate in &crash_rates(ctx) {
+        for policy_name in ["round_robin", "energy_aware"] {
+            let mut jps = Vec::new();
+            let mut sla = Vec::new();
+            let mut crashes = 0u64;
+            let mut evacuations = 0u64;
+            let mut interrupted = 0usize;
+            let mut recovery = Vec::new();
+            let mut replace_j = Vec::new();
+            for &seed in &ctx.seeds {
+                let trace = standard_trace(Mix::paper(), ctx.n_jobs(), seed);
+                let policy = match policy_name {
+                    "round_robin" => crate::coordinator::make_policy("round_robin").unwrap(),
+                    _ => ctx.energy_aware_policy(),
+                };
+                let mut coord = Coordinator::new(
+                    CampaignConfig {
+                        n_hosts: 8,
+                        seed,
+                        faults: Some(fault_config(rate)),
+                        ..Default::default()
+                    },
+                    policy,
+                );
+                let r = coord.run(trace);
+                jps.push(r.j_per_solo_second());
+                sla.push(r.sla_compliance);
+                crashes += r.host_crashes;
+                evacuations += r.evacuations;
+                interrupted += r.interrupted_jobs;
+                recovery.push(r.mean_recovery_latency_s);
+                replace_j.push(r.replacement_energy_j);
+            }
+            t.row(&[
+                policy_name.to_string(),
+                format!("{rate:.1}"),
+                format!("{:.1}", crate::util::stats::mean(&jps)),
+                format!("{:.1}", crate::util::stats::mean(&sla) * 100.0),
+                crashes.to_string(),
+                evacuations.to_string(),
+                interrupted.to_string(),
+                format!("{:.0}", crate::util::stats::mean(&recovery)),
+                format!("{:.0}", crate::util::stats::mean(&replace_j)),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn chaos_sweeps_rate_by_policy() {
+        let mut ctx = ExpContext::fast();
+        ctx.artifacts = PathBuf::from("/nonexistent"); // force oracle
+        let t = run(&ctx);
+        // fast mode: 2 rates × 2 policies.
+        assert_eq!(t.n_rows(), 4);
+        let csv = t.render_csv();
+        assert!(csv.contains("round_robin"));
+        assert!(csv.contains("energy_aware"));
+    }
+}

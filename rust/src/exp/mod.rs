@@ -2,6 +2,7 @@
 //! ablations and the scale-out probe (see DESIGN.md §4 for the index).
 
 pub mod ablation;
+pub mod chaos;
 pub mod classes;
 pub mod common;
 pub mod energy;
@@ -38,11 +39,13 @@ pub fn run(id: &str, ctx: &ExpContext) -> bool {
         "abl2" => ablation::run_abl2(ctx),
         "abl3" => ablation::run_abl3(ctx),
         "scale" => scale::run(ctx),
+        "chaos" => chaos::run(ctx),
         "all" => {
             for id in ALL {
                 run(id, ctx);
             }
             run("scale", ctx);
+            run("chaos", ctx);
             return true;
         }
         _ => return false,

@@ -47,23 +47,29 @@
 //! property tests in `rust/tests/pool.rs` pin the pooled paths
 //! against.
 //!
-//! # Panic poisoning
+//! # Self-healing panic recovery
 //!
 //! A job that panics is caught on the worker (`catch_unwind`; every
 //! dispatched job sends exactly one message, so the collect loop
-//! always terminates), the dispatch returns
-//! [`PoolError::WorkerPanicked`], and the pool is **poisoned**: every
-//! subsequent dispatch fails fast with [`PoolError::Poisoned`]
-//! instead of computing against state a half-finished scan may have
-//! left behind — or deadlocking on a dead channel.
+//! always terminates) and the in-flight dispatch returns
+//! [`PoolError::WorkerPanicked`] **once**. The pool then heals
+//! instead of dying: the panicked worker's thread is retired (its
+//! [`WorkerSlot`] may hold state a half-finished job corrupted) and a
+//! fresh thread with an empty slot is spawned at the same index, with
+//! the coordinator-side epoch mirror zeroed so the next fan-out
+//! re-stages scoring state for exactly the respawned worker through
+//! the ordinary epoch-cache path (`stage_installs`). The *next*
+//! dispatch succeeds. [`PoolError::Poisoned`] survives only for the
+//! unrecoverable cases: the respawn itself fails, or a worker thread
+//! vanishes without reporting (process teardown).
 
 use crate::cluster::shard::splitmix64;
 use crate::cluster::{ShardDigest, ShardedCluster};
 use std::any::{Any, TypeId};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 
 pub use crate::runtime::shard_pool::PoolError;
 use crate::runtime::shard_pool::{env_workers, panic_message};
@@ -120,9 +126,33 @@ impl WorkerSlot {
 type ErasedJob = Box<dyn FnOnce(&mut WorkerSlot) + Send + 'static>;
 
 struct Inner {
-    job_txs: Vec<mpsc::Sender<ErasedJob>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Per-worker job senders. Behind a mutex (uncontended — the
+    /// coordinator thread is the only dispatcher) so a panicked
+    /// worker's channel can be swapped for a fresh one through
+    /// `&self` during healing.
+    job_txs: Mutex<Vec<mpsc::Sender<ErasedJob>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     poisoned: AtomicBool,
+}
+
+/// Spawn one worker thread with a fresh slot and a fresh channel.
+fn spawn_worker(
+    index: usize,
+) -> std::io::Result<(mpsc::Sender<ErasedJob>, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<ErasedJob>();
+    let handle = std::thread::Builder::new()
+        .name(format!("pallas-worker-{index}"))
+        .spawn(move || {
+            let mut slot = WorkerSlot::new(index);
+            // The loop body is panic-free: user panics are caught
+            // inside the job wrapper, so a worker thread only exits
+            // when its sender drops (pool drop, or retirement after
+            // a panic during healing).
+            while let Ok(job) = rx.recv() {
+                job(&mut slot);
+            }
+        })?;
+    Ok((tx, handle))
 }
 
 /// The persistent worker pool. Threads spawn in [`WorkerPool::new`]
@@ -159,27 +189,13 @@ impl WorkerPool {
             let mut job_txs = Vec::with_capacity(width);
             let mut handles = Vec::with_capacity(width);
             for index in 0..width {
-                let (tx, rx) = mpsc::channel::<ErasedJob>();
+                let (tx, handle) = spawn_worker(index).expect("spawn shard worker thread");
                 job_txs.push(tx);
-                handles.push(
-                    std::thread::Builder::new()
-                        .name(format!("pallas-worker-{index}"))
-                        .spawn(move || {
-                            let mut slot = WorkerSlot::new(index);
-                            // The loop body is panic-free: user panics
-                            // are caught inside the job wrapper, so a
-                            // worker thread only exits when the pool
-                            // drops its sender.
-                            while let Ok(job) = rx.recv() {
-                                job(&mut slot);
-                            }
-                        })
-                        .expect("spawn shard worker thread"),
-                );
+                handles.push(handle);
             }
             Inner {
-                job_txs,
-                handles,
+                job_txs: Mutex::new(job_txs),
+                handles: Mutex::new(handles),
                 poisoned: AtomicBool::new(false),
             }
         });
@@ -255,9 +271,18 @@ impl WorkerPool {
     /// a transient slot (nothing persists — the serial paths own
     /// their state).
     ///
-    /// A panicking job poisons the pool: this dispatch returns
-    /// [`PoolError::WorkerPanicked`] and every later dispatch fails
-    /// fast with [`PoolError::Poisoned`].
+    /// A panicking job fails this dispatch with
+    /// [`PoolError::WorkerPanicked`] (all jobs still run to
+    /// completion — the protocol below requires it — but the results
+    /// are discarded), after which the pool **heals**: the panicked
+    /// workers' threads are respawned with fresh slots and their
+    /// epoch mirrors cleared, so the next dispatch succeeds and
+    /// re-stages scoring state through the ordinary cache path. On a
+    /// serial pool the panic is caught the same way and there is
+    /// nothing to heal — the transient slot is discarded regardless.
+    /// [`PoolError::Poisoned`] is returned only when recovery is
+    /// impossible (a respawn failed, or a worker vanished without
+    /// reporting).
     ///
     /// # Safety of the lifetime erasure
     ///
@@ -267,15 +292,33 @@ impl WorkerPool {
     /// job has run and reported back — each wrapped job sends exactly
     /// one message (its result or its caught panic), and the collect
     /// loop below receives exactly that many — so no job, nor
-    /// anything it borrows, outlives this call.
+    /// anything it borrows, outlives this call. Healing happens after
+    /// the collect loop, so a retired worker's queue is already
+    /// drained when its channel is swapped.
     pub fn dispatch<'env, T, F>(&self, jobs: Vec<(usize, F)>) -> Result<Vec<T>, PoolError>
     where
         T: Send + 'env,
         F: FnOnce(&mut WorkerSlot) -> T + Send + 'env,
     {
         let Some(inner) = &self.inner else {
+            // Serial path: run every job (mirroring the parallel
+            // protocol, where all sent jobs execute) and surface the
+            // first panic the same way the pooled path does.
             let mut slot = WorkerSlot::new(0);
-            return Ok(jobs.into_iter().map(|(_, job)| job(&mut slot)).collect());
+            let mut results = Vec::with_capacity(jobs.len());
+            let mut first_panic: Option<String> = None;
+            for (_, job) in jobs {
+                match catch_unwind(AssertUnwindSafe(|| job(&mut slot))) {
+                    Ok(v) => results.push(v),
+                    Err(p) => {
+                        first_panic.get_or_insert(panic_message(p.as_ref()));
+                    }
+                }
+            }
+            return match first_panic {
+                Some(msg) => Err(PoolError::WorkerPanicked(msg)),
+                None => Ok(results),
+            };
         };
         if inner.poisoned.load(Ordering::Acquire) {
             return Err(PoolError::Poisoned);
@@ -284,40 +327,50 @@ impl WorkerPool {
         let (tx, rx) = mpsc::channel::<(usize, Result<T, String>)>();
         let mut sent = 0usize;
         let mut lost_worker = false;
-        for (i, (key, job)) in jobs.into_iter().enumerate() {
-            let tx = tx.clone();
-            let wrapped: Box<dyn FnOnce(&mut WorkerSlot) + Send + 'env> =
-                Box::new(move |slot: &mut WorkerSlot| {
-                    let out = catch_unwind(AssertUnwindSafe(|| job(slot)));
-                    // Exactly one message per job, success or panic.
-                    let _ = tx.send((i, out.map_err(|p| panic_message(p.as_ref()))));
-                });
-            // SAFETY: see the method docs — every sent job completes
-            // (and is dropped) before this call returns, so the
-            // erased borrows never dangle. Unsent jobs on the error
-            // path below are dropped here, inside `'env`.
-            let wrapped = unsafe {
-                std::mem::transmute::<Box<dyn FnOnce(&mut WorkerSlot) + Send + 'env>, ErasedJob>(
-                    wrapped,
-                )
-            };
-            if inner.job_txs[self.worker_for(key)].send(wrapped).is_err() {
-                // A worker thread is gone — only possible if the
-                // process is tearing down. Stop sending; the jobs
-                // already in flight are still drained below.
-                lost_worker = true;
-                break;
+        // Worker index per job index — consulted when a job panics to
+        // know which thread to retire.
+        let mut worker_of = Vec::with_capacity(n);
+        {
+            let job_txs = inner.job_txs.lock().expect("job sender lock");
+            for (i, (key, job)) in jobs.into_iter().enumerate() {
+                let tx = tx.clone();
+                let wrapped: Box<dyn FnOnce(&mut WorkerSlot) + Send + 'env> =
+                    Box::new(move |slot: &mut WorkerSlot| {
+                        let out = catch_unwind(AssertUnwindSafe(|| job(slot)));
+                        // Exactly one message per job, success or panic.
+                        let _ = tx.send((i, out.map_err(|p| panic_message(p.as_ref()))));
+                    });
+                // SAFETY: see the method docs — every sent job completes
+                // (and is dropped) before this call returns, so the
+                // erased borrows never dangle. Unsent jobs on the error
+                // path below are dropped here, inside `'env`.
+                let wrapped = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce(&mut WorkerSlot) + Send + 'env>, ErasedJob>(
+                        wrapped,
+                    )
+                };
+                let w = self.worker_for(key);
+                worker_of.push(w);
+                if job_txs[w].send(wrapped).is_err() {
+                    // A worker thread is gone — only possible if the
+                    // process is tearing down. Stop sending; the jobs
+                    // already in flight are still drained below.
+                    lost_worker = true;
+                    break;
+                }
+                sent += 1;
             }
-            sent += 1;
         }
         drop(tx);
         let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
         let mut first_panic: Option<String> = None;
+        let mut panicked_workers: BTreeSet<usize> = BTreeSet::new();
         for _ in 0..sent {
             match rx.recv() {
                 Ok((i, Ok(v))) => results[i] = Some(v),
-                Ok((_, Err(msg))) => {
+                Ok((i, Err(msg))) => {
                     first_panic.get_or_insert(msg);
+                    panicked_workers.insert(worker_of[i]);
                 }
                 // Unreachable (every sent job sends exactly once and
                 // we hold the receiver), but never hang on it.
@@ -328,7 +381,9 @@ impl WorkerPool {
             }
         }
         if let Some(msg) = first_panic {
-            inner.poisoned.store(true, Ordering::Release);
+            if self.heal(inner, &panicked_workers).is_err() {
+                inner.poisoned.store(true, Ordering::Release);
+            }
             return Err(PoolError::WorkerPanicked(msg));
         }
         if lost_worker {
@@ -339,6 +394,33 @@ impl WorkerPool {
             .into_iter()
             .map(|r| r.expect("every job sent exactly one result"))
             .collect())
+    }
+
+    /// Respawn each panicked worker: swap in a fresh channel + thread
+    /// at the same index (the retired thread exits once its old
+    /// sender drops — its queue is already drained, see dispatch) and
+    /// zero the worker's epoch mirror so the next fan-out re-stages
+    /// its scoring state. Errors only if a thread fails to spawn —
+    /// the caller poisons the pool then.
+    fn heal(&self, inner: &Inner, workers: &BTreeSet<usize>) -> std::io::Result<()> {
+        for &w in workers {
+            let (tx, handle) = spawn_worker(w)?;
+            let old_tx = {
+                let mut job_txs = inner.job_txs.lock().expect("job sender lock");
+                std::mem::replace(&mut job_txs[w], tx)
+            };
+            drop(old_tx);
+            let old_handle = {
+                let mut handles = inner.handles.lock().expect("worker handle lock");
+                std::mem::replace(&mut handles[w], handle)
+            };
+            // The retired thread is idle on a closed channel; the
+            // join is immediate.
+            let _ = old_handle.join();
+            self.cached[w].store(0, Ordering::Relaxed);
+            self.cached_tag[w].store(0, Ordering::Relaxed);
+        }
+        Ok(())
     }
 
     /// Read every shard's digest through the pool: digests flow back
@@ -361,8 +443,8 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         if let Some(inner) = self.inner.take() {
             // Closing the job channels ends each worker's recv loop.
-            drop(inner.job_txs);
-            for h in inner.handles {
+            drop(inner.job_txs.into_inner().expect("job sender lock"));
+            for h in inner.handles.into_inner().expect("worker handle lock") {
                 let _ = h.join();
             }
         }
@@ -452,7 +534,7 @@ mod tests {
     }
 
     #[test]
-    fn panicking_job_poisons_the_pool() {
+    fn panicking_job_fails_once_then_pool_self_heals() {
         let pool = WorkerPool::new(4);
         let jobs: Vec<_> = (0..8usize)
             .map(|i| {
@@ -469,14 +551,62 @@ mod tests {
             err.to_string().contains("boom in shard job 3"),
             "unhelpful error: {err}"
         );
-        // Subsequent fan-outs must error loudly, not deadlock or
-        // silently compute on half-poisoned state.
-        let retry: Vec<(usize, fn(&mut WorkerSlot) -> usize)> =
-            vec![(0, |_| 7usize)];
-        match pool.dispatch(retry) {
-            Err(PoolError::Poisoned) => {}
-            other => panic!("expected Poisoned, got {other:?}"),
+        // The pool healed: the NEXT dispatch succeeds (no Poisoned, no
+        // deadlock), across all workers.
+        let retry: Vec<_> = (0..8usize)
+            .map(|i| (i, move |_: &mut WorkerSlot| i * 10))
+            .collect();
+        let out = pool.dispatch(retry).expect("pool must heal after a panic");
+        assert_eq!(out, (0..8usize).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn healing_rebuilds_only_the_panicked_workers_slot() {
+        let pool = WorkerPool::new(4);
+        let bad = pool.worker_for(3);
+        let other_key = (0..64usize)
+            .find(|&k| pool.worker_for(k) != bad)
+            .expect("4 workers: some key maps elsewhere");
+        // Seed per-worker counters on both workers.
+        let count = |pool: &WorkerPool, key: usize| -> u64 {
+            let jobs: Vec<_> = vec![(key, move |slot: &mut WorkerSlot| {
+                let c = slot.state_or_insert_with(|| 0u64);
+                *c += 1;
+                *c
+            })];
+            pool.dispatch(jobs).unwrap()[0]
+        };
+        assert_eq!(count(&pool, 3), 1);
+        assert_eq!(count(&pool, 3), 2);
+        assert_eq!(count(&pool, other_key), 1);
+        // Mark scoring state cached on the panicking worker, then panic it.
+        pool.note_cached(bad, 7, 1);
+        assert_eq!(pool.cached_state(bad), Some((7, 1)));
+        let boom: Vec<(usize, fn(&mut WorkerSlot) -> u64)> =
+            vec![(3, |_| panic!("injected"))];
+        match pool.dispatch(boom) {
+            Err(PoolError::WorkerPanicked(_)) => {}
+            other => panic!("expected WorkerPanicked, got {other:?}"),
         }
+        // Respawned worker: fresh slot (counter restarts), mirror
+        // cleared so the epoch cache re-stages for exactly this worker.
+        assert_eq!(pool.cached_state(bad), None);
+        assert_eq!(count(&pool, 3), 1, "slot must be rebuilt fresh");
+        // Untouched worker keeps its slot.
+        assert_eq!(count(&pool, other_key), 2, "healthy workers keep state");
+    }
+
+    #[test]
+    fn serial_pool_catches_panics_and_keeps_working() {
+        let pool = WorkerPool::new(1);
+        let boom: Vec<(usize, fn(&mut WorkerSlot) -> usize)> =
+            vec![(0, |_| 1usize), (1, |_| panic!("serial boom")), (2, |_| 3usize)];
+        match pool.dispatch(boom) {
+            Err(PoolError::WorkerPanicked(msg)) => assert!(msg.contains("serial boom")),
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+        let ok: Vec<(usize, fn(&mut WorkerSlot) -> usize)> = vec![(0, |_| 7usize)];
+        assert_eq!(pool.dispatch(ok).unwrap(), vec![7]);
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Deterministic fault injection — the chaos half of the robustness
+//! story. A [`FaultPlan`] is generated **up front** from `(seed,
+//! config, cluster shape)` alone: a time-ordered schedule of host
+//! crashes and recoveries, per-shard telemetry blackout windows, and
+//! scoring-worker panics, plus a stateless Bernoulli oracle for
+//! transient migration failures. The coordinator replays the plan by
+//! pushing each entry into its [`crate::sim::EventQueue`]; because the
+//! plan is closed over before the campaign starts, the *same* faults
+//! hit at the *same* simulated times regardless of worker width,
+//! policy, or how the campaign otherwise unfolds — which is what lets
+//! the chaos property tests demand bit-identical reports at widths
+//! 1 and 8.
+//!
+//! Plan entries are **advisory**: a `HostCrash` for a host that is
+//! not `On` when the event fires is simply dropped by the coordinator
+//! (the plan is generated blind to power state), and a `HostRecover`
+//! may be deferred past its scheduled time by the flapping-host
+//! quarantine. Both resolutions depend only on simulation state, so
+//! they replay identically too.
+
+use crate::cluster::shard::splitmix64;
+use crate::cluster::HostId;
+use crate::util::rng::Xoshiro256;
+
+/// Fault-injection knobs. All rates are *per hour* so configs read
+/// like the availability numbers operators actually quote; a rate of
+/// zero disables that fault class entirely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Mean crashes per host-hour (Poisson). 0 = hosts never crash.
+    pub host_crash_rate_per_hour: f64,
+    /// Mean downtime after a crash before the scheduled recovery
+    /// (exponential), seconds.
+    pub mean_downtime_s: f64,
+    /// Mean telemetry blackout windows per shard-hour (Poisson).
+    pub blackout_rate_per_hour: f64,
+    /// Mean blackout window length (exponential), seconds.
+    pub mean_blackout_s: f64,
+    /// Probability that any single migration actuation fails
+    /// transiently and must be retried.
+    pub migration_failure_prob: f64,
+    /// Number of scoring-worker panic probes injected across the
+    /// horizon (uniform times).
+    pub worker_panics: usize,
+    /// Plan horizon, seconds — faults are only scheduled in
+    /// `[0, horizon_s)`.
+    pub horizon_s: f64,
+    /// Crashes within [`FaultConfig::flap_window_s`] that mark a host
+    /// as flapping (quarantined from placement for
+    /// [`FaultConfig::quarantine_s`] past its scheduled recovery).
+    pub flap_threshold: usize,
+    /// Sliding window for flap detection, seconds.
+    pub flap_window_s: f64,
+    /// Extra downtime a quarantined host serves, seconds.
+    pub quarantine_s: f64,
+}
+
+impl Default for FaultConfig {
+    /// A lively but survivable default: roughly one crash per 20
+    /// host-hours, 3-minute mean downtime, occasional 30 s telemetry
+    /// blackouts, 5 % transient migration failures.
+    fn default() -> FaultConfig {
+        FaultConfig {
+            host_crash_rate_per_hour: 0.05,
+            mean_downtime_s: 180.0,
+            blackout_rate_per_hour: 0.1,
+            mean_blackout_s: 30.0,
+            migration_failure_prob: 0.05,
+            worker_panics: 2,
+            horizon_s: 4.0 * 3600.0,
+            flap_threshold: 3,
+            flap_window_s: 1800.0,
+            quarantine_s: 900.0,
+        }
+    }
+}
+
+/// One scheduled fault. `Copy` so it can ride inside the
+/// coordinator's event enum.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Host crashes: resident VMs and warm containers are lost, the
+    /// host enters [`crate::cluster::PowerState::Failed`]. Dropped if
+    /// the host is not `On` at fire time.
+    HostCrash(HostId),
+    /// Scheduled end of the downtime: the host reboots (pays a full
+    /// boot). Deferred by the quarantine when the host is flapping.
+    HostRecover(HostId),
+    /// Telemetry from every host in `shard` goes dark until `until`:
+    /// the coordinator masks those samples, so scoring sees stale
+    /// utilization for the window.
+    BlackoutStart { shard: usize, until: f64 },
+    /// A panic probe is dispatched to the scoring worker pool: the
+    /// in-flight fan-out fails once with `WorkerPanicked` and the
+    /// pool must heal.
+    WorkerPanic,
+}
+
+/// A fault with its fire time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// The full, immutable fault schedule for one campaign. Replayable
+/// from `(seed, config, n_hosts, shard_count)` alone — generation
+/// consumes nothing but its own child RNG streams, so building a plan
+/// never perturbs workload or policy randomness.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    /// Seed for the stateless migration-failure oracle; derived from
+    /// the plan seed, independent of the schedule streams.
+    migration_seed: u64,
+    migration_failure_prob: f64,
+}
+
+impl FaultPlan {
+    /// Generate the schedule. Each fault class draws from its own
+    /// `child` stream (and each host / shard from a per-entity
+    /// sub-stream), so changing one rate never reshuffles the other
+    /// classes' timings — the same stable-randomness discipline the
+    /// workload generators use.
+    pub fn generate(seed: u64, cfg: &FaultConfig, n_hosts: usize, shard_count: usize) -> FaultPlan {
+        let mut root = Xoshiro256::seed_from_u64(seed ^ 0xFA_017_FA_017);
+        let mut crash_root = root.child(1);
+        let mut blackout_root = root.child(2);
+        let mut panic_rng = root.child(3);
+        let migration_seed = root.next_u64();
+
+        let mut events: Vec<FaultEvent> = Vec::new();
+
+        // Host crash/recover pairs: per-host Poisson process, paused
+        // during the downtime (a host cannot crash while already
+        // down).
+        if cfg.host_crash_rate_per_hour > 0.0 && cfg.mean_downtime_s > 0.0 {
+            let lambda = cfg.host_crash_rate_per_hour / 3600.0;
+            for h in 0..n_hosts {
+                let mut rng = crash_root.child(h as u64);
+                let mut t = rng.exponential(lambda);
+                while t < cfg.horizon_s {
+                    events.push(FaultEvent {
+                        t,
+                        kind: FaultKind::HostCrash(HostId(h)),
+                    });
+                    let downtime = rng.exponential(1.0 / cfg.mean_downtime_s);
+                    let recover_at = t + downtime;
+                    events.push(FaultEvent {
+                        t: recover_at,
+                        kind: FaultKind::HostRecover(HostId(h)),
+                    });
+                    // Next candidate crash only after the recovery
+                    // completes its boot.
+                    t = recover_at + crate::cluster::power::BOOT_SECS + rng.exponential(lambda);
+                }
+            }
+        }
+
+        // Telemetry blackouts: per-shard Poisson windows.
+        if cfg.blackout_rate_per_hour > 0.0 && cfg.mean_blackout_s > 0.0 {
+            let lambda = cfg.blackout_rate_per_hour / 3600.0;
+            for s in 0..shard_count {
+                let mut rng = blackout_root.child(s as u64);
+                let mut t = rng.exponential(lambda);
+                while t < cfg.horizon_s {
+                    let len = rng.exponential(1.0 / cfg.mean_blackout_s);
+                    events.push(FaultEvent {
+                        t,
+                        kind: FaultKind::BlackoutStart {
+                            shard: s,
+                            until: t + len,
+                        },
+                    });
+                    t += len + rng.exponential(lambda);
+                }
+            }
+        }
+
+        // Worker panic probes: uniform over the horizon.
+        for _ in 0..cfg.worker_panics {
+            events.push(FaultEvent {
+                t: panic_rng.uniform(0.0, cfg.horizon_s),
+                kind: FaultKind::WorkerPanic,
+            });
+        }
+
+        // Time order with generation order as the tie-break (stable
+        // sort), so exact float ties resolve identically everywhere.
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("fault times are finite"));
+
+        FaultPlan {
+            events,
+            migration_seed,
+            migration_failure_prob: cfg.migration_failure_prob,
+        }
+    }
+
+    /// An empty plan (no faults, migrations never fail).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            migration_seed: 0,
+            migration_failure_prob: 0.0,
+        }
+    }
+
+    /// The schedule, time-ordered.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Does migration attempt number `attempt` (a campaign-global
+    /// counter) fail transiently? Stateless — a pure hash of
+    /// `(plan seed, attempt)` — so actuation order alone determines
+    /// the outcome and the oracle can be consulted from anywhere
+    /// without threading an RNG.
+    pub fn migration_fails(&self, attempt: u64) -> bool {
+        if self.migration_failure_prob <= 0.0 {
+            return false;
+        }
+        let x = splitmix64(self.migration_seed ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < self.migration_failure_prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_cfg() -> FaultConfig {
+        FaultConfig {
+            host_crash_rate_per_hour: 2.0,
+            mean_downtime_s: 120.0,
+            blackout_rate_per_hour: 1.0,
+            mean_blackout_s: 45.0,
+            migration_failure_prob: 0.2,
+            worker_panics: 3,
+            horizon_s: 3600.0,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn plan_is_replayable_from_seed_and_config() {
+        let cfg = busy_cfg();
+        let a = FaultPlan::generate(99, &cfg, 16, 4);
+        let b = FaultPlan::generate(99, &cfg, 16, 4);
+        assert!(!a.events().is_empty(), "busy config must schedule faults");
+        assert_eq!(a.events(), b.events());
+        for i in 0..1000 {
+            assert_eq!(a.migration_fails(i), b.migration_fails(i));
+        }
+        let c = FaultPlan::generate(100, &cfg, 16, 4);
+        assert_ne!(a.events(), c.events(), "different seed, different plan");
+    }
+
+    #[test]
+    fn schedule_is_time_ordered_and_within_horizon() {
+        let cfg = busy_cfg();
+        let plan = FaultPlan::generate(7, &cfg, 16, 4);
+        let mut last = 0.0;
+        for e in plan.events() {
+            assert!(e.t >= last, "events out of order at t={}", e.t);
+            last = e.t;
+            // Recoveries may land past the horizon (the crash fired
+            // inside it); everything else must not.
+            if !matches!(e.kind, FaultKind::HostRecover(_)) {
+                assert!(e.t < cfg.horizon_s, "{:?} past horizon", e);
+            }
+        }
+    }
+
+    #[test]
+    fn crashes_and_recoveries_alternate_per_host() {
+        let cfg = busy_cfg();
+        let plan = FaultPlan::generate(21, &cfg, 8, 2);
+        for h in 0..8 {
+            let mut down = false;
+            let mut saw_any = false;
+            for e in plan.events() {
+                match e.kind {
+                    FaultKind::HostCrash(id) if id == HostId(h) => {
+                        assert!(!down, "host {h} crashed while already down");
+                        down = true;
+                        saw_any = true;
+                    }
+                    FaultKind::HostRecover(id) if id == HostId(h) => {
+                        assert!(down, "host {h} recovered while up");
+                        down = false;
+                    }
+                    _ => {}
+                }
+            }
+            // 2 crashes/hour for an hour: overwhelmingly likely that
+            // at least one host in 8 crashed; assert per-plan below.
+            let _ = saw_any;
+        }
+        assert!(
+            plan.events()
+                .iter()
+                .any(|e| matches!(e.kind, FaultKind::HostCrash(_))),
+            "busy plan scheduled no crashes at all"
+        );
+    }
+
+    #[test]
+    fn per_class_streams_are_independent() {
+        // Turning off blackouts must not move the crash schedule.
+        let cfg = busy_cfg();
+        let quiet = FaultConfig {
+            blackout_rate_per_hour: 0.0,
+            worker_panics: 0,
+            ..cfg
+        };
+        let full = FaultPlan::generate(5, &cfg, 8, 4);
+        let crashes_only = FaultPlan::generate(5, &quiet, 8, 4);
+        let crash_times = |p: &FaultPlan| -> Vec<(f64, HostId)> {
+            p.events()
+                .iter()
+                .filter_map(|e| match e.kind {
+                    FaultKind::HostCrash(h) => Some((e.t, h)),
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_eq!(crash_times(&full), crash_times(&crashes_only));
+    }
+
+    #[test]
+    fn migration_oracle_matches_configured_probability() {
+        let cfg = FaultConfig {
+            migration_failure_prob: 0.25,
+            ..busy_cfg()
+        };
+        let plan = FaultPlan::generate(3, &cfg, 4, 2);
+        let n = 100_000u64;
+        let fails = (0..n).filter(|&i| plan.migration_fails(i)).count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.01, "failure rate {rate}");
+        // Zero probability: never fails, regardless of seed.
+        assert!(!FaultPlan::none().migration_fails(42));
+    }
+
+    #[test]
+    fn empty_config_schedules_nothing() {
+        let cfg = FaultConfig {
+            host_crash_rate_per_hour: 0.0,
+            blackout_rate_per_hour: 0.0,
+            worker_panics: 0,
+            migration_failure_prob: 0.0,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::generate(1, &cfg, 32, 8);
+        assert!(plan.events().is_empty());
+    }
+}

@@ -5,8 +5,10 @@
 
 pub mod energy;
 pub mod engine;
+pub mod fault;
 pub mod telemetry;
 
 pub use energy::EnergyMeter;
 pub use engine::EventQueue;
+pub use fault::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
 pub use telemetry::{Telemetry, SAMPLE_INTERVAL};

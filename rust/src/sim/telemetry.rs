@@ -108,7 +108,26 @@ impl Telemetry {
     /// Take one sampling pass over the cluster and the active VM
     /// demands. Call every [`SAMPLE_INTERVAL`].
     pub fn sample(&mut self, now: f64, cluster: &Cluster, vm_demands: &BTreeMap<VmId, Demand>) {
+        self.sample_masked(now, cluster, vm_demands, &[]);
+    }
+
+    /// Sampling pass with per-host blackout masking. `masked[i]`
+    /// (missing entries read as unmasked, so `&[]` is a plain
+    /// [`Telemetry::sample`]) marks host `i`'s monitors dark for this
+    /// pass: no sample lands — consumers see the stale tail of the
+    /// ring — no noise draws are consumed for it, and the demand
+    /// series of VMs executing on it pause too.
+    pub fn sample_masked(
+        &mut self,
+        now: f64,
+        cluster: &Cluster,
+        vm_demands: &BTreeMap<VmId, Demand>,
+        masked: &[bool],
+    ) {
         for (i, host) in cluster.hosts.iter().enumerate() {
+            if masked.get(i).copied().unwrap_or(false) {
+                continue;
+            }
             let u = host.utilization();
             let j = |x: f64, rng: &mut Xoshiro256| {
                 if x == 0.0 {
@@ -134,6 +153,17 @@ impl Telemetry {
             });
         }
         for (vm_id, demand) in vm_demands {
+            // A VM executes on its (source, while migrating) host —
+            // its monitor is dark whenever that host's is.
+            let exec_host = cluster.vms.get(vm_id).and_then(|v| match v.state {
+                crate::cluster::VmState::Migrating { from, .. } => Some(from),
+                _ => v.host,
+            });
+            if let Some(h) = exec_host {
+                if masked.get(h.0).copied().unwrap_or(false) {
+                    continue;
+                }
+            }
             let ring = self
                 .vms
                 .entry(*vm_id)
@@ -258,6 +288,43 @@ mod tests {
             assert!((0.0..=1.0).contains(&s.util.cpu));
             assert!((0.0..=1.0).contains(&s.util.net));
         }
+    }
+
+    #[test]
+    fn masked_hosts_keep_stale_samples() {
+        let mut cluster = Cluster::homogeneous(2);
+        let vm = cluster.create_vm(
+            crate::cluster::flavor::SMALL,
+            crate::workload::JobId(0),
+            0.0,
+        );
+        cluster.place_vm(vm, HostId(0)).unwrap();
+        let mut demands = BTreeMap::new();
+        demands.insert(
+            vm,
+            Demand {
+                cpu: 2.0,
+                mem_gb: 4.0,
+                disk_mbps: 10.0,
+                net_mbps: 5.0,
+            },
+        );
+        cluster.apply_demands(&demands);
+        let mut t = Telemetry::new(2, 1, 0.0);
+        t.sample(5.0, &cluster, &demands);
+        // Blackout on host 0: its ring (and its VM's) stays at one
+        // sample while host 1 keeps collecting.
+        t.sample_masked(10.0, &cluster, &demands, &[true, false]);
+        t.sample_masked(15.0, &cluster, &demands, &[true, false]);
+        assert_eq!(t.hosts[0].len(), 1, "masked host must not sample");
+        assert_eq!(t.hosts[1].len(), 3);
+        assert_eq!(t.vms[&vm].len(), 1, "VM on masked host pauses too");
+        // Stale tail: the retained sample is the pre-blackout one.
+        assert_eq!(t.hosts[0].last_n(1)[0].t, 5.0);
+        // Window over: sampling resumes.
+        t.sample(20.0, &cluster, &demands);
+        assert_eq!(t.hosts[0].len(), 2);
+        assert_eq!(t.vms[&vm].len(), 2);
     }
 
     #[test]

@@ -193,7 +193,29 @@ impl Job {
     pub fn start(&mut self, now: f64) {
         assert_eq!(self.state, JobState::Queued);
         self.state = JobState::Running;
-        self.started_at = Some(now);
+        // Preserve the first start across evacuation restarts: JCT
+        // (and hence SLA compliance) must honestly span the crash and
+        // the re-placement, not restart the clock.
+        if self.started_at.is_none() {
+            self.started_at = Some(now);
+        }
+    }
+
+    /// Throw the job back to `Queued` after its host crashed: all
+    /// phase progress is lost (the paper's batch frameworks restart
+    /// failed work from the last materialized boundary — we model the
+    /// conservative full restart), but `started_at` survives so the
+    /// eventual JCT covers the whole ordeal.
+    pub fn requeue_after_crash(&mut self, now: f64) {
+        assert_eq!(self.state, JobState::Running, "requeue a non-running job");
+        self.state = JobState::Queued;
+        self.phase_idx = 0;
+        self.phase_progress = 0.0;
+        self.stalled_until = 0.0;
+        // Everything run so far is lost time.
+        if let Some(t0) = self.started_at {
+            self.slowdown_secs = now - t0;
+        }
     }
 
     /// Advance the job by `dt` seconds of wall time under the given
@@ -344,6 +366,25 @@ mod tests {
     fn progress_rate_has_floor() {
         let p = phase("x", 10.0, 6.0, 50.0);
         assert!(p.progress_rate((0.0, 0.0, 0.0, 0.0)) >= 0.01);
+    }
+
+    #[test]
+    fn requeue_after_crash_keeps_first_start_and_loses_progress() {
+        let mut j = job();
+        j.start(10.0);
+        j.advance(10.0, 60.0, (1.0, 1.0, 1.0, 1.0));
+        assert!(j.phase_progress > 0.0);
+        j.requeue_after_crash(70.0);
+        assert_eq!(j.state, JobState::Queued);
+        assert_eq!(j.phase_idx, 0);
+        assert_eq!(j.phase_progress, 0.0);
+        assert!((j.slowdown_secs - 60.0).abs() < 1e-9, "lost time counts");
+        // Restart after evacuation: the JCT clock keeps its origin.
+        j.start(100.0);
+        assert_eq!(j.started_at, Some(10.0));
+        let done = j.advance(100.0, 150.0, (1.0, 1.0, 1.0, 1.0));
+        assert!(done);
+        assert!((j.jct().unwrap() - 240.0).abs() < 1e-6);
     }
 
     #[test]

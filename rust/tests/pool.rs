@@ -34,7 +34,7 @@ use ecosched::sched::{
     EnergyAwareParams, PlacementPolicy, PlacementRequest, PowerCapLoop, PowerCapParams,
     ScheduleContext, VmContext,
 };
-use ecosched::sim::Telemetry;
+use ecosched::sim::{FaultConfig, Telemetry};
 use ecosched::util::rng::Xoshiro256;
 use ecosched::workload::{flavor_for, Arrivals, JobId, Mix, TraceSpec};
 use std::collections::BTreeMap;
@@ -304,6 +304,64 @@ fn campaign_is_bit_identical_across_worker_counts() {
     assert_eq!(serial.migrations, wide.migrations);
     assert_eq!(serial.sla_violations, wide.sla_violations);
     assert_eq!(serial.final_digests.len(), wide.final_digests.len());
+}
+
+/// The chaos determinism property (PR 7 acceptance): a campaign under
+/// an aggressive fault plan — host crashes with evacuations, telemetry
+/// blackouts, transient migration failures, injected scoring-worker
+/// panics — must be **bit-identical** across worker widths {1, 8} and
+/// across same-seed reruns. The comparison is the report fingerprint,
+/// which folds per-job outcomes, every fault counter, and the final
+/// shard digests; the non-vacuity asserts guarantee faults actually
+/// fired and jobs were actually evacuated.
+#[test]
+fn faulted_campaign_is_bit_identical_across_widths_and_reruns() {
+    let trace = TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: 14,
+        arrivals: Arrivals::Poisson { mean_gap: 40.0 },
+        horizon: 3600.0,
+    }
+    .generate(31);
+    let run = |workers: usize| {
+        let mut coord = Coordinator::new(
+            CampaignConfig {
+                seed: 31,
+                shard_count: 4,
+                worker_threads: workers,
+                faults: Some(FaultConfig {
+                    host_crash_rate_per_hour: 4.0,
+                    blackout_rate_per_hour: 1.0,
+                    migration_failure_prob: 0.2,
+                    worker_panics: 2,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            make_policy("energy_aware").unwrap(),
+        );
+        coord.run(trace.clone())
+    };
+    let serial = run(1);
+    // Non-vacuous: the plan actually crashed hosts, evacuated running
+    // VMs, and exercised the pool's panic-heal path at BOTH widths.
+    assert!(serial.host_crashes > 0, "no crashes fired — vacuous");
+    assert!(serial.evacuations > 0, "no VM was evacuated — vacuous");
+    assert_eq!(serial.worker_panics, 2, "panic probes did not run");
+    // Every job is accounted for: finished or interrupted.
+    assert_eq!(serial.jobs.len() + serial.interrupted_jobs, 14);
+    let wide = run(8);
+    let rerun = run(8);
+    assert_eq!(
+        serial.fingerprint(),
+        wide.fingerprint(),
+        "faulted campaign diverged between widths 1 and 8"
+    );
+    assert_eq!(
+        wide.fingerprint(),
+        rerun.fingerprint(),
+        "faulted campaign not replayable from (seed, config)"
+    );
 }
 
 /// Nested parallelism: two campaigns running **concurrently** (each
