@@ -17,8 +17,8 @@ use crate::workload::faas::FunctionId;
 
 /// Extra draw (W) a host pays per in-flight container cold start —
 /// the sandbox image pull + runtime boot powering through its window
-/// before useful work, mirroring `p_transition` during host boots but
-/// at container scale.
+/// before useful work, mirroring `p_boot` during host boots but at
+/// container scale.
 pub const CONTAINER_BOOT_W: f64 = 20.0;
 
 /// Sandbox lifecycle. There is no `Busy` state: a warm sandbox is

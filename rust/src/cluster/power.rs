@@ -45,8 +45,12 @@ pub struct PowerModel {
     pub gamma: f64,
     /// Draw when powered off — BMC/IPMI keeps sipping (W).
     pub p_off: f64,
-    /// Mean draw during boot/shutdown transients (W).
-    pub p_transition: f64,
+    /// Mean draw while booting (W) — BIOS/POST spins fans and disks at
+    /// full tilt before any governor engages.
+    pub p_boot: f64,
+    /// Mean draw while shutting down cleanly (W) — service teardown at
+    /// mostly-idle CPU.
+    pub p_shutdown: f64,
 }
 
 /// Default model for the paper's Xeon host class.
@@ -56,7 +60,8 @@ pub const XEON_64GB: PowerModel = PowerModel {
     beta: 16.0,
     gamma: 14.0,
     p_off: 5.0,
-    p_transition: 150.0,
+    p_boot: HOST_START_UP_POWER,
+    p_shutdown: HOST_SHUT_DOWN_POWER,
 };
 
 impl PowerModel {
@@ -108,10 +113,24 @@ pub enum PowerState {
     Failed,
 }
 
-/// Boot duration for the Xeon class (BIOS + kernel + services), seconds.
-pub const BOOT_SECS: f64 = 90.0;
-/// Clean shutdown duration, seconds.
-pub const SHUTDOWN_SECS: f64 = 30.0;
+/// Boot duration for the Xeon class (BIOS + kernel + services),
+/// seconds — CloudSim Plus's `HOST_START_UP_DELAY`.
+pub const HOST_START_UP_DELAY: f64 = 90.0;
+/// Clean shutdown duration, seconds — CloudSim Plus's
+/// `HOST_SHUT_DOWN_DELAY`.
+pub const HOST_SHUT_DOWN_DELAY: f64 = 30.0;
+/// Mean draw during boot, W — CloudSim Plus's `HOST_START_UP_POWER`.
+/// Above idle: POST runs fans/disks flat out with no governor.
+pub const HOST_START_UP_POWER: f64 = 160.0;
+/// Mean draw during clean shutdown, W — CloudSim Plus's
+/// `HOST_SHUT_DOWN_POWER`. Near idle: service teardown is I/O-light.
+pub const HOST_SHUT_DOWN_POWER: f64 = 120.0;
+
+/// Boot duration alias kept for the many call sites that predate the
+/// CloudSim-Plus-style naming.
+pub const BOOT_SECS: f64 = HOST_START_UP_DELAY;
+/// Shutdown duration alias, likewise.
+pub const SHUTDOWN_SECS: f64 = HOST_SHUT_DOWN_DELAY;
 
 impl PowerState {
     pub fn is_on(&self) -> bool {
@@ -147,7 +166,8 @@ impl PowerState {
         match self {
             PowerState::On => active(),
             PowerState::Off | PowerState::Failed => model.p_off,
-            PowerState::Booting { .. } | PowerState::ShuttingDown { .. } => model.p_transition,
+            PowerState::Booting { .. } => model.p_boot,
+            PowerState::ShuttingDown { .. } => model.p_shutdown,
         }
     }
 }
@@ -229,16 +249,21 @@ mod tests {
         let p = PowerState::Off.power(&m, || panic!("active must not be called"));
         assert_eq!(p, m.p_off);
         let p = PowerState::Booting { until: 1.0 }.power(&m, || 0.0);
-        assert_eq!(p, m.p_transition);
+        assert_eq!(p, m.p_boot);
+        let p = PowerState::ShuttingDown { until: 1.0 }.power(&m, || 0.0);
+        assert_eq!(p, m.p_shutdown);
+        // Transient draws bracket idle the way real hosts do.
+        assert!(m.p_boot > m.p_idle);
+        assert!(m.p_shutdown >= m.p_idle);
     }
 
     #[test]
     fn cycling_a_host_costs_energy() {
-        // Boot (90 s @150 W) + shutdown (30 s @150 W) ≈ 18 kJ; idling
+        // Boot (90 s @160 W) + shutdown (30 s @120 W) = 18 kJ; idling
         // the same 120 s costs 13.2 kJ — power cycling only pays off on
-        // sustained idle (> ~45 s extra beyond the cycle itself).
+        // sustained idle (> ~35 s extra beyond the cycle itself).
         let m = XEON_64GB;
-        let cycle_j = m.p_transition * (BOOT_SECS + SHUTDOWN_SECS);
+        let cycle_j = m.p_boot * BOOT_SECS + m.p_shutdown * SHUTDOWN_SECS;
         let idle_j = m.p_idle * (BOOT_SECS + SHUTDOWN_SECS);
         assert!(cycle_j > idle_j);
     }

@@ -436,6 +436,41 @@ impl ShardedCluster {
         }
     }
 
+    /// Advance ONE host's power-state machine (and container boots) to
+    /// `now`, with incremental digest upkeep — the event core's
+    /// per-host analogue of [`ShardedCluster::advance_power_states`],
+    /// which stays as the tick engine's O(hosts) sweep. Only
+    /// Booting→On can flip the On-dependent digest fields here
+    /// (ShuttingDown already left them at `power_off` time), but the
+    /// transition test is written symmetrically anyway.
+    pub fn advance_host(&mut self, host: HostId, now: f64) {
+        let was_on = self.cluster.hosts[host.0].state.is_on();
+        let h = self.cluster.host_mut(host);
+        h.state = h.state.advance(now);
+        h.advance_containers(now);
+        let is_on = self.cluster.hosts[host.0].state.is_on();
+        if was_on != is_on {
+            let cap = self.cluster.hosts[host.0].spec.capacity();
+            let d = &mut self.digests[self.map.shard_of(host)];
+            if is_on {
+                d.on += 1;
+                d.capacity_on.add(&cap);
+            } else {
+                d.on -= 1;
+                d.capacity_on.sub(&cap);
+            }
+        }
+    }
+
+    /// Overwrite ONE host's instantaneous demand — the event core's
+    /// per-host analogue of [`ShardedCluster::apply_demands`]
+    /// (instantaneous demand is not part of any digest). The caller
+    /// owns the capping-by-flavor and executing-host resolution that
+    /// `apply_demands` does for the whole fleet.
+    pub fn set_host_demand(&mut self, host: HostId, demand: Demand) {
+        self.cluster.host_mut(host).demand = demand;
+    }
+
     /// Begin booting a host (no digest change until the boot
     /// completes in [`ShardedCluster::advance_power_states`]).
     pub fn power_on(&mut self, host: HostId, now: f64) {
@@ -747,6 +782,44 @@ mod tests {
         sc.check_invariants().unwrap();
         sc.advance_power_states(300.0); // Booting → On
         assert_eq!(sc.digest(shard).on, on0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn advance_host_matches_fleet_advance_in_digests() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(4), 2);
+        let host = HostId(1);
+        let shard = sc.shard_of(host);
+        let on0 = sc.digest(shard).on;
+        sc.power_off(host, 0.0);
+        assert_eq!(sc.digest(shard).on, on0 - 1);
+        // Per-host advance through ShuttingDown→Off: no digest motion.
+        sc.advance_host(host, 100.0);
+        assert!(sc.cluster().host(host).state.is_off());
+        sc.check_invariants().unwrap();
+        // Off → Booting → On via the single-host path.
+        sc.power_on(host, 100.0);
+        sc.advance_host(host, 150.0); // still booting
+        assert_eq!(sc.digest(shard).on, on0 - 1);
+        sc.advance_host(host, 100.0 + crate::cluster::power::BOOT_SECS);
+        assert_eq!(sc.digest(shard).on, on0);
+        sc.check_invariants().unwrap();
+        // Untouched hosts were never advanced and stay consistent.
+        sc.advance_power_states(1000.0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn set_host_demand_is_digest_free() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(2), 1);
+        let d = Demand {
+            cpu: 3.0,
+            mem_gb: 6.0,
+            disk_mbps: 80.0,
+            net_mbps: 12.0,
+        };
+        sc.set_host_demand(HostId(0), d);
+        assert_eq!(sc.cluster().host(HostId(0)).demand, d);
         sc.check_invariants().unwrap();
     }
 

@@ -1,0 +1,348 @@
+//! Discrete-event campaign core: lazy per-host synchronization.
+//!
+//! The tick engine advances every host every second. The event core
+//! instead keeps, per host, the time it was last brought up to date
+//! (`last_sync`) and a cached instantaneous wattage (`power_w`), and
+//! relies on one invariant: **between two consecutive events touching
+//! a host, everything about it is piecewise-constant** — resident
+//! set, per-VM demand, DVFS point, power state, and therefore
+//! contention and power draw. Under that invariant job progress and
+//! energy over a gap integrate in closed form, so the campaign only
+//! pays for hosts at the moments something about them changes.
+//!
+//! Three primitives enforce the invariant:
+//!
+//! - [`EventCore::sync_host`] closes the open segment: it integrates
+//!   the cached wattage into the meter, accrues off-seconds, advances
+//!   resident jobs by the gap under the (constant) contention, and
+//!   collects any completions into [`EventCore::pending`] for the
+//!   coordinator to settle.
+//! - [`EventCore::reschedule_host`] re-establishes the invariant
+//!   after a mutation: it recomputes the host's demand from its
+//!   residents, bumps the host's *prediction epoch* (drawn from a
+//!   globally-unique counter so a VM hopping hosts can never collide
+//!   into a stale-but-matching epoch), and returns fresh
+//!   `(boundary_time, vm, epoch)` predictions for the coordinator to
+//!   push as `JobAdvance` events. A popped prediction whose epoch no
+//!   longer matches its host is dead — the generalization of the
+//!   stale-`MigrationDone` guard.
+//! - [`EventCore::refresh_power`] re-prices a host whose wattage
+//!   changed without its contention changing (container park/expire,
+//!   power-state edges on empty hosts), maintaining the fleet total
+//!   incrementally for O(1) power-trace points.
+//!
+//! The discipline at every mutation site is therefore
+//! *sync → mutate → reschedule (or refresh)*.
+
+use crate::cluster::{Demand, HostId, VmId};
+use crate::coordinator::state::CampaignState;
+use crate::workload::{JobId, JobState};
+use std::collections::BTreeMap;
+
+/// Tolerance (in progress-seconds) for snapping a phase boundary the
+/// float round-trip through wall time left fractionally short.
+pub(crate) const SNAP_TOL: f64 = 1e-6;
+
+/// Lazy-synchronization state for the event engine. Owned by
+/// [`crate::coordinator::Coordinator::run`] when
+/// `CampaignConfig::engine == EngineKind::Event`; never constructed
+/// for tick campaigns, which keeps the tick path bit-identical.
+pub(crate) struct EventCore {
+    /// Prediction epoch per host; a `JobAdvance { epoch }` is live iff
+    /// it matches the epoch of the VM's *executing* host.
+    epoch_of: Vec<u64>,
+    /// Single source of epochs — globally unique across hosts.
+    next_epoch: u64,
+    /// Per-host time up to which energy/progress is settled.
+    last_sync: Vec<f64>,
+    /// Cached instantaneous wattage per host, valid since `last_sync`.
+    power_w: Vec<f64>,
+    /// Incrementally-maintained fleet power (Σ `power_w`).
+    pub fleet_w: f64,
+    /// Maintained analogue of the tick engine's per-tick demand map:
+    /// the current (uncapped) demand of every placed, running job.
+    /// Updated on reschedule, dropped on completion/crash; feeds
+    /// telemetry sampling and the energy-attribution weights.
+    pub cur_demand: BTreeMap<VmId, Demand>,
+    /// Completions discovered by syncs, awaiting settlement by the
+    /// coordinator (FIFO). Every arm that syncs must drain this before
+    /// the event ends — the main loop backstops it.
+    pending: Vec<(JobId, VmId)>,
+}
+
+impl EventCore {
+    pub fn new(st: &CampaignState) -> EventCore {
+        let power_w: Vec<f64> = st.cluster.hosts.iter().map(|h| h.power()).collect();
+        let fleet_w = power_w.iter().sum();
+        EventCore {
+            epoch_of: vec![0; power_w.len()],
+            next_epoch: 0,
+            last_sync: vec![0.0; power_w.len()],
+            power_w,
+            fleet_w,
+            cur_demand: BTreeMap::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Is this prediction still live for its host?
+    pub fn is_current(&self, host: HostId, epoch: u64) -> bool {
+        self.epoch_of[host.0] == epoch
+    }
+
+    /// Oldest unsettled completion, if any.
+    pub fn pop_pending(&mut self) -> Option<(JobId, VmId)> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.pending.remove(0))
+        }
+    }
+
+    pub fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Close the host's open segment at `now`: integrate the cached
+    /// wattage, accrue off-seconds, and advance resident jobs under
+    /// the segment's (constant) contention. Completions are appended
+    /// to [`EventCore::pending`]. Idempotent at equal `now`.
+    pub fn sync_host(&mut self, st: &mut CampaignState, h: HostId, now: f64) {
+        let i = h.0;
+        let dt = now - self.last_sync[i];
+        if dt <= 0.0 {
+            return;
+        }
+        self.last_sync[i] = now;
+        st.meter.accumulate(i, self.power_w[i], dt);
+        let host = st.cluster.host(h);
+        if !host.state.is_on() {
+            st.counters.host_off_s += dt;
+            return;
+        }
+        if host.vms.is_empty() {
+            return;
+        }
+        // Same attribution as the tick engine: host power split over
+        // resident VMs by normalized demand weight, floored so an
+        // all-stalled host still distributes its draw.
+        let contention = host.contention();
+        let p = self.power_w[i];
+        let vms: Vec<VmId> = host.vms.clone();
+        let weights: Vec<f64> = vms
+            .iter()
+            .map(|vm| {
+                self.cur_demand
+                    .get(vm)
+                    .map(|d| {
+                        d.cpu / 32.0 + d.mem_gb / 64.0 + d.disk_mbps / 500.0 + d.net_mbps / 117.0
+                    })
+                    .unwrap_or(0.0)
+                    .max(1e-6)
+            })
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        for (vm, w) in vms.iter().zip(&weights) {
+            if let Some(&job_id) = st.job_of_vm.get(vm) {
+                *st.job_energy.entry(job_id).or_default() += p * dt * w / wsum;
+                let job = st.jobs.get_mut(&job_id).unwrap();
+                if job.state == JobState::Running
+                    && (job.advance(now - dt, dt, contention)
+                        || job.snap_phase_boundary(now, SNAP_TOL))
+                {
+                    self.pending.push((job_id, *vm));
+                }
+            }
+        }
+    }
+
+    /// Re-establish the piecewise-constant invariant after a mutation
+    /// of `h`'s resident set, demand, or frequency: recompute host
+    /// demand from residents (ascending VM id, matching the tick
+    /// engine's `apply_demands` float-summation order), invalidate
+    /// every outstanding prediction by bumping the epoch, and return
+    /// fresh `(time, vm, epoch)` predictions for the caller to push.
+    /// Also re-prices the host. Callers must have synced `h` first.
+    #[must_use]
+    pub fn reschedule_host(
+        &mut self,
+        st: &mut CampaignState,
+        h: HostId,
+        now: f64,
+    ) -> Vec<(f64, VmId, u64)> {
+        self.next_epoch += 1;
+        let epoch = self.next_epoch;
+        self.epoch_of[h.0] = epoch;
+        let mut vms: Vec<VmId> = st.cluster.host(h).vms.clone();
+        vms.sort_unstable();
+        let mut total = Demand::ZERO;
+        for vm in &vms {
+            if let Some(&job_id) = st.job_of_vm.get(vm) {
+                let d = st.jobs[&job_id].current_demand(now);
+                let flavor = st.cluster.vms[vm].flavor;
+                total.add(&d.capped_by(&flavor));
+                self.cur_demand.insert(*vm, d);
+            }
+        }
+        st.cluster.set_host_demand(h, total);
+        let contention = st.cluster.host(h).contention();
+        let mut preds = Vec::with_capacity(vms.len());
+        for vm in &vms {
+            if let Some(&job_id) = st.job_of_vm.get(vm) {
+                if let Some(t) = st.jobs[&job_id].predict_next_boundary(now, contention) {
+                    preds.push((t.max(now), *vm, epoch));
+                }
+            }
+        }
+        self.refresh_power(st, h);
+        preds
+    }
+
+    /// Re-price one host (wattage changed, contention did not) and
+    /// maintain the fleet total by delta.
+    pub fn refresh_power(&mut self, st: &CampaignState, h: HostId) {
+        let p = st.cluster.host(h).power();
+        self.fleet_w += p - self.power_w[h.0];
+        self.power_w[h.0] = p;
+    }
+
+    /// Drop a terminated/killed VM from the demand map.
+    pub fn forget_vm(&mut self, vm: VmId) {
+        self.cur_demand.remove(&vm);
+    }
+
+    /// Sync every host to `now` — the end-of-campaign settlement that
+    /// gives the event engine the same energy/off-time horizon the
+    /// tick engine reaches with its final tick.
+    pub fn flush_all(&mut self, st: &mut CampaignState, now: f64) {
+        for i in 0..self.last_sync.len() {
+            self.sync_host(st, HostId(i), now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::leader::CampaignConfig;
+    use crate::workload::{Job, JobId, Phase, WorkloadKind};
+
+    fn state_with_job() -> (CampaignState, JobId) {
+        let cfg = CampaignConfig {
+            n_hosts: 2,
+            meter_noise: 0.0,
+            telemetry_noise: 0.0,
+            ..Default::default()
+        };
+        let mut st = CampaignState::new(&cfg);
+        let job = Job::new(
+            JobId(0),
+            WorkloadKind::HadoopWordCount,
+            10.0,
+            vec![Phase {
+                name: "map",
+                duration: 300.0,
+                demand: Demand {
+                    cpu: 4.0,
+                    mem_gb: 4.0,
+                    disk_mbps: 20.0,
+                    net_mbps: 0.0,
+                },
+            }],
+            0.0,
+        );
+        st.sla.register(job.id, job.solo_duration());
+        st.jobs.insert(job.id, job);
+        st.n_jobs = 1;
+        (st, JobId(0))
+    }
+
+    #[test]
+    fn sync_integrates_idle_power_and_is_idempotent() {
+        let (mut st, _) = state_with_job();
+        let mut core = EventCore::new(&st);
+        core.sync_host(&mut st, HostId(0), 100.0);
+        // Idle XEON_64GB: 110 W × 100 s on host 0 only.
+        assert!((st.meter.total_true_j() - 11_000.0).abs() < 1e-9);
+        core.sync_host(&mut st, HostId(0), 100.0);
+        assert!((st.meter.total_true_j() - 11_000.0).abs() < 1e-9);
+        core.flush_all(&mut st, 100.0);
+        assert!((st.meter.total_true_j() - 22_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reschedule_predicts_running_job_boundary() {
+        let (mut st, id) = state_with_job();
+        let mut core = EventCore::new(&st);
+        let vm = st.cluster.create_vm(crate::cluster::flavor::SMALL, id, 0.0);
+        st.cluster.place_vm(vm, HostId(0)).unwrap();
+        st.job_of_vm.insert(vm, id);
+        st.jobs.get_mut(&id).unwrap().start(0.0);
+        let preds = core.reschedule_host(&mut st, HostId(0), 0.0);
+        assert_eq!(preds.len(), 1);
+        let (t, pvm, epoch) = preds[0];
+        assert_eq!(pvm, vm);
+        assert!(core.is_current(HostId(0), epoch));
+        assert!(t > 0.0);
+        // Demand landed on the host and in the maintained map.
+        assert!(st.cluster.host(HostId(0)).demand.cpu > 0.0);
+        assert!(core.cur_demand.contains_key(&vm));
+        // A second reschedule invalidates the first prediction.
+        let _ = core.reschedule_host(&mut st, HostId(0), 1.0);
+        assert!(!core.is_current(HostId(0), epoch));
+    }
+
+    #[test]
+    fn epochs_are_globally_unique_across_hosts() {
+        let (mut st, _) = state_with_job();
+        let mut core = EventCore::new(&st);
+        let _ = core.reschedule_host(&mut st, HostId(0), 0.0);
+        let e0 = core.epoch_of[0];
+        let _ = core.reschedule_host(&mut st, HostId(1), 0.0);
+        let e1 = core.epoch_of[1];
+        assert_ne!(e0, e1, "epochs must never collide across hosts");
+    }
+
+    /// Power transients are priced: a shutdown window integrates at
+    /// `p_shutdown` until the transition instant, then at `p_off` —
+    /// the CloudSim-Plus-style transient constants, charged into
+    /// campaign energy rather than snapping On→Off for free.
+    #[test]
+    fn shutdown_window_charges_transient_power() {
+        let (mut st, _) = state_with_job();
+        let mut core = EventCore::new(&st);
+        let h = HostId(1);
+        let m = st.cluster.host(h).spec.power;
+        st.cluster.power_off(h, 0.0);
+        core.refresh_power(&st, h);
+        // Close the 30 s shutdown window at p_shutdown, flip the state
+        // machine at exactly the transition instant, then integrate the
+        // off segment at the BMC floor.
+        core.sync_host(&mut st, h, crate::cluster::power::SHUTDOWN_SECS);
+        st.cluster.advance_host(h, crate::cluster::power::SHUTDOWN_SECS);
+        assert!(st.cluster.host(h).state.is_off());
+        core.refresh_power(&st, h);
+        core.sync_host(&mut st, h, 100.0);
+        let expected = m.p_shutdown * crate::cluster::power::SHUTDOWN_SECS
+            + m.p_off * (100.0 - crate::cluster::power::SHUTDOWN_SECS);
+        let host1_j = st.meter.per_host_j()[1];
+        assert!(
+            (host1_j - expected).abs() < 1e-9,
+            "host 1 energy {host1_j} != {expected}"
+        );
+        // Off-time counts shutting-down and off segments alike,
+        // matching the report's "powered off or shutting down".
+        assert!((st.counters.host_off_s - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refresh_power_maintains_fleet_delta() {
+        let (mut st, _) = state_with_job();
+        let mut core = EventCore::new(&st);
+        let before = core.fleet_w;
+        st.cluster.power_off(HostId(1), 0.0);
+        core.refresh_power(&st, HostId(1));
+        let m = st.cluster.host(HostId(1)).spec.power;
+        assert!((core.fleet_w - (before - m.p_idle + m.p_shutdown)).abs() < 1e-9);
+    }
+}

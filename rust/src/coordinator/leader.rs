@@ -35,6 +35,33 @@
 //! invalidated by [`crate::predict::EnergyPredictor::weight_epoch`]
 //! when retraining swaps weights).
 //!
+//! # Time advancement
+//!
+//! Two engines share this driver (`CampaignConfig::engine`). The
+//! **event core** (the default) pops a time-ordered heap: job
+//! completions are *predicted* events computed in closed form from
+//! each host's current contention, epoch-stamped and invalidated
+//! whenever the host's resident set or frequency changes (stale
+//! predictions are skipped on pop — the stale-`MigrationDone` guard
+//! generalized); control-loop scans and telemetry sampling are
+//! self-re-arming scheduled events; host boot/shutdown windows are
+//! `PowerTransition` events that price the transient draw exactly.
+//! Per-host state is synchronized lazily (see
+//! [`crate::coordinator::event_core`]), so sparse campaigns cost
+//! events, not simulated seconds. The **tick engine**
+//! (`EngineKind::Tick`) is the original fixed-cadence loop
+//! (`tick_interval`), kept as the behavioral parity oracle: under
+//! piecewise-constant contention aligned to the tick grid the two
+//! engines produce equal reports (pinned by `tests/engine_equiv.rs`).
+//!
+//! Same-instant events in the event engine pop in a documented class
+//! order (power edges, then faults, then submits, then the
+//! default-class migration cutovers and retry drains FIFO, then
+//! telemetry, scans, and job boundaries last — mirroring the intra-
+//! tick ordering of the tick engine); the tick engine pushes
+//! everything at the default class and remains pure FIFO,
+//! bit-identical to the pre-event-core coordinator.
+//!
 //! # Fault handling
 //!
 //! With `CampaignConfig::faults` set, a [`crate::sim::FaultPlan`] —
@@ -52,7 +79,11 @@
 //! Every resolution depends only on simulation state, so a faulted
 //! campaign is bit-identical at any worker width.
 
-use crate::cluster::{power::BOOT_SECS, Cluster, Demand, HostId, VmId, VmState, CONTAINER_BOOT_W};
+use crate::cluster::{
+    power::{BOOT_SECS, SHUTDOWN_SECS},
+    Cluster, Demand, HostId, VmId, VmState, CONTAINER_BOOT_W,
+};
+use crate::coordinator::event_core::EventCore;
 use crate::coordinator::report::CampaignReport;
 use crate::coordinator::state::CampaignState;
 use crate::profile::{ExecutionRecord, HistoryStore, ResourceVector};
@@ -67,9 +98,25 @@ use crate::workload::faas::{KeepAliveLoop, KeepAlivePolicy};
 use crate::workload::{flavor_for, FaasConfig, Job, JobId, JobState};
 use std::time::Instant;
 
+/// Which time-advancement core drives the campaign.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Fixed-cadence ticks every `tick_interval` simulated seconds —
+    /// the original engine, kept as the behavioral parity oracle.
+    Tick,
+    /// Discrete-event heap with predicted completions, epoch
+    /// invalidation, and priced power transients (the default).
+    Event,
+}
+
 /// Campaign configuration.
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
+    /// Time-advancement core (see [`EngineKind`]).
+    pub engine: EngineKind,
+    /// Tick cadence (simulated seconds) for `EngineKind::Tick`;
+    /// ignored by the event core. Previously hard-coded to 1.0.
+    pub tick_interval: f64,
     pub n_hosts: usize,
     /// Cluster shards (power of two). 1 = the whole fleet is one
     /// shard, which reproduces the unsharded scheduler exactly (the
@@ -125,6 +172,8 @@ pub struct CampaignConfig {
 impl Default for CampaignConfig {
     fn default() -> Self {
         CampaignConfig {
+            engine: EngineKind::Event,
+            tick_interval: 1.0,
             n_hosts: 5,
             shard_count: 1,
             worker_threads: shard_pool::env_workers(),
@@ -153,6 +202,47 @@ enum Event {
     RetryQueue,
     /// A fault-plan entry (or a quarantine-deferred recovery).
     Fault(FaultKind),
+    /// Event core: predicted next phase/stall boundary of the job on
+    /// `vm`, stamped with the prediction epoch of its executing host.
+    /// Dead (skipped on pop) unless the epoch still matches.
+    JobAdvance { vm: VmId, epoch: u64 },
+    /// Event core: self-re-arming control-loop scan cadence.
+    Scan,
+    /// Event core: self-re-arming 5 s telemetry/trace cadence.
+    Telemetry,
+    /// Event core: a host power-state edge — boot or shutdown window
+    /// ends, or a container cold start retires.
+    PowerTransition(HostId),
+}
+
+// Same-instant tie-break classes for the event engine (lower pops
+// first; FIFO within a class). The tick engine never uses these —
+// its plain pushes all carry `sim::engine::DEFAULT_CLASS` (128) and
+// stay pure FIFO. `MigrationDone` and `RetryQueue` are pushed by
+// engine-shared code and deliberately ride the default class: at
+// equal timestamps they land after submits and before sampling,
+// FIFO among themselves — matching where the tick engine's
+// insertion order put them.
+const CLASS_POWER: u8 = 0; // state edges settle before anything reads state
+const CLASS_FAULT: u8 = 1; // crashes pre-empt same-instant arrivals
+const CLASS_SUBMIT: u8 = 2; // arrivals before queue drains
+const CLASS_TELEMETRY: u8 = 200; // sample before the scan reads the rings
+const CLASS_SCAN: u8 = 210; // scans before completions (tick parity)
+const CLASS_JOB: u8 = 220; // job boundaries and completions last
+
+/// Push one batch of `(time, vm, epoch)` predictions as `JobAdvance`
+/// events (event engine only).
+fn push_preds(queue: &mut EventQueue<Event>, preds: Vec<(f64, VmId, u64)>) {
+    for (t, vm, epoch) in preds {
+        queue.push_class(t, CLASS_JOB, Event::JobAdvance { vm, epoch });
+    }
+}
+
+/// Collect `h` into `hosts` once.
+fn push_unique(hosts: &mut Vec<HostId>, h: HostId) {
+    if !hosts.contains(&h) {
+        hosts.push(h);
+    }
 }
 
 /// The campaign driver.
@@ -203,30 +293,57 @@ impl Coordinator {
             }
         }
         let mut queue: EventQueue<Event> = EventQueue::new();
+        let event_mode = cfg.engine == EngineKind::Event;
         st.n_jobs = trace.len();
         for job in trace {
             st.sla.register(job.id, job.solo_duration());
-            queue.push(job.submit_at, Event::Submit(job.id));
+            if event_mode {
+                queue.push_class(job.submit_at, CLASS_SUBMIT, Event::Submit(job.id));
+            } else {
+                queue.push(job.submit_at, Event::Submit(job.id));
+            }
             st.jobs.insert(job.id, job);
         }
-        queue.push(1.0, Event::Tick);
+        if event_mode {
+            // Self-re-arming cadence chains; an empty trace needs
+            // neither (the campaign ends immediately).
+            if st.n_jobs > 0 {
+                queue.push_class(SAMPLE_INTERVAL, CLASS_TELEMETRY, Event::Telemetry);
+                queue.push_class(cfg.scan_interval, CLASS_SCAN, Event::Scan);
+            }
+        } else {
+            queue.push(cfg.tick_interval, Event::Tick);
+        }
         // Seed the fault schedule: the whole plan is closed over
         // before the first event pops, so the same faults fire at the
         // same simulated times regardless of how the campaign
         // unfolds (the chaos determinism contract).
         for e in st.fault_plan.events() {
             if e.t < cfg.max_sim_time {
-                queue.push(e.t.max(0.0), Event::Fault(e.kind));
+                if event_mode {
+                    queue.push_class(e.t.max(0.0), CLASS_FAULT, Event::Fault(e.kind));
+                } else {
+                    queue.push(e.t.max(0.0), Event::Fault(e.kind));
+                }
             }
         }
 
+        let mut core = if event_mode {
+            Some(EventCore::new(&st))
+        } else {
+            None
+        };
+        // Set once every job is settled: the event core's energy and
+        // off-time horizon ends where the tick engine's final tick
+        // would have; trailing cadence events no longer integrate.
+        let mut flushed = false;
         let mut last_scan = 0.0;
-        let mut n_events: u64 = 0;
         while let Some((now, ev)) = queue.pop() {
-            n_events += 1;
-            if n_events % 1_000_000 == 0 {
+            st.events_processed += 1;
+            if st.events_processed % 1_000_000 == 0 {
                 eprintln!(
-                    "[coordinator] {n_events} events, sim t={now:.1}, queue len {}",
+                    "[coordinator] {} events, sim t={now:.1}, queue len {}",
+                    st.events_processed,
                     queue.len()
                 );
             }
@@ -257,7 +374,7 @@ impl Coordinator {
                             }
                         }
                     }
-                    self.place_batch(now, &burst, &mut st, &mut queue);
+                    self.place_batch(now, &burst, &mut st, &mut queue, core.as_mut());
                 }
                 Event::RetryQueue => {
                     st.next_retry = None;
@@ -277,7 +394,20 @@ impl Coordinator {
                             retry.push(id);
                         } else {
                             if hstate.is_off() {
+                                if let Some(core) = core.as_mut() {
+                                    // Settle the off-segment, then price
+                                    // the boot window it is entering.
+                                    core.sync_host(&mut st, host, now);
+                                }
                                 st.cluster.power_on(host, now);
+                                if let Some(core) = core.as_mut() {
+                                    core.refresh_power(&st, host);
+                                    queue.push_class(
+                                        now + BOOT_SECS,
+                                        CLASS_POWER,
+                                        Event::PowerTransition(host),
+                                    );
+                                }
                                 request_retry(
                                     &mut queue,
                                     &mut st.next_retry,
@@ -289,7 +419,7 @@ impl Coordinator {
                     }
                     st.waiting_boot = still_waiting;
                     // Drain the whole retry queue through one batch.
-                    self.place_batch(now, &retry, &mut st, &mut queue);
+                    self.place_batch(now, &retry, &mut st, &mut queue, core.as_mut());
                 }
                 Event::MigrationDone(vm_id) => {
                     // The `done` guard drops events staled by a
@@ -301,6 +431,17 @@ impl Coordinator {
                         st.cluster.vms.get(&vm_id).map(|v| v.state),
                         Some(VmState::Migrating { done, .. }) if done <= now + 1e-9
                     ) {
+                        // Event core: close both hosts' segments at the
+                        // pre-cutover wattage before the resident set
+                        // and migration traffic change.
+                        let peers = match (core.as_mut(), st.cluster.vms[&vm_id].state) {
+                            (Some(core), VmState::Migrating { from, to, .. }) => {
+                                core.sync_host(&mut st, from, now);
+                                core.sync_host(&mut st, to, now);
+                                Some((from, to))
+                            }
+                            _ => None,
+                        };
                         st.cluster.finish_migration(vm_id);
                         // Stop-and-copy stall happens at cut-over, not
                         // during the pre-copy.
@@ -310,6 +451,12 @@ impl Coordinator {
                             st.jobs.get_mut(&job_id).unwrap().stall(now + stall);
                         }
                         st.pending_stalls.remove(&vm_id);
+                        if let (Some(core), Some((from, to))) = (core.as_mut(), peers) {
+                            let preds = core.reschedule_host(&mut st, from, now);
+                            push_preds(&mut queue, preds);
+                            let preds = core.reschedule_host(&mut st, to, now);
+                            push_preds(&mut queue, preds);
+                        }
                     }
                 }
                 Event::Tick => {
@@ -326,11 +473,186 @@ impl Coordinator {
                     // them keeps the tick re-arm (and hence the
                     // campaign) from idling forever on abandoned work.
                     if st.counters.completed + st.interrupted.len() < st.n_jobs {
-                        queue.push_in(1.0, Event::Tick);
+                        queue.push_in(cfg.tick_interval, Event::Tick);
                     }
                 }
                 Event::Fault(kind) => {
-                    self.handle_fault(now, kind, &mut st, &mut queue);
+                    self.handle_fault(
+                        now,
+                        kind,
+                        &mut st,
+                        &mut queue,
+                        keep_alive.as_deref(),
+                        core.as_mut(),
+                    );
+                }
+                Event::JobAdvance { vm, epoch } => {
+                    if let Some(core) = core.as_mut() {
+                        // Resolve the executing host; a dead VM or a
+                        // stale epoch (the host's resident set or
+                        // frequency changed since the prediction)
+                        // skips the event.
+                        let host = st.cluster.vms.get(&vm).and_then(|v| match v.state {
+                            VmState::Migrating { from, .. } => Some(from),
+                            _ => v.host,
+                        });
+                        if let Some(h) = host {
+                            if core.is_current(h, epoch) {
+                                core.sync_host(&mut st, h, now);
+                                if !core.has_pending() {
+                                    // A non-completing boundary (phase
+                                    // crossing or stall expiry) still
+                                    // changes demand: re-predict.
+                                    let preds = core.reschedule_host(&mut st, h, now);
+                                    push_preds(&mut queue, preds);
+                                }
+                                // Completions settle in the drain below,
+                                // which also reschedules this host.
+                            }
+                        }
+                    }
+                }
+                Event::Telemetry => {
+                    if let Some(core) = core.as_mut() {
+                        // Mirror of the tick engine's 5 s sampling
+                        // block, fed from the maintained demand map;
+                        // blackout masking identical.
+                        if st.blackout_until.iter().any(|&u| u > now) {
+                            let masked: Vec<bool> = st
+                                .cluster
+                                .hosts
+                                .iter()
+                                .map(|h| st.blackout_until[st.cluster.shard_of(h.id)] > now)
+                                .collect();
+                            st.telemetry
+                                .sample_masked(now, &st.cluster, &core.cur_demand, &masked);
+                        } else {
+                            st.telemetry.sample(now, &st.cluster, &core.cur_demand);
+                        }
+                        for h in &st.cluster.hosts {
+                            if h.state.is_on() {
+                                let u = h.utilization().cpu;
+                                st.util_hist.push(u);
+                                st.per_host_cpu[h.id.0].push(u);
+                            }
+                        }
+                        if cfg.faas.is_some() {
+                            let warm: usize =
+                                st.cluster.digests().iter().map(|d| d.warm_containers).sum();
+                            st.warm_pool.push(warm as f64);
+                        }
+                        st.meter.trace_point(now, core.fleet_w, st.cluster.hosts_on());
+                        if st.counters.completed + st.interrupted.len() < st.n_jobs {
+                            queue.push_class_in(SAMPLE_INTERVAL, CLASS_TELEMETRY, Event::Telemetry);
+                        }
+                    }
+                }
+                Event::Scan => {
+                    if let Some(core) = core.as_mut() {
+                        // Bring every populated host current so the
+                        // control loops see live phase progress, as
+                        // they would under the tick engine.
+                        let populated: Vec<HostId> = st
+                            .cluster
+                            .hosts
+                            .iter()
+                            .filter(|h| !h.vms.is_empty())
+                            .map(|h| h.id)
+                            .collect();
+                        for h in populated {
+                            core.sync_host(&mut st, h, now);
+                        }
+                        if core.has_pending() {
+                            self.finish_batch(
+                                now,
+                                &mut st,
+                                &mut queue,
+                                keep_alive.as_deref(),
+                                &mut *core,
+                            );
+                        }
+                        if !loops.is_empty() {
+                            let t0 = Instant::now();
+                            self.run_control_loops(
+                                now,
+                                &mut st,
+                                &mut queue,
+                                &mut loops,
+                                Some(&mut *core),
+                            );
+                            st.overhead.scan_wall_s += t0.elapsed().as_secs_f64();
+                        }
+                        // Retry safety net (the tick engine's periodic
+                        // poll): anything still parked re-polls on the
+                        // scan cadence.
+                        if !st.deferred.is_empty() || !st.waiting_boot.is_empty() {
+                            request_retry(
+                                &mut queue,
+                                &mut st.next_retry,
+                                now + cfg.retry_backoff_base,
+                            );
+                        }
+                        if st.counters.completed + st.interrupted.len() < st.n_jobs {
+                            queue.push_class_in(cfg.scan_interval, CLASS_SCAN, Event::Scan);
+                        }
+                    }
+                }
+                Event::PowerTransition(h) => {
+                    if let Some(core) = core.as_mut() {
+                        // Close the transient segment at the boot/
+                        // shutdown draw cached when the window opened,
+                        // then advance the state machine (which also
+                        // retires due container cold starts) and
+                        // re-price. Resident contention is unchanged,
+                        // so outstanding predictions stay live.
+                        core.sync_host(&mut st, h, now);
+                        st.cluster.advance_host(h, now);
+                        core.refresh_power(&st, h);
+                        // A host that just reached Off may strand boot-
+                        // waiters whose power_on was refused while it
+                        // was still ShuttingDown.
+                        if st.cluster.host(h).state.is_off()
+                            && st.waiting_boot.iter().any(|&(_, bh)| bh == h)
+                        {
+                            request_retry(
+                                &mut queue,
+                                &mut st.next_retry,
+                                now + cfg.retry_backoff_base,
+                            );
+                        }
+                    }
+                }
+            }
+            if let Some(core) = core.as_mut() {
+                // Settle completions any sync in this event surfaced.
+                if core.has_pending() {
+                    self.finish_batch(now, &mut st, &mut queue, keep_alive.as_deref(), &mut *core);
+                }
+                if !flushed
+                    && st.n_jobs > 0
+                    && st.counters.completed + st.interrupted.len() >= st.n_jobs
+                {
+                    core.flush_all(&mut st, now);
+                    flushed = true;
+                }
+            }
+        }
+        if let Some(core) = core.as_mut() {
+            if !flushed {
+                // The campaign was cut short (max_sim_time, or the
+                // queue drained with work parked forever): settle
+                // energy/off-time up to where the tick engine's last
+                // tick would have landed.
+                let horizon = queue.now().min(cfg.max_sim_time);
+                core.flush_all(&mut st, horizon);
+                if core.has_pending() {
+                    self.finish_batch(
+                        horizon,
+                        &mut st,
+                        &mut queue,
+                        keep_alive.as_deref(),
+                        &mut *core,
+                    );
                 }
             }
         }
@@ -341,12 +663,15 @@ impl Coordinator {
     /// Apply one fault-plan event. Every resolution here depends only
     /// on simulation state (never on wall clock or worker width), so
     /// replays are bit-identical.
+    #[allow(clippy::too_many_arguments)]
     fn handle_fault(
         &mut self,
         now: f64,
         kind: FaultKind,
         st: &mut CampaignState,
         queue: &mut EventQueue<Event>,
+        keep_alive: Option<&dyn KeepAlivePolicy>,
+        mut core: Option<&mut EventCore>,
     ) {
         match kind {
             FaultKind::HostCrash(h) => {
@@ -355,6 +680,33 @@ impl Coordinator {
                 // failed is dropped.
                 if !st.cluster.host(h).state.is_on() {
                     return;
+                }
+                // Event core: the crashed host and any migration peers
+                // (sources feeding it, destinations it feeds) must be
+                // brought current at the pre-crash wattage before
+                // fail_host rewrites resident sets and migration
+                // traffic. A job that crosses its finish line in this
+                // sync completes *before* the crash lands — at the
+                // same instant, completion wins (the tick engine, with
+                // its coarser grid, cannot make this distinction).
+                let mut peers: Vec<HostId> = Vec::new();
+                if let Some(core) = core.as_deref_mut() {
+                    push_unique(&mut peers, h);
+                    for vm in st.cluster.vms.values() {
+                        if let VmState::Migrating { from, to, .. } = vm.state {
+                            if to == h {
+                                push_unique(&mut peers, from);
+                            } else if from == h {
+                                push_unique(&mut peers, to);
+                            }
+                        }
+                    }
+                    for &p in &peers {
+                        core.sync_host(st, p, now);
+                    }
+                    if core.has_pending() {
+                        self.finish_batch(now, st, queue, keep_alive, core);
+                    }
                 }
                 st.crash_history.entry(h).or_default().push(now);
                 let shard = st.cluster.shard_of(h);
@@ -373,6 +725,9 @@ impl Coordinator {
                 let mut evacuate: Vec<JobId> = Vec::new();
                 for vm in &outcome.killed {
                     st.telemetry.forget_vm(*vm);
+                    if let Some(core) = core.as_deref_mut() {
+                        core.forget_vm(*vm);
+                    }
                     st.pending_stalls.remove(vm);
                     if let Some(job_id) = st.job_of_vm.remove(vm) {
                         let job = st.jobs.get_mut(&job_id).unwrap();
@@ -403,6 +758,15 @@ impl Coordinator {
                     let delay = self.config.retry_backoff_base * st.retry_jitter();
                     request_retry(queue, &mut st.next_retry, now + delay);
                 }
+                // Event core: the crash changed resident sets and
+                // migration traffic on every peer — bump epochs (which
+                // strands outstanding predictions) and re-predict.
+                if let Some(core) = core.as_deref_mut() {
+                    for &p in &peers {
+                        let preds = core.reschedule_host(st, p, now);
+                        push_preds(queue, preds);
+                    }
+                }
             }
             FaultKind::HostRecover(h) => {
                 // Stale if the crash itself was dropped (or the host
@@ -430,12 +794,32 @@ impl Coordinator {
                     // this same event fires again and proceeds.
                     st.quarantine_deferred.insert(h);
                     st.counters.quarantines += 1;
-                    queue.push(now + fcfg.quarantine_s, Event::Fault(FaultKind::HostRecover(h)));
+                    if core.is_some() {
+                        queue.push_class(
+                            now + fcfg.quarantine_s,
+                            CLASS_FAULT,
+                            Event::Fault(FaultKind::HostRecover(h)),
+                        );
+                    } else {
+                        queue.push(
+                            now + fcfg.quarantine_s,
+                            Event::Fault(FaultKind::HostRecover(h)),
+                        );
+                    }
                     return;
                 }
                 st.quarantine_deferred.remove(&h);
+                if let Some(core) = core.as_deref_mut() {
+                    // Settle the failed (BMC-draw) segment, then price
+                    // the recovery reboot it is entering.
+                    core.sync_host(st, h, now);
+                }
                 st.cluster.recover_host(h, now);
                 st.counters.host_recoveries += 1;
+                if let Some(core) = core.as_deref_mut() {
+                    core.refresh_power(st, h);
+                    queue.push_class(now + BOOT_SECS, CLASS_POWER, Event::PowerTransition(h));
+                }
             }
             FaultKind::BlackoutStart { shard, until } => {
                 if let Some(u) = st.blackout_until.get_mut(shard) {
@@ -475,7 +859,7 @@ impl Coordinator {
         cfg: &CampaignConfig,
         keep_alive: Option<&dyn KeepAlivePolicy>,
     ) {
-        let dt = 1.0;
+        let dt = cfg.tick_interval;
         st.cluster.advance_power_states(now);
 
         // Gather per-VM demands from job phase state.
@@ -591,54 +975,16 @@ impl Coordinator {
             *last_scan = now;
             if !loops.is_empty() {
                 let t0 = Instant::now();
-                self.run_control_loops(now, st, queue, loops);
+                self.run_control_loops(now, st, queue, loops, None);
                 st.overhead.scan_wall_s += t0.elapsed().as_secs_f64();
             }
         }
 
         // Completions: release resources, record outcomes.
         let had_finished = !finished.is_empty();
+        let mut affected = Vec::new();
         for (job_id, vm_id) in finished {
-            // A migration may still be in flight; cut it over so
-            // termination is clean.
-            if matches!(st.cluster.vms[&vm_id].state, VmState::Migrating { .. }) {
-                st.cluster.finish_migration(vm_id);
-            }
-            // Capture the final host before the VM record disappears:
-            // a completing function invocation parks its sandbox warm
-            // there for the keep-alive window.
-            let final_host = st.cluster.vms[&vm_id].host;
-            st.cluster.terminate_vm(vm_id);
-            // The VM is gone; drop the reverse mapping so per-tick
-            // demand/progress walks stay proportional to *active* VMs
-            // (vm_of_job keeps the forward record for reporting).
-            st.job_of_vm.remove(&vm_id);
-            st.telemetry.forget_vm(vm_id);
-            if let (Some(ka), Some(host)) = (keep_alive, final_host) {
-                let job = &st.jobs[&job_id];
-                if let Some(function) = job.function {
-                    st.cluster.park_warm_container(
-                        host,
-                        function,
-                        job.gb.min(crate::cluster::flavor::FAAS.mem_gb),
-                        now + ka.window(function),
-                    );
-                }
-            }
-            let job = &st.jobs[&job_id];
-            let jct = job.jct().expect("finished job has jct");
-            st.sla.complete(job_id, jct);
-            st.counters.completed += 1;
-            let profile = st.profiles.get(&job_id).copied().unwrap_or_default();
-            self.history.push(ExecutionRecord {
-                kind: job.kind,
-                gb: job.gb,
-                profile,
-                jct,
-                solo: job.solo_duration(),
-                energy_j: st.job_energy.get(&job_id).copied().unwrap_or(0.0),
-                host_cpu_mean: 0.0,
-            });
+            self.complete_job(now, job_id, vm_id, st, &mut affected, keep_alive, None);
         }
         if had_finished && !st.deferred.is_empty() {
             request_retry(queue, &mut st.next_retry, now);
@@ -651,6 +997,119 @@ impl Coordinator {
         }
     }
 
+    /// Completion settlement shared by both engines: cut over any
+    /// in-flight migration, release the VM, park a warm sandbox for a
+    /// finishing function invocation, and record the outcome. Hosts
+    /// whose resident set (or migration traffic) changed land in
+    /// `affected` — the event engine re-predicts them afterwards; the
+    /// tick engine passes a throwaway.
+    #[allow(clippy::too_many_arguments)]
+    fn complete_job(
+        &mut self,
+        now: f64,
+        job_id: JobId,
+        vm_id: VmId,
+        st: &mut CampaignState,
+        affected: &mut Vec<HostId>,
+        keep_alive: Option<&dyn KeepAlivePolicy>,
+        mut core: Option<&mut EventCore>,
+    ) {
+        // The executing host (migration source while in flight) loses
+        // a VM here.
+        let exec_host = match st.cluster.vms[&vm_id].state {
+            VmState::Migrating { from, .. } => Some(from),
+            _ => st.cluster.vms[&vm_id].host,
+        };
+        if let Some(h) = exec_host {
+            push_unique(affected, h);
+        }
+        // A migration may still be in flight; cut it over so
+        // termination is clean.
+        if let VmState::Migrating { to, .. } = st.cluster.vms[&vm_id].state {
+            if let Some(core) = core.as_deref_mut() {
+                // The destination's copy traffic disappears at the
+                // cut-over: close its segment first.
+                core.sync_host(st, to, now);
+            }
+            push_unique(affected, to);
+            st.cluster.finish_migration(vm_id);
+        }
+        // Capture the final host before the VM record disappears:
+        // a completing function invocation parks its sandbox warm
+        // there for the keep-alive window.
+        let final_host = st.cluster.vms[&vm_id].host;
+        st.cluster.terminate_vm(vm_id);
+        // The VM is gone; drop the reverse mapping so demand/progress
+        // walks stay proportional to *active* VMs (vm_of_job keeps
+        // the forward record for reporting).
+        st.job_of_vm.remove(&vm_id);
+        st.telemetry.forget_vm(vm_id);
+        if let Some(core) = core.as_deref_mut() {
+            core.forget_vm(vm_id);
+        }
+        if let (Some(ka), Some(host)) = (keep_alive, final_host) {
+            let job = &st.jobs[&job_id];
+            if let Some(function) = job.function {
+                st.cluster.park_warm_container(
+                    host,
+                    function,
+                    job.gb.min(crate::cluster::flavor::FAAS.mem_gb),
+                    now + ka.window(function),
+                );
+            }
+        }
+        let job = &st.jobs[&job_id];
+        let jct = job.jct().expect("finished job has jct");
+        st.sla.complete(job_id, jct);
+        st.counters.completed += 1;
+        let profile = st.profiles.get(&job_id).copied().unwrap_or_default();
+        self.history.push(ExecutionRecord {
+            kind: job.kind,
+            gb: job.gb,
+            profile,
+            jct,
+            solo: job.solo_duration(),
+            energy_j: st.job_energy.get(&job_id).copied().unwrap_or(0.0),
+            host_cpu_mean: 0.0,
+        });
+    }
+
+    /// Event engine: drain the completions the last sync surfaced,
+    /// settle each through [`Coordinator::complete_job`], then bump
+    /// epochs and re-predict every host whose resident set changed.
+    /// Deferred work re-polls immediately — a completion is exactly
+    /// the capacity signal the tick engine's same-second retry saw.
+    fn finish_batch(
+        &mut self,
+        now: f64,
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+        keep_alive: Option<&dyn KeepAlivePolicy>,
+        core: &mut EventCore,
+    ) {
+        let mut affected: Vec<HostId> = Vec::new();
+        let mut any = false;
+        while let Some((job_id, vm_id)) = core.pop_pending() {
+            any = true;
+            self.complete_job(
+                now,
+                job_id,
+                vm_id,
+                st,
+                &mut affected,
+                keep_alive,
+                Some(&mut *core),
+            );
+        }
+        for h in affected {
+            let preds = core.reschedule_host(st, h, now);
+            push_preds(queue, preds);
+        }
+        if any && !st.deferred.is_empty() {
+            request_retry(queue, &mut st.next_retry, now);
+        }
+    }
+
     /// Run every control loop once, actuating each loop's actions
     /// before the next loop scans (consolidation's power-downs and
     /// migrations are visible to the DVFS governor).
@@ -660,6 +1119,7 @@ impl Coordinator {
         st: &mut CampaignState,
         queue: &mut EventQueue<Event>,
         loops: &mut [Box<dyn ControlLoop>],
+        mut core: Option<&mut EventCore>,
     ) {
         let vm_ctx = st.vm_contexts(now);
         for control in loops.iter_mut() {
@@ -677,8 +1137,21 @@ impl Coordinator {
                     ControlAction::PowerOff(h) => {
                         let host = st.cluster.host(h);
                         if host.vms.is_empty() && host.state.is_on() {
+                            if let Some(core) = core.as_deref_mut() {
+                                // Close the idle-On segment, then price
+                                // the shutdown window it is entering.
+                                core.sync_host(st, h, now);
+                            }
                             st.cluster.power_off(h, now);
                             st.shard_counters[st.cluster.shard_of(h)].power_offs += 1;
+                            if let Some(core) = core.as_deref_mut() {
+                                core.refresh_power(st, h);
+                                queue.push_class(
+                                    now + SHUTDOWN_SECS,
+                                    CLASS_POWER,
+                                    Event::PowerTransition(h),
+                                );
+                            }
                         }
                     }
                     ControlAction::Migrate { vm, to } => {
@@ -703,6 +1176,15 @@ impl Coordinator {
                         }
                         let link = link_headroom(&st.cluster, vm, to);
                         let from = st.cluster.vms.get(&vm).and_then(|v| v.host);
+                        if let Some(core) = core.as_deref_mut() {
+                            // Both endpoints gain copy traffic (source
+                            // contention changes): settle them at the
+                            // pre-copy rates first.
+                            if let Some(from) = from {
+                                core.sync_host(st, from, now);
+                            }
+                            core.sync_host(st, to, now);
+                        }
                         if let Ok(cost) = st.cluster.start_migration(vm, to, now, link) {
                             st.migration_retries.remove(&vm);
                             if let Some(from) = from {
@@ -716,16 +1198,43 @@ impl Coordinator {
                                 *st.job_stall.entry(job_id).or_default() += cost.stall;
                             }
                             queue.push(now + cost.duration, Event::MigrationDone(vm));
+                            if let Some(core) = core.as_deref_mut() {
+                                if let Some(from) = from {
+                                    let preds = core.reschedule_host(st, from, now);
+                                    push_preds(queue, preds);
+                                }
+                                let preds = core.reschedule_host(st, to, now);
+                                push_preds(queue, preds);
+                            }
                         }
                     }
                     ControlAction::SetFreq { host, freq } => {
-                        st.cluster.set_freq(host, freq);
+                        if let Some(core) = core.as_deref_mut() {
+                            // Frequency changes power draw and job
+                            // progress rates: settle, actuate,
+                            // re-predict under the new p-state.
+                            core.sync_host(st, host, now);
+                            st.cluster.set_freq(host, freq);
+                            core.refresh_power(st, host);
+                            let preds = core.reschedule_host(st, host, now);
+                            push_preds(queue, preds);
+                        } else {
+                            st.cluster.set_freq(host, freq);
+                        }
                     }
                     ControlAction::ExpireContainers(h) => {
                         // Revalidates against the live clock inside
                         // expire_containers, so a stale plan is a no-op.
+                        if let Some(core) = core.as_deref_mut() {
+                            // Warm sandboxes hold memory (utilization →
+                            // power): settle before they leave.
+                            core.sync_host(st, h, now);
+                        }
                         let n = st.cluster.expire_containers(h, now);
                         st.counters.containers_expired += n as u64;
+                        if let Some(core) = core.as_deref_mut() {
+                            core.refresh_power(st, h);
+                        }
                     }
                 }
             }
@@ -741,6 +1250,7 @@ impl Coordinator {
         ids: &[JobId],
         st: &mut CampaignState,
         queue: &mut EventQueue<Event>,
+        mut core: Option<&mut EventCore>,
     ) {
         let t0 = Instant::now();
         let mut reqs: Vec<PlacementRequest> = Vec::with_capacity(ids.len());
@@ -792,7 +1302,16 @@ impl Coordinator {
         let guard_sensitive = self.policy.scoring_handle().is_some();
         let mut placed_hosts: Vec<HostId> = Vec::new();
         for (req, decision) in reqs.iter().zip(decisions) {
-            self.apply_decision(now, req, decision, st, queue, &mut placed_hosts, guard_sensitive);
+            self.apply_decision(
+                now,
+                req,
+                decision,
+                st,
+                queue,
+                &mut placed_hosts,
+                guard_sensitive,
+                core.as_deref_mut(),
+            );
         }
     }
 
@@ -812,6 +1331,7 @@ impl Coordinator {
         queue: &mut EventQueue<Event>,
         placed_hosts: &mut Vec<HostId>,
         guard_sensitive: bool,
+        mut core: Option<&mut EventCore>,
     ) {
         let stale = match decision {
             Decision::Place(host) => {
@@ -843,6 +1363,11 @@ impl Coordinator {
         }
         match decision {
             Decision::Place(host) => {
+                if let Some(core) = core.as_deref_mut() {
+                    // Settle the host's pre-placement segment before a
+                    // new resident changes its demand and power.
+                    core.sync_host(st, host, now);
+                }
                 let vm = st.cluster.create_vm(req.flavor, req.job, now);
                 st.cluster
                     .place_vm(vm, host)
@@ -890,6 +1415,17 @@ impl Coordinator {
                             st.counters.cold_starts += 1;
                             st.counters.cold_start_energy_j +=
                                 CONTAINER_BOOT_W * faas.cold_start_secs;
+                            if core.is_some() {
+                                // The sandbox's boot-draw window needs a
+                                // bounding event (the tick engine's
+                                // advance_power_states retires it as a
+                                // side effect of the next second).
+                                queue.push_class(
+                                    now + faas.cold_start_secs,
+                                    CLASS_POWER,
+                                    Event::PowerTransition(host),
+                                );
+                            }
                         }
                     }
                 }
@@ -897,13 +1433,26 @@ impl Coordinator {
                 if !placed_hosts.contains(&host) {
                     placed_hosts.push(host);
                 }
+                if let Some(core) = core.as_deref_mut() {
+                    // New resident (and possibly a cold-start stall):
+                    // re-predict the whole host under the added demand.
+                    let preds = core.reschedule_host(st, host, now);
+                    push_preds(queue, preds);
+                }
             }
             Decision::PowerOnAndPlace(host) => {
                 // The staleness check above guarantees the host is
                 // still Off here; power_on itself is idempotent.
+                if let Some(core) = core.as_deref_mut() {
+                    core.sync_host(st, host, now);
+                }
                 st.cluster.power_on(host, now);
                 st.shard_counters[st.cluster.shard_of(host)].boots += 1;
                 st.waiting_boot.push((req.job, host));
+                if let Some(core) = core.as_deref_mut() {
+                    core.refresh_power(st, host);
+                    queue.push_class(now + BOOT_SECS, CLASS_POWER, Event::PowerTransition(host));
+                }
                 request_retry(
                     queue,
                     &mut st.next_retry,

@@ -1,11 +1,12 @@
 //! The coordinator (L3's leader): campaign driver, batched placement
 //! path, control-loop actuation, and outcome reporting.
 
+mod event_core;
 pub mod leader;
 pub mod report;
 pub mod state;
 
-pub use leader::{remaining_solo, CampaignConfig, Coordinator};
+pub use leader::{remaining_solo, CampaignConfig, Coordinator, EngineKind};
 pub use report::{CampaignReport, JobRecord, Overhead};
 pub use state::{CampaignState, Counters};
 

@@ -154,6 +154,11 @@ pub struct CampaignReport {
     pub worker_panics: u64,
     /// Recoveries deferred because the host was flapping.
     pub quarantines: u64,
+    /// Events popped from the campaign queue — the engine-efficiency
+    /// denominator (`simulated seconds / events`). NOT folded into
+    /// `fingerprint()`: the tick and event engines compute identical
+    /// outcomes through different event counts by design.
+    pub events_processed: u64,
 }
 
 impl CampaignReport {

@@ -133,6 +133,8 @@ pub struct CampaignState {
     /// Transient failures per VM (bounded retry; at the cap the VM
     /// stays put for the rest of the campaign).
     pub migration_retries: BTreeMap<VmId, u32>,
+    /// Events popped from the campaign queue (either engine).
+    pub events_processed: u64,
 }
 
 impl CampaignState {
@@ -177,6 +179,7 @@ impl CampaignState {
             blackout_until: vec![0.0; shard_count],
             migration_attempts: 0,
             migration_retries: BTreeMap::new(),
+            events_processed: 0,
         }
     }
 
@@ -288,6 +291,7 @@ impl CampaignState {
             migration_failures: self.counters.migration_failures,
             worker_panics: self.counters.worker_panics,
             quarantines: self.counters.quarantines,
+            events_processed: self.events_processed,
         }
     }
 }

@@ -101,7 +101,7 @@ impl Default for EnergyAwareParams {
         EnergyAwareParams {
             delta_high: 0.85,
             max_slowdown: 0.05,
-            boot_penalty_j: 150.0 * 90.0, // p_transition × boot_secs
+            boot_penalty_j: 160.0 * 90.0, // HOST_START_UP_POWER × HOST_START_UP_DELAY
             headroom: 0.93,
             top_k_shards: 4,
             inline_burst_rows: 128,

@@ -67,6 +67,34 @@ impl EnergyMeter {
         self.last_sample = now;
     }
 
+    /// Integrate one host's constant draw `watts` over a `dt`-second
+    /// segment — the discrete-event analogue of [`EnergyMeter::sample`].
+    /// The event core calls this lazily at per-host sync points (a
+    /// host's segments are bounded by its own events), so `last_sample`
+    /// is deliberately untouched: event-mode segment bookkeeping lives
+    /// with the caller. One noise draw per segment, mirroring the
+    /// one-draw-per-host-per-sample of tick mode.
+    pub fn accumulate(&mut self, host: usize, watts: f64, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        let measured = if self.noise_sigma > 0.0 {
+            watts * self.noise.normal_clamped(1.0, self.noise_sigma, 0.9, 1.1)
+        } else {
+            watts
+        };
+        self.per_host_j[host] += measured * dt;
+        self.per_host_true_j[host] += watts * dt;
+    }
+
+    /// Record one point on the fleet power / hosts-on traces without
+    /// integrating energy — event mode emits these at telemetry events
+    /// from its incrementally maintained fleet wattage.
+    pub fn trace_point(&mut self, now: f64, total_w: f64, hosts_on: usize) {
+        self.power_trace.push(now, total_w);
+        self.hosts_on_trace.push(now, hosts_on as f64);
+    }
+
     /// Total measured energy (J).
     pub fn total_j(&self) -> f64 {
         self.per_host_j.iter().sum()
@@ -149,6 +177,32 @@ mod tests {
         m.sample(2.0, &cluster);
         assert_eq!(m.power_trace.len(), 2);
         assert_eq!(m.hosts_on_trace.at(1.5), Some(3.0));
+    }
+
+    #[test]
+    fn accumulate_matches_sample_for_constant_power() {
+        // Tick-mode sample vs event-mode accumulate over the same
+        // noise-free segment must integrate identical joules.
+        let cluster = Cluster::homogeneous(2);
+        let mut tick = EnergyMeter::new(2, 1, 0.0);
+        for t in 1..=50 {
+            tick.sample(t as f64, &cluster);
+        }
+        let mut event = EnergyMeter::new(2, 1, 0.0);
+        for (i, h) in cluster.hosts.iter().enumerate() {
+            event.accumulate(i, h.power(), 50.0);
+        }
+        assert!((tick.total_j() - event.total_j()).abs() < 1e-9);
+        assert!((tick.total_true_j() - event.total_true_j()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_point_records_without_integrating() {
+        let mut m = EnergyMeter::new(1, 1, 0.0);
+        m.trace_point(5.0, 220.0, 1);
+        assert_eq!(m.power_trace.len(), 1);
+        assert_eq!(m.hosts_on_trace.at(5.0), Some(1.0));
+        assert_eq!(m.total_j(), 0.0);
     }
 
     #[test]

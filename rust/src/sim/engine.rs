@@ -1,23 +1,31 @@
 //! Discrete-event engine: a deterministic time-ordered event queue.
 //!
-//! Simulation time is `f64` seconds. Ties are broken by insertion
-//! sequence (FIFO), which makes runs bit-for-bit reproducible — a hard
-//! requirement for the paper's averaged-over-three-runs methodology to
-//! be implemented as averaged-over-three-seeds.
+//! Simulation time is `f64` seconds. Entries are ordered by
+//! `(time, class, seq)` ascending: same-instant events pop in event-
+//! class order, and within one class by insertion sequence (FIFO) —
+//! which makes runs bit-for-bit reproducible, a hard requirement for
+//! the paper's averaged-over-three-runs methodology to be implemented
+//! as averaged-over-three-seeds. `push` uses a single default class,
+//! so callers that never call `push_class` get pure FIFO ties.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Queue entry; ordered by (time, seq) ascending.
+/// Tie-break class assigned by plain `push`. Mid-range so class-aware
+/// callers can schedule both before and after default-class events.
+pub const DEFAULT_CLASS: u8 = 128;
+
+/// Queue entry; ordered by (time, class, seq) ascending.
 struct Entry<E> {
     time: f64,
+    class: u8,
     seq: u64,
     event: E,
 }
 
 impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.class == other.class && self.seq == other.seq
     }
 }
 impl<E> Eq for Entry<E> {}
@@ -29,6 +37,7 @@ impl<E> Ord for Entry<E> {
             .time
             .partial_cmp(&self.time)
             .expect("NaN event time")
+            .then(other.class.cmp(&self.class))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -65,9 +74,17 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Schedule an event at absolute time `t`. Scheduling in the past
-    /// (before the last popped event) is a logic error.
+    /// Schedule an event at absolute time `t` with the default
+    /// tie-break class. Scheduling in the past (before the last popped
+    /// event) is a logic error.
     pub fn push(&mut self, t: f64, event: E) {
+        self.push_class(t, DEFAULT_CLASS, event);
+    }
+
+    /// Schedule an event at absolute time `t` with an explicit
+    /// tie-break class: among same-instant events, lower classes pop
+    /// first, and equal classes pop FIFO.
+    pub fn push_class(&mut self, t: f64, class: u8, event: E) {
         assert!(!t.is_nan(), "NaN event time");
         assert!(
             t >= self.now - 1e-9,
@@ -76,6 +93,7 @@ impl<E> EventQueue<E> {
         );
         self.heap.push(Entry {
             time: t,
+            class,
             seq: self.seq,
             event,
         });
@@ -85,6 +103,11 @@ impl<E> EventQueue<E> {
     /// Schedule relative to now.
     pub fn push_in(&mut self, dt: f64, event: E) {
         self.push(self.now + dt, event);
+    }
+
+    /// Schedule relative to now with an explicit tie-break class.
+    pub fn push_class_in(&mut self, dt: f64, class: u8, event: E) {
+        self.push_class(self.now + dt, class, event);
     }
 
     /// Pop the earliest event, advancing the clock.
@@ -187,6 +210,55 @@ mod tests {
         assert_eq!(q.peek(), Some((1.0, &"second")));
         q.pop();
         assert_eq!(q.peek(), None);
+    }
+
+    #[test]
+    fn same_instant_events_pop_in_class_order() {
+        let mut q = EventQueue::new();
+        // Insert out of class order at one instant: classes must win.
+        q.push_class(5.0, 7, "job_advance");
+        q.push_class(5.0, 0, "power_transition");
+        q.push_class(5.0, 6, "scan");
+        q.push_class(5.0, 1, "fault");
+        assert_eq!(q.pop().unwrap().1, "power_transition");
+        assert_eq!(q.pop().unwrap().1, "fault");
+        assert_eq!(q.pop().unwrap().1, "scan");
+        assert_eq!(q.pop().unwrap().1, "job_advance");
+    }
+
+    #[test]
+    fn classes_only_break_ties_never_reorder_time() {
+        let mut q = EventQueue::new();
+        q.push_class(2.0, 0, "later-but-low-class");
+        q.push_class(1.0, 255, "earlier-but-high-class");
+        assert_eq!(q.pop().unwrap().1, "earlier-but-high-class");
+        assert_eq!(q.pop().unwrap().1, "later-but-low-class");
+    }
+
+    #[test]
+    fn equal_class_ties_stay_fifo() {
+        let mut q = EventQueue::new();
+        q.push_class(1.0, 3, "first");
+        q.push_class(1.0, 3, "second");
+        q.push(1.0, "default-a"); // DEFAULT_CLASS = 128 > 3
+        q.push_class(1.0, 3, "third");
+        q.push(1.0, "default-b");
+        assert_eq!(q.pop().unwrap().1, "first");
+        assert_eq!(q.pop().unwrap().1, "second");
+        assert_eq!(q.pop().unwrap().1, "third");
+        assert_eq!(q.pop().unwrap().1, "default-a");
+        assert_eq!(q.pop().unwrap().1, "default-b");
+    }
+
+    #[test]
+    fn push_class_in_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.push(5.0, "base");
+        q.pop();
+        q.push_class_in(1.0, 2, "low");
+        q.push_class_in(1.0, 1, "lower");
+        assert_eq!(q.pop(), Some((6.0, "lower")));
+        assert_eq!(q.pop(), Some((6.0, "low")));
     }
 
     #[test]

@@ -40,8 +40,12 @@ pub struct Ring<T> {
 impl<T: Copy> Ring<T> {
     pub fn new(cap: usize) -> Ring<T> {
         assert!(cap > 0);
+        // Lazily allocated: `push` grows the buffer on demand up to
+        // `cap`. A 10k-host campaign carries 10k host rings — eagerly
+        // reserving `cap` samples each would burn hundreds of MB for
+        // hosts that may never be sampled (sparse event-mode runs).
         Ring {
-            buf: Vec::with_capacity(cap),
+            buf: Vec::new(),
             cap,
             head: 0,
             len: 0,

@@ -257,6 +257,52 @@ impl Job {
         false
     }
 
+    /// Closed-form prediction of the next demand-change boundary for
+    /// this job under piecewise-constant `contention`: the end of a
+    /// stall window, or the wall-clock time at which the current phase
+    /// completes at the current progress rate. `None` when not
+    /// running. The discrete-event core schedules a `JobAdvance` at
+    /// this time and invalidates it (by epoch) whenever the hosting
+    /// machine's resident set or frequency changes.
+    pub fn predict_next_boundary(&self, now: f64, contention: (f64, f64, f64, f64)) -> Option<f64> {
+        if self.state != JobState::Running {
+            return None;
+        }
+        if now < self.stalled_until {
+            return Some(self.stalled_until);
+        }
+        let phase = &self.phases[self.phase_idx];
+        let rate = phase.progress_rate(contention);
+        let need = (phase.duration - self.phase_progress).max(0.0);
+        Some(now + need / rate)
+    }
+
+    /// Force-cross a phase boundary the solver left a float-epsilon
+    /// short: when the remaining need of the current phase is ≤ `tol`
+    /// progress-seconds, cross it at zero wall cost. Returns `true`
+    /// when the job finishes via the snap. The event core calls this
+    /// after advancing a job to its own predicted boundary, so that
+    /// `need/rate` round-tripping through wall time can never strand a
+    /// phase at 99.9999…% forever.
+    pub fn snap_phase_boundary(&mut self, now: f64, tol: f64) -> bool {
+        if self.state != JobState::Running || now < self.stalled_until {
+            return false;
+        }
+        let need = self.phases[self.phase_idx].duration - self.phase_progress;
+        if need > tol {
+            return false;
+        }
+        self.phase_progress = 0.0;
+        self.phase_idx += 1;
+        if self.phase_idx == self.phases.len() {
+            self.phase_idx = self.phases.len() - 1; // keep index valid
+            self.state = JobState::Finished;
+            self.finished_at = Some(now);
+            return true;
+        }
+        false
+    }
+
     /// Actual JCT once finished.
     pub fn jct(&self) -> Option<f64> {
         Some(self.finished_at? - self.started_at?)
@@ -385,6 +431,58 @@ mod tests {
         let done = j.advance(100.0, 150.0, (1.0, 1.0, 1.0, 1.0));
         assert!(done);
         assert!((j.jct().unwrap() - 240.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predicted_boundary_matches_stepped_advance() {
+        let mut j = job();
+        j.start(0.0);
+        let contention = (0.5, 1.0, 1.0, 1.0);
+        // Phase 1: 100 s of need at rate 0.5 → boundary at t=200.
+        let t1 = j.predict_next_boundary(0.0, contention).unwrap();
+        assert!((t1 - 200.0).abs() < 1e-9, "t1={t1}");
+        assert!(!j.advance(0.0, t1, contention));
+        j.snap_phase_boundary(t1, 1e-6);
+        assert_eq!(j.phase_idx, 1);
+        // Phase 2 uncontended: 50 s more.
+        let t2 = j.predict_next_boundary(t1, (1.0, 1.0, 1.0, 1.0)).unwrap();
+        assert!((t2 - 250.0).abs() < 1e-9);
+        let done =
+            j.advance(t1, t2 - t1, (1.0, 1.0, 1.0, 1.0)) || j.snap_phase_boundary(t2, 1e-6);
+        assert!(done);
+        assert!((j.jct().unwrap() - 250.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predicted_boundary_respects_stall_window() {
+        let mut j = job();
+        j.start(0.0);
+        j.stall(10.0);
+        assert_eq!(j.predict_next_boundary(0.0, (1.0, 1.0, 1.0, 1.0)), Some(10.0));
+        // After the stall ends, prediction is the phase end.
+        let t = j.predict_next_boundary(10.0, (1.0, 1.0, 1.0, 1.0)).unwrap();
+        assert!((t - 110.0).abs() < 1e-9);
+        assert_eq!(j.predict_next_boundary(0.0, (1.0, 1.0, 1.0, 1.0)), Some(10.0));
+    }
+
+    #[test]
+    fn snap_only_crosses_epsilon_boundaries() {
+        let mut j = job();
+        j.start(0.0);
+        // Mid-phase: snap must be a no-op.
+        j.advance(0.0, 40.0, (1.0, 1.0, 1.0, 1.0));
+        assert!(!j.snap_phase_boundary(40.0, 1e-6));
+        assert_eq!(j.phase_idx, 0);
+        // A float-epsilon short of the boundary: snap crosses it.
+        j.phase_progress = 100.0 - 1e-9;
+        assert!(!j.snap_phase_boundary(40.0, 1e-6));
+        assert_eq!(j.phase_idx, 1);
+        assert_eq!(j.phase_progress, 0.0);
+        // Last phase: snapping across finishes the job.
+        j.phase_progress = 50.0 - 1e-9;
+        assert!(j.snap_phase_boundary(123.0, 1e-6));
+        assert_eq!(j.state, JobState::Finished);
+        assert_eq!(j.finished_at, Some(123.0));
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Tick-vs-event engine equivalence, and event-engine determinism.
+//!
+//! The event core's correctness contract is that under piecewise-
+//! constant contention it computes the *same campaign* as the tick
+//! oracle — same per-job outcomes, same energy, same counters — while
+//! popping far fewer events. These tests pin that contract on a
+//! hand-built trace where the tick engine itself is exact:
+//!
+//! - **All submits land at t = 0.** The tick engine quantizes to its
+//!   grid: a job placed mid-campaign first contributes demand (and
+//!   receives progress) at the *next* tick, over the whole preceding
+//!   interval — up to one full tick of progress/energy attributed to
+//!   time before the VM existed. The event core integrates from the
+//!   exact placement instant, so mid-campaign arrivals diverge by
+//!   design. A burst at t = 0 starts both engines at the same instant
+//!   and removes the artifact, leaving only what the equivalence is
+//!   about: closed-form progress/energy integration vs per-tick
+//!   stepping.
+//! - **Phase durations are multiples of 5 s** so completions and
+//!   phase boundaries land on every tick grid in the sweep
+//!   (`tick_interval ∈ {0.5, 1.0, 2.5}`), keeping the tick engine's
+//!   energy horizon identical to the event core's.
+//! - **No contention, no noise, no faults, no FaaS, round-robin** —
+//!   every remaining feature (multi-phase demand switching, shared-
+//!   host attribution weights, completion ordering) is exercised; no
+//!   timing-sensitive control loop muddies the comparison.
+//!
+//! Not compared: `makespan` and `active_energy_j` (the event engine's
+//! trailing cadence events advance the report horizon past the last
+//! completion), `util_hist`/`power_trace` (different sampling
+//! cadences), `events_processed` (differing by design — that's the
+//! point), and whole-report fingerprints (which fold `makespan` in).
+
+use ecosched::cluster::Demand;
+use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator, EngineKind};
+use ecosched::workload::{Arrivals, Job, JobId, Mix, Phase, TraceSpec, WorkloadKind};
+
+/// Eight two-phase jobs, all submitted at t = 0, with distinct
+/// integer durations (multiples of 5) and per-phase demand switches.
+/// On 4 hosts under round-robin that is 2 MEDIUM VMs per host —
+/// no contention, no deferrals.
+fn burst_trace() -> Vec<Job> {
+    (0..8)
+        .map(|i| {
+            Job::new(
+                JobId(i),
+                WorkloadKind::HadoopWordCount,
+                10.0 + i as f64,
+                vec![
+                    Phase {
+                        name: "map",
+                        duration: 120.0 + 20.0 * i as f64,
+                        demand: Demand {
+                            cpu: 4.0,
+                            mem_gb: 4.0,
+                            disk_mbps: 20.0,
+                            net_mbps: 10.0,
+                        },
+                    },
+                    Phase {
+                        name: "reduce",
+                        duration: 80.0 + 10.0 * i as f64,
+                        demand: Demand {
+                            cpu: 2.0,
+                            mem_gb: 6.0,
+                            disk_mbps: 40.0,
+                            net_mbps: 5.0,
+                        },
+                    },
+                ],
+                0.0,
+            )
+        })
+        .collect()
+}
+
+fn equiv_config(engine: EngineKind, tick_interval: f64) -> CampaignConfig {
+    CampaignConfig {
+        engine,
+        tick_interval,
+        n_hosts: 4,
+        seed: 5,
+        meter_noise: 0.0,
+        telemetry_noise: 0.0,
+        consolidation: None,
+        dvfs: None,
+        faas: None,
+        faults: None,
+        ..Default::default()
+    }
+}
+
+fn rel_close(a: f64, b: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    assert!(
+        ((a - b) / denom).abs() < 1e-9,
+        "{what}: tick={a} event={b}"
+    );
+}
+
+#[test]
+fn event_core_matches_tick_oracle_across_tick_grids() {
+    let mut ev = Coordinator::new(
+        equiv_config(EngineKind::Event, 1.0),
+        make_policy("round_robin").unwrap(),
+    );
+    let event = ev.run(burst_trace());
+    assert_eq!(event.jobs.len(), 8);
+
+    for dt in [0.5, 1.0, 2.5] {
+        let mut tk = Coordinator::new(
+            equiv_config(EngineKind::Tick, dt),
+            make_policy("round_robin").unwrap(),
+        );
+        let tick = tk.run(burst_trace());
+
+        assert_eq!(tick.jobs.len(), event.jobs.len(), "dt={dt}");
+        for (t, e) in tick.jobs.iter().zip(&event.jobs) {
+            assert_eq!(t.id, e.id, "dt={dt}");
+            assert!(
+                (t.jct - e.jct).abs() < 1e-9,
+                "dt={dt} job {:?}: tick jct {} event jct {}",
+                t.id,
+                t.jct,
+                e.jct
+            );
+            rel_close(t.energy_j, e.energy_j, &format!("dt={dt} job energy"));
+            assert_eq!(t.sla_met, e.sla_met, "dt={dt}");
+            assert_eq!(t.migrations, e.migrations, "dt={dt}");
+            assert_eq!(t.wait, e.wait, "dt={dt}");
+        }
+        rel_close(tick.energy_j, event.energy_j, &format!("dt={dt} energy_j"));
+        rel_close(
+            tick.energy_true_j,
+            event.energy_true_j,
+            &format!("dt={dt} energy_true_j"),
+        );
+        for (h, (a, b)) in tick
+            .per_host_energy_j
+            .iter()
+            .zip(&event.per_host_energy_j)
+            .enumerate()
+        {
+            rel_close(*a, *b, &format!("dt={dt} host {h} energy"));
+        }
+        assert_eq!(tick.sla_violations, event.sla_violations, "dt={dt}");
+        assert_eq!(tick.migrations, event.migrations, "dt={dt}");
+        assert_eq!(tick.power_cycles, event.power_cycles, "dt={dt}");
+        assert_eq!(tick.deferrals, event.deferrals, "dt={dt}");
+        assert_eq!(tick.host_off_s, event.host_off_s, "dt={dt}");
+        assert_eq!(tick.interrupted_jobs, event.interrupted_jobs, "dt={dt}");
+    }
+}
+
+/// The efficiency half of the contract on the same trace: the event
+/// engine must pop strictly fewer events than any tick run (and the
+/// margin must widen as the grid refines).
+#[test]
+fn event_core_pops_fewer_events_than_every_tick_grid() {
+    let mut ev = Coordinator::new(
+        equiv_config(EngineKind::Event, 1.0),
+        make_policy("round_robin").unwrap(),
+    );
+    let event = ev.run(burst_trace());
+    let mut prev = u64::MAX;
+    for dt in [2.5, 1.0, 0.5] {
+        let mut tk = Coordinator::new(
+            equiv_config(EngineKind::Tick, dt),
+            make_policy("round_robin").unwrap(),
+        );
+        let tick = tk.run(burst_trace());
+        assert!(
+            event.events_processed < tick.events_processed,
+            "dt={dt}: event popped {} >= tick's {}",
+            event.events_processed,
+            tick.events_processed
+        );
+        assert!(tick.events_processed < prev, "refining the grid must add events");
+        prev = tick.events_processed;
+    }
+}
+
+fn poisson_trace(n: usize, seed: u64) -> Vec<Job> {
+    TraceSpec {
+        mix: Mix::paper(),
+        n_jobs: n,
+        arrivals: Arrivals::Poisson { mean_gap: 45.0 },
+        horizon: 3600.0,
+    }
+    .generate(seed)
+}
+
+fn fingerprint_at(workers: usize, faulted: bool) -> u64 {
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            engine: EngineKind::Event,
+            n_hosts: 8,
+            shard_count: 4,
+            worker_threads: workers,
+            seed: 29,
+            faults: faulted.then(|| ecosched::sim::FaultConfig {
+                host_crash_rate_per_hour: 12.0,
+                mean_downtime_s: 180.0,
+                worker_panics: 1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+        make_policy("energy_aware").unwrap(),
+    );
+    coord.run(poisson_trace(14, 29)).fingerprint()
+}
+
+/// Event-engine determinism: the full report fingerprint (bit-level
+/// JCTs, energy, fault ledger, shard digests) is identical across
+/// same-seed reruns and across worker widths {1, 8}, with staggered
+/// arrivals, consolidation + DVFS scans, and power transients in
+/// play — clean and faulted.
+#[test]
+fn event_engine_fingerprint_stable_across_widths_and_reruns() {
+    for faulted in [false, true] {
+        let serial = fingerprint_at(1, faulted);
+        assert_eq!(
+            serial,
+            fingerprint_at(1, faulted),
+            "faulted={faulted}: same-seed rerun diverged"
+        );
+        assert_eq!(
+            serial,
+            fingerprint_at(8, faulted),
+            "faulted={faulted}: worker width changed the campaign"
+        );
+    }
+}
+
+/// Power transients are priced into campaign energy under the event
+/// engine: an energy-aware campaign that parks hosts must record
+/// off-time, and its energy must stay conservative (noise-free total
+/// no less than BMC floor × horizon would imply zero activity).
+#[test]
+fn event_engine_campaign_with_consolidation_is_well_formed() {
+    let mut coord = Coordinator::new(
+        CampaignConfig {
+            engine: EngineKind::Event,
+            n_hosts: 5,
+            seed: 3,
+            ..Default::default()
+        },
+        make_policy("energy_aware").unwrap(),
+    );
+    let r = coord.run(poisson_trace(12, 3));
+    assert_eq!(r.jobs.len(), 12);
+    assert!(r.energy_true_j > 0.0);
+    assert!(r.events_processed > 0);
+    assert!(r.makespan > 0.0);
+    // Every completion was settled: per-job energy attributed.
+    assert!(r.jobs.iter().all(|j| j.energy_j > 0.0));
+}
