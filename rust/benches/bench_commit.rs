@@ -1,0 +1,274 @@
+//! Bench: commit-protocol throughput — what splitting the leader into
+//! N coordinators buys. N real threads each decide a round-robin
+//! slice of one contended burst against the same frozen
+//! `ShardedCluster` (planning is pure, so sharing it immutably is
+//! safe), then a single-threaded commit phase validates the merged
+//! commits in total order through a `PlacementStore`, re-deciding
+//! rejects against the live cluster. Reported per coordinator count:
+//! decisions/s (the parallel decide phase) and the conflict rate the
+//! optimism costs (rejected / total commits).
+//!
+//! The fleet is deliberately contended: all but every 16th host is
+//! pre-filled to capacity, so every coordinator's scorer chases the
+//! same small set of free hosts and double-books across slices.
+//!
+//! Asserts decisions/s at N = 4 reaches >= 2x N = 1 when the machine
+//! actually has >= 4 cores (the campaign driver itself runs decide
+//! phases sequentially for determinism; this bench is where the
+//! protocol's parallel headroom is measured). Emits
+//! `BENCH_commit.json` for CI's bench gate (`benches/compare.py`).
+
+use ecosched::cluster::flavor::{LARGE, MEDIUM};
+use ecosched::cluster::{Cluster, Demand, HostId, ShardedCluster};
+use ecosched::coordinator::{
+    commit_order, target_shard, AllocationCommit, CommitOutcome, CommitRecord, PlacementStore,
+    RejectReason, Scheduler,
+};
+use ecosched::predict::OraclePredictor;
+use ecosched::profile::ResourceVector;
+use ecosched::sched::{
+    Decision, EnergyAware, EnergyAwareParams, PlacementPolicy, PlacementRequest, ScheduleContext,
+};
+use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
+use ecosched::workload::JobId;
+
+const N_HOSTS: usize = 10_000;
+const SHARDS: usize = 64;
+
+fn fresh_policy() -> EnergyAware {
+    EnergyAware::new(Box::new(OraclePredictor), EnergyAwareParams::default())
+}
+
+/// 10k hosts with all but every 16th pre-filled by two LARGE VMs
+/// (which exactly exhaust a paper-testbed host's memory): 625 hosts
+/// of headroom for the scorers to fight over.
+fn contended_fleet() -> ShardedCluster {
+    let mut sc = ShardedCluster::new(Cluster::homogeneous(N_HOSTS), SHARDS);
+    for h in 0..N_HOSTS {
+        if h % 16 == 0 {
+            continue;
+        }
+        for k in 0..2 {
+            let vm = sc.create_vm(LARGE, JobId((1_000_000 + 2 * h + k) as u64), 0.0);
+            sc.place_vm(vm, HostId(h)).expect("prefill fits");
+            sc.set_expected_demand(
+                vm,
+                Demand {
+                    cpu: LARGE.vcpus * 0.6,
+                    mem_gb: LARGE.mem_gb * 0.7,
+                    disk_mbps: LARGE.disk_mbps * 0.2,
+                    net_mbps: LARGE.net_mbps * 0.2,
+                },
+            );
+        }
+    }
+    sc
+}
+
+fn requests(n: usize) -> Vec<PlacementRequest> {
+    (0..n)
+        .map(|i| PlacementRequest {
+            job: JobId(i as u64),
+            flavor: MEDIUM,
+            vector: ResourceVector {
+                cpu: 0.55 + 0.01 * (i % 8) as f64,
+                mem: 0.7,
+                disk: 0.25,
+                net: 0.15,
+                cpu_peak: 0.85,
+                io_peak: 0.35,
+                ..Default::default()
+            },
+            remaining_solo: 600.0 + i as f64,
+        })
+        .collect()
+}
+
+/// Parallel decide phase: request i goes to coordinator i mod n, each
+/// coordinator is a real thread owning its own policy (predictor
+/// state is not `Send`, so it must be built inside the thread), all
+/// deciding against the same frozen cluster.
+fn decide_parallel(n: usize, reqs: &[PlacementRequest], sc: &ShardedCluster) -> Vec<Decision> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut policy = fresh_policy();
+                    let ctx = ScheduleContext::new(0.0, sc).with_shards(sc);
+                    let idxs: Vec<usize> = (c..reqs.len()).step_by(n).collect();
+                    let sub: Vec<PlacementRequest> =
+                        idxs.iter().map(|&i| reqs[i].clone()).collect();
+                    let decisions = policy.decide_batch(&sub, &ctx);
+                    idxs.into_iter().zip(decisions).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut out = vec![Decision::Defer; reqs.len()];
+        for h in handles {
+            for (i, d) in h.join().expect("coordinator thread panicked") {
+                out[i] = d;
+            }
+        }
+        out
+    })
+}
+
+/// Single-threaded commit phase on a fresh clone of the fleet: sort
+/// into total commit order, validate each commit, actuate winners,
+/// re-decide losers against the live cluster (the campaign driver's
+/// discipline, minus the event machinery). Returns (commits,
+/// conflicts).
+fn commit_all(
+    n: usize,
+    reqs: &[PlacementRequest],
+    decisions: &[Decision],
+    base: &ShardedCluster,
+) -> (u64, u64) {
+    let mut cluster = base.clone();
+    let mut store = PlacementStore::new();
+    let mut scheds: Vec<Scheduler> = (0..n as u32).map(|c| Scheduler::new(c, SHARDS)).collect();
+    let mut re_policy = fresh_policy();
+
+    let mut commits: Vec<AllocationCommit> = Vec::with_capacity(reqs.len());
+    for (c, sched) in scheds.iter_mut().enumerate() {
+        sched.refresh_snapshot(&cluster);
+        for i in (c..reqs.len()).step_by(n) {
+            commits.push(sched.request(0.0, 2, &cluster, reqs[i].job, reqs[i].flavor, decisions[i]));
+        }
+    }
+    commits.sort_by(commit_order);
+
+    let mut placed: Vec<HostId> = Vec::new();
+    for mut commit in commits {
+        let coord = commit.coordinator as usize;
+        // Own writes are always visible (same rule as the campaign
+        // driver): raise the stamp to the committer's current view.
+        if let (Some(shard), Some(snap)) = (
+            target_shard(&cluster, commit.decision),
+            commit.snapshot_epoch.as_mut(),
+        ) {
+            *snap = (*snap).max(scheds[coord].snapshot_epoch(shard));
+        }
+        let req = &reqs[commit.job.0 as usize];
+        let verdict = store.validate(&cluster, &commit, &placed, true, 64);
+        let (outcome, decision) = match verdict {
+            Ok(()) => (CommitOutcome::Committed, commit.decision),
+            Err(reason) => {
+                if matches!(reason, RejectReason::StaleSnapshot { .. }) {
+                    scheds[coord].refresh_snapshot(&cluster);
+                }
+                let redecided = {
+                    let ctx = ScheduleContext::new(0.0, &cluster).with_shards(&cluster);
+                    re_policy.decide(req, &ctx)
+                };
+                (CommitOutcome::Rejected(reason), redecided)
+            }
+        };
+        if let Decision::Place(host) = decision {
+            let vm = cluster.create_vm(req.flavor, req.job, 0.0);
+            cluster
+                .place_vm(vm, host)
+                .expect("validated placement must fit");
+            cluster.set_expected_demand(
+                vm,
+                Demand {
+                    cpu: req.vector.cpu * req.flavor.vcpus,
+                    mem_gb: req.vector.mem * req.flavor.mem_gb,
+                    disk_mbps: req.vector.disk * req.flavor.disk_mbps,
+                    net_mbps: req.vector.net * req.flavor.net_mbps,
+                },
+            );
+            if !placed.contains(&host) {
+                placed.push(host);
+            }
+        }
+        if let Some(shard) = target_shard(&cluster, decision) {
+            let epoch = cluster.shard_epoch(shard);
+            scheds[coord].note_commit(shard, epoch);
+        }
+        store.record(CommitRecord {
+            time: commit.time,
+            class: commit.class,
+            coordinator: commit.coordinator,
+            seq: commit.seq,
+            job: commit.job,
+            requested: commit.decision,
+            outcome,
+            decision,
+        });
+    }
+    (store.commits(), store.conflicts())
+}
+
+fn main() {
+    bench_header("commit");
+    let mut report = JsonReport::new("commit");
+    let (n_reqs, samples) = if short_mode() { (512, 3) } else { (2048, 5) };
+
+    let fleet = contended_fleet();
+    let reqs = requests(n_reqs);
+    let mut decisions_per_s = Vec::new();
+
+    for &n in &[1usize, 2, 4] {
+        let r = Bench::new(&format!("commit/decide/n{n}"))
+            .warmup(1)
+            .samples(samples)
+            .iters(1)
+            .run(|| {
+                let ds = decide_parallel(n, &reqs, &fleet);
+                std::hint::black_box(ds.len());
+            });
+        let dps = n_reqs as f64 / r.per_iter.mean;
+        decisions_per_s.push(dps);
+
+        let ds = decide_parallel(n, &reqs, &fleet);
+        let placed = ds
+            .iter()
+            .filter(|d| matches!(d, Decision::Place(_)))
+            .count();
+        assert!(
+            placed > 0,
+            "n={n}: the contended fleet must still admit placements"
+        );
+        let (commits, conflicts) = commit_all(n, &reqs, &ds, &fleet);
+        assert_eq!(commits as usize, n_reqs, "one commit per request");
+        if n > 1 {
+            assert!(
+                conflicts > 0,
+                "n={n}: contended slices must double-book at least once"
+            );
+        }
+        report.record_with(
+            &r,
+            &[
+                ("coordinators", n as f64),
+                ("requests", n_reqs as f64),
+                ("decisions_per_s", dps),
+                ("commits", commits as f64),
+                ("conflicts", conflicts as f64),
+                ("conflict_rate", conflicts as f64 / commits as f64),
+            ],
+        );
+        println!(
+            "bench commit/decide/n{n}: {dps:.0} decisions/s, conflict rate {:.3}",
+            conflicts as f64 / commits as f64
+        );
+    }
+
+    // The protocol's parallel headroom: 4 coordinators must at least
+    // double single-coordinator decision throughput — on hardware
+    // that can actually run them concurrently.
+    let cores = std::thread::available_parallelism().map_or(1, |p| p.get());
+    if cores >= 4 {
+        assert!(
+            decisions_per_s[2] >= 2.0 * decisions_per_s[0],
+            "n=4 decided {:.0}/s, n=1 decided {:.0}/s — expected >= 2x",
+            decisions_per_s[2],
+            decisions_per_s[0]
+        );
+    } else {
+        println!("::warning::commit bench on {cores} cores — skipping the 2x speedup assert");
+    }
+
+    report.write().expect("write BENCH_commit.json");
+}

@@ -30,6 +30,7 @@ Refreshing baselines (run on the reference machine — CI's runner class
     BENCH_SHORT=1 cargo bench --bench bench_sim_engine
     BENCH_SHORT=1 cargo bench --bench bench_faas
     BENCH_SHORT=1 cargo bench --bench bench_chaos
+    BENCH_SHORT=1 cargo bench --bench bench_commit
     python3 benches/compare.py --update
     git add benches/baseline && git commit
 
@@ -51,6 +52,7 @@ GROUPS = [
     "sim_engine",
     "faas",
     "chaos",
+    "commit",
 ]
 WALL_TOLERANCE = 1.25  # fail when mean_s exceeds baseline by >25 %
 ROWS_EPS = 1e-6  # float slack on the exact rows/decision comparison

@@ -15,7 +15,7 @@ pub use flavor::Flavor;
 pub use host::{Host, HostId, HostSpec, Utilization};
 pub use index::HostView;
 pub use power::{PowerModel, PowerState};
-pub use shard::{ShardDigest, ShardMap, ShardedCluster};
+pub use shard::{DigestSnapshot, ShardDigest, ShardMap, ShardedCluster};
 pub use vm::{migration_cost, Vm, VmId, VmState};
 
 use std::collections::BTreeMap;

@@ -20,6 +20,16 @@
 //! [`ShardedCluster::check_invariants`] cross-checks every digest
 //! against a fresh recomputation from the VM inventory, so a mutation
 //! path that skips the handle is caught by the property tests.
+//!
+//! Each shard also carries a monotonically increasing **commit
+//! epoch**, bumped by every mutation whose effect is visible to
+//! placement (admission capacity, power/crash state, warm pools).
+//! The epoch is the staleness currency of the optimistic commit
+//! protocol: a coordinator snapshots [`DigestSnapshot`]s (digest +
+//! epoch), decides against them, and the
+//! [`crate::coordinator::PlacementStore`] compares the snapshot epoch
+//! with the live one at commit time to bound how stale a decision may
+//! be before its coordinator is forced to refresh.
 
 use crate::cluster::flavor::Flavor;
 use crate::cluster::vm::MigrationCost;
@@ -197,6 +207,21 @@ impl ShardDigest {
     }
 }
 
+/// One shard's digest stamped with the commit epoch it was read at —
+/// the unit of state a coordinator decides against in the optimistic
+/// commit protocol. The epoch, not the digest contents, is what the
+/// placement store validates: two snapshots with equal digests but
+/// different epochs are different snapshots.
+#[derive(Debug, Clone, Copy)]
+pub struct DigestSnapshot {
+    /// Shard the snapshot was taken from.
+    pub shard: usize,
+    /// The shard's commit epoch at read time.
+    pub epoch: u64,
+    /// Digest contents at read time (a copy — never ages).
+    pub digest: ShardDigest,
+}
+
 fn demand_close(a: &Demand, b: &Demand) -> bool {
     (a.cpu - b.cpu).abs() < 1e-6
         && (a.mem_gb - b.mem_gb).abs() < 1e-6
@@ -213,7 +238,7 @@ fn demand_close(a: &Demand, b: &Demand) -> bool {
 /// [`ShardedCluster::advance_power_states`] rather than reaching a
 /// `&mut Host` directly — the digest's On count and accepting
 /// capacity are maintained there.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct ShardedCluster {
     cluster: Cluster,
     map: ShardMap,
@@ -222,6 +247,9 @@ pub struct ShardedCluster {
     /// single-shard fan-out bit-identical to the flat path.
     members: Vec<Vec<HostId>>,
     digests: Vec<ShardDigest>,
+    /// Per-shard commit epochs: bumped by every placement-visible
+    /// mutation (see the module docs). Monotone, never reset.
+    epochs: Vec<u64>,
 }
 
 impl Deref for ShardedCluster {
@@ -251,6 +279,7 @@ impl ShardedCluster {
             map,
             members,
             digests,
+            epochs: vec![0; shard_count],
         }
     }
 
@@ -278,6 +307,35 @@ impl ShardedCluster {
 
     pub fn digests(&self) -> &[ShardDigest] {
         &self.digests
+    }
+
+    /// One shard's current commit epoch.
+    pub fn shard_epoch(&self, shard: usize) -> u64 {
+        self.epochs[shard]
+    }
+
+    /// All shard commit epochs, indexed by shard id.
+    pub fn shard_epochs(&self) -> &[u64] {
+        &self.epochs
+    }
+
+    /// One shard's digest stamped with its commit epoch — the
+    /// coordinator-facing snapshot the commit protocol decides
+    /// against.
+    pub fn digest_snapshot(&self, shard: usize) -> DigestSnapshot {
+        DigestSnapshot {
+            shard,
+            epoch: self.epochs[shard],
+            digest: self.digests[shard],
+        }
+    }
+
+    /// Bump one shard's commit epoch. Called by every mutator whose
+    /// effect placement can observe (admission capacity, power and
+    /// crash state, warm pools) — the write half of the staleness
+    /// currency read by [`ShardedCluster::digest_snapshot`].
+    fn bump_epoch(&mut self, shard: usize) {
+        self.epochs[shard] += 1;
     }
 
     /// Build one shard's pruned scoring views into `out` (cleared
@@ -310,10 +368,12 @@ impl ShardedCluster {
             return self.cluster.place_vm(vm_id, host_id);
         };
         self.cluster.place_vm(vm_id, host_id)?;
-        let d = &mut self.digests[self.map.shard_of(host_id)];
+        let shard = self.map.shard_of(host_id);
+        let d = &mut self.digests[shard];
         d.reserved.add(&reservation_of(&flavor));
         d.expected.add(&expected);
         d.per_class[demand_class(&expected, &flavor)].add(&expected);
+        self.bump_epoch(shard);
         Ok(())
     }
 
@@ -333,10 +393,12 @@ impl ShardedCluster {
         let (expected, flavor) = info.expect("VM exists after successful migration start");
         // The destination carries the reservation and the expected
         // load from copy start (both ends count while migrating).
-        let d = &mut self.digests[self.map.shard_of(to)];
+        let shard = self.map.shard_of(to);
+        let d = &mut self.digests[shard];
         d.reserved.add(&reservation_of(&flavor));
         d.expected.add(&expected);
         d.per_class[demand_class(&expected, &flavor)].add(&expected);
+        self.bump_epoch(shard);
         Ok(cost)
     }
 
@@ -354,10 +416,12 @@ impl ShardedCluster {
         self.cluster.finish_migration(vm_id);
         // Source residency (and reservation) ends; the destination's
         // share was added at migration start.
-        let d = &mut self.digests[self.map.shard_of(from)];
+        let shard = self.map.shard_of(from);
+        let d = &mut self.digests[shard];
         d.reserved.sub(&reservation_of(&flavor));
         d.expected.sub(&expected);
         d.per_class[demand_class(&expected, &flavor)].sub(&expected);
+        self.bump_epoch(shard);
     }
 
     pub fn terminate_vm(&mut self, vm_id: VmId) {
@@ -371,10 +435,12 @@ impl ShardedCluster {
             return;
         };
         self.cluster.terminate_vm(vm_id);
-        let d = &mut self.digests[self.map.shard_of(host)];
+        let shard = self.map.shard_of(host);
+        let d = &mut self.digests[shard];
         d.reserved.sub(&reservation_of(&flavor));
         d.expected.sub(&expected);
         d.per_class[demand_class(&expected, &flavor)].sub(&expected);
+        self.bump_epoch(shard);
     }
 
     pub fn set_expected_demand(&mut self, vm_id: VmId, expected: Demand) {
@@ -394,11 +460,13 @@ impl ShardedCluster {
             demand_class(&expected, &flavor),
         );
         for h in [resident, incoming].into_iter().flatten() {
-            let d = &mut self.digests[self.map.shard_of(h)];
+            let shard = self.map.shard_of(h);
+            let d = &mut self.digests[shard];
             d.expected.sub(&old);
             d.expected.add(&expected);
             d.per_class[oc].sub(&old);
             d.per_class[nc].add(&expected);
+            self.bump_epoch(shard);
         }
     }
 
@@ -414,6 +482,8 @@ impl ShardedCluster {
     /// digest fields (Booting→On completions happen here). O(hosts),
     /// same as the underlying advance.
     pub fn advance_power_states(&mut self, now: f64) {
+        let before: Vec<(usize, usize)> =
+            self.digests.iter().map(|d| (d.on, d.failed)).collect();
         self.cluster.advance_power_states(now);
         for d in &mut self.digests {
             d.on = 0;
@@ -434,6 +504,13 @@ impl ShardedCluster {
                 d.capacity_lost.add(&host.spec.capacity());
             }
         }
+        // Boot completions change admission state: bump the epoch of
+        // every shard whose power-dependent counts moved.
+        for s in 0..self.digests.len() {
+            if (self.digests[s].on, self.digests[s].failed) != before[s] {
+                self.bump_epoch(s);
+            }
+        }
     }
 
     /// Advance ONE host's power-state machine (and container boots) to
@@ -451,7 +528,8 @@ impl ShardedCluster {
         let is_on = self.cluster.hosts[host.0].state.is_on();
         if was_on != is_on {
             let cap = self.cluster.hosts[host.0].spec.capacity();
-            let d = &mut self.digests[self.map.shard_of(host)];
+            let shard = self.map.shard_of(host);
+            let d = &mut self.digests[shard];
             if is_on {
                 d.on += 1;
                 d.capacity_on.add(&cap);
@@ -459,6 +537,7 @@ impl ShardedCluster {
                 d.on -= 1;
                 d.capacity_on.sub(&cap);
             }
+            self.bump_epoch(shard);
         }
     }
 
@@ -471,10 +550,16 @@ impl ShardedCluster {
         self.cluster.host_mut(host).demand = demand;
     }
 
-    /// Begin booting a host (no digest change until the boot
-    /// completes in [`ShardedCluster::advance_power_states`]).
+    /// Begin booting a host. No digest change until the boot
+    /// completes in [`ShardedCluster::advance_power_states`], but the
+    /// epoch bumps immediately: the host leaves Off, which commits
+    /// targeting it with `PowerOnAndPlace` can observe.
     pub fn power_on(&mut self, host: HostId, now: f64) {
+        let was_off = self.cluster.hosts[host.0].state.is_off();
         self.cluster.host_mut(host).power_on(now);
+        if was_off {
+            self.bump_epoch(self.map.shard_of(host));
+        }
     }
 
     /// Begin shutting a host down; the shard immediately stops
@@ -485,11 +570,13 @@ impl ShardedCluster {
         let warm = self.cluster.hosts[host.0].warm_count();
         self.cluster.host_mut(host).power_off(now);
         if was_accepting && !self.cluster.hosts[host.0].state.accepts_vms() {
-            let d = &mut self.digests[self.map.shard_of(host)];
+            let shard = self.map.shard_of(host);
+            let d = &mut self.digests[shard];
             d.on -= 1;
             d.capacity_on.sub(&cap);
             // The host's sandbox pool died with it.
             d.warm_containers -= warm;
+            self.bump_epoch(shard);
         }
     }
 
@@ -540,11 +627,13 @@ impl ShardedCluster {
         d.warm_containers -= warm;
         d.failed += 1;
         d.capacity_lost.add(&cap);
+        self.bump_epoch(shard);
         for (s, res, exp, cls) in releases {
             let d = &mut self.digests[s];
             d.reserved.sub(&res);
             d.expected.sub(&exp);
             d.per_class[cls].sub(&exp);
+            self.bump_epoch(s);
         }
         out
     }
@@ -559,9 +648,11 @@ impl ShardedCluster {
         let cap = self.cluster.hosts[host.0].spec.capacity();
         self.cluster.host_mut(host).recover(now);
         if was_failed {
-            let d = &mut self.digests[self.map.shard_of(host)];
+            let shard = self.map.shard_of(host);
+            let d = &mut self.digests[shard];
             d.failed -= 1;
             d.capacity_lost.sub(&cap);
+            self.bump_epoch(shard);
         }
     }
 
@@ -575,7 +666,9 @@ impl ShardedCluster {
         function: crate::workload::faas::FunctionId,
     ) -> bool {
         if self.cluster.host_mut(host).claim_warm(function) {
-            self.digests[self.map.shard_of(host)].warm_containers -= 1;
+            let shard = self.map.shard_of(host);
+            self.digests[shard].warm_containers -= 1;
+            self.bump_epoch(shard);
             true
         } else {
             false
@@ -607,14 +700,20 @@ impl ShardedCluster {
         self.cluster
             .host_mut(host)
             .park_warm(function, mem_gb, expires_at);
-        self.digests[self.map.shard_of(host)].warm_containers += 1;
+        let shard = self.map.shard_of(host);
+        self.digests[shard].warm_containers += 1;
+        self.bump_epoch(shard);
     }
 
     /// Evict expired warm sandboxes on `host`; returns how many died.
     /// Idempotent, so actuating a stale scan result is harmless.
     pub fn expire_containers(&mut self, host: HostId, now: f64) -> usize {
         let n = self.cluster.host_mut(host).expire_warm(now);
-        self.digests[self.map.shard_of(host)].warm_containers -= n;
+        if n > 0 {
+            let shard = self.map.shard_of(host);
+            self.digests[shard].warm_containers -= n;
+            self.bump_epoch(shard);
+        }
         n
     }
 
@@ -919,6 +1018,42 @@ mod tests {
         sc.fail_host(src, 2.0);
         assert_eq!(sc.cluster().vms[&vm].state, VmState::Terminated);
         assert!(sc.digest(sc.shard_of(src)).reserved.mem_gb.abs() < 1e-9);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn commit_epochs_advance_with_placement_visible_mutations() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(4), 2);
+        assert!(sc.shard_epochs().iter().all(|&e| e == 0));
+        let host = HostId(0);
+        let shard = sc.shard_of(host);
+        let other = 1 - shard;
+        let snap = sc.digest_snapshot(shard);
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.shard, shard);
+        // Placement bumps the target shard only.
+        let vm = sc.create_vm(MEDIUM, JobId(1), 0.0);
+        sc.place_vm(vm, host).unwrap();
+        assert_eq!(sc.shard_epoch(shard), 1);
+        assert_eq!(sc.shard_epoch(other), 0);
+        // The snapshot taken before the placement never ages.
+        assert_eq!(snap.epoch, 0);
+        assert!(sc.digest_snapshot(shard).epoch > snap.epoch);
+        // Termination releases capacity: another bump.
+        sc.terminate_vm(vm);
+        assert_eq!(sc.shard_epoch(shard), 2);
+        // Power-off flips admission state; the later ShuttingDown→Off
+        // advance changes no digest counts and is epoch-silent.
+        sc.power_off(host, 0.0);
+        assert_eq!(sc.shard_epoch(shard), 3);
+        sc.advance_power_states(100.0);
+        assert_eq!(sc.shard_epoch(shard), 3);
+        // Off→Booting (power_on) and Booting→On (advance) both bump.
+        sc.power_on(host, 100.0);
+        assert_eq!(sc.shard_epoch(shard), 4);
+        sc.advance_power_states(100.0 + crate::cluster::power::BOOT_SECS);
+        assert_eq!(sc.shard_epoch(shard), 5);
+        assert_eq!(sc.shard_epoch(other), 0);
         sc.check_invariants().unwrap();
     }
 

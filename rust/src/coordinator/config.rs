@@ -1,0 +1,349 @@
+//! Validated construction for [`CampaignConfig`]: a fluent builder
+//! with cross-field checks, plus the [`LoopList`] carrier for control
+//! loops registered through [`CampaignConfig::with_loop`].
+//!
+//! Struct-literal construction (`CampaignConfig { n_hosts: 8,
+//! ..Default::default() }`) keeps working — the builder is the
+//! validated front door for experiment harnesses, where a
+//! tick-interval typo or a non-power-of-two shard count should fail
+//! loudly at configuration time instead of panicking mid-campaign.
+
+use crate::coordinator::leader::{CampaignConfig, EngineKind};
+use crate::sched::ControlLoop;
+use crate::sim::FaultConfig;
+use crate::sla::SlaSpec;
+use crate::workload::FaasConfig;
+use std::fmt;
+
+/// A cross-field validation failure from [`CampaignConfigBuilder::build`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid campaign config: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Control loops registered on a [`CampaignConfig`], appended after
+/// the built-in wiring at campaign start. The list clones through
+/// [`ControlLoop::box_clone`] (fresh configuration, no scan-to-scan
+/// state), so one config can drive many runs.
+#[derive(Default)]
+pub struct LoopList(Vec<Box<dyn ControlLoop>>);
+
+impl LoopList {
+    pub fn push(&mut self, control: Box<dyn ControlLoop>) {
+        self.0.push(control);
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Registered loops, in registration order.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn ControlLoop> {
+        self.0.iter().map(|b| b.as_ref())
+    }
+}
+
+impl fmt::Debug for LoopList {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<&'static str> = self.0.iter().map(|l| l.name()).collect();
+        f.debug_tuple("LoopList").field(&names).finish()
+    }
+}
+
+impl Clone for LoopList {
+    fn clone(&self) -> LoopList {
+        LoopList(self.0.iter().map(|l| l.box_clone()).collect())
+    }
+}
+
+/// Fluent, validated [`CampaignConfig`] construction:
+///
+/// ```
+/// # use ecosched::coordinator::CampaignConfig;
+/// let cfg = CampaignConfig::builder()
+///     .hosts(16)
+///     .shards(4)
+///     .workers(2)
+///     .seed(7)
+///     .build()
+///     .expect("valid campaign config");
+/// assert_eq!(cfg.shard_count, 4);
+/// ```
+///
+/// Every setter mirrors one config field; `build` runs the
+/// cross-field checks and returns [`ConfigError`] on the first
+/// violation.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignConfigBuilder {
+    cfg: CampaignConfig,
+    /// Whether the caller set `tick_interval` explicitly — setting it
+    /// while driving the event engine is the classic dead-knob
+    /// mistake the builder exists to catch.
+    tick_interval_set: bool,
+}
+
+impl CampaignConfig {
+    /// Validated builder construction (struct literals with
+    /// `..Default::default()` remain supported).
+    pub fn builder() -> CampaignConfigBuilder {
+        CampaignConfigBuilder::default()
+    }
+
+    /// Register an extra control loop, appended after the built-in
+    /// wiring (keep-alive, consolidation, DVFS, power cap — in that
+    /// documented order) in registration order.
+    pub fn with_loop(mut self, control: Box<dyn ControlLoop>) -> CampaignConfig {
+        self.extra_loops.push(control);
+        self
+    }
+}
+
+impl CampaignConfigBuilder {
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    /// Tick cadence for [`EngineKind::Tick`]. Setting this while the
+    /// builder targets the event engine is a build error — the knob
+    /// would be silently dead.
+    pub fn tick_interval(mut self, dt: f64) -> Self {
+        self.cfg.tick_interval = dt;
+        self.tick_interval_set = true;
+        self
+    }
+
+    pub fn hosts(mut self, n: usize) -> Self {
+        self.cfg.n_hosts = n;
+        self
+    }
+
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shard_count = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.worker_threads = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn sla(mut self, sla: SlaSpec) -> Self {
+        self.cfg.sla = sla;
+        self
+    }
+
+    pub fn consolidation(mut self, params: Option<crate::sched::ConsolidationParams>) -> Self {
+        self.cfg.consolidation = params;
+        self
+    }
+
+    pub fn dvfs(mut self, params: Option<crate::sched::DvfsParams>) -> Self {
+        self.cfg.dvfs = params;
+        self
+    }
+
+    pub fn power_cap(mut self, params: crate::sched::PowerCapParams) -> Self {
+        self.cfg.power_cap = Some(params);
+        self
+    }
+
+    pub fn faas(mut self, faas: FaasConfig) -> Self {
+        self.cfg.faas = Some(faas);
+        self
+    }
+
+    pub fn retry_backoff_base(mut self, base: f64) -> Self {
+        self.cfg.retry_backoff_base = base;
+        self
+    }
+
+    pub fn retry_max_attempts(mut self, attempts: u32) -> Self {
+        self.cfg.retry_max_attempts = attempts;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultConfig) -> Self {
+        self.cfg.faults = Some(faults);
+        self
+    }
+
+    pub fn scan_interval(mut self, interval: f64) -> Self {
+        self.cfg.scan_interval = interval;
+        self
+    }
+
+    pub fn meter_noise(mut self, noise: f64) -> Self {
+        self.cfg.meter_noise = noise;
+        self
+    }
+
+    pub fn telemetry_noise(mut self, noise: f64) -> Self {
+        self.cfg.telemetry_noise = noise;
+        self
+    }
+
+    pub fn max_sim_time(mut self, t: f64) -> Self {
+        self.cfg.max_sim_time = t;
+        self
+    }
+
+    /// Placement coordinators committing through the placement store
+    /// (1 = the classic single leader).
+    pub fn coordinators(mut self, n: usize) -> Self {
+        self.cfg.coordinator_count = n;
+        self
+    }
+
+    /// Commit-epoch staleness bound (see
+    /// [`CampaignConfig::max_snapshot_lag`]).
+    pub fn max_snapshot_lag(mut self, lag: u64) -> Self {
+        self.cfg.max_snapshot_lag = lag;
+        self
+    }
+
+    /// Append an extra control loop after the built-in wiring.
+    pub fn with_loop(mut self, control: Box<dyn ControlLoop>) -> Self {
+        self.cfg.extra_loops.push(control);
+        self
+    }
+
+    /// Cross-field validation, then the finished config.
+    pub fn build(self) -> Result<CampaignConfig, ConfigError> {
+        let cfg = self.cfg;
+        if cfg.n_hosts == 0 {
+            return Err(ConfigError("n_hosts must be ≥ 1".into()));
+        }
+        if !cfg.shard_count.is_power_of_two() {
+            return Err(ConfigError(format!(
+                "shard_count must be a power of two (got {})",
+                cfg.shard_count
+            )));
+        }
+        if cfg.coordinator_count == 0 {
+            return Err(ConfigError("coordinator_count must be ≥ 1".into()));
+        }
+        if self.tick_interval_set && cfg.engine != EngineKind::Tick {
+            return Err(ConfigError(
+                "tick_interval is set but the engine is Event — the knob would be dead \
+                 (set .engine(EngineKind::Tick) or drop the tick_interval)"
+                    .into(),
+            ));
+        }
+        if cfg.engine == EngineKind::Tick && cfg.tick_interval <= 0.0 {
+            return Err(ConfigError(format!(
+                "tick_interval must be > 0 for the tick engine (got {})",
+                cfg.tick_interval
+            )));
+        }
+        if cfg.scan_interval <= 0.0 {
+            return Err(ConfigError("scan_interval must be > 0".into()));
+        }
+        if cfg.retry_backoff_base <= 0.0 {
+            return Err(ConfigError("retry_backoff_base must be > 0".into()));
+        }
+        if cfg.max_sim_time <= 0.0 {
+            return Err(ConfigError("max_sim_time must be > 0".into()));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_match_struct_default() {
+        let built = CampaignConfig::builder().build().unwrap();
+        let lit = CampaignConfig::default();
+        assert_eq!(built.n_hosts, lit.n_hosts);
+        assert_eq!(built.shard_count, lit.shard_count);
+        assert_eq!(built.seed, lit.seed);
+        assert_eq!(built.coordinator_count, 1);
+        assert_eq!(built.max_snapshot_lag, lit.max_snapshot_lag);
+        assert!(built.extra_loops.is_empty());
+    }
+
+    #[test]
+    fn builder_sets_every_field_it_names() {
+        let cfg = CampaignConfig::builder()
+            .hosts(32)
+            .shards(8)
+            .workers(4)
+            .seed(99)
+            .coordinators(4)
+            .max_snapshot_lag(16)
+            .retry_max_attempts(5)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.n_hosts, 32);
+        assert_eq!(cfg.shard_count, 8);
+        assert_eq!(cfg.worker_threads, 4);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.coordinator_count, 4);
+        assert_eq!(cfg.max_snapshot_lag, 16);
+        assert_eq!(cfg.retry_max_attempts, 5);
+    }
+
+    #[test]
+    fn tick_interval_without_tick_engine_is_an_error() {
+        let err = CampaignConfig::builder()
+            .tick_interval(0.5)
+            .build()
+            .unwrap_err();
+        assert!(err.0.contains("tick_interval"), "got: {err}");
+        // The same knob on the tick engine is fine.
+        let cfg = CampaignConfig::builder()
+            .engine(EngineKind::Tick)
+            .tick_interval(0.5)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.tick_interval, 0.5);
+    }
+
+    #[test]
+    fn non_power_of_two_shards_rejected() {
+        let err = CampaignConfig::builder().shards(3).build().unwrap_err();
+        assert!(err.0.contains("power of two"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_coordinators_rejected() {
+        let err = CampaignConfig::builder().coordinators(0).build().unwrap_err();
+        assert!(err.0.contains("coordinator_count"), "got: {err}");
+    }
+
+    #[test]
+    fn loop_list_registers_and_clones_fresh() {
+        let cfg = CampaignConfig::builder()
+            .with_loop(Box::new(crate::sched::DvfsGovernor::default()))
+            .with_loop(Box::new(crate::workload::faas::KeepAliveLoop))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.extra_loops.len(), 2);
+        let names: Vec<_> = cfg.extra_loops.iter().map(|l| l.name()).collect();
+        assert_eq!(names, ["dvfs", "keep_alive"]);
+        // Clone goes through box_clone and preserves order.
+        let cloned = cfg.clone();
+        let names: Vec<_> = cloned.extra_loops.iter().map(|l| l.name()).collect();
+        assert_eq!(names, ["dvfs", "keep_alive"]);
+        let dbg = format!("{:?}", cfg.extra_loops);
+        assert!(dbg.contains("dvfs"), "got: {dbg}");
+    }
+}

@@ -49,7 +49,12 @@ pub(crate) const SNAP_TOL: f64 = 1e-6;
 /// for tick campaigns, which keeps the tick path bit-identical.
 pub(crate) struct EventCore {
     /// Prediction epoch per host; a `JobAdvance { epoch }` is live iff
-    /// it matches the epoch of the VM's *executing* host.
+    /// it matches the epoch of the VM's *executing* host. Distinct
+    /// from the per-shard *commit* epochs of
+    /// [`crate::cluster::ShardedCluster`] (the commit protocol's
+    /// staleness currency): prediction epochs invalidate in-flight
+    /// completion events, commit epochs invalidate scheduler
+    /// snapshots.
     epoch_of: Vec<u64>,
     /// Single source of epochs — globally unique across hosts.
     next_epoch: u64,

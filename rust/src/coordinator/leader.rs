@@ -8,11 +8,16 @@
 //! Placement is batch-first: every submit burst and every deferred-
 //! queue drain goes through [`PlacementPolicy::decide_batch`] against
 //! one frozen [`ScheduleContext`], so a learned policy pays one
-//! predictor invocation per burst instead of one per job. A decision
-//! targeting a host an earlier placement in the same burst already
-//! touched is re-decided individually against the updated cluster,
-//! so the admission guards see in-burst load exactly as the
-//! sequential path would.
+//! predictor invocation per burst instead of one per job. Bursts are
+//! partitioned across `CampaignConfig::coordinator_count` schedulers
+//! whose decisions commit through the central
+//! [`crate::coordinator::PlacementStore`] in total order; a commit
+//! the store can no longer justify — double-booked capacity, an
+//! unavailable target, a stale snapshot epoch — is rejected back and
+//! re-decided individually against the updated cluster, so the
+//! admission guards see in-burst load exactly as the sequential path
+//! would (the full conflict rules live in the crate-level "Commit
+//! protocol" section).
 //!
 //! Cluster state is sharded (`CampaignConfig::shard_count`): the
 //! leader routes every mutation through the
@@ -83,7 +88,11 @@ use crate::cluster::{
     power::{BOOT_SECS, SHUTDOWN_SECS},
     Cluster, Demand, HostId, VmId, VmState, CONTAINER_BOOT_W,
 };
+use crate::coordinator::config::LoopList;
 use crate::coordinator::event_core::EventCore;
+use crate::coordinator::placement_store::{
+    commit_order, target_shard, AllocationCommit, CommitOutcome, CommitRecord, RejectReason,
+};
 use crate::coordinator::report::CampaignReport;
 use crate::coordinator::state::CampaignState;
 use crate::profile::{ExecutionRecord, HistoryStore, ResourceVector};
@@ -92,10 +101,12 @@ use crate::sched::{
     Consolidator, ControlAction, ControlLoop, Decision, DvfsGovernor, PlacementPolicy,
     PlacementRequest, ScheduleContext,
 };
+use crate::sim::engine::DEFAULT_CLASS;
 use crate::sim::{EventQueue, FaultConfig, FaultKind, SAMPLE_INTERVAL};
 use crate::sla::SlaSpec;
 use crate::workload::faas::{KeepAliveLoop, KeepAlivePolicy};
 use crate::workload::{flavor_for, FaasConfig, Job, JobId, JobState};
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 /// Which time-advancement core drives the campaign.
@@ -167,6 +178,27 @@ pub struct CampaignConfig {
     pub telemetry_noise: f64,
     /// Hard stop (simulated seconds).
     pub max_sim_time: f64,
+    /// Placement coordinators (≥ 1). Each submit burst is partitioned
+    /// round-robin across N schedulers that decide against the same
+    /// frozen pre-burst snapshot and commit through the placement
+    /// store in total order; 1 (the default) reproduces the classic
+    /// single-leader path bit for bit. The campaign driver runs the
+    /// decide phases sequentially — what it models is decision
+    /// *staleness* under contention, not wall-clock parallelism
+    /// (`bench_commit` measures the latter with real threads).
+    pub coordinator_count: usize,
+    /// Commit-epoch staleness bound: a commit whose snapshot trails
+    /// the target shard's live epoch by more than this many
+    /// placement-visible mutations is rejected with `StaleSnapshot`
+    /// and its coordinator refreshes before re-deciding. A
+    /// coordinator always sees its own committed writes, so only
+    /// *other* coordinators' commits accrue lag and the bound never
+    /// fires with one coordinator.
+    pub max_snapshot_lag: u64,
+    /// Extra control loops appended after the built-in wiring (see
+    /// [`default_loops`] for the ordering contract), registered via
+    /// [`CampaignConfig::with_loop`]; cloned fresh per campaign run.
+    pub extra_loops: LoopList,
 }
 
 impl Default for CampaignConfig {
@@ -190,6 +222,9 @@ impl Default for CampaignConfig {
             meter_noise: 0.01,
             telemetry_noise: 0.02,
             max_sim_time: 24.0 * 3600.0,
+            coordinator_count: 1,
+            max_snapshot_lag: 64,
+            extra_loops: LoopList::default(),
         }
     }
 }
@@ -250,6 +285,13 @@ pub struct Coordinator {
     pub config: CampaignConfig,
     policy: Box<dyn PlacementPolicy>,
     pub history: HistoryStore,
+    /// The total-order commit log of the last [`Coordinator::run`]
+    /// (drained from the placement store at campaign end). Feed it to
+    /// [`Coordinator::with_replay`] to reproduce an N-coordinator
+    /// campaign with a single coordinator, bit for bit.
+    pub commit_log: Vec<CommitRecord>,
+    /// Replay mode: actuate this recorded log instead of deciding.
+    replay: Option<VecDeque<CommitRecord>>,
 }
 
 impl Coordinator {
@@ -258,7 +300,27 @@ impl Coordinator {
             config,
             policy,
             history: HistoryStore::new(),
+            commit_log: Vec::new(),
+            replay: None,
         }
+    }
+
+    /// Replay a recorded commit log: the decide phase is skipped and
+    /// every burst actuates its records in their appended (total)
+    /// order instead. Run against the same trace, this reproduces the
+    /// recording campaign's report bit for bit regardless of how many
+    /// coordinators recorded it — the determinism contract of the
+    /// commit protocol (pinned by `tests/commit.rs`). The policy is
+    /// still consulted for `scoring_handle`/`wants_consolidation`
+    /// wiring, never for placement decisions.
+    pub fn with_replay(
+        config: CampaignConfig,
+        policy: Box<dyn PlacementPolicy>,
+        log: Vec<CommitRecord>,
+    ) -> Coordinator {
+        let mut coord = Coordinator::new(config, policy);
+        coord.replay = Some(log.into());
+        coord
     }
 
     /// Run a campaign over the given trace. Deterministic per
@@ -271,26 +333,14 @@ impl Coordinator {
         // the scan cadence.
         let mut keep_alive: Option<Box<dyn KeepAlivePolicy>> =
             cfg.faas.as_ref().map(|f| f.keep_alive.build());
-        // The periodic control loops, unified behind one trait. Order
-        // matters: keep-alive expiry frees sandbox memory before
-        // consolidation plans against it, and consolidation actuates
-        // before DVFS observes.
-        let mut loops: Vec<Box<dyn ControlLoop>> = Vec::new();
-        if cfg.faas.is_some() {
-            loops.push(Box::new(KeepAliveLoop));
-        }
-        if self.policy.wants_consolidation() {
-            if let Some(params) = cfg.consolidation {
-                loops.push(Box::new(Consolidator::new(params)));
-            }
-            if let Some(params) = cfg.dvfs {
-                loops.push(Box::new(DvfsGovernor::new(params)));
-            }
-            if let Some(params) = cfg.power_cap {
-                // Last: the cap observes (and may override) what the
-                // governor just actuated.
-                loops.push(Box::new(crate::sched::PowerCapLoop::new(params)));
-            }
+        // The periodic control loops, unified behind one trait: the
+        // built-in wiring (see [`default_loops`] for the ordering
+        // contract), then any loops registered through
+        // [`CampaignConfig::with_loop`], in registration order.
+        let mut loops: Vec<Box<dyn ControlLoop>> =
+            default_loops(&cfg, self.policy.wants_consolidation());
+        for control in cfg.extra_loops.iter() {
+            loops.push(control.box_clone());
         }
         let mut queue: EventQueue<Event> = EventQueue::new();
         let event_mode = cfg.engine == EngineKind::Event;
@@ -374,7 +424,7 @@ impl Coordinator {
                             }
                         }
                     }
-                    self.place_batch(now, &burst, &mut st, &mut queue, core.as_mut());
+                    self.place_batch(now, CLASS_SUBMIT, &burst, &mut st, &mut queue, core.as_mut());
                 }
                 Event::RetryQueue => {
                     st.next_retry = None;
@@ -419,7 +469,10 @@ impl Coordinator {
                     }
                     st.waiting_boot = still_waiting;
                     // Drain the whole retry queue through one batch.
-                    self.place_batch(now, &retry, &mut st, &mut queue, core.as_mut());
+                    // Retry drains ride the default event class, so
+                    // their commits sort after same-instant submits —
+                    // exactly where the event heap pops them.
+                    self.place_batch(now, DEFAULT_CLASS, &retry, &mut st, &mut queue, core.as_mut());
                 }
                 Event::MigrationDone(vm_id) => {
                     // The `done` guard drops events staled by a
@@ -657,6 +710,9 @@ impl Coordinator {
             }
         }
 
+        // Hand the total-order commit log to the caller (the store's
+        // commit/conflict counters stay behind for the report).
+        self.commit_log = st.store.take_log();
         st.report(self.policy.name(), self.config.seed, queue.now())
     }
 
@@ -1241,12 +1297,21 @@ impl Coordinator {
         }
     }
 
-    /// Batched placement path: profile → decide_batch → actuate.
-    /// `ids` may contain jobs that are no longer queued; they are
-    /// skipped.
+    /// Batched placement path: profile → decide → commit. The burst
+    /// is partitioned round-robin across the configured coordinators;
+    /// each decides its slice against the SAME frozen pre-burst
+    /// context and submits typed [`AllocationCommit`]s, which the
+    /// placement store validates and applies in total commit order —
+    /// `(time, class, coordinator, seq)`, the event heap's tiebreak
+    /// discipline — so the appended log replays the campaign exactly.
+    /// Conflicts (double-booked capacity, unavailable targets, stale
+    /// snapshots) are re-decided against the live cluster, exactly
+    /// like the single leader's in-burst re-decisions. `ids` may
+    /// contain jobs that are no longer queued; they are skipped.
     fn place_batch(
         &mut self,
         now: f64,
+        class: u8,
         ids: &[JobId],
         st: &mut CampaignState,
         queue: &mut EventQueue<Event>,
@@ -1277,21 +1342,48 @@ impl Coordinator {
         if reqs.is_empty() {
             return;
         }
-        let decisions = {
+        if self.replay.is_some() {
+            self.replay_batch(now, &reqs, st, queue, core);
+            return;
+        }
+        // Decide phase: request i goes to coordinator i mod N, every
+        // slice decided against the same frozen pre-burst context.
+        // With one coordinator this is exactly the classic single
+        // decide_batch call.
+        let n = st.schedulers.len();
+        let mut commits: Vec<AllocationCommit> = Vec::with_capacity(reqs.len());
+        {
             let ctx = ScheduleContext::new(now, &st.cluster)
                 .with_telemetry(&st.telemetry)
                 .with_history(&self.history)
                 .with_shards(&st.cluster)
                 .with_pool(&st.pool);
-            self.policy.decide_batch(&reqs, &ctx)
-        };
-        assert_eq!(
-            decisions.len(),
-            reqs.len(),
-            "decide_batch must return one decision per request"
-        );
+            for c in 0..n {
+                let idxs: Vec<usize> = (c..reqs.len()).step_by(n).collect();
+                if idxs.is_empty() {
+                    continue;
+                }
+                let sub: Vec<PlacementRequest> = idxs.iter().map(|&i| reqs[i].clone()).collect();
+                let decisions = self.policy.decide_batch(&sub, &ctx);
+                assert_eq!(
+                    decisions.len(),
+                    sub.len(),
+                    "decide_batch must return one decision per request"
+                );
+                let sched = &mut st.schedulers[c];
+                sched.refresh_snapshot(&st.cluster);
+                for (&i, d) in idxs.iter().zip(decisions) {
+                    let req = &reqs[i];
+                    commits.push(sched.request(now, class, &st.cluster, req.job, req.flavor, d));
+                }
+            }
+        }
         st.overhead.n_decisions += reqs.len() as u64;
         st.overhead.decision_wall_s += t0.elapsed().as_secs_f64();
+        // Commit phase, in total order.
+        commits.sort_by(commit_order);
+        let req_of: BTreeMap<JobId, usize> =
+            reqs.iter().enumerate().map(|(i, r)| (r.job, i)).collect();
         // Predictive policies consult expected load and utilization
         // beyond the reservations `fits` checks, so any in-burst
         // placement invalidates their snapshot decisions for that
@@ -1301,66 +1393,137 @@ impl Coordinator {
         // cursors.
         let guard_sensitive = self.policy.scoring_handle().is_some();
         let mut placed_hosts: Vec<HostId> = Vec::new();
-        for (req, decision) in reqs.iter().zip(decisions) {
-            self.apply_decision(
+        for mut commit in commits {
+            let coord = commit.coordinator as usize;
+            // A coordinator sees its own committed writes: raise the
+            // stamped snapshot to its current per-shard view
+            // (advanced by note_commit below), so staleness measures
+            // only what OTHER coordinators committed since. With one
+            // coordinator the lag is always zero and validation
+            // reduces to the classic in-burst capacity guard.
+            if let (Some(shard), Some(snap)) = (
+                target_shard(&st.cluster, commit.decision),
+                commit.snapshot_epoch.as_mut(),
+            ) {
+                *snap = (*snap).max(st.schedulers[coord].snapshot_epoch(shard));
+            }
+            let req = &reqs[req_of[&commit.job]];
+            let verdict = st.store.validate(
+                &st.cluster,
+                &commit,
+                &placed_hosts,
+                guard_sensitive,
+                self.config.max_snapshot_lag,
+            );
+            let (outcome, decision) = match verdict {
+                Ok(()) => (CommitOutcome::Committed, commit.decision),
+                Err(reason) => {
+                    // Rejected: the losing coordinator refreshes (a
+                    // stale snapshot demands it) and re-decides this
+                    // request against the live cluster — the same
+                    // re-decision the single leader performed for
+                    // in-burst staleness.
+                    if matches!(reason, RejectReason::StaleSnapshot { .. }) {
+                        st.schedulers[coord].refresh_snapshot(&st.cluster);
+                    }
+                    let t1 = Instant::now();
+                    let redecided = {
+                        let ctx = ScheduleContext::new(now, &st.cluster)
+                            .with_telemetry(&st.telemetry)
+                            .with_history(&self.history)
+                            .with_shards(&st.cluster)
+                            .with_pool(&st.pool);
+                        self.policy.decide(req, &ctx)
+                    };
+                    st.overhead.n_decisions += 1;
+                    st.overhead.decision_wall_s += t1.elapsed().as_secs_f64();
+                    (CommitOutcome::Rejected(reason), redecided)
+                }
+            };
+            self.actuate_decision(
                 now,
                 req,
                 decision,
                 st,
                 queue,
                 &mut placed_hosts,
-                guard_sensitive,
                 core.as_deref_mut(),
             );
+            // Advance the committer's view past its own write (and
+            // everything already committed to that shard before it).
+            if let Some(shard) = target_shard(&st.cluster, decision) {
+                let epoch = st.cluster.shard_epoch(shard);
+                st.schedulers[coord].note_commit(shard, epoch);
+            }
+            st.store.record(CommitRecord {
+                time: commit.time,
+                class: commit.class,
+                coordinator: commit.coordinator,
+                seq: commit.seq,
+                job: commit.job,
+                requested: commit.decision,
+                outcome,
+                decision,
+            });
         }
     }
 
-    /// Actuate one decision. A `Place` the batch snapshot can no
-    /// longer justify — the flavor no longer fits, or (for predictive
-    /// policies) an earlier placement in the same burst changed the
-    /// host's expected load — is re-decided against the updated
-    /// cluster, so admission guards (Eq. 9, I/O headroom) see
-    /// in-burst placements the way the sequential path would.
+    /// Replay mode: no decide phase — pop this burst's records off
+    /// the recorded log (already in total commit order) and actuate
+    /// each record's final decision verbatim. Defer records route
+    /// through the ordinary Defer arm, so the retry-jitter stream
+    /// advances exactly as in the recording run; re-recording each
+    /// popped entry reproduces the store's commit/conflict counters
+    /// too.
+    fn replay_batch(
+        &mut self,
+        now: f64,
+        reqs: &[PlacementRequest],
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+        mut core: Option<&mut EventCore>,
+    ) {
+        let req_of: BTreeMap<JobId, usize> =
+            reqs.iter().enumerate().map(|(i, r)| (r.job, i)).collect();
+        let mut placed_hosts: Vec<HostId> = Vec::new();
+        for _ in 0..reqs.len() {
+            let rec = self
+                .replay
+                .as_mut()
+                .and_then(|log| log.pop_front())
+                .expect("commit log exhausted before the replayed campaign finished");
+            let req = &reqs[*req_of
+                .get(&rec.job)
+                .expect("commit log diverged from the replayed burst")];
+            self.actuate_decision(
+                now,
+                req,
+                rec.decision,
+                st,
+                queue,
+                &mut placed_hosts,
+                core.as_deref_mut(),
+            );
+            st.store.record(rec);
+        }
+    }
+
+    /// Actuate one committed (or re-decided, or replayed) decision
+    /// against the live cluster: mutate state, schedule the follow-up
+    /// events, maintain the per-shard counters. Validation already
+    /// happened in the placement store — this arm trusts its input,
+    /// exactly as the classic leader trusted a fresh re-decision.
     #[allow(clippy::too_many_arguments)]
-    fn apply_decision(
+    fn actuate_decision(
         &mut self,
         now: f64,
         req: &PlacementRequest,
-        mut decision: Decision,
+        decision: Decision,
         st: &mut CampaignState,
         queue: &mut EventQueue<Event>,
         placed_hosts: &mut Vec<HostId>,
-        guard_sensitive: bool,
         mut core: Option<&mut EventCore>,
     ) {
-        let stale = match decision {
-            Decision::Place(host) => {
-                (guard_sensitive && placed_hosts.contains(&host))
-                    || !st
-                        .cluster
-                        .host(host)
-                        .fits(&req.flavor, st.cluster.reserved(host))
-            }
-            // A boot request for a host that is no longer Off was
-            // already actuated by an earlier burst member; the
-            // sequential path would have booted a *different* host
-            // (parallel capacity ramp-up), so re-decide live.
-            Decision::PowerOnAndPlace(host) => !st.cluster.host(host).state.is_off(),
-            Decision::Defer => false,
-        };
-        if stale {
-            let t0 = Instant::now();
-            decision = {
-                let ctx = ScheduleContext::new(now, &st.cluster)
-                    .with_telemetry(&st.telemetry)
-                    .with_history(&self.history)
-                    .with_shards(&st.cluster)
-                    .with_pool(&st.pool);
-                self.policy.decide(req, &ctx)
-            };
-            st.overhead.n_decisions += 1;
-            st.overhead.decision_wall_s += t0.elapsed().as_secs_f64();
-        }
         match decision {
             Decision::Place(host) => {
                 if let Some(core) = core.as_deref_mut() {
@@ -1441,8 +1604,8 @@ impl Coordinator {
                 }
             }
             Decision::PowerOnAndPlace(host) => {
-                // The staleness check above guarantees the host is
-                // still Off here; power_on itself is idempotent.
+                // Store validation guarantees the host was still Off
+                // at commit time; power_on itself is idempotent.
                 if let Some(core) = core.as_deref_mut() {
                     core.sync_host(st, host, now);
                 }
@@ -1481,6 +1644,32 @@ impl Coordinator {
             }
         }
     }
+}
+
+/// The built-in control-loop wiring. Order matters and is part of
+/// the behavioral contract: keep-alive expiry frees sandbox memory
+/// before consolidation plans against it, consolidation actuates
+/// before DVFS observes, and the power cap runs last so it observes
+/// (and may override) what the governor just actuated. Loops
+/// registered via [`CampaignConfig::with_loop`] are appended after
+/// these, in registration order.
+pub fn default_loops(cfg: &CampaignConfig, wants_consolidation: bool) -> Vec<Box<dyn ControlLoop>> {
+    let mut loops: Vec<Box<dyn ControlLoop>> = Vec::new();
+    if cfg.faas.is_some() {
+        loops.push(Box::new(KeepAliveLoop));
+    }
+    if wants_consolidation {
+        if let Some(params) = cfg.consolidation {
+            loops.push(Box::new(Consolidator::new(params)));
+        }
+        if let Some(params) = cfg.dvfs {
+            loops.push(Box::new(DvfsGovernor::new(params)));
+        }
+        if let Some(params) = cfg.power_cap {
+            loops.push(Box::new(crate::sched::PowerCapLoop::new(params)));
+        }
+    }
+    loops
 }
 
 /// Remaining solo seconds for a running job.

@@ -1,12 +1,19 @@
 //! The coordinator (L3's leader): campaign driver, batched placement
 //! path, control-loop actuation, and outcome reporting.
 
+pub mod config;
 mod event_core;
 pub mod leader;
+pub mod placement_store;
 pub mod report;
 pub mod state;
 
-pub use leader::{remaining_solo, CampaignConfig, Coordinator, EngineKind};
+pub use config::{CampaignConfigBuilder, ConfigError, LoopList};
+pub use leader::{default_loops, remaining_solo, CampaignConfig, Coordinator, EngineKind};
+pub use placement_store::{
+    commit_order, target_shard, AllocationCommit, CommitOutcome, CommitRecord, PlacementStore,
+    RejectReason, Scheduler,
+};
 pub use report::{CampaignReport, JobRecord, Overhead};
 pub use state::{CampaignState, Counters};
 

@@ -159,6 +159,16 @@ pub struct CampaignReport {
     /// `fingerprint()`: the tick and event engines compute identical
     /// outcomes through different event counts by design.
     pub events_processed: u64,
+    /// Allocation commits applied through the placement store — one
+    /// per placement request that reached the commit loop.
+    pub commits: u64,
+    /// Commits the store rejected (double-booked capacity,
+    /// unavailable target, stale snapshot) and re-decided live. Like
+    /// `events_processed`, these protocol-accounting counters are NOT
+    /// folded into `fingerprint()` — they describe how the campaign
+    /// was computed, not what it computed; a replayed log reproduces
+    /// them exactly anyway (asserted in `tests/commit.rs`).
+    pub commit_conflicts: u64,
 }
 
 impl CampaignReport {

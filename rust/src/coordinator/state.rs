@@ -4,6 +4,7 @@
 
 use crate::cluster::{Cluster, HostId, ShardedCluster, VmId};
 use crate::coordinator::leader::{remaining_solo, CampaignConfig};
+use crate::coordinator::placement_store::{PlacementStore, Scheduler};
 use crate::coordinator::report::{CampaignReport, JobRecord, Overhead, ShardCounters};
 use crate::profile::ResourceVector;
 use crate::runtime::WorkerPool;
@@ -58,6 +59,14 @@ pub struct CampaignState {
     /// Per-shard actuation counters (placements, boots, migrations,
     /// power-offs), indexed by shard.
     pub shard_counters: Vec<ShardCounters>,
+    /// The central placement store: validates every
+    /// `AllocationCommit` against live capacity and commit epochs,
+    /// and appends the total-order commit log.
+    pub store: PlacementStore,
+    /// The scheduler front ends (`CampaignConfig::coordinator_count`
+    /// of them): per-coordinator snapshot epochs and commit sequence
+    /// numbers. One scheduler = the classic single leader.
+    pub schedulers: Vec<Scheduler>,
     /// Persistent shard worker pool (`CampaignConfig::worker_threads`
     /// wide): threads spawn once here, serve every fan-out of the
     /// campaign through the contexts the leader freezes, and join
@@ -143,6 +152,10 @@ impl CampaignState {
         CampaignState {
             cluster: ShardedCluster::new(Cluster::homogeneous(cfg.n_hosts), shard_count),
             shard_counters: vec![ShardCounters::default(); shard_count],
+            store: PlacementStore::new(),
+            schedulers: (0..cfg.coordinator_count.max(1) as u32)
+                .map(|c| Scheduler::new(c, shard_count))
+                .collect(),
             pool: WorkerPool::new(cfg.worker_threads),
             meter: EnergyMeter::new(cfg.n_hosts, cfg.seed, cfg.meter_noise),
             telemetry: Telemetry::new(cfg.n_hosts, cfg.seed, cfg.telemetry_noise),
@@ -292,6 +305,8 @@ impl CampaignState {
             worker_panics: self.counters.worker_panics,
             quarantines: self.counters.quarantines,
             events_processed: self.events_processed,
+            commits: self.store.commits(),
+            commit_conflicts: self.store.conflicts(),
         }
     }
 }

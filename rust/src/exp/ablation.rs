@@ -40,15 +40,15 @@ pub fn run_abl1(ctx: &ExpContext) -> TableBuilder {
                     5,
                 );
                 let mut coord = Coordinator::new(
-                    CampaignConfig {
-                        seed,
-                        consolidation: Some(ConsolidationParams {
+                    CampaignConfig::builder()
+                        .seed(seed)
+                        .consolidation(Some(ConsolidationParams {
                             delta_low: dl,
                             delta_high: dh,
                             ..Default::default()
-                        }),
-                        ..Default::default()
-                    },
+                        }))
+                        .build()
+                        .expect("valid campaign config"),
                     Box::new(EnergyAware::new(
                         ctx.make_predictor(),
                         EnergyAwareParams {
@@ -189,15 +189,11 @@ pub fn run_abl3(ctx: &ExpContext) -> TableBuilder {
                     5,
                 );
                 let mut coord = Coordinator::new(
-                    CampaignConfig {
-                        seed,
-                        dvfs: if dvfs_on {
-                            Some(Default::default())
-                        } else {
-                            None
-                        },
-                        ..Default::default()
-                    },
+                    CampaignConfig::builder()
+                        .seed(seed)
+                        .dvfs(if dvfs_on { Some(Default::default()) } else { None })
+                        .build()
+                        .expect("valid campaign config"),
                     Box::new(EnergyAware::new(
                         ctx.make_predictor(),
                         EnergyAwareParams::default(),

@@ -69,12 +69,12 @@ pub fn run(ctx: &ExpContext) -> TableBuilder {
                     _ => ctx.energy_aware_policy(),
                 };
                 let mut coord = Coordinator::new(
-                    CampaignConfig {
-                        n_hosts: 8,
-                        seed,
-                        faults: Some(fault_config(rate)),
-                        ..Default::default()
-                    },
+                    CampaignConfig::builder()
+                        .hosts(8)
+                        .seed(seed)
+                        .faults(fault_config(rate))
+                        .build()
+                        .expect("valid campaign config"),
                     policy,
                 );
                 let r = coord.run(trace);

@@ -211,11 +211,11 @@ pub fn run_campaign(
     n_hosts: usize,
 ) -> CampaignReport {
     let mut coord = Coordinator::new(
-        CampaignConfig {
-            n_hosts,
-            seed,
-            ..Default::default()
-        },
+        CampaignConfig::builder()
+            .hosts(n_hosts)
+            .seed(seed)
+            .build()
+            .expect("valid campaign config"),
         policy,
     );
     coord.run(trace)

@@ -63,15 +63,15 @@ pub fn run(ctx: &ExpContext) -> TableBuilder {
         for &seed in &ctx.seeds {
             let trace = spec.generate(seed);
             let mut coord = Coordinator::new(
-                CampaignConfig {
-                    n_hosts: 8,
-                    seed,
-                    faas: Some(FaasConfig {
+                CampaignConfig::builder()
+                    .hosts(8)
+                    .seed(seed)
+                    .faas(FaasConfig {
                         keep_alive,
                         ..Default::default()
-                    }),
-                    ..Default::default()
-                },
+                    })
+                    .build()
+                    .expect("valid campaign config"),
                 crate::coordinator::make_policy("round_robin").unwrap(),
             );
             let r = coord.run(trace);

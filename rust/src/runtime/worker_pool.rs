@@ -64,7 +64,7 @@
 //! vanishes without reporting (process teardown).
 
 use crate::cluster::shard::splitmix64;
-use crate::cluster::{ShardDigest, ShardedCluster};
+use crate::cluster::{DigestSnapshot, ShardDigest, ShardedCluster};
 use std::any::{Any, TypeId};
 use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -437,6 +437,21 @@ impl WorkerPool {
             .collect();
         self.dispatch(jobs)
     }
+
+    /// [`WorkerPool::gather_digests`] with the shard commit epochs
+    /// attached — the snapshot a scheduler front end decides against
+    /// in the commit protocol (see
+    /// `crate::coordinator::placement_store`). Inline on a serial
+    /// pool.
+    pub fn gather_snapshots(&self, sc: &ShardedCluster) -> Result<Vec<DigestSnapshot>, PoolError> {
+        if !self.parallel() || sc.shard_count() <= 1 {
+            return Ok((0..sc.shard_count()).map(|s| sc.digest_snapshot(s)).collect());
+        }
+        let jobs: Vec<_> = (0..sc.shard_count())
+            .map(|s| (s, move |_: &mut WorkerSlot| sc.digest_snapshot(s)))
+            .collect();
+        self.dispatch(jobs)
+    }
 }
 
 impl Drop for WorkerPool {
@@ -649,6 +664,25 @@ mod tests {
                 assert_eq!(g.hosts, d.hosts);
                 assert_eq!(g.on, d.on);
             }
+        }
+    }
+
+    #[test]
+    fn snapshots_over_the_channel_carry_commit_epochs() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(13), 4);
+        let vm = sc.create_vm(crate::cluster::flavor::SMALL, crate::workload::JobId(0), 0.0);
+        sc.place_vm(vm, crate::cluster::HostId(0)).unwrap();
+        for width in [1usize, 4] {
+            let pool = WorkerPool::new(width);
+            let snaps = pool.gather_snapshots(&sc).unwrap();
+            assert_eq!(snaps.len(), 4);
+            for (s, shard) in snaps.iter().zip(0..) {
+                assert_eq!(s.shard, shard);
+                assert_eq!(s.epoch, sc.shard_epoch(shard));
+                assert_eq!(s.digest.hosts, sc.digest(shard).hosts);
+            }
+            // The placement bumped exactly host 0's shard.
+            assert_eq!(snaps[sc.shard_of(crate::cluster::HostId(0))].epoch, 1);
         }
     }
 }

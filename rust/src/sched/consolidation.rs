@@ -833,6 +833,10 @@ impl ControlLoop for Consolidator {
         "consolidation"
     }
 
+    fn box_clone(&self) -> Box<dyn ControlLoop> {
+        Box::new(Consolidator::new(self.params))
+    }
+
     fn scan(
         &mut self,
         ctx: &ScheduleContext<'_>,

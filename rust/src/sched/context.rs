@@ -9,7 +9,7 @@
 //! coordinator assembles it once per decision point and every
 //! consumer reads through the same lens.
 
-use crate::cluster::{Cluster, HostId, ShardDigest, ShardedCluster, VmId};
+use crate::cluster::{Cluster, DigestSnapshot, HostId, ShardDigest, ShardedCluster, VmId};
 use crate::profile::HistoryStore;
 use crate::runtime::{WorkerPool, WorkerSlot};
 use crate::sched::consolidation::VmContext;
@@ -184,6 +184,31 @@ impl<'a> ScheduleContext<'a> {
         }
     }
 
+    /// One shard's digest stamped with its commit epoch — what a
+    /// commit-protocol coordinator decides against. With the shard
+    /// layer attached this is an O(1) copy; without it the digest is
+    /// recomputed over every host and VM and stamped with epoch 0
+    /// (an unsharded context has no commit history to be stale
+    /// against).
+    pub fn digest_snapshot(&self, id: usize) -> DigestSnapshot {
+        match self.shards {
+            Some(sc) => sc.digest_snapshot(id),
+            None => DigestSnapshot {
+                shard: id,
+                epoch: 0,
+                digest: self.shard_digest(id),
+            },
+        }
+    }
+
+    /// Epoch-stamped snapshots of every shard, ascending by shard id
+    /// — the full snapshot a coordinator refreshes at burst start.
+    pub fn digest_snapshots(&self) -> Vec<DigestSnapshot> {
+        (0..self.shard_count())
+            .map(|s| self.digest_snapshot(s))
+            .collect()
+    }
+
     /// Runtime context of one VM, if the coordinator provided it.
     pub fn vm_context(&self, vm: VmId) -> Option<&'a VmContext> {
         self.vm_ctx.and_then(|m| m.get(&vm))
@@ -314,6 +339,29 @@ mod tests {
             assert_eq!(d.on, fresh.on);
             assert_eq!(d.hosts, fresh.hosts);
         }
+    }
+
+    #[test]
+    fn digest_snapshots_carry_shard_epochs() {
+        use crate::cluster::flavor::MEDIUM;
+        use crate::cluster::ShardedCluster;
+        use crate::workload::JobId;
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(8), 2);
+        let vm = sc.create_vm(MEDIUM, JobId(1), 0.0);
+        sc.place_vm(vm, HostId(0)).unwrap();
+        let shard = sc.shard_of(HostId(0));
+        let ctx = ScheduleContext::new(0.0, &sc).with_shards(&sc);
+        let snaps = ctx.digest_snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[shard].epoch, 1);
+        assert_eq!(snaps[1 - shard].epoch, 0);
+        assert_eq!(snaps[shard].shard, shard);
+        // Unsharded contexts stamp epoch 0 (no commit history).
+        let flat = Cluster::homogeneous(3);
+        let fctx = ScheduleContext::new(0.0, &flat);
+        let snap = fctx.digest_snapshot(0);
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.digest.hosts, 3);
     }
 
     #[test]

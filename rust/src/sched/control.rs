@@ -48,4 +48,12 @@ pub trait ControlLoop {
         ctx: &ScheduleContext<'_>,
         scoring: Option<ScoringHandle<'_>>,
     ) -> Vec<ControlAction>;
+
+    /// A fresh instance carrying this loop's *configuration* but none
+    /// of its scan-to-scan state (hysteresis clocks, imposed
+    /// ceilings). The coordinator clones registered loops through
+    /// this at the start of every campaign, so one
+    /// `CampaignConfig` can drive many runs without state bleeding
+    /// between them.
+    fn box_clone(&self) -> Box<dyn ControlLoop>;
 }

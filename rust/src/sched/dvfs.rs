@@ -56,6 +56,10 @@ impl ControlLoop for DvfsGovernor {
         "dvfs"
     }
 
+    fn box_clone(&self) -> Box<dyn ControlLoop> {
+        Box::new(DvfsGovernor::new(self.params))
+    }
+
     fn scan(
         &mut self,
         ctx: &ScheduleContext<'_>,

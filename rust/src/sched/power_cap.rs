@@ -136,6 +136,10 @@ impl ControlLoop for PowerCapLoop {
         "power_cap"
     }
 
+    fn box_clone(&self) -> Box<dyn ControlLoop> {
+        Box::new(PowerCapLoop::new(self.params))
+    }
+
     fn scan(
         &mut self,
         ctx: &ScheduleContext<'_>,

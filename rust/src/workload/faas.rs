@@ -291,6 +291,10 @@ impl ControlLoop for KeepAliveLoop {
         "keep_alive"
     }
 
+    fn box_clone(&self) -> Box<dyn ControlLoop> {
+        Box::new(KeepAliveLoop)
+    }
+
     fn scan(
         &mut self,
         ctx: &ScheduleContext<'_>,
