@@ -1,12 +1,16 @@
 //! Bench: fault-injection overhead — wall time of a faulted campaign
 //! (host crashes, evacuations, blackouts, migration-failure oracle)
 //! vs the identical fault-free campaign, at worker widths 1 and 4.
+//! The `rack_ckpt` scenario layers correlated rack crashes, partial
+//! degradation, and checkpoint/restart on top, so the bench covers
+//! the full fault pipeline. Fault intensities come from the chaos
+//! experiment's [`ChaosGrid`] — one source of truth for both.
 //! Asserts the faulted runs actually crash hosts and stay
 //! deterministic (fingerprint-equal across samples). Emits
 //! `BENCH_chaos.json` for CI's bench gate (`benches/compare.py`).
 
 use ecosched::coordinator::{make_policy, CampaignConfig, Coordinator};
-use ecosched::sim::FaultConfig;
+use ecosched::exp::chaos::ChaosGrid;
 use ecosched::util::bench::{bench_header, short_mode, Bench, JsonReport};
 use ecosched::workload::{Arrivals, Mix, TraceSpec};
 
@@ -23,15 +27,13 @@ fn main() {
     }
     .generate(7);
 
+    let grid = ChaosGrid::fast();
     for &(tag, faults) in &[
         ("clean", None),
-        (
-            "faulted",
-            Some(FaultConfig {
-                host_crash_rate_per_hour: 2.0,
-                ..Default::default()
-            }),
-        ),
+        ("faulted", Some(grid.fault_config(2.0, false, None))),
+        // Correlated fault domains + degradation + checkpointing:
+        // rack crashes fan out over the 4 shard-derived racks.
+        ("rack_ckpt", Some(grid.fault_config(2.0, true, Some(60.0)))),
     ] {
         for &workers in &[1usize, 4] {
             let mut fingerprints = Vec::new();
@@ -54,6 +56,10 @@ fn main() {
                     let rep = coord.run(trace.clone());
                     if faults.is_some() {
                         assert!(rep.host_crashes > 0, "fault plan never crashed a host");
+                    }
+                    if tag == "rack_ckpt" {
+                        assert!(rep.rack_crashes > 0, "rack scenario never crashed a rack");
+                        assert!(rep.checkpoints_taken > 0, "no checkpoints were written");
                     }
                     assert_eq!(
                         rep.jobs.len() + rep.interrupted_jobs,

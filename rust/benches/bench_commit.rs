@@ -80,6 +80,7 @@ fn requests(n: usize) -> Vec<PlacementRequest> {
                 ..Default::default()
             },
             remaining_solo: 600.0 + i as f64,
+            avoid_rack: None,
         })
         .collect()
 }

@@ -42,6 +42,7 @@ fn request() -> PlacementRequest {
             burstiness: 0.3,
         },
         remaining_solo: 600.0,
+        avoid_rack: None,
     }
 }
 

@@ -95,6 +95,7 @@ fn burst(b: usize) -> Vec<PlacementRequest> {
                 burstiness: 0.3,
             },
             remaining_solo: 300.0 + 60.0 * i as f64,
+            avoid_rack: None,
         })
         .collect()
 }

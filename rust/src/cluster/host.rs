@@ -52,6 +52,30 @@ impl HostSpec {
     }
 }
 
+/// Health condition of a host, orthogonal to [`PowerState`]: a
+/// degraded host is still *on* and still runs its residents, but at
+/// reduced capability. Placement admission refuses new VMs on a
+/// degraded host, the consolidator drains it proactively, and the
+/// DVFS governor respects its frequency ceiling. The condition is
+/// mutated only through [`crate::cluster::ShardedCluster`]'s
+/// degrade/restore handles so the shard digests stay in sync.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum HostCondition {
+    #[default]
+    Healthy,
+    /// Failing storage: effective disk bandwidth halves.
+    FlakyDisk,
+    /// Thermal event: frequency capped at [`THERMAL_FREQ_CAP`].
+    Thermal,
+}
+
+/// Frequency ceiling imposed by a thermal event (matches the 0.7
+/// catalog p-state so the cap is always a legal DVFS point).
+pub const THERMAL_FREQ_CAP: f64 = 0.7;
+
+/// Disk-bandwidth multiplier under [`HostCondition::FlakyDisk`].
+pub const FLAKY_DISK_FACTOR: f64 = 0.5;
+
 /// Normalized utilization vector, each component in [0, 1] — the host
 /// state R_h of Eq. 3 (we keep net separate rather than folding it into
 /// io; the profiler exposes both).
@@ -87,6 +111,12 @@ pub struct Host {
     pub migration_net: f64,
     /// Cumulative count of power cycles (for reports).
     pub power_cycles: u32,
+    /// Fault domain (rack) this host belongs to. Defaults to 0 until
+    /// [`crate::cluster::ShardedCluster`] assigns the topology
+    /// (shard index by default, or an explicit rack map).
+    pub rack: usize,
+    /// Health condition (degradation layer) — see [`HostCondition`].
+    pub condition: HostCondition,
     /// Serverless sandbox slots (booting cold starts + warm pool).
     /// Empty unless the campaign runs the FaaS workload family.
     pub containers: Vec<Container>,
@@ -103,7 +133,34 @@ impl Host {
             demand: Demand::ZERO,
             migration_net: 0.0,
             power_cycles: 0,
+            rack: 0,
+            condition: HostCondition::default(),
             containers: Vec::new(),
+        }
+    }
+
+    /// Whether this host is in a degraded (but still running)
+    /// condition. Degraded hosts refuse new placements and become
+    /// preferred consolidation donors.
+    pub fn is_degraded(&self) -> bool {
+        self.condition != HostCondition::Healthy
+    }
+
+    /// Effective disk bandwidth (MB/s) under the current condition:
+    /// a flaky disk delivers half its nominal budget.
+    pub fn effective_disk(&self) -> f64 {
+        match self.condition {
+            HostCondition::FlakyDisk => self.spec.disk_mbps * FLAKY_DISK_FACTOR,
+            _ => self.spec.disk_mbps,
+        }
+    }
+
+    /// Frequency ceiling under the current condition: a thermal event
+    /// caps the clock at [`THERMAL_FREQ_CAP`].
+    pub fn freq_cap(&self) -> f64 {
+        match self.condition {
+            HostCondition::Thermal => THERMAL_FREQ_CAP,
+            _ => 1.0,
         }
     }
 
@@ -122,7 +179,7 @@ impl Host {
             // Parked/booting sandboxes hold memory even with no VM
             // demanding it — the energy cost of a warm pool.
             mem: ((self.demand.mem_gb + self.container_mem_gb()) / cap.mem_gb).min(1.0),
-            disk: (self.demand.disk_mbps / cap.disk_mbps).min(1.0),
+            disk: (self.demand.disk_mbps / self.effective_disk()).min(1.0),
             net: ((self.demand.net_mbps + self.migration_net) / cap.net_mbps).min(1.0),
         }
     }
@@ -142,7 +199,7 @@ impl Host {
         (
             f(self.demand.cpu, cap.cpu * self.freq),
             f(self.demand.mem_gb, cap.mem_gb),
-            f(self.demand.disk_mbps, cap.disk_mbps),
+            f(self.demand.disk_mbps, self.effective_disk()),
             f(self.demand.net_mbps + self.migration_net, cap.net_mbps),
         )
     }
@@ -189,7 +246,9 @@ impl Host {
     /// Would a VM of this flavor fit under the memory hard-constraint
     /// and a CPU oversubscription cap?
     pub fn fits(&self, flavor: &crate::cluster::flavor::Flavor, reserved: &Demand) -> bool {
-        self.state.accepts_vms() && admission_fits(&self.spec.capacity(), reserved, flavor)
+        self.state.accepts_vms()
+            && !self.is_degraded()
+            && admission_fits(&self.spec.capacity(), reserved, flavor)
     }
 
     /// Begin booting the host at `now`; no-op unless powered off.
@@ -251,9 +310,11 @@ impl Host {
         }
     }
 
-    /// Set the DVFS point to the nearest catalog p-state.
+    /// Set the DVFS point to the nearest catalog p-state, clamped to
+    /// the condition's frequency ceiling (a thermal event wins over
+    /// any governor request to clock back up).
     pub fn set_freq(&mut self, target: f64) {
-        self.freq = snap_to_pstate(target);
+        self.freq = snap_to_pstate(target.min(self.freq_cap()));
     }
 
     // --- serverless sandbox slots -------------------------------------
@@ -543,6 +604,43 @@ mod tests {
         assert_eq!(h.expire_warm(60.0), 1);
         assert_eq!(h.expire_warm(60.0), 0);
         assert_eq!(h.warm_count(), 1);
+    }
+
+    #[test]
+    fn flaky_disk_degrade_halves_effective_disk() {
+        let mut h = host();
+        h.demand.disk_mbps = 400.0;
+        assert!((h.utilization().disk - 0.4).abs() < 1e-9);
+        h.condition = HostCondition::FlakyDisk;
+        assert!(h.is_degraded());
+        assert_eq!(h.effective_disk(), 500.0);
+        assert!((h.utilization().disk - 0.8).abs() < 1e-9);
+        // Contention kicks in once demand exceeds the halved budget.
+        h.demand.disk_mbps = 800.0;
+        let (_, _, d, _) = h.contention();
+        assert!((d - 500.0 / 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thermal_degrade_caps_frequency() {
+        let mut h = host();
+        h.condition = HostCondition::Thermal;
+        assert_eq!(h.freq_cap(), THERMAL_FREQ_CAP);
+        // A governor request to run at full clock is clamped.
+        h.set_freq(1.0);
+        assert_eq!(h.freq, 0.7);
+        h.set_freq(0.6);
+        assert_eq!(h.freq, 0.6);
+    }
+
+    #[test]
+    fn degraded_host_refuses_new_placements() {
+        let mut h = host();
+        assert!(h.fits(&MEDIUM, &Demand::ZERO));
+        h.condition = HostCondition::FlakyDisk;
+        assert!(!h.fits(&MEDIUM, &Demand::ZERO));
+        h.condition = HostCondition::Healthy;
+        assert!(h.fits(&MEDIUM, &Demand::ZERO));
     }
 
     #[test]

@@ -34,6 +34,9 @@ pub struct HostView {
     pub reserved: Demand,
     /// Nominal capacity (admission control).
     pub capacity: Demand,
+    /// Fault domain (rack) tag — the domain-diversity input to
+    /// evacuation scoring (`PlacementRequest::avoid_rack`).
+    pub rack: usize,
 }
 
 impl HostView {
@@ -71,7 +74,9 @@ impl Cluster {
     /// hosts are placeable.
     pub fn scoring_view_of(&self, id: HostId, delta_high: f64) -> Option<HostView> {
         let host = &self.hosts[id.0];
-        if !host.state.accepts_vms() {
+        // Degraded hosts refuse new placements (they are being
+        // drained), mirroring `Host::fits`.
+        if !host.state.accepts_vms() || host.is_degraded() {
             return None;
         }
         let util = self.effective_util(id);
@@ -86,6 +91,7 @@ impl Cluster {
             idle_share: host.idle_share(),
             reserved: *self.reserved(id),
             capacity: host.spec.capacity(),
+            rack: host.rack,
         })
     }
 
@@ -155,6 +161,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn views_prune_degraded_hosts() {
+        use crate::cluster::HostCondition;
+        let mut c = Cluster::homogeneous(2);
+        c.host_mut(HostId(0)).condition = HostCondition::FlakyDisk;
+        let mut views = Vec::new();
+        c.scoring_views(1.01, &mut views);
+        assert_eq!(views.len(), 1);
+        assert_eq!(views[0].id, HostId(1));
+        c.host_mut(HostId(0)).condition = HostCondition::Healthy;
+        c.scoring_views(1.01, &mut views);
+        assert_eq!(views.len(), 2);
     }
 
     #[test]

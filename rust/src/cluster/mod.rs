@@ -8,14 +8,18 @@ pub mod host;
 pub mod index;
 pub mod power;
 pub mod shard;
+pub mod topology;
 pub mod vm;
 
 pub use container::{Container, ContainerState, CONTAINER_BOOT_W};
 pub use flavor::Flavor;
-pub use host::{Host, HostId, HostSpec, Utilization};
+pub use host::{
+    Host, HostCondition, HostId, HostSpec, Utilization, FLAKY_DISK_FACTOR, THERMAL_FREQ_CAP,
+};
 pub use index::HostView;
 pub use power::{PowerModel, PowerState};
 pub use shard::{DigestSnapshot, ShardDigest, ShardMap, ShardedCluster};
+pub use topology::Topology;
 pub use vm::{migration_cost, Vm, VmId, VmState};
 
 use std::collections::BTreeMap;

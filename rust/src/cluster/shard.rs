@@ -135,6 +135,13 @@ pub struct ShardDigest {
     /// Nominal capacity lost to crashed hosts — what recovery would
     /// give back to the shard.
     pub capacity_lost: Demand,
+    /// Member hosts in a degraded condition (flaky disk / thermal),
+    /// counted regardless of power state — the condition layer is
+    /// orthogonal to the power machine.
+    pub degraded: usize,
+    /// Nominal capacity of degraded member hosts — what a restore
+    /// would return to full capability.
+    pub capacity_degraded: Demand,
 }
 
 impl ShardDigest {
@@ -160,6 +167,10 @@ impl ShardDigest {
             if host.state.is_failed() {
                 d.failed += 1;
                 d.capacity_lost.add(&host.spec.capacity());
+            }
+            if host.is_degraded() {
+                d.degraded += 1;
+                d.capacity_degraded.add(&host.spec.capacity());
             }
             d.reserved.add(cluster.reserved(h));
             d.expected.add(&cluster.expected_load(h));
@@ -261,10 +272,13 @@ impl Deref for ShardedCluster {
 }
 
 impl ShardedCluster {
-    pub fn new(cluster: Cluster, shard_count: usize) -> ShardedCluster {
+    pub fn new(mut cluster: Cluster, shard_count: usize) -> ShardedCluster {
         let map = ShardMap::new(shard_count);
         let mut members = vec![Vec::new(); shard_count];
-        for host in &cluster.hosts {
+        for host in &mut cluster.hosts {
+            // Default fault-domain topology: one rack per shard (an
+            // explicit map overrides via `set_rack_map`).
+            host.rack = map.shard_of(host.id);
             members[map.shard_of(host.id)].push(host.id);
         }
         let digests = (0..shard_count)
@@ -656,6 +670,71 @@ impl ShardedCluster {
         }
     }
 
+    /// Override the default (shard-derived) fault-domain topology
+    /// with an explicit host → rack assignment. Rack tags feed the
+    /// [`HostView`] snapshots and the evacuation path's
+    /// domain-diversity scoring; they enter no digest, but the tag is
+    /// placement-visible (it biases scoring), so the epoch bumps.
+    pub fn set_rack_map(&mut self, rack_of: &[usize]) {
+        assert_eq!(
+            rack_of.len(),
+            self.cluster.n_hosts(),
+            "rack map must cover every host"
+        );
+        for (h, &r) in rack_of.iter().enumerate() {
+            self.cluster.hosts[h].rack = r;
+        }
+        for s in 0..self.map.count() {
+            self.bump_epoch(s);
+        }
+    }
+
+    /// Degrade a host's condition (flaky disk / thermal), with
+    /// incremental digest upkeep. The condition layer is orthogonal
+    /// to the power machine: a degraded host keeps running its
+    /// residents, but admission refuses new VMs, so the epoch bumps.
+    /// No-op when the host already carries the same condition.
+    pub fn degrade_host(&mut self, host: HostId, condition: crate::cluster::HostCondition) {
+        let h = &mut self.cluster.hosts[host.0];
+        let was = h.is_degraded();
+        h.condition = condition;
+        // A thermal cap takes effect immediately on the current clock.
+        if h.freq > h.freq_cap() {
+            let cap = h.freq_cap();
+            h.set_freq(cap);
+        }
+        let now_degraded = self.cluster.hosts[host.0].is_degraded();
+        if was != now_degraded {
+            let cap = self.cluster.hosts[host.0].spec.capacity();
+            let shard = self.map.shard_of(host);
+            let d = &mut self.digests[shard];
+            if now_degraded {
+                d.degraded += 1;
+                d.capacity_degraded.add(&cap);
+            } else {
+                d.degraded -= 1;
+                d.capacity_degraded.sub(&cap);
+            }
+        }
+        self.bump_epoch(self.map.shard_of(host));
+    }
+
+    /// Restore a degraded host to full health (the inverse of
+    /// [`ShardedCluster::degrade_host`]). The frequency ceiling
+    /// lifts; the DVFS governor decides when to clock back up.
+    pub fn restore_host(&mut self, host: HostId) {
+        if !self.cluster.hosts[host.0].is_degraded() {
+            return;
+        }
+        self.cluster.hosts[host.0].condition = crate::cluster::HostCondition::Healthy;
+        let cap = self.cluster.hosts[host.0].spec.capacity();
+        let shard = self.map.shard_of(host);
+        let d = &mut self.digests[shard];
+        d.degraded -= 1;
+        d.capacity_degraded.sub(&cap);
+        self.bump_epoch(shard);
+    }
+
     // ---- serverless sandbox handles ----------------------------------
 
     /// Claim a warm sandbox for `function` on `host`; true on a warm
@@ -759,6 +838,18 @@ impl ShardedCluster {
                 return Err(format!(
                     "shard {s}: capacity_lost {:?} != recomputed {:?}",
                     d.capacity_lost, fresh.capacity_lost
+                ));
+            }
+            if d.degraded != fresh.degraded {
+                return Err(format!(
+                    "shard {s}: degraded hosts {} != recomputed {}",
+                    d.degraded, fresh.degraded
+                ));
+            }
+            if !demand_close(&d.capacity_degraded, &fresh.capacity_degraded) {
+                return Err(format!(
+                    "shard {s}: capacity_degraded {:?} != recomputed {:?}",
+                    d.capacity_degraded, fresh.capacity_degraded
                 ));
             }
             if d.warm_containers != fresh.warm_containers {
@@ -1054,6 +1145,46 @@ mod tests {
         sc.advance_power_states(100.0 + crate::cluster::power::BOOT_SECS);
         assert_eq!(sc.shard_epoch(shard), 5);
         assert_eq!(sc.shard_epoch(other), 0);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn degrade_and_restore_keep_digests_consistent() {
+        use crate::cluster::HostCondition;
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(4), 2);
+        let host = HostId(0);
+        let shard = sc.shard_of(host);
+        let e0 = sc.shard_epoch(shard);
+        sc.degrade_host(host, HostCondition::FlakyDisk);
+        assert_eq!(sc.digest(shard).degraded, 1);
+        assert!(sc.digest(shard).capacity_degraded.mem_gb > 0.0);
+        assert!(sc.shard_epoch(shard) > e0, "degrade is placement-visible");
+        sc.check_invariants().unwrap();
+        // A thermal degrade on an already-degraded host changes the
+        // condition but not the count.
+        sc.degrade_host(host, HostCondition::Thermal);
+        assert_eq!(sc.digest(shard).degraded, 1);
+        assert!(sc.cluster().host(host).freq <= crate::cluster::THERMAL_FREQ_CAP);
+        sc.check_invariants().unwrap();
+        sc.restore_host(host);
+        assert_eq!(sc.digest(shard).degraded, 0);
+        assert!(sc.digest(shard).capacity_degraded.mem_gb.abs() < 1e-9);
+        sc.check_invariants().unwrap();
+        // Restore on a healthy host is a no-op.
+        let e1 = sc.shard_epoch(shard);
+        sc.restore_host(host);
+        assert_eq!(sc.shard_epoch(shard), e1);
+        sc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rack_tags_default_to_shards_and_accept_overrides() {
+        let mut sc = ShardedCluster::new(Cluster::homogeneous(6), 2);
+        for h in 0..6 {
+            assert_eq!(sc.cluster().host(HostId(h)).rack, sc.shard_of(HostId(h)));
+        }
+        sc.set_rack_map(&[0, 0, 1, 1, 2, 2]);
+        assert_eq!(sc.cluster().host(HostId(4)).rack, 2);
         sc.check_invariants().unwrap();
     }
 

@@ -1,0 +1,107 @@
+//! Fault-domain topology: the host → rack map behind correlated
+//! failures (`sim::FaultKind::RackCrash`) and the domain-diversity
+//! term in evacuation scoring.
+//!
+//! Default topology = the shard map: shards already partition the
+//! fleet deterministically from `(host id, shard_count)`, so rack
+//! faults are meaningful out of the box without extra configuration.
+//! An explicit map (`CampaignConfig::rack_map`) overrides it —
+//! validated to cover every host with dense rack indices.
+
+use crate::cluster::host::HostId;
+use crate::cluster::shard::ShardMap;
+
+/// Host → rack assignment plus the inverse (rack → member hosts).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// `rack_of[h]` = rack index of host `h`. Dense in `0..n_racks`.
+    rack_of: Vec<usize>,
+    /// `members[r]` = hosts in rack `r`, ascending by id.
+    members: Vec<Vec<HostId>>,
+}
+
+impl Topology {
+    /// The default topology: one rack per shard, membership from the
+    /// shard map's hash assignment.
+    pub fn from_shards(map: &ShardMap, n_hosts: usize) -> Topology {
+        let rack_of: Vec<usize> = (0..n_hosts).map(|h| map.shard_of(HostId(h))).collect();
+        Topology::from_assignment(rack_of, map.count())
+    }
+
+    /// An explicit host → rack map. Errors when a rack index is out of
+    /// range or a rack in `0..n_racks` has no members (sparse indices
+    /// would silently shrink the fault domain set).
+    pub fn from_map(rack_of: Vec<usize>) -> Result<Topology, String> {
+        if rack_of.is_empty() {
+            return Err("rack map must cover at least one host".to_string());
+        }
+        let n_racks = rack_of.iter().max().copied().unwrap_or(0) + 1;
+        let topo = Topology::from_assignment(rack_of, n_racks);
+        for (r, members) in topo.members.iter().enumerate() {
+            if members.is_empty() {
+                return Err(format!("rack {r} has no member hosts (sparse rack indices)"));
+            }
+        }
+        Ok(topo)
+    }
+
+    fn from_assignment(rack_of: Vec<usize>, n_racks: usize) -> Topology {
+        let mut members = vec![Vec::new(); n_racks];
+        for (h, &r) in rack_of.iter().enumerate() {
+            members[r].push(HostId(h));
+        }
+        Topology { rack_of, members }
+    }
+
+    pub fn n_racks(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.rack_of.len()
+    }
+
+    pub fn rack_of(&self, host: HostId) -> usize {
+        self.rack_of[host.0]
+    }
+
+    /// Member hosts of `rack`, ascending by host id.
+    pub fn members(&self, rack: usize) -> &[HostId] {
+        &self.members[rack]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_topology_partitions_every_host() {
+        let map = ShardMap::new(4);
+        let topo = Topology::from_shards(&map, 16);
+        assert_eq!(topo.n_racks(), 4);
+        assert_eq!(topo.n_hosts(), 16);
+        let total: usize = (0..topo.n_racks()).map(|r| topo.members(r).len()).sum();
+        assert_eq!(total, 16);
+        for h in 0..16 {
+            let r = topo.rack_of(HostId(h));
+            assert!(topo.members(r).contains(&HostId(h)));
+            assert_eq!(r, map.shard_of(HostId(h)));
+        }
+    }
+
+    #[test]
+    fn explicit_map_roundtrips_and_sorts_members() {
+        let topo = Topology::from_map(vec![1, 0, 1, 0, 1]).unwrap();
+        assert_eq!(topo.n_racks(), 2);
+        assert_eq!(topo.members(0), &[HostId(1), HostId(3)]);
+        assert_eq!(topo.members(1), &[HostId(0), HostId(2), HostId(4)]);
+    }
+
+    #[test]
+    fn sparse_rack_indices_are_rejected() {
+        assert!(Topology::from_map(vec![0, 2]).is_err());
+        assert!(Topology::from_map(Vec::new()).is_err());
+        assert!(Topology::from_map(vec![0, 1, 0]).is_ok());
+    }
+}

@@ -183,6 +183,14 @@ impl CampaignConfigBuilder {
         self
     }
 
+    /// Explicit host → rack map for correlated fault domains. Must
+    /// cover every host (one entry per host, dense rack indices);
+    /// omitted, racks default to the shard partition.
+    pub fn rack_map(mut self, map: Vec<usize>) -> Self {
+        self.cfg.rack_map = Some(map);
+        self
+    }
+
     pub fn scan_interval(mut self, interval: f64) -> Self {
         self.cfg.scan_interval = interval;
         self
@@ -260,6 +268,27 @@ impl CampaignConfigBuilder {
         if cfg.max_sim_time <= 0.0 {
             return Err(ConfigError("max_sim_time must be > 0".into()));
         }
+        if let Some(f) = &cfg.faults {
+            if let Some(interval) = f.checkpoint_interval_s {
+                if !(interval > 0.0 && interval.is_finite()) {
+                    return Err(ConfigError(format!(
+                        "checkpoint_interval_s must be positive and finite (got {interval})"
+                    )));
+                }
+            }
+        }
+        if let Some(map) = &cfg.rack_map {
+            if map.len() != cfg.n_hosts {
+                return Err(ConfigError(format!(
+                    "rack_map must cover every host: {} entries for {} hosts",
+                    map.len(),
+                    cfg.n_hosts
+                )));
+            }
+            if let Err(e) = crate::cluster::Topology::from_map(map.clone()) {
+                return Err(ConfigError(format!("rack_map invalid: {e}")));
+            }
+        }
         Ok(cfg)
     }
 }
@@ -327,6 +356,56 @@ mod tests {
     fn zero_coordinators_rejected() {
         let err = CampaignConfig::builder().coordinators(0).build().unwrap_err();
         assert!(err.0.contains("coordinator_count"), "got: {err}");
+    }
+
+    #[test]
+    fn checkpoint_interval_must_be_positive_and_finite() {
+        for bad in [0.0, -30.0, f64::NAN, f64::INFINITY] {
+            let err = CampaignConfig::builder()
+                .faults(crate::sim::FaultConfig {
+                    checkpoint_interval_s: Some(bad),
+                    ..Default::default()
+                })
+                .build()
+                .unwrap_err();
+            assert!(err.0.contains("checkpoint_interval_s"), "got: {err}");
+        }
+        let cfg = CampaignConfig::builder()
+            .faults(crate::sim::FaultConfig {
+                checkpoint_interval_s: Some(60.0),
+                ..Default::default()
+            })
+            .build()
+            .unwrap();
+        assert_eq!(
+            cfg.faults.unwrap().checkpoint_interval_s,
+            Some(60.0)
+        );
+    }
+
+    #[test]
+    fn rack_map_must_cover_every_host() {
+        // Wrong length.
+        let err = CampaignConfig::builder()
+            .hosts(4)
+            .rack_map(vec![0, 1])
+            .build()
+            .unwrap_err();
+        assert!(err.0.contains("every host"), "got: {err}");
+        // Sparse rack indices.
+        let err = CampaignConfig::builder()
+            .hosts(2)
+            .rack_map(vec![0, 2])
+            .build()
+            .unwrap_err();
+        assert!(err.0.contains("rack_map invalid"), "got: {err}");
+        // A dense full-coverage map passes.
+        let cfg = CampaignConfig::builder()
+            .hosts(4)
+            .rack_map(vec![0, 1, 0, 1])
+            .build()
+            .unwrap();
+        assert_eq!(cfg.rack_map, Some(vec![0, 1, 0, 1]));
     }
 
     #[test]

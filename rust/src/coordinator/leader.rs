@@ -102,7 +102,7 @@ use crate::sched::{
     PlacementRequest, ScheduleContext,
 };
 use crate::sim::engine::DEFAULT_CLASS;
-use crate::sim::{EventQueue, FaultConfig, FaultKind, SAMPLE_INTERVAL};
+use crate::sim::{EventQueue, FaultConfig, FaultKind, CHECKPOINT_J_PER_GB, SAMPLE_INTERVAL};
 use crate::sla::SlaSpec;
 use crate::workload::faas::{KeepAliveLoop, KeepAlivePolicy};
 use crate::workload::{flavor_for, FaasConfig, Job, JobId, JobState};
@@ -167,9 +167,15 @@ pub struct CampaignConfig {
     /// it to model real admission-control give-up.
     pub retry_max_attempts: u32,
     /// Deterministic fault injection (host crashes, telemetry
-    /// blackouts, migration failures, worker panics). `None` (the
-    /// default) replays the fault-free coordinator bit for bit.
+    /// blackouts, migration failures, worker panics, rack crashes,
+    /// partial degradation). `None` (the default) replays the
+    /// fault-free coordinator bit for bit.
     pub faults: Option<FaultConfig>,
+    /// Explicit host → rack map for correlated fault domains (one
+    /// entry per host, dense rack indices — validated by the
+    /// builder). `None` (the default) uses the shard partition as the
+    /// rack topology.
+    pub rack_map: Option<Vec<usize>>,
     /// Seconds between control-loop scans.
     pub scan_interval: f64,
     /// Watts-Up-Pro relative noise (0 disables).
@@ -218,6 +224,7 @@ impl Default for CampaignConfig {
             retry_backoff_base: 0.5,
             retry_max_attempts: 1000,
             faults: None,
+            rack_map: None,
             scan_interval: 30.0,
             meter_noise: 0.01,
             telemetry_noise: 0.02,
@@ -731,95 +738,76 @@ impl Coordinator {
     ) {
         match kind {
             FaultKind::HostCrash(h) => {
-                // The plan is generated blind to power state: a crash
-                // scheduled for a host that is off/booting/already
-                // failed is dropped.
-                if !st.cluster.host(h).state.is_on() {
+                self.handle_host_crash(now, h, st, queue, keep_alive, core);
+            }
+            FaultKind::RackCrash { rack, downtime_s } => {
+                // Correlated fail-stop: every powered-on member of
+                // the rack crashes at the same instant, in ascending
+                // host order (the order is part of the deterministic
+                // replay). Each victim gets its own recovery event,
+                // so per-host quarantine logic applies to rack
+                // victims unchanged; a stale recovery (host was not
+                // On when the rack went down) is dropped by the
+                // HostRecover guard.
+                st.counters.rack_crashes += 1;
+                let members: Vec<HostId> = (0..st.cluster.n_hosts())
+                    .map(HostId)
+                    .filter(|&m| st.cluster.host(m).rack == rack)
+                    .collect();
+                for m in members {
+                    if !st.cluster.host(m).state.is_on() {
+                        continue;
+                    }
+                    self.handle_host_crash(now, m, st, queue, keep_alive, core.as_deref_mut());
+                    if core.is_some() {
+                        queue.push_class(
+                            now + downtime_s,
+                            CLASS_FAULT,
+                            Event::Fault(FaultKind::HostRecover(m)),
+                        );
+                    } else {
+                        queue.push(now + downtime_s, Event::Fault(FaultKind::HostRecover(m)));
+                    }
+                }
+            }
+            FaultKind::Degrade { host, condition } => {
+                // Partial degradation only lands on a powered-on
+                // host; like a crash on a parked host, the episode is
+                // otherwise dropped (its paired Restore then no-ops).
+                if !st.cluster.host(host).state.is_on() {
                     return;
                 }
-                // Event core: the crashed host and any migration peers
-                // (sources feeding it, destinations it feeds) must be
-                // brought current at the pre-crash wattage before
-                // fail_host rewrites resident sets and migration
-                // traffic. A job that crosses its finish line in this
-                // sync completes *before* the crash lands — at the
-                // same instant, completion wins (the tick engine, with
-                // its coarser grid, cannot make this distinction).
-                let mut peers: Vec<HostId> = Vec::new();
                 if let Some(core) = core.as_deref_mut() {
-                    push_unique(&mut peers, h);
-                    for vm in st.cluster.vms.values() {
-                        if let VmState::Migrating { from, to, .. } = vm.state {
-                            if to == h {
-                                push_unique(&mut peers, from);
-                            } else if from == h {
-                                push_unique(&mut peers, to);
-                            }
-                        }
-                    }
-                    for &p in &peers {
-                        core.sync_host(st, p, now);
-                    }
-                    if core.has_pending() {
-                        self.finish_batch(now, st, queue, keep_alive, core);
-                    }
+                    // Effective capacity (and possibly the clock) is
+                    // about to shrink: settle residents at the
+                    // healthy rates first.
+                    core.sync_host(st, host, now);
                 }
-                st.crash_history.entry(h).or_default().push(now);
-                let shard = st.cluster.shard_of(h);
-                let outcome = st.cluster.fail_host(h, now);
-                st.counters.host_crashes += 1;
-                st.shard_counters[shard].crashes += 1;
-                // Copies that were inbound to the crashed host were
-                // cancelled (their VMs keep running on the source);
-                // the stall owed at their cut-over is void.
-                for vm in &outcome.cancelled_incoming {
-                    st.pending_stalls.remove(vm);
+                st.cluster.degrade_host(host, condition);
+                st.counters.degraded_hosts += 1;
+                if let Some(core) = core.as_deref_mut() {
+                    core.refresh_power(st, host);
+                    let preds = core.reschedule_host(st, host, now);
+                    push_preds(queue, preds);
                 }
-                // Resident VMs are dead: their jobs lose all progress
-                // and enter the evacuation queue, drained through the
-                // ordinary decide_batch retry path.
-                let mut evacuate: Vec<JobId> = Vec::new();
-                for vm in &outcome.killed {
-                    st.telemetry.forget_vm(*vm);
+            }
+            FaultKind::Restore { host } => {
+                // The condition layer is orthogonal to the power
+                // machine: a restore clears the condition even on a
+                // host that crashed or parked while degraded (no-op
+                // if it was never degraded), but only a running host
+                // needs settling and re-prediction.
+                let on = st.cluster.host(host).state.is_on();
+                if on {
                     if let Some(core) = core.as_deref_mut() {
-                        core.forget_vm(*vm);
-                    }
-                    st.pending_stalls.remove(vm);
-                    if let Some(job_id) = st.job_of_vm.remove(vm) {
-                        let job = st.jobs.get_mut(&job_id).unwrap();
-                        if job.state == JobState::Running {
-                            job.requeue_after_crash(now);
-                            st.counters.evacuations += 1;
-                            st.shard_counters[shard].evacuated_vms += 1;
-                            st.counters.replacement_energy_j +=
-                                st.job_energy.get(&job_id).copied().unwrap_or(0.0);
-                            st.evacuated_at.insert(job_id, now);
-                            evacuate.push(job_id);
-                        }
+                        core.sync_host(st, host, now);
                     }
                 }
-                // Jobs parked on this host's boot queue will never
-                // see it come up; re-place them elsewhere.
-                let mut still = Vec::new();
-                for (id, host) in std::mem::take(&mut st.waiting_boot) {
-                    if host == h {
-                        evacuate.push(id);
-                    } else {
-                        still.push((id, host));
-                    }
-                }
-                st.waiting_boot = still;
-                if !evacuate.is_empty() {
-                    st.deferred.extend(evacuate);
-                    let delay = self.config.retry_backoff_base * st.retry_jitter();
-                    request_retry(queue, &mut st.next_retry, now + delay);
-                }
-                // Event core: the crash changed resident sets and
-                // migration traffic on every peer — bump epochs (which
-                // strands outstanding predictions) and re-predict.
-                if let Some(core) = core.as_deref_mut() {
-                    for &p in &peers {
-                        let preds = core.reschedule_host(st, p, now);
+                st.cluster.restore_host(host);
+                if on {
+                    if let Some(core) = core.as_deref_mut() {
+                        core.refresh_power(st, host);
+                        let preds = core.reschedule_host(st, host, now);
                         push_preds(queue, preds);
                     }
                 }
@@ -900,6 +888,167 @@ impl Coordinator {
                 }
             }
         }
+    }
+
+    /// Fail-stop crash of one host: settle it (and its migration
+    /// peers) in the event core, kill residents, requeue their jobs —
+    /// rewound to the last checkpoint boundary when checkpointing is
+    /// on — and queue the evacuations. Shared by the independent-
+    /// crash and rack-crash fault arms; a crash scheduled for a host
+    /// that is off/booting/already failed is dropped (the plan is
+    /// generated blind to power state).
+    #[allow(clippy::too_many_arguments)]
+    fn handle_host_crash(
+        &mut self,
+        now: f64,
+        h: HostId,
+        st: &mut CampaignState,
+        queue: &mut EventQueue<Event>,
+        keep_alive: Option<&dyn KeepAlivePolicy>,
+        mut core: Option<&mut EventCore>,
+    ) {
+        if !st.cluster.host(h).state.is_on() {
+            return;
+        }
+        // Event core: the crashed host and any migration peers
+        // (sources feeding it, destinations it feeds) must be brought
+        // current at the pre-crash wattage before fail_host rewrites
+        // resident sets and migration traffic. A job that crosses its
+        // finish line in this sync completes *before* the crash lands
+        // — at the same instant, completion wins (the tick engine,
+        // with its coarser grid, cannot make this distinction).
+        let mut peers: Vec<HostId> = Vec::new();
+        if let Some(core) = core.as_deref_mut() {
+            push_unique(&mut peers, h);
+            for vm in st.cluster.vms.values() {
+                if let VmState::Migrating { from, to, .. } = vm.state {
+                    if to == h {
+                        push_unique(&mut peers, from);
+                    } else if from == h {
+                        push_unique(&mut peers, to);
+                    }
+                }
+            }
+            for &p in &peers {
+                core.sync_host(st, p, now);
+            }
+            if core.has_pending() {
+                self.finish_batch(now, st, queue, keep_alive, core);
+            }
+        }
+        st.crash_history.entry(h).or_default().push(now);
+        let shard = st.cluster.shard_of(h);
+        let rack = st.cluster.host(h).rack;
+        let ckpt = self
+            .config
+            .faults
+            .as_ref()
+            .and_then(|f| f.checkpoint_interval_s);
+        let outcome = st.cluster.fail_host(h, now);
+        st.counters.host_crashes += 1;
+        st.shard_counters[shard].crashes += 1;
+        // Copies that were inbound to the crashed host were cancelled
+        // (their VMs keep running on the source); the stall owed at
+        // their cut-over is void.
+        for vm in &outcome.cancelled_incoming {
+            st.pending_stalls.remove(vm);
+        }
+        // Resident VMs are dead: their jobs rewind to the last
+        // checkpoint boundary (to zero without checkpointing) and
+        // enter the evacuation queue, drained through the ordinary
+        // decide_batch retry path. Only the *unsaved* fraction of a
+        // job's energy is work the campaign pays for twice.
+        let mut evacuate: Vec<JobId> = Vec::new();
+        for vm in &outcome.killed {
+            st.telemetry.forget_vm(*vm);
+            if let Some(core) = core.as_deref_mut() {
+                core.forget_vm(*vm);
+            }
+            st.pending_stalls.remove(vm);
+            if let Some(job_id) = st.job_of_vm.remove(vm) {
+                if st.jobs[&job_id].state == JobState::Running {
+                    let progress = st.jobs[&job_id].progress_time();
+                    let spent = st.job_energy.get(&job_id).copied().unwrap_or(0.0);
+                    // Checkpoints written since the last restart are
+                    // real work: bill them before the rewind resets
+                    // the billing base.
+                    self.charge_checkpoints(st, job_id, progress);
+                    let saved = st
+                        .jobs
+                        .get_mut(&job_id)
+                        .unwrap()
+                        .requeue_after_crash(now, ckpt);
+                    st.counters.evacuations += 1;
+                    st.shard_counters[shard].evacuated_vms += 1;
+                    let wasted = if progress > 0.0 {
+                        spent * (progress - saved) / progress
+                    } else {
+                        spent
+                    };
+                    st.counters.replacement_energy_j += wasted;
+                    st.counters.progress_saved_s += saved;
+                    st.evacuated_at.insert(job_id, now);
+                    // Re-placement prefers a different rack: remember
+                    // where the crash was until the job lands again.
+                    st.evacuated_rack.insert(job_id, rack);
+                    evacuate.push(job_id);
+                }
+            }
+        }
+        // Jobs parked on this host's boot queue will never see it
+        // come up; re-place them elsewhere.
+        let mut still = Vec::new();
+        for (id, host) in std::mem::take(&mut st.waiting_boot) {
+            if host == h {
+                evacuate.push(id);
+            } else {
+                still.push((id, host));
+            }
+        }
+        st.waiting_boot = still;
+        if !evacuate.is_empty() {
+            st.deferred.extend(evacuate);
+            let delay = self.config.retry_backoff_base * st.retry_jitter();
+            request_retry(queue, &mut st.next_retry, now + delay);
+        }
+        // Event core: the crash changed resident sets and migration
+        // traffic on every peer — bump epochs (which strands
+        // outstanding predictions) and re-predict.
+        if let Some(core) = core.as_deref_mut() {
+            for &p in &peers {
+                let preds = core.reschedule_host(st, p, now);
+                push_preds(queue, preds);
+            }
+        }
+    }
+
+    /// Bill the checkpoints `job_id` wrote between its last restart
+    /// point and `progress` solo seconds: one write per interval
+    /// boundary crossed, each costing the VM flavor's memory
+    /// footprint at [`CHECKPOINT_J_PER_GB`]. Charged to the job (it
+    /// shows up in per-job energy, hence the fingerprint) and to the
+    /// campaign ledger — additive to metered host energy, like
+    /// cold-start boot draw. A no-op when checkpointing is off.
+    fn charge_checkpoints(&self, st: &mut CampaignState, job_id: JobId, progress: f64) {
+        let interval = match self
+            .config
+            .faults
+            .as_ref()
+            .and_then(|f| f.checkpoint_interval_s)
+        {
+            Some(i) if i > 0.0 => i,
+            _ => return,
+        };
+        let base = st.jobs[&job_id].restored_from;
+        let n = ((progress / interval).floor() - (base / interval).floor()).max(0.0) as u64;
+        if n == 0 {
+            return;
+        }
+        let mem_gb = flavor_for(st.jobs[&job_id].kind).mem_gb;
+        let joules = n as f64 * mem_gb * CHECKPOINT_J_PER_GB;
+        st.counters.checkpoints_taken += n;
+        st.counters.checkpoint_energy_j += joules;
+        *st.job_energy.entry(job_id).or_insert(0.0) += joules;
     }
 
     /// One simulated second: demand propagation, job progress, energy
@@ -1114,6 +1263,12 @@ impl Coordinator {
                 );
             }
         }
+        // Checkpoints written on the way to the finish line are
+        // billed at completion (crash segments were billed at each
+        // crash). `progress_time` parks the cursor short of the last
+        // phase at completion, so use the full plan length.
+        let total = st.jobs[&job_id].solo_duration();
+        self.charge_checkpoints(st, job_id, total);
         let job = &st.jobs[&job_id];
         let jct = job.jct().expect("finished job has jct");
         st.sla.complete(job_id, jct);
@@ -1232,6 +1387,10 @@ impl Coordinator {
                         }
                         let link = link_headroom(&st.cluster, vm, to);
                         let from = st.cluster.vms.get(&vm).and_then(|v| v.host);
+                        // A consolidation move off a degraded source
+                        // is a proactive drain — tally it if the
+                        // actuation goes through.
+                        let draining = from.map_or(false, |f| st.cluster.host(f).is_degraded());
                         if let Some(core) = core.as_deref_mut() {
                             // Both endpoints gain copy traffic (source
                             // contention changes): settle them at the
@@ -1248,6 +1407,9 @@ impl Coordinator {
                             }
                             st.shard_counters[st.cluster.shard_of(to)].migrations_in += 1;
                             st.counters.migrations += 1;
+                            if draining {
+                                st.counters.drains += 1;
+                            }
                             st.counters.migration_stall_s += cost.stall;
                             st.pending_stalls.insert(vm, cost.stall);
                             if let Some(&job_id) = st.job_of_vm.get(&vm) {
@@ -1337,6 +1499,7 @@ impl Coordinator {
                 flavor,
                 vector,
                 remaining_solo: job.solo_duration(),
+                avoid_rack: st.evacuated_rack.get(&id).copied(),
             });
         }
         if reqs.is_empty() {
@@ -1551,10 +1714,11 @@ impl Coordinator {
                 st.job_of_vm.insert(vm, req.job);
                 st.jobs.get_mut(&req.job).unwrap().start(now);
                 // An evacuated job landing again closes its recovery
-                // window.
+                // window (and its crash-rack avoidance preference).
                 if let Some(t0) = st.evacuated_at.remove(&req.job) {
                     st.recovery_latency.push(now - t0);
                 }
+                st.evacuated_rack.remove(&req.job);
                 // Serverless sandbox semantics: a warm container on the
                 // chosen host absorbs the invocation instantly; a miss
                 // pays the cold-start latency (execution stalls) and the

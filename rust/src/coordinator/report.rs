@@ -154,6 +154,22 @@ pub struct CampaignReport {
     pub worker_panics: u64,
     /// Recoveries deferred because the host was flapping.
     pub quarantines: u64,
+    /// Correlated rack-crash events that fired.
+    pub rack_crashes: u64,
+    /// Partial-degradation episodes that took effect (host was On).
+    pub degraded_hosts: u64,
+    /// Consolidation migrations off a degraded source host — the
+    /// proactive-drain tally.
+    pub drains: u64,
+    /// Checkpoints written by running jobs (charged at crash or
+    /// completion).
+    pub checkpoints_taken: u64,
+    /// Solo seconds of progress preserved across crashes by
+    /// checkpoint restarts.
+    pub progress_saved_s: f64,
+    /// Energy spent writing checkpoints (J), additive to metered host
+    /// energy like cold-start energy.
+    pub checkpoint_energy_j: f64,
     /// Events popped from the campaign queue — the engine-efficiency
     /// denominator (`simulated seconds / events`). NOT folded into
     /// `fingerprint()`: the tick and event engines compute identical
@@ -245,6 +261,12 @@ impl CampaignReport {
         mix(self.migration_failures);
         mix(self.worker_panics);
         mix(self.quarantines);
+        mix(self.rack_crashes);
+        mix(self.degraded_hosts);
+        mix(self.drains);
+        mix(self.checkpoints_taken);
+        mix(self.progress_saved_s.to_bits());
+        mix(self.checkpoint_energy_j.to_bits());
         for s in &self.per_shard {
             mix(s.placements);
             mix(s.boots);
@@ -262,6 +284,8 @@ impl CampaignReport {
             mix(d.reserved.cpu.to_bits());
             mix(d.expected.cpu.to_bits());
             mix(d.capacity_lost.cpu.to_bits());
+            mix(d.degraded as u64);
+            mix(d.capacity_degraded.cpu.to_bits());
         }
         h
     }

@@ -46,8 +46,24 @@ pub struct Counters {
     pub worker_panics: u64,
     /// Recoveries deferred because the host was flapping.
     pub quarantines: u64,
-    /// Energy attributed to jobs at the moment their host crashed (J).
+    /// Energy attributed to jobs at the moment their host crashed (J),
+    /// discounted by checkpointed progress: only the *wasted* fraction
+    /// of each crashed job's energy counts.
     pub replacement_energy_j: f64,
+    /// Correlated rack-crash events that fired.
+    pub rack_crashes: u64,
+    /// Degradation episodes that took effect (host was On).
+    pub degraded_hosts: u64,
+    /// Consolidation migrations whose source host was degraded — the
+    /// proactive-drain tally.
+    pub drains: u64,
+    /// Checkpoints written (charged at crash or completion).
+    pub checkpoints_taken: u64,
+    /// Solo seconds of progress preserved across crashes by
+    /// checkpoint restarts.
+    pub progress_saved_s: f64,
+    /// Energy spent writing checkpoints (J).
+    pub checkpoint_energy_j: f64,
 }
 
 /// The mutable state of one campaign run.
@@ -127,6 +143,10 @@ pub struct CampaignState {
     /// When each evacuated job lost its host — cleared (into
     /// `recovery_latency`) at re-placement.
     pub evacuated_at: BTreeMap<JobId, f64>,
+    /// Rack the job's crashed host belonged to — feeds
+    /// `PlacementRequest::avoid_rack` so re-placement prefers a
+    /// different fault domain. Cleared alongside `evacuated_at`.
+    pub evacuated_rack: BTreeMap<JobId, usize>,
     /// Evacuation → re-placement latency samples (s).
     pub recovery_latency: Online,
     /// Crash timestamps per host, for flap detection.
@@ -149,8 +169,19 @@ pub struct CampaignState {
 impl CampaignState {
     pub fn new(cfg: &CampaignConfig) -> CampaignState {
         let shard_count = cfg.shard_count.max(1);
+        let mut cluster = ShardedCluster::new(Cluster::homogeneous(cfg.n_hosts), shard_count);
+        // Rack tags default to the shard partition (set by the
+        // constructor above); an explicit map overrides them.
+        if let Some(map) = &cfg.rack_map {
+            cluster.set_rack_map(map);
+        }
+        let n_racks = cfg
+            .rack_map
+            .as_ref()
+            .map(|m| m.iter().max().copied().unwrap_or(0) + 1)
+            .unwrap_or(shard_count);
         CampaignState {
-            cluster: ShardedCluster::new(Cluster::homogeneous(cfg.n_hosts), shard_count),
+            cluster,
             shard_counters: vec![ShardCounters::default(); shard_count],
             store: PlacementStore::new(),
             schedulers: (0..cfg.coordinator_count.max(1) as u32)
@@ -179,13 +210,14 @@ impl CampaignState {
             fault_plan: cfg
                 .faults
                 .as_ref()
-                .map(|f| FaultPlan::generate(cfg.seed, f, cfg.n_hosts, shard_count))
+                .map(|f| FaultPlan::generate(cfg.seed, f, cfg.n_hosts, shard_count, n_racks))
                 .unwrap_or_else(FaultPlan::none),
             has_faults: cfg.faults.is_some(),
             fault_rng: Xoshiro256::seed_from_u64(cfg.seed ^ 0xBAC0FF),
             retry_attempts: BTreeMap::new(),
             interrupted: BTreeSet::new(),
             evacuated_at: BTreeMap::new(),
+            evacuated_rack: BTreeMap::new(),
             recovery_latency: Online::new(),
             crash_history: BTreeMap::new(),
             quarantine_deferred: BTreeSet::new(),
@@ -304,6 +336,12 @@ impl CampaignState {
             migration_failures: self.counters.migration_failures,
             worker_panics: self.counters.worker_panics,
             quarantines: self.counters.quarantines,
+            rack_crashes: self.counters.rack_crashes,
+            degraded_hosts: self.counters.degraded_hosts,
+            drains: self.counters.drains,
+            checkpoints_taken: self.counters.checkpoints_taken,
+            progress_saved_s: self.counters.progress_saved_s,
+            checkpoint_energy_j: self.counters.checkpoint_energy_j,
             events_processed: self.events_processed,
             commits: self.store.commits(),
             commit_conflicts: self.store.conflicts(),

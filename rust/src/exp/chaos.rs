@@ -1,13 +1,17 @@
-//! `chaos` — fault-injection sweep: host-crash rate × placement policy.
+//! `chaos` — fault-injection sweep: host-crash rate × checkpoint
+//! interval × placement policy, plus a correlated rack-failure
+//! scenario.
 //!
 //! The robustness question the table answers: as deterministic host
 //! crashes ramp up (with telemetry blackouts and transient migration
 //! failures riding along), how do energy-per-work, SLA compliance,
-//! and recovery behave under the baseline vs the energy-aware policy?
-//! Evacuated jobs drain through the ordinary `decide_batch` retry
-//! path with bounded backoff, so the sweep exercises the whole fault
-//! pipeline end to end — and every campaign is replayable from
-//! `(seed, config)` alone.
+//! and recovery behave under the baseline vs the energy-aware policy
+//! — and how much of the replayed work does checkpoint/restart buy
+//! back? Evacuated jobs drain through the ordinary `decide_batch`
+//! retry path with bounded backoff, so the sweep exercises the whole
+//! fault pipeline end to end; the rack rows add correlated fail-stop
+//! (a whole fault domain at one instant) and partial degradation on
+//! top. Every campaign is replayable from `(seed, config)` alone.
 
 use crate::coordinator::{CampaignConfig, Coordinator};
 use crate::exp::common::{standard_trace, ExpContext};
@@ -15,35 +19,106 @@ use crate::sim::FaultConfig;
 use crate::util::table::TableBuilder;
 use crate::workload::Mix;
 
-/// Crash rates swept (crashes per host-hour). Zero is the control
-/// row: the fault machinery armed but silent, pinning the no-fault
-/// baseline in the same table.
-fn crash_rates(ctx: &ExpContext) -> Vec<f64> {
-    if ctx.fast {
-        vec![0.0, 2.0]
-    } else {
-        vec![0.0, 0.5, 2.0, 6.0]
+/// The chaos sweep's fault grid — the single source of truth for the
+/// fault intensities exercised by this experiment *and* by the
+/// `bench_chaos` micro-benchmark, so the benched campaigns stay
+/// representative of the reported table.
+#[derive(Debug, Clone)]
+pub struct ChaosGrid {
+    /// Independent host-crash rates swept (crashes per host-hour).
+    /// Zero is the control row: fault machinery armed but silent.
+    pub crash_rates: Vec<f64>,
+    /// Checkpoint intervals swept at each non-zero crash rate
+    /// (`None` = no checkpointing, the full-restart baseline).
+    pub checkpoint_intervals: Vec<Option<f64>>,
+    /// Correlated rack-crash rate for the rack scenario rows
+    /// (crashes per rack-hour).
+    pub rack_crash_rate_per_hour: f64,
+    /// Partial-degradation rate for the rack scenario rows
+    /// (episodes per host-hour: flaky disks and thermal caps).
+    pub degrade_rate_per_hour: f64,
+}
+
+impl ChaosGrid {
+    /// Smoke-sized grid (CI / `--fast`).
+    pub fn fast() -> ChaosGrid {
+        ChaosGrid {
+            crash_rates: vec![0.0, 2.0],
+            checkpoint_intervals: vec![None, Some(120.0)],
+            rack_crash_rate_per_hour: 1.0,
+            degrade_rate_per_hour: 1.0,
+        }
+    }
+
+    /// Full sweep for the paper table.
+    pub fn full() -> ChaosGrid {
+        ChaosGrid {
+            crash_rates: vec![0.0, 0.5, 2.0, 6.0],
+            checkpoint_intervals: vec![None, Some(60.0), Some(300.0)],
+            rack_crash_rate_per_hour: 1.0,
+            degrade_rate_per_hour: 1.0,
+        }
+    }
+
+    /// Fault config for one grid cell. Blackouts, migration failures,
+    /// and a worker-panic probe scale on when crashes do — the zero
+    /// row is a genuinely fault-free control. `rack` adds the
+    /// correlated rack-crash and degradation streams on top.
+    pub fn fault_config(&self, crash_rate: f64, rack: bool, checkpoint: Option<f64>) -> FaultConfig {
+        FaultConfig {
+            host_crash_rate_per_hour: crash_rate,
+            blackout_rate_per_hour: if crash_rate > 0.0 { 0.2 } else { 0.0 },
+            migration_failure_prob: if crash_rate > 0.0 { 0.05 } else { 0.0 },
+            worker_panics: if crash_rate > 0.0 { 1 } else { 0 },
+            rack_crash_rate_per_hour: if rack { self.rack_crash_rate_per_hour } else { 0.0 },
+            degrade_rate_per_hour: if rack { self.degrade_rate_per_hour } else { 0.0 },
+            checkpoint_interval_s: checkpoint,
+            ..Default::default()
+        }
+    }
+
+    /// The sweep's cells as `(crash_rate, rack_scenario, checkpoint)`.
+    /// Checkpoint intervals are swept only where crashes can fire
+    /// (the control row has nothing to restart); one rack row rides
+    /// at the highest crash rate with the first configured interval.
+    pub fn cells(&self) -> Vec<(f64, bool, Option<f64>)> {
+        let mut cells = Vec::new();
+        for &rate in &self.crash_rates {
+            if rate == 0.0 {
+                cells.push((rate, false, None));
+            } else {
+                for &ckpt in &self.checkpoint_intervals {
+                    cells.push((rate, false, ckpt));
+                }
+            }
+        }
+        let top = self.crash_rates.iter().cloned().fold(0.0, f64::max);
+        let ckpt = self.checkpoint_intervals.iter().flatten().next().copied();
+        cells.push((top, true, ckpt));
+        cells
     }
 }
 
-fn fault_config(rate_per_hour: f64) -> FaultConfig {
-    FaultConfig {
-        host_crash_rate_per_hour: rate_per_hour,
-        // Blackouts and migration failures scale on when crashes do —
-        // the zero row is a genuinely fault-free control.
-        blackout_rate_per_hour: if rate_per_hour > 0.0 { 0.2 } else { 0.0 },
-        migration_failure_prob: if rate_per_hour > 0.0 { 0.05 } else { 0.0 },
-        worker_panics: if rate_per_hour > 0.0 { 1 } else { 0 },
-        ..Default::default()
-    }
+/// Explicit fault-domain map for the rack scenario: 8 hosts in 4
+/// racks of 2 (the shard hash would also do, but pairs make the
+/// cross-rack evacuation preference legible in the counters).
+fn rack_map() -> Vec<usize> {
+    vec![0, 0, 1, 1, 2, 2, 3, 3]
 }
 
 pub fn run(ctx: &ExpContext) -> TableBuilder {
+    let grid = if ctx.fast {
+        ChaosGrid::fast()
+    } else {
+        ChaosGrid::full()
+    };
     let mut t = TableBuilder::new(
-        "Chaos — crash rate × policy: energy, SLA, and recovery",
+        "Chaos — crash rate × checkpointing × policy: energy, SLA, and recovery",
         &[
             "policy",
             "crashes/h",
+            "racks/h",
+            "ckpt s",
             "energy J/solo-s",
             "SLA %",
             "crashes",
@@ -51,9 +126,11 @@ pub fn run(ctx: &ExpContext) -> TableBuilder {
             "interrupted",
             "recovery s",
             "replace J",
+            "ckpt J",
+            "saved s",
         ],
     );
-    for &rate in &crash_rates(ctx) {
+    for &(rate, rack, ckpt) in &grid.cells() {
         for policy_name in ["round_robin", "energy_aware"] {
             let mut jps = Vec::new();
             let mut sla = Vec::new();
@@ -62,19 +139,23 @@ pub fn run(ctx: &ExpContext) -> TableBuilder {
             let mut interrupted = 0usize;
             let mut recovery = Vec::new();
             let mut replace_j = Vec::new();
+            let mut ckpt_j = Vec::new();
+            let mut saved = Vec::new();
             for &seed in &ctx.seeds {
                 let trace = standard_trace(Mix::paper(), ctx.n_jobs(), seed);
                 let policy = match policy_name {
                     "round_robin" => crate::coordinator::make_policy("round_robin").unwrap(),
                     _ => ctx.energy_aware_policy(),
                 };
+                let mut builder = CampaignConfig::builder()
+                    .hosts(8)
+                    .seed(seed)
+                    .faults(grid.fault_config(rate, rack, ckpt));
+                if rack {
+                    builder = builder.rack_map(rack_map());
+                }
                 let mut coord = Coordinator::new(
-                    CampaignConfig::builder()
-                        .hosts(8)
-                        .seed(seed)
-                        .faults(fault_config(rate))
-                        .build()
-                        .expect("valid campaign config"),
+                    builder.build().expect("valid campaign config"),
                     policy,
                 );
                 let r = coord.run(trace);
@@ -85,10 +166,18 @@ pub fn run(ctx: &ExpContext) -> TableBuilder {
                 interrupted += r.interrupted_jobs;
                 recovery.push(r.mean_recovery_latency_s);
                 replace_j.push(r.replacement_energy_j);
+                ckpt_j.push(r.checkpoint_energy_j);
+                saved.push(r.progress_saved_s);
             }
             t.row(&[
                 policy_name.to_string(),
                 format!("{rate:.1}"),
+                if rack {
+                    format!("{:.1}", grid.rack_crash_rate_per_hour)
+                } else {
+                    "0.0".to_string()
+                },
+                ckpt.map_or_else(|| "-".to_string(), |i| format!("{i:.0}")),
                 format!("{:.1}", crate::util::stats::mean(&jps)),
                 format!("{:.1}", crate::util::stats::mean(&sla) * 100.0),
                 crashes.to_string(),
@@ -96,6 +185,8 @@ pub fn run(ctx: &ExpContext) -> TableBuilder {
                 interrupted.to_string(),
                 format!("{:.0}", crate::util::stats::mean(&recovery)),
                 format!("{:.0}", crate::util::stats::mean(&replace_j)),
+                format!("{:.0}", crate::util::stats::mean(&ckpt_j)),
+                format!("{:.0}", crate::util::stats::mean(&saved)),
             ]);
         }
     }
@@ -108,14 +199,33 @@ mod tests {
     use std::path::PathBuf;
 
     #[test]
-    fn chaos_sweeps_rate_by_policy() {
+    fn chaos_sweeps_rate_by_checkpoint_by_policy() {
         let mut ctx = ExpContext::fast();
         ctx.artifacts = PathBuf::from("/nonexistent"); // force oracle
         let t = run(&ctx);
-        // fast mode: 2 rates × 2 policies.
-        assert_eq!(t.n_rows(), 4);
+        // fast mode: control + (1 rate × 2 intervals) + rack row,
+        // each × 2 policies.
+        assert_eq!(t.n_rows(), 8);
         let csv = t.render_csv();
         assert!(csv.contains("round_robin"));
         assert!(csv.contains("energy_aware"));
+    }
+
+    #[test]
+    fn grid_cells_cover_control_checkpoints_and_rack() {
+        let g = ChaosGrid::fast();
+        let cells = g.cells();
+        assert!(cells.contains(&(0.0, false, None)));
+        assert!(cells.contains(&(2.0, false, Some(120.0))));
+        assert_eq!(cells.last(), Some(&(2.0, true, Some(120.0))));
+        // The control cell is genuinely fault-free; faulted cells arm
+        // the satellite fault classes too.
+        let clean = g.fault_config(0.0, false, None);
+        assert_eq!(clean.blackout_rate_per_hour, 0.0);
+        assert_eq!(clean.worker_panics, 0);
+        let rack = g.fault_config(2.0, true, Some(120.0));
+        assert!(rack.rack_crash_rate_per_hour > 0.0);
+        assert!(rack.degrade_rate_per_hour > 0.0);
+        assert_eq!(rack.checkpoint_interval_s, Some(120.0));
     }
 }

@@ -55,6 +55,7 @@ mod tests {
             flavor: MEDIUM,
             vector: ResourceVector::default(),
             remaining_solo: 100.0,
+            avoid_rack: None,
         }
     }
 

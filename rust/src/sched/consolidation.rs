@@ -208,7 +208,7 @@ fn target_ok(
     flavor: &Flavor,
     vctx: &VmContext,
 ) -> bool {
-    if ev.donor_flag[host.id.0] || !host.state.is_on() {
+    if ev.donor_flag[host.id.0] || !host.state.is_on() || host.is_degraded() {
         return false;
     }
     // Never migrate onto a host we just planned to power off, and
@@ -449,33 +449,45 @@ impl Consolidator {
         } else {
             on_utils.iter().sum::<f64>() / on_utils.len() as f64
         };
-        let donors: Vec<(usize, HostId)> = if cluster_mean > self.params.migration_util_ceiling {
-            Vec::new() // busy: postpone consolidation migrations
-        } else {
-            // Eq. 8, per shard: each shard nominates at most ONE donor
-            // — the least-utilized on-host below δ_low that still runs
-            // VMs and is migration-quiet. Without a shard layer the
-            // whole cluster is one shard, i.e. the original
-            // single-donor scan.
-            (0..ctx.shard_count())
-                .filter_map(|s| {
-                    ctx.shard(s)
-                        .hosts()
-                        .filter(|h| {
-                            let host = &cluster.hosts[h.0];
-                            host.state.is_on()
-                                && !host.vms.is_empty()
-                                && sustained[h.0] < self.params.delta_low
-                                && host.migration_net == 0.0
-                                && host.vms.iter().all(|vm| {
-                                    matches!(cluster.vms[vm].state, VmState::Running)
-                                })
-                        })
-                        .min_by(|a, b| sustained[a.0].partial_cmp(&sustained[b.0]).unwrap())
-                        .map(|h| (s, h))
-                })
-                .collect()
-        };
+        // Eq. 8, per shard: each shard nominates at most ONE donor.
+        // Degraded hosts are *preferred* donors — they stopped
+        // accepting placements, so their tenants must drain regardless
+        // of utilization or how busy the cluster is. Otherwise the
+        // least-utilized on-host below δ_low that still runs VMs and
+        // is migration-quiet, gated on low cluster activity. Without a
+        // shard layer the whole cluster is one shard, i.e. the
+        // original single-donor scan.
+        let donors: Vec<(usize, HostId)> = (0..ctx.shard_count())
+            .filter_map(|s| {
+                let movable = |h: &HostId| {
+                    let host = &cluster.hosts[h.0];
+                    host.state.is_on()
+                        && !host.vms.is_empty()
+                        && host.migration_net == 0.0
+                        && host
+                            .vms
+                            .iter()
+                            .all(|vm| matches!(cluster.vms[vm].state, VmState::Running))
+                };
+                // Proactive drain: least-utilized degraded host first.
+                let drain = ctx
+                    .shard(s)
+                    .hosts()
+                    .filter(|h| movable(h) && cluster.hosts[h.0].is_degraded())
+                    .min_by(|a, b| sustained[a.0].partial_cmp(&sustained[b.0]).unwrap());
+                if let Some(h) = drain {
+                    return Some((s, h));
+                }
+                if cluster_mean > self.params.migration_util_ceiling {
+                    return None; // busy: postpone consolidation migrations
+                }
+                ctx.shard(s)
+                    .hosts()
+                    .filter(|h| movable(h) && sustained[h.0] < self.params.delta_low)
+                    .min_by(|a, b| sustained[a.0].partial_cmp(&sustained[b.0]).unwrap())
+                    .map(|h| (s, h))
+            })
+            .collect();
         // Per-host scan state for the target filter is only computed
         // when a donor exists — the common busy/no-donor scan skips
         // the O(hosts) effective-utilization sweep entirely.
@@ -998,6 +1010,83 @@ mod tests {
         assert!(
             !actions.iter().any(|a| matches!(a, ControlAction::Migrate { .. })),
             "migrations must wait for a low-activity window: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn degraded_host_is_the_preferred_donor() {
+        use crate::cluster::HostCondition;
+        // Host 0 sits below δ_low — the Eq. 8 donor — but host 1 is
+        // degraded: the drain must win, evacuating host 1's VM onto
+        // the healthy host 0 and leaving host 0's tenant in place.
+        let (mut c, ctxs, _) = setup();
+        c.host_mut(HostId(1)).condition = HostCondition::FlakyDisk;
+        let mut t = Telemetry::new(3, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
+        let vm1 = *c.hosts[1].vms.first().unwrap();
+        assert!(
+            actions.contains(&ControlAction::Migrate { vm: vm1, to: HostId(0) }),
+            "degraded host must drain: {actions:?}"
+        );
+        let vm0 = *c.hosts[0].vms.first().unwrap();
+        assert!(
+            !actions.iter().any(|a| matches!(a, ControlAction::Migrate { vm, .. } if *vm == vm0)),
+            "only one donor per shard: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn degraded_hosts_are_rejected_as_migration_targets() {
+        use crate::cluster::HostCondition;
+        // Host 0 is the usual donor, host 1 the only viable receiver;
+        // once host 1 degrades too, the donor must be abandoned — a
+        // draining host cannot absorb evacuations. Both hosts are
+        // degraded, so the drain picks the quieter host 0 as donor and
+        // then finds no target.
+        let (mut c, ctxs, t) = setup();
+        c.host_mut(HostId(0)).condition = HostCondition::Thermal;
+        c.host_mut(HostId(1)).condition = HostCondition::FlakyDisk;
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
+        assert!(
+            !actions.iter().any(|a| matches!(a, ControlAction::Migrate { .. })),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn drain_bypasses_the_busy_cluster_gate() {
+        use crate::cluster::HostCondition;
+        // Mean sustained utilization above the migration ceiling
+        // normally postpones all migrations — but a degraded host
+        // must still drain: waiting risks losing the tenants with it.
+        let mut c = Cluster::homogeneous(8);
+        let vm0 = c.create_vm(MEDIUM, JobId(0), 0.0);
+        c.place_vm(vm0, HostId(0)).unwrap();
+        let vm7 = c.create_vm(MEDIUM, JobId(7), 0.0);
+        c.place_vm(vm7, HostId(7)).unwrap();
+        c.host_mut(HostId(0)).demand.cpu = 25.6; // 0.80
+        for h in 1..7 {
+            c.host_mut(HostId(h)).demand.cpu = 27.2; // 0.85 each
+        }
+        c.host_mut(HostId(7)).demand.cpu = 9.6; // 0.30 — the receiver
+        c.host_mut(HostId(0)).condition = HostCondition::FlakyDisk;
+        let mut t = Telemetry::new(8, 1, 0.0);
+        for k in 1..=5 {
+            t.sample(k as f64 * 5.0, &c, &BTreeMap::new());
+        }
+        let mut ctxs = BTreeMap::new();
+        ctxs.insert(vm0, ctx());
+        ctxs.insert(vm7, ctx());
+        let mut cons = Consolidator::new(ConsolidationParams::default());
+        let actions = scan_at(&mut cons, 1000.0, &c, &t, &ctxs);
+        assert!(
+            actions.contains(&ControlAction::Migrate { vm: vm0, to: HostId(7) }),
+            "drain must not wait for a low-activity window: {actions:?}"
         );
     }
 

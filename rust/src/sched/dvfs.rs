@@ -111,14 +111,18 @@ fn scan_shard(
         // clocked-down host whose CPU phase returned contends
         // until restored.
         let inst_cpu = host.utilization().cpu;
-        if host.freq < 1.0
+        // A thermally-degraded host cannot clock past its cap: the
+        // governor restores to the cap at most, and never emits an
+        // action the cap would turn into a no-op.
+        let restore = host.freq_cap();
+        if host.freq < restore
             && (inst_cpu > 0.7
                 || cpu_full_clock > params.cpu_restore * host.freq
                 || expected_cpu > params.cpu_low)
         {
             out.push(ControlAction::SetFreq {
                 host: host.id,
-                freq: 1.0,
+                freq: restore,
             });
         } else if host.freq >= 1.0
             && cpu_full_clock < params.cpu_low
@@ -226,6 +230,36 @@ mod tests {
                 freq: 1.0
             }]
         );
+    }
+
+    #[test]
+    fn thermal_cap_bounds_the_restore_target() {
+        use crate::cluster::{HostCondition, THERMAL_FREQ_CAP};
+        // Clocked down to 0.6, then thermally degraded, then CPU
+        // pressure returns: restore only up to the thermal cap.
+        let mut c = Cluster::homogeneous(1);
+        c.host_mut(HostId(0)).set_freq(0.6);
+        c.host_mut(HostId(0)).condition = HostCondition::Thermal;
+        c.host_mut(HostId(0)).demand = Demand {
+            cpu: 16.0,
+            mem_gb: 8.0,
+            disk_mbps: 300.0,
+            net_mbps: 20.0,
+        };
+        let t = telemetry_for(&c, 1);
+        let mut gov = DvfsGovernor::new(DvfsParams::default());
+        let actions = scan(&mut gov, &c, &t);
+        assert_eq!(
+            actions,
+            vec![ControlAction::SetFreq {
+                host: HostId(0),
+                freq: THERMAL_FREQ_CAP
+            }]
+        );
+        // Already at the cap: no restore churn scan after scan.
+        c.host_mut(HostId(0)).set_freq(THERMAL_FREQ_CAP);
+        let t = telemetry_for(&c, 1);
+        assert!(scan(&mut gov, &c, &t).is_empty());
     }
 
     #[test]

@@ -109,6 +109,12 @@ impl Default for EnergyAwareParams {
     }
 }
 
+/// Multiplicative score surcharge for a candidate host in the rack
+/// the request was just evacuated from ([`PlacementRequest::avoid_rack`]):
+/// re-placements prefer a different fault domain when one is within
+/// 5 % predicted energy of the same-rack optimum.
+pub const SAME_RACK_PENALTY: f64 = 0.05;
+
 /// Append one request's SLA-safe candidates (and feature rows) from
 /// the pruned views to the given arena; returns the `[start, end)`
 /// span. The ONE gather body behind both the serial sweep (policy
@@ -118,7 +124,7 @@ fn gather_candidates_into(
     params: &EnergyAwareParams,
     req: &PlacementRequest,
     views: &[HostView],
-    cands: &mut Vec<(HostId, f64)>,
+    cands: &mut Vec<(HostId, f64, bool)>,
     feats: &mut Vec<[f32; crate::profile::FEAT_DIM]>,
 ) -> (usize, usize) {
     let start = cands.len();
@@ -136,7 +142,10 @@ fn gather_candidates_into(
         {
             continue;
         }
-        cands.push((v.id, v.idle_share));
+        // Tag candidates sharing the evacuated job's fault domain;
+        // the argmin applies the domain-diversity penalty. Fresh
+        // submissions (`avoid_rack: None`) tag nothing.
+        cands.push((v.id, v.idle_share, req.avoid_rack == Some(v.rack)));
         feats.push(crate::profile::features::build_features_from(
             &req.vector,
             req.remaining_solo,
@@ -154,11 +163,11 @@ fn gather_candidates_into(
 fn argmin_energy_span(
     params: &EnergyAwareParams,
     req: &PlacementRequest,
-    cands: &[(HostId, f64)],
+    cands: &[(HostId, f64, bool)],
     preds: &[Prediction],
 ) -> Option<(HostId, f64)> {
     let mut best: Option<(HostId, f64)> = None;
-    for (&(host, idle_share), p) in cands.iter().zip(preds) {
+    for (&(host, idle_share, same_rack), p) in cands.iter().zip(preds) {
         if p.slowdown > params.max_slowdown {
             continue; // Eq. 7 predictive guard
         }
@@ -169,7 +178,13 @@ fn argmin_energy_span(
         // candidate an amortized share of its host's idle power —
         // an empty host carries the full P_idle for this job's
         // duration, a busy host's floor is already paid for.
-        let energy = (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown);
+        // Domain diversity for evacuations: staying in the crashed
+        // rack risks eating the *next* correlated failure, modeled as
+        // a flat expected-rework surcharge. Purely a scoring term —
+        // same-rack hosts stay eligible when nothing else fits.
+        let diversity = if same_rack { SAME_RACK_PENALTY } else { 0.0 };
+        let energy =
+            (p.power_w + idle_share) * req.remaining_solo * (1.0 + p.slowdown) * (1.0 + diversity);
         if best.map(|(_, e)| energy < e).unwrap_or(true) {
             best = Some((host, energy));
         }
@@ -203,8 +218,9 @@ pub struct EnergyAware {
     /// views, and the predictor's output all live here and are
     /// refilled in place ([`EnergyPredictor::predict_into`]).
     feats: Vec<[f32; crate::profile::FEAT_DIM]>,
-    /// Candidate hosts with their precomputed amortized idle share.
-    cands: Vec<(HostId, f64)>,
+    /// Candidate hosts with their precomputed amortized idle share
+    /// and the same-rack (domain-diversity penalty) tag.
+    cands: Vec<(HostId, f64, bool)>,
     spans: Vec<(usize, usize)>,
     views: Vec<HostView>,
     preds: Vec<Prediction>,
@@ -531,6 +547,7 @@ mod tests {
                 burstiness: 0.2,
             },
             remaining_solo: 600.0,
+            avoid_rack: None,
         }
     }
 
@@ -580,6 +597,29 @@ mod tests {
         };
         let mut p = policy();
         assert_eq!(decide(&mut p, &cpu_req(), &c), Decision::Place(HostId(1)));
+    }
+
+    #[test]
+    fn evacuations_prefer_a_different_rack() {
+        // Two identical hosts in different racks: a symmetric request
+        // ties on energy and falls to the lowest id (host 0). An
+        // evacuation out of rack 0 must flip to host 1 — and the
+        // penalty must not strand the job when only the crashed rack
+        // has capacity.
+        let mut c = Cluster::homogeneous(2);
+        c.host_mut(HostId(0)).rack = 0;
+        c.host_mut(HostId(1)).rack = 1;
+        let mut p = policy();
+        assert_eq!(decide(&mut p, &io_req(), &c), Decision::Place(HostId(0)));
+        let evac = PlacementRequest {
+            avoid_rack: Some(0),
+            ..io_req()
+        };
+        assert_eq!(decide(&mut p, &evac, &c), Decision::Place(HostId(1)));
+        // Same-rack hosts remain eligible: with every host in rack 0,
+        // the penalty cancels out and the tie-break reasserts itself.
+        c.host_mut(HostId(1)).rack = 0;
+        assert_eq!(decide(&mut p, &evac, &c), Decision::Place(HostId(0)));
     }
 
     #[test]

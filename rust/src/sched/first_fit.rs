@@ -37,6 +37,7 @@ mod tests {
             flavor: MEDIUM,
             vector: ResourceVector::default(),
             remaining_solo: 100.0,
+            avoid_rack: None,
         }
     }
 

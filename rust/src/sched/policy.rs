@@ -23,6 +23,11 @@ pub struct PlacementRequest {
     pub vector: ResourceVector,
     /// Remaining solo work (s) — scales the energy stake of the choice.
     pub remaining_solo: f64,
+    /// Fault domain (rack) the job was just evacuated from, if any:
+    /// energy-aware scoring penalizes candidates in this rack so
+    /// re-placements prefer cross-rack diversity. `None` for fresh
+    /// submissions — the common case — leaves scoring untouched.
+    pub avoid_rack: Option<usize>,
 }
 
 /// A policy's verdict.
@@ -128,6 +133,7 @@ mod tests {
             flavor: MEDIUM,
             vector: ResourceVector::default(),
             remaining_solo: 10.0,
+            avoid_rack: None,
         };
         let reqs = vec![req.clone(), req.clone(), req];
         let batch = Cycler { next: 0 }.decide_batch(&reqs, &ctx);

@@ -45,6 +45,7 @@ mod tests {
             flavor,
             vector: ResourceVector::default(),
             remaining_solo: 100.0,
+            avoid_rack: None,
         }
     }
 

@@ -50,8 +50,9 @@ pub(crate) struct WorkerScore {
     pub predictor: Box<dyn EnergyPredictor + Send>,
     /// Feature-row arena, shared by every scoring fan-out.
     pub feats: Vec<[f32; FEAT_DIM]>,
-    /// Placement-sweep candidates with their amortized idle share.
-    pub cands: Vec<(HostId, f64)>,
+    /// Placement-sweep candidates with their amortized idle share and
+    /// the same-rack (domain-diversity penalty) tag.
+    pub cands: Vec<(HostId, f64, bool)>,
     /// Per-request `[start, end)` spans into `cands`/`feats`.
     pub spans: Vec<(usize, usize)>,
     /// Pruned host-view snapshots of this worker's shards.

@@ -19,8 +19,14 @@
 //! they replay identically too.
 
 use crate::cluster::shard::splitmix64;
-use crate::cluster::HostId;
+use crate::cluster::{HostCondition, HostId};
 use crate::util::rng::Xoshiro256;
+
+/// Energy cost of writing one checkpoint, joules per GB of the VM's
+/// memory footprint (flavor `mem_gb`). Order-of-magnitude for a
+/// DRAM→local-SSD snapshot; priced into the owning job's energy and
+/// surfaced as `checkpoint_energy_j` in the fault ledger.
+pub const CHECKPOINT_J_PER_GB: f64 = 18.0;
 
 /// Fault-injection knobs. All rates are *per hour* so configs read
 /// like the availability numbers operators actually quote; a rate of
@@ -53,6 +59,26 @@ pub struct FaultConfig {
     pub flap_window_s: f64,
     /// Extra downtime a quarantined host serves, seconds.
     pub quarantine_s: f64,
+    /// Mean correlated crashes per *rack*-hour (Poisson). A rack crash
+    /// fails every `On` member host at one instant; 0 = no rack
+    /// faults. Rack streams are independent of the per-host crash
+    /// streams, so enabling them never reshuffles existing plans.
+    pub rack_crash_rate_per_hour: f64,
+    /// Mean partial-degradation events per host-hour (Poisson): a host
+    /// stays up but turns [`HostCondition::FlakyDisk`] (halved disk
+    /// bandwidth) or [`HostCondition::Thermal`] (capped frequency)
+    /// until the paired `Restore`. 0 = hosts never degrade.
+    pub degrade_rate_per_hour: f64,
+    /// Mean length of a degradation episode (exponential), seconds.
+    pub degraded_duration_s: f64,
+    /// Checkpoint cadence for running jobs, seconds. When set, a
+    /// crashed job resumes from its last checkpoint boundary instead
+    /// of from scratch; each checkpoint costs
+    /// [`CHECKPOINT_J_PER_GB`] × flavor memory. `None` = no
+    /// checkpointing (crashes lose all progress). Does not enter plan
+    /// generation, so toggling it replays the identical fault
+    /// schedule.
+    pub checkpoint_interval_s: Option<f64>,
 }
 
 impl Default for FaultConfig {
@@ -71,6 +97,10 @@ impl Default for FaultConfig {
             flap_threshold: 3,
             flap_window_s: 1800.0,
             quarantine_s: 900.0,
+            rack_crash_rate_per_hour: 0.0,
+            degrade_rate_per_hour: 0.0,
+            degraded_duration_s: 600.0,
+            checkpoint_interval_s: None,
         }
     }
 }
@@ -94,6 +124,26 @@ pub enum FaultKind {
     /// in-flight fan-out fails once with `WorkerPanicked` and the
     /// pool must heal.
     WorkerPanic,
+    /// Correlated fault-domain failure: every `On` host in `rack`
+    /// crashes at this instant (hosts already down are unaffected).
+    /// The coordinator schedules each member's recovery at
+    /// `t + downtime_s` — drawn at generation time from the rack's
+    /// own stream, so the whole episode is fixed by the plan.
+    RackCrash { rack: usize, downtime_s: f64 },
+    /// The host stays up but enters `condition` (flaky disk or
+    /// thermal throttling): it stops accepting placements, its
+    /// effective capacity shrinks, and the consolidator drains it.
+    /// Dropped if the host is not `On` at fire time.
+    Degrade {
+        host: HostId,
+        condition: HostCondition,
+    },
+    /// End of the degradation episode: the host returns to
+    /// [`HostCondition::Healthy`]. The condition layer is orthogonal
+    /// to the power machine, so the restore applies even if the host
+    /// crashed or parked in between (and no-ops if the paired
+    /// `Degrade` was dropped on a non-`On` host).
+    Restore { host: HostId },
 }
 
 /// A fault with its fire time.
@@ -104,7 +154,7 @@ pub struct FaultEvent {
 }
 
 /// The full, immutable fault schedule for one campaign. Replayable
-/// from `(seed, config, n_hosts, shard_count)` alone — generation
+/// from `(seed, config, n_hosts, shard_count, n_racks)` alone — generation
 /// consumes nothing but its own child RNG streams, so building a plan
 /// never perturbs workload or policy randomness.
 #[derive(Debug, Clone)]
@@ -122,12 +172,23 @@ impl FaultPlan {
     /// sub-stream), so changing one rate never reshuffles the other
     /// classes' timings — the same stable-randomness discipline the
     /// workload generators use.
-    pub fn generate(seed: u64, cfg: &FaultConfig, n_hosts: usize, shard_count: usize) -> FaultPlan {
+    pub fn generate(
+        seed: u64,
+        cfg: &FaultConfig,
+        n_hosts: usize,
+        shard_count: usize,
+        n_racks: usize,
+    ) -> FaultPlan {
         let mut root = Xoshiro256::seed_from_u64(seed ^ 0xFA_017_FA_017);
         let mut crash_root = root.child(1);
         let mut blackout_root = root.child(2);
         let mut panic_rng = root.child(3);
         let migration_seed = root.next_u64();
+        // New classes derive *after* every pre-existing stream, so a
+        // plan with rack/degrade rates at zero is bit-identical to one
+        // generated before those classes existed.
+        let mut rack_root = root.child(4);
+        let mut degrade_root = root.child(5);
 
         let mut events: Vec<FaultEvent> = Vec::new();
 
@@ -173,6 +234,59 @@ impl FaultPlan {
                         },
                     });
                     t += len + rng.exponential(lambda);
+                }
+            }
+        }
+
+        // Correlated rack crashes: per-rack Poisson process. The
+        // downtime every member serves is drawn here so the whole
+        // episode is closed over at generation; member recoveries are
+        // pushed by the coordinator at fire time (it alone knows which
+        // members were actually `On`).
+        if cfg.rack_crash_rate_per_hour > 0.0 && cfg.mean_downtime_s > 0.0 {
+            let lambda = cfg.rack_crash_rate_per_hour / 3600.0;
+            for r in 0..n_racks {
+                let mut rng = rack_root.child(r as u64);
+                let mut t = rng.exponential(lambda);
+                while t < cfg.horizon_s {
+                    let downtime_s = rng.exponential(1.0 / cfg.mean_downtime_s);
+                    events.push(FaultEvent {
+                        t,
+                        kind: FaultKind::RackCrash { rack: r, downtime_s },
+                    });
+                    // The rack cannot meaningfully crash again until
+                    // its members have recovered and rebooted.
+                    t += downtime_s + crate::cluster::power::BOOT_SECS + rng.exponential(lambda);
+                }
+            }
+        }
+
+        // Partial degradation: per-host alternating Degrade/Restore
+        // episodes, condition chosen per episode.
+        if cfg.degrade_rate_per_hour > 0.0 && cfg.degraded_duration_s > 0.0 {
+            let lambda = cfg.degrade_rate_per_hour / 3600.0;
+            for h in 0..n_hosts {
+                let mut rng = degrade_root.child(h as u64);
+                let mut t = rng.exponential(lambda);
+                while t < cfg.horizon_s {
+                    let condition = if rng.chance(0.5) {
+                        HostCondition::FlakyDisk
+                    } else {
+                        HostCondition::Thermal
+                    };
+                    events.push(FaultEvent {
+                        t,
+                        kind: FaultKind::Degrade {
+                            host: HostId(h),
+                            condition,
+                        },
+                    });
+                    let dur = rng.exponential(1.0 / cfg.degraded_duration_s);
+                    events.push(FaultEvent {
+                        t: t + dur,
+                        kind: FaultKind::Restore { host: HostId(h) },
+                    });
+                    t += dur + rng.exponential(lambda);
                 }
             }
         }
@@ -244,28 +358,32 @@ mod tests {
     #[test]
     fn plan_is_replayable_from_seed_and_config() {
         let cfg = busy_cfg();
-        let a = FaultPlan::generate(99, &cfg, 16, 4);
-        let b = FaultPlan::generate(99, &cfg, 16, 4);
+        let a = FaultPlan::generate(99, &cfg, 16, 4, 4);
+        let b = FaultPlan::generate(99, &cfg, 16, 4, 4);
         assert!(!a.events().is_empty(), "busy config must schedule faults");
         assert_eq!(a.events(), b.events());
         for i in 0..1000 {
             assert_eq!(a.migration_fails(i), b.migration_fails(i));
         }
-        let c = FaultPlan::generate(100, &cfg, 16, 4);
+        let c = FaultPlan::generate(100, &cfg, 16, 4, 4);
         assert_ne!(a.events(), c.events(), "different seed, different plan");
     }
 
     #[test]
     fn schedule_is_time_ordered_and_within_horizon() {
         let cfg = busy_cfg();
-        let plan = FaultPlan::generate(7, &cfg, 16, 4);
+        let plan = FaultPlan::generate(7, &cfg, 16, 4, 4);
         let mut last = 0.0;
         for e in plan.events() {
             assert!(e.t >= last, "events out of order at t={}", e.t);
             last = e.t;
-            // Recoveries may land past the horizon (the crash fired
-            // inside it); everything else must not.
-            if !matches!(e.kind, FaultKind::HostRecover(_)) {
+            // Recoveries and degradation restores may land past the
+            // horizon (their opening event fired inside it);
+            // everything else must not.
+            if !matches!(
+                e.kind,
+                FaultKind::HostRecover(_) | FaultKind::Restore { .. }
+            ) {
                 assert!(e.t < cfg.horizon_s, "{:?} past horizon", e);
             }
         }
@@ -274,7 +392,7 @@ mod tests {
     #[test]
     fn crashes_and_recoveries_alternate_per_host() {
         let cfg = busy_cfg();
-        let plan = FaultPlan::generate(21, &cfg, 8, 2);
+        let plan = FaultPlan::generate(21, &cfg, 8, 2, 2);
         for h in 0..8 {
             let mut down = false;
             let mut saw_any = false;
@@ -313,8 +431,8 @@ mod tests {
             worker_panics: 0,
             ..cfg
         };
-        let full = FaultPlan::generate(5, &cfg, 8, 4);
-        let crashes_only = FaultPlan::generate(5, &quiet, 8, 4);
+        let full = FaultPlan::generate(5, &cfg, 8, 4, 4);
+        let crashes_only = FaultPlan::generate(5, &quiet, 8, 4, 4);
         let crash_times = |p: &FaultPlan| -> Vec<(f64, HostId)> {
             p.events()
                 .iter()
@@ -333,7 +451,7 @@ mod tests {
             migration_failure_prob: 0.25,
             ..busy_cfg()
         };
-        let plan = FaultPlan::generate(3, &cfg, 4, 2);
+        let plan = FaultPlan::generate(3, &cfg, 4, 2, 2);
         let n = 100_000u64;
         let fails = (0..n).filter(|&i| plan.migration_fails(i)).count();
         let rate = fails as f64 / n as f64;
@@ -351,7 +469,112 @@ mod tests {
             migration_failure_prob: 0.0,
             ..FaultConfig::default()
         };
-        let plan = FaultPlan::generate(1, &cfg, 32, 8);
+        let plan = FaultPlan::generate(1, &cfg, 32, 8, 8);
         assert!(plan.events().is_empty());
+    }
+
+    fn chaotic_cfg() -> FaultConfig {
+        FaultConfig {
+            rack_crash_rate_per_hour: 2.0,
+            degrade_rate_per_hour: 1.5,
+            degraded_duration_s: 300.0,
+            ..busy_cfg()
+        }
+    }
+
+    #[test]
+    fn enabling_rack_and_degrade_streams_never_reshuffles_existing_classes() {
+        // The new classes draw from their own child streams, derived
+        // after every pre-existing stream — so a legacy config and a
+        // fully chaotic one must agree exactly on crashes, blackouts,
+        // panics, and the migration oracle.
+        let legacy = FaultPlan::generate(5, &busy_cfg(), 8, 4, 4);
+        let chaotic = FaultPlan::generate(5, &chaotic_cfg(), 8, 4, 4);
+        let old_classes = |p: &FaultPlan| -> Vec<FaultEvent> {
+            p.events()
+                .iter()
+                .filter(|e| {
+                    !matches!(
+                        e.kind,
+                        FaultKind::RackCrash { .. }
+                            | FaultKind::Degrade { .. }
+                            | FaultKind::Restore { .. }
+                    )
+                })
+                .copied()
+                .collect()
+        };
+        assert_eq!(old_classes(&legacy), old_classes(&chaotic));
+        for i in 0..1000 {
+            assert_eq!(legacy.migration_fails(i), chaotic.migration_fails(i));
+        }
+        // And the new classes actually fired.
+        assert!(chaotic
+            .events()
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::RackCrash { .. })));
+        assert!(chaotic
+            .events()
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::Degrade { .. })));
+    }
+
+    #[test]
+    fn degrades_and_restores_alternate_per_host() {
+        let plan = FaultPlan::generate(13, &chaotic_cfg(), 6, 2, 2);
+        for h in 0..6 {
+            let mut degraded = false;
+            for e in plan.events() {
+                match e.kind {
+                    FaultKind::Degrade { host, .. } if host == HostId(h) => {
+                        assert!(!degraded, "host {h} degraded while already degraded");
+                        degraded = true;
+                    }
+                    FaultKind::Restore { host } if host == HostId(h) => {
+                        assert!(degraded, "host {h} restored while healthy");
+                        degraded = false;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Both conditions appear across a busy enough plan.
+        let conditions: std::collections::BTreeSet<_> = plan
+            .events()
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::Degrade { condition, .. } => Some(format!("{condition:?}")),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(conditions.len(), 2, "expected both degrade conditions");
+    }
+
+    #[test]
+    fn rack_crashes_carry_positive_downtime_and_respect_rack_count() {
+        let plan = FaultPlan::generate(17, &chaotic_cfg(), 12, 3, 3);
+        let mut seen = 0;
+        for e in plan.events() {
+            if let FaultKind::RackCrash { rack, downtime_s } = e.kind {
+                assert!(rack < 3, "rack {rack} out of range");
+                assert!(downtime_s > 0.0);
+                seen += 1;
+            }
+        }
+        assert!(seen > 0, "2 rack-crashes/hour over 3 racks scheduled none");
+    }
+
+    #[test]
+    fn checkpoint_interval_does_not_enter_plan_generation() {
+        // Same seed, checkpointing on vs off: the fault schedule is
+        // identical, so A/B energy comparisons isolate the policy.
+        let base = chaotic_cfg();
+        let ckpt = FaultConfig {
+            checkpoint_interval_s: Some(60.0),
+            ..base
+        };
+        let a = FaultPlan::generate(29, &base, 8, 2, 2);
+        let b = FaultPlan::generate(29, &ckpt, 8, 2, 2);
+        assert_eq!(a.events(), b.events());
     }
 }

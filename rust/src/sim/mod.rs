@@ -10,5 +10,5 @@ pub mod telemetry;
 
 pub use energy::EnergyMeter;
 pub use engine::EventQueue;
-pub use fault::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
+pub use fault::{FaultConfig, FaultEvent, FaultKind, FaultPlan, CHECKPOINT_J_PER_GB};
 pub use telemetry::{Telemetry, SAMPLE_INTERVAL};

@@ -145,6 +145,11 @@ pub struct Job {
     /// For serverless invocations: the function this job invokes.
     /// `None` for the batch families — set via [`Job::with_function`].
     pub function: Option<crate::workload::faas::FunctionId>,
+    /// Solo-progress point the job last restarted from (0 if it never
+    /// crashed). Checkpoint boundaries at or before this point were
+    /// written — and charged — by an earlier incarnation; the energy
+    /// accounting bills only boundaries crossed beyond it.
+    pub restored_from: f64,
 }
 
 impl Job {
@@ -164,6 +169,7 @@ impl Job {
             stalled_until: 0.0,
             slowdown_secs: 0.0,
             function: None,
+            restored_from: 0.0,
         }
     }
 
@@ -201,21 +207,61 @@ impl Job {
         }
     }
 
-    /// Throw the job back to `Queued` after its host crashed: all
-    /// phase progress is lost (the paper's batch frameworks restart
-    /// failed work from the last materialized boundary — we model the
-    /// conservative full restart), but `started_at` survives so the
-    /// eventual JCT covers the whole ordeal.
-    pub fn requeue_after_crash(&mut self, now: f64) {
+    /// Accumulated progress through the phase plan, in nominal solo
+    /// seconds: completed phases' durations plus progress into the
+    /// current one. The quantity checkpoints snapshot.
+    pub fn progress_time(&self) -> f64 {
+        self.phases[..self.phase_idx]
+            .iter()
+            .map(|p| p.duration)
+            .sum::<f64>()
+            + self.phase_progress
+    }
+
+    /// Throw the job back to `Queued` after its host crashed. Without
+    /// checkpointing all phase progress is lost (the paper's batch
+    /// frameworks restart failed work from the last materialized
+    /// boundary — the conservative full restart); with a checkpoint
+    /// interval, progress rewinds only to the last completed boundary
+    /// `floor(progress / interval) · interval`. Either way
+    /// `started_at` survives so the eventual JCT covers the whole
+    /// ordeal. Returns the progress preserved, in solo seconds.
+    pub fn requeue_after_crash(&mut self, now: f64, checkpoint_interval: Option<f64>) -> f64 {
         assert_eq!(self.state, JobState::Running, "requeue a non-running job");
+        let saved = match checkpoint_interval {
+            Some(interval) if interval > 0.0 => {
+                (self.progress_time() / interval).floor() * interval
+            }
+            _ => 0.0,
+        };
         self.state = JobState::Queued;
+        self.stalled_until = 0.0;
+        // Rewind the phase cursor to `saved` solo seconds in.
         self.phase_idx = 0;
         self.phase_progress = 0.0;
-        self.stalled_until = 0.0;
-        // Everything run so far is lost time.
-        if let Some(t0) = self.started_at {
-            self.slowdown_secs = now - t0;
+        let mut remaining = saved;
+        while remaining > 0.0 && self.phase_idx < self.phases.len() {
+            let dur = self.phases[self.phase_idx].duration;
+            if remaining >= dur {
+                remaining -= dur;
+                self.phase_idx += 1;
+            } else {
+                self.phase_progress = remaining;
+                remaining = 0.0;
+            }
         }
+        // Keep the cursor valid if `saved` lands exactly on the end
+        // of the plan (float-boundary corner).
+        if self.phase_idx == self.phases.len() {
+            self.phase_idx = self.phases.len() - 1;
+            self.phase_progress = self.phases[self.phase_idx].duration;
+        }
+        // Wall time spent so far minus the progress we kept is lost.
+        if let Some(t0) = self.started_at {
+            self.slowdown_secs = (now - t0 - saved).max(0.0);
+        }
+        self.restored_from = saved;
+        saved
     }
 
     /// Advance the job by `dt` seconds of wall time under the given
@@ -420,7 +466,8 @@ mod tests {
         j.start(10.0);
         j.advance(10.0, 60.0, (1.0, 1.0, 1.0, 1.0));
         assert!(j.phase_progress > 0.0);
-        j.requeue_after_crash(70.0);
+        let saved = j.requeue_after_crash(70.0, None);
+        assert_eq!(saved, 0.0, "no checkpointing, nothing preserved");
         assert_eq!(j.state, JobState::Queued);
         assert_eq!(j.phase_idx, 0);
         assert_eq!(j.phase_progress, 0.0);
@@ -431,6 +478,41 @@ mod tests {
         let done = j.advance(100.0, 150.0, (1.0, 1.0, 1.0, 1.0));
         assert!(done);
         assert!((j.jct().unwrap() - 240.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkpointed_requeue_resumes_from_last_boundary() {
+        // 100 s map + 50 s reduce, crash 130 s in (30 s into reduce)
+        // with 40 s checkpoints: last boundary at 120 s → resume 20 s
+        // into the reduce phase.
+        let mut j = job();
+        j.start(0.0);
+        j.advance(0.0, 130.0, (1.0, 1.0, 1.0, 1.0));
+        assert_eq!(j.phase_idx, 1);
+        assert!((j.progress_time() - 130.0).abs() < 1e-9);
+        let saved = j.requeue_after_crash(130.0, Some(40.0));
+        assert!((saved - 120.0).abs() < 1e-9);
+        assert_eq!(j.phase_idx, 1, "cursor rewinds into the reduce phase");
+        assert!((j.phase_progress - 20.0).abs() < 1e-9);
+        assert!((j.slowdown_secs - 10.0).abs() < 1e-9, "only 10 s lost");
+        // Only 30 s of work remain.
+        j.start(200.0);
+        let done = j.advance(200.0, 30.0, (1.0, 1.0, 1.0, 1.0));
+        assert!(done);
+        assert!((j.jct().unwrap() - 230.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkpoint_boundary_inside_first_phase_rewinds_phase_cursor() {
+        let mut j = job();
+        j.start(0.0);
+        j.advance(0.0, 110.0, (1.0, 1.0, 1.0, 1.0));
+        assert_eq!(j.phase_idx, 1);
+        // 60 s checkpoints: last boundary at 60 s, inside the map.
+        let saved = j.requeue_after_crash(110.0, Some(60.0));
+        assert!((saved - 60.0).abs() < 1e-9);
+        assert_eq!(j.phase_idx, 0);
+        assert!((j.phase_progress - 60.0).abs() < 1e-9);
     }
 
     #[test]

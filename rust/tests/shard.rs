@@ -96,6 +96,7 @@ fn requests(n: usize, seed: u64) -> Vec<PlacementRequest> {
             flavor,
             vector: ResourceVector::from_phases(&job.phases, &flavor),
             remaining_solo: job.solo_duration(),
+            avoid_rack: None,
         }
     })
     .collect()
